@@ -1,0 +1,96 @@
+"""AOT bridge: lower the L2 model to HLO *text* artifacts for Rust/PJRT.
+
+HLO text (not a serialized HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the `xla`
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/README.md.
+
+Artifacts (all lowered with return_tuple=True; Rust unwraps to_tuple1):
+
+  artifacts/lbm_step_{H}x{W}.hlo.txt       one Pallas-kernel step
+  artifacts/lbm_cascade{M}_{H}x{W}.hlo.txt M scan-fused steps
+  artifacts/lbm_macros_{H}x{W}.hlo.txt     rho/ux/uy extraction
+  artifacts/manifest.txt                   shapes/dtypes index
+
+Run via `make artifacts` (no-op when inputs are unchanged).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Grid sizes to pre-compile.  64x64 is the end-to-end example workload;
+# 16x16 and 32x32 are test sizes.
+GRIDS = ((16, 16), (32, 32), (64, 64))
+CASCADES = (4, 10)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(fn, args):
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def emit(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = []
+
+    for h, w in GRIDS:
+        f, attr, one_tau = model.example_args(h, w)
+
+        name = f"lbm_step_{h}x{w}"
+        text = lower_entry(model.lbm_step, (f, attr, one_tau))
+        _write(out_dir, name, text, manifest,
+               f"(f32[9,{h},{w}], s32[{h},{w}], f32[]) -> f32[9,{h},{w}]")
+
+        name = f"lbm_macros_{h}x{w}"
+        text = lower_entry(model.lbm_macros, (f,))
+        _write(out_dir, name, text, manifest,
+               f"(f32[9,{h},{w}]) -> f32[3,{h},{w}]")
+
+        for m in CASCADES:
+            name = f"lbm_cascade{m}_{h}x{w}"
+            text = lower_entry(
+                lambda f_, a_, t_, m=m: model.lbm_cascade(f_, a_, t_, m),
+                (f, attr, one_tau),
+            )
+            _write(out_dir, name, text, manifest,
+                   f"(f32[9,{h},{w}], s32[{h},{w}], f32[]) -> f32[9,{h},{w}]")
+
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as fh:
+        fh.write("\n".join(manifest) + "\n")
+    print(f"wrote {len(manifest)} artifacts to {out_dir}")
+
+
+def _write(out_dir, name, text, manifest, sig):
+    path = os.path.join(out_dir, name + ".hlo.txt")
+    with open(path, "w") as fh:
+        fh.write(text)
+    manifest.append(f"{name}\t{sig}")
+    print(f"  {name}.hlo.txt ({len(text)} chars)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="output directory (default: ../artifacts)")
+    args = ap.parse_args()
+    emit(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""L1 Pallas kernel: one D2Q9 LBM time step (collide + stream + boundary).
+
+FPGA -> TPU adaptation (DESIGN.md §Hardware-Adaptation): the paper's PE
+streams one cell per cycle through a deep operator pipeline with a BRAM
+line buffer for the stencil window.  On a TPU-shaped machine the same
+computation is a VPU-vectorized whole-grid update with the state resident
+in VMEM; the BRAM line buffer becomes in-register shifts (`jnp.roll`)
+over the VMEM block, and the paper's temporal cascade of m PEs becomes a
+`lax.scan` over m steps in the surrounding L2 model (model.py), which XLA
+fuses so intermediate states never travel to HBM — the exact analogue of
+"cascaded PEs require no wider bandwidth".
+
+VMEM footprint: a (9, H, W) float32 state needs 36·H·W bytes —
+147 KiB at 64x64 and 2.2 MiB at 256x256, comfortably inside a 16 MiB
+VMEM, so the whole grid is held as a single block.  (For grids beyond
+~600x600 a row-block BlockSpec with 1-row halo would be required; the
+paper's 720x300 grid state is 7.8 MiB and still fits.)
+
+The kernel must use interpret=True in this environment: real-TPU
+lowering emits a Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _lbm_step_kernel(f_ref, attr_ref, one_tau_ref, out_ref):
+    """Pallas kernel body: full-grid D2Q9 step, golden formulation.
+
+    f_ref:      (9, H, W) f32 in VMEM
+    attr_ref:   (H, W) i32 in VMEM
+    one_tau_ref:(1, 1) f32 (scalar operand, the paper's Append_Reg)
+    out_ref:    (9, H, W) f32 in VMEM
+    """
+    one_tau = one_tau_ref[0, 0]
+    fs = [f_ref[i] for i in range(9)]
+    attr = attr_ref[...]
+
+    # --- collision (66 add + 56 mul + 1 div in the hardware census) ---
+    fstar, rho = ref.collide(fs, one_tau)
+
+    # --- translation: shift channel i by its lattice vector e_i ------
+    fp = [
+        jnp.roll(fstar[i], shift=(ref.EY[i], ref.EX[i]), axis=(0, 1))
+        for i in range(9)
+    ]
+
+    # --- boundary: half-way bounce-back + moving-lid Ladd correction --
+    out = ref.boundary(fp, fstar, rho, attr)
+    for i in range(9):
+        out_ref[i] = out[i]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lbm_step(f, attr, one_tau, interpret=True):
+    """One LBM step via the Pallas kernel.
+
+    f: (9, H, W) f32; attr: (H, W) i32; one_tau: scalar f32.
+    """
+    _, h, w = f.shape
+    one_tau_arr = jnp.asarray(one_tau, dtype=jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        _lbm_step_kernel,
+        out_shape=jax.ShapeDtypeStruct((9, h, w), jnp.float32),
+        interpret=interpret,
+    )(f, attr, one_tau_arr)
+
+
+def lbm_cascade(f, attr, one_tau, steps, interpret=True):
+    """m temporally-cascaded steps: the Fig. 2c analogue (see model.py).
+
+    A `lax.scan` keeps all intermediate states on-chip after XLA fusion,
+    mirroring how cascaded PEs avoid extra external-memory traffic.
+    """
+
+    def body(carry, _):
+        return lbm_step(carry, attr, one_tau, interpret=interpret), None
+
+    out, _ = jax.lax.scan(body, f, None, length=steps)
+    return out

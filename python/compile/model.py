@@ -1,0 +1,54 @@
+"""L2 JAX model: the stream-computation graph lowered to AOT artifacts.
+
+The model is the paper's iterative stream computation: m cascaded LBM
+time steps (temporal parallelism, Fig. 2c) over a 2-D grid.  It calls
+the L1 Pallas kernel for the per-step hot loop and wraps it in
+`lax.scan` for the cascade, so one lowered HLO module performs m steps
+with no host round-trips — the software analogue of m cascaded PEs
+streaming through on-chip buffers.
+
+Lowered entry points (see aot.py):
+  lbm_step      — one step            (oracle for the cycle-accurate sim)
+  lbm_cascade_m — m steps, scan-fused (fast trajectory oracle for Rust)
+  lbm_macros    — rho/ux/uy extraction (reporting)
+
+Everything here is build-time only; Rust executes the artifacts through
+PJRT (`rust/src/runtime/`).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import lbm as lbm_kernel
+from .kernels import ref
+
+
+def lbm_step(f, attr, one_tau):
+    """One D2Q9 step via the Pallas kernel (interpret mode)."""
+    return lbm_kernel.lbm_step(f, attr, one_tau, interpret=True)
+
+
+def lbm_cascade(f, attr, one_tau, steps):
+    """`steps` scan-fused D2Q9 steps via the Pallas kernel."""
+    return lbm_kernel.lbm_cascade(f, attr, one_tau, steps, interpret=True)
+
+
+def lbm_step_ref(f, attr, one_tau):
+    """One step via the pure-jnp oracle (no Pallas), for A/B artifacts."""
+    return ref.lbm_step(f, attr, one_tau)
+
+
+def lbm_macros(f):
+    """(rho, ux, uy) macroscopic fields."""
+    rho, ux, uy = ref.macros(f)
+    return jnp.stack([rho, ux, uy], axis=0)
+
+
+def example_args(h, w):
+    """Abstract avals for lowering at a given grid size."""
+    f = jax.ShapeDtypeStruct((9, h, w), jnp.float32)
+    attr = jax.ShapeDtypeStruct((h, w), jnp.int32)
+    one_tau = jax.ShapeDtypeStruct((), jnp.float32)
+    return f, attr, one_tau

@@ -1,0 +1,61 @@
+"""L2 model tests: scan-cascade semantics and macro extraction."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def test_cascade_model_equals_python_loop():
+    f = ref.equilibrium_init(16, 16)
+    attr = ref.cavity_attr(16, 16)
+    ot = jnp.float32(1.0 / 0.7)
+    got = model.lbm_cascade(f, attr, ot, 6)
+    want = f
+    for _ in range(6):
+        want = model.lbm_step(want, attr, ot)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_pallas_step_equals_ref_step_entrypoint():
+    rng = np.random.default_rng(3)
+    f = jnp.asarray(rng.uniform(0.05, 0.2, size=(9, 12, 12)).astype(np.float32))
+    attr = ref.cavity_attr(12, 12)
+    ot = jnp.float32(1.4)
+    a = model.lbm_step(f, attr, ot)
+    b = model.lbm_step_ref(f, attr, ot)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_macros_shape_and_values():
+    f = ref.equilibrium_init(8, 10)
+    out = model.lbm_macros(f)
+    assert out.shape == (3, 8, 10)
+    np.testing.assert_allclose(np.asarray(out[0]), 1.0, atol=1e-6)  # rho
+    np.testing.assert_allclose(np.asarray(out[1]), 0.0, atol=1e-7)  # ux
+    np.testing.assert_allclose(np.asarray(out[2]), 0.0, atol=1e-7)  # uy
+
+
+def test_example_args_shapes():
+    f, attr, ot = model.example_args(32, 48)
+    assert f.shape == (9, 32, 48)
+    assert attr.shape == (32, 48)
+    assert ot.shape == ()
+
+
+@settings(max_examples=8, deadline=None)
+@given(steps=st.integers(1, 8), tau=st.floats(0.55, 1.8))
+def test_cascade_conserves_fluid_mass(steps, tau):
+    h = w = 12
+    f = ref.equilibrium_init(h, w)
+    attr = ref.cavity_attr(h, w)
+    fluid = np.asarray(attr) == ref.FLUID
+    out = model.lbm_cascade(f, attr, jnp.float32(1.0 / tau), steps)
+    m0 = float(np.asarray(f).sum(axis=0)[fluid].sum())
+    m1 = float(np.asarray(out).sum(axis=0)[fluid].sum())
+    assert m1 == pytest.approx(m0, rel=1e-5)

@@ -1,0 +1,22 @@
+#![allow(dead_code)]
+//! Shared mini-bench harness (criterion is not in the offline crate
+//! set): warmup + timed runs + robust summary.
+
+use spdx::util::stats::{summarize, time_runs, Summary};
+
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, f: F) -> Summary {
+    let samples = time_runs(warmup, iters, f);
+    let s = summarize(&samples);
+    println!(
+        "{name:<44} median {:>10.3} ms  (mad {:>7.3} ms, n={})",
+        s.median * 1e3,
+        s.mad * 1e3,
+        s.n
+    );
+    s
+}
+
+/// Print a section header.
+pub fn section(title: &str) {
+    println!("\n==== {title} ====");
+}

@@ -1,0 +1,39 @@
+//! Compiler-productivity metric (the paper's motivation is design
+//! productivity): time to go from SPD text to a scheduled pipeline,
+//! per core and for full designs.
+
+mod common;
+
+use common::{bench, section};
+use spdx::dfg;
+use spdx::lbm::spd_gen::{gen_bndry, gen_calc, generate, LbmDesign};
+use spdx::spd::{parse_core, Registry};
+
+fn main() {
+    section("front-end: parse");
+    let calc_src = gen_calc();
+    let bndry_src = gen_bndry();
+    bench("parse uLBM_calc (76 statements)", 5, 30, || {
+        let _ = parse_core(&calc_src).unwrap();
+    });
+    bench("parse uLBM_bndry", 5, 30, || {
+        let _ = parse_core(&bndry_src).unwrap();
+    });
+
+    section("middle-end: build + elaborate + schedule");
+    let mut reg = Registry::with_library();
+    let calc = reg.register_source(&calc_src).unwrap();
+    bench("compile uLBM_calc", 5, 30, || {
+        let c = dfg::compile(&calc, &reg).unwrap();
+        assert_eq!(c.depth(), 110);
+    });
+
+    section("full designs (SPD generation + compile, W=720)");
+    for (n, m) in [(1u32, 1u32), (1, 4), (4, 1)] {
+        bench(&format!("generate+compile (n={n}, m={m})"), 1, 10, || {
+            let g = generate(&LbmDesign::new(n, m, 720, 300)).unwrap();
+            let c = dfg::compile(&g.top, &g.registry).unwrap();
+            assert_eq!(c.graph.census().total() as u32, 131 * n * m);
+        });
+    }
+}

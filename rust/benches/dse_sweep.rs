@@ -1,0 +1,59 @@
+//! DSE: the full exploration loop (paper §III / §IV "automate the
+//! process of design space exploration") — sweep timing, parallel
+//! speedup of the coordinator, and the headline conclusions.
+
+mod common;
+
+use common::{bench, section};
+use spdx::coordinator::Coordinator;
+use spdx::explore::{explore, ExploreConfig};
+
+fn main() {
+    let cfg = ExploreConfig {
+        max_n: 4,
+        max_m: 4,
+        passes: 2,
+        keep_infeasible: true,
+        ..Default::default()
+    };
+
+    section("sequential exploration (16 candidates, 720x300)");
+    let s_seq = bench("explore() sequential", 0, 3, || {
+        let evals = explore(&cfg).unwrap();
+        assert!(!evals.is_empty());
+    });
+
+    section("coordinator (multi-threaded)");
+    let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let coord = Coordinator::new(cfg).with_workers(workers);
+    let s_par = bench(&format!("coordinator, {workers} workers"), 0, 3, || {
+        let (evals, _) = coord.run().unwrap();
+        assert!(!evals.is_empty());
+    });
+    println!(
+        "  -> parallel speedup {:.2}x on {workers} workers",
+        s_seq.median / s_par.median
+    );
+
+    section("headline conclusions");
+    let (evals, _) = coord.run().unwrap();
+    let feasible: Vec<_> = evals.iter().filter(|e| e.infeasible.is_none()).collect();
+    let best = feasible
+        .iter()
+        .max_by(|a, b| a.perf_per_watt.partial_cmp(&b.perf_per_watt).unwrap())
+        .unwrap();
+    println!(
+        "  best perf/W: (n={}, m={}) {:.3} GFlop/sW (paper: (1,4) at 2.416)",
+        best.design.n, best.design.m, best.perf_per_watt
+    );
+    assert_eq!((best.design.n, best.design.m), (1, 4));
+    // every x1 design keeps u ~ 0.999; every n>1 design is BW-bound
+    for e in &feasible {
+        if e.design.n == 1 {
+            assert!(e.timing.utilization > 0.99);
+        } else {
+            assert!(e.timing.utilization < 0.6);
+        }
+    }
+    println!("  bandwidth-bound designs: all n > 1 (paper §III-C)  OK");
+}

@@ -1,0 +1,57 @@
+//! §Perf L3 target: throughput of the three simulation engines —
+//! the numbers the EXPERIMENTS.md §Perf section tracks.
+//!
+//!   * timing simulation: cycles/s (Table III runs must take seconds);
+//!   * dataflow evaluation: cell-steps/s (numerical verification);
+//!   * cycle-accurate engine: cycles/s (register-exact runs).
+
+mod common;
+
+use common::{bench, section};
+use spdx::explore::{evaluate, ExploreConfig};
+use spdx::lbm::reference::LbmState;
+use spdx::lbm::spd_gen::LbmDesign;
+use spdx::lbm::workload::LbmRunner;
+
+fn main() {
+    section("timing simulation (720x300, 3 passes)");
+    let cfg = ExploreConfig { passes: 3, ..Default::default() };
+    let d11 = LbmDesign::new(1, 1, 720, 300);
+    let e = evaluate(&d11, &cfg).unwrap();
+    let cycles = e.timing.total_cycles as f64 * cfg.passes as f64 / cfg.passes as f64;
+    let s = bench("timing sim (1,1), 3 passes", 1, 5, || {
+        let _ = evaluate(&d11, &cfg).unwrap();
+    });
+    println!(
+        "  -> {:.1} Mcycle/s simulated ({} cycles per run incl. compile+estimate)",
+        cycles / s.median / 1e6,
+        e.timing.total_cycles
+    );
+
+    section("dataflow evaluation (64x64 cavity)");
+    let runner = LbmRunner::new(LbmDesign::new(1, 1, 64, 64)).unwrap();
+    let state = LbmState::cavity(64, 64);
+    let steps = 20u32;
+    let s = bench("dataflow 20 steps @64x64", 1, 5, || {
+        let _ = runner.run_dataflow(state.clone(), 1.0 / 0.6, steps).unwrap();
+    });
+    let cellsteps = 64.0 * 64.0 * steps as f64;
+    println!("  -> {:.2} Mcell-step/s", cellsteps / s.median / 1e6);
+
+    section("cycle-accurate engine (32x32 cavity)");
+    let runner32 = LbmRunner::new(LbmDesign::new(1, 1, 32, 32)).unwrap();
+    let state32 = LbmState::cavity(32, 32);
+    let s = bench("cycle engine 4 steps @32x32", 1, 3, || {
+        let _ = runner32.run_cycle_accurate(state32.clone(), 1.0 / 0.6, 4).unwrap();
+    });
+    let (_, cycles) = runner32
+        .run_cycle_accurate(state32.clone(), 1.0 / 0.6, 4)
+        .unwrap();
+    println!("  -> {:.2} Mcycle/s through {} graph nodes", cycles as f64 / s.median / 1e6, runner32.compiled.graph.len());
+
+    section("software reference (64x64 cavity)");
+    let s = bench("rust reference 20 steps @64x64", 1, 5, || {
+        let _ = spdx::lbm::reference::run(state.clone(), 1.0 / 0.6, steps as usize);
+    });
+    println!("  -> {:.2} Mcell-step/s", cellsteps / s.median / 1e6);
+}

@@ -1,0 +1,71 @@
+//! T3-perf / T3-power: regenerate Table III's utilization, sustained
+//! performance, power and perf/W columns via the cycle-level timing
+//! simulation against the DDR3 model, and compare with the paper.
+
+mod common;
+
+use common::{bench, section};
+use spdx::explore::{evaluate, ExploreConfig};
+use spdx::lbm::spd_gen::LbmDesign;
+use spdx::power::PAPER_TABLE3;
+
+fn main() {
+    let cfg = ExploreConfig { passes: 3, ..Default::default() };
+
+    section("Table III — utilization / performance / power (model vs paper)");
+    println!(
+        "{:<8} {:>7} {:>7} | {:>8} {:>8} {:>6} | {:>6} {:>6} | {:>7} {:>7}",
+        "(n,m)", "u", "paper", "GFlop/s", "paper", "d%", "P[W]", "paper", "GF/sW", "paper"
+    );
+    for d in LbmDesign::paper_designs() {
+        let e = evaluate(&d, &cfg).expect("evaluate");
+        let p = PAPER_TABLE3
+            .iter()
+            .find(|p| p.n == d.n && p.m == d.m)
+            .unwrap();
+        println!(
+            "({}, {})   {:>7.3} {:>7.3} | {:>8.1} {:>8.1} {:>6.1} | {:>6.1} {:>6.1} | {:>7.3} {:>7.3}",
+            d.n,
+            d.m,
+            e.timing.utilization,
+            p.utilization,
+            e.timing.performance_gflops,
+            p.performance_gflops,
+            100.0 * (e.timing.performance_gflops - p.performance_gflops)
+                / p.performance_gflops,
+            e.power_w,
+            p.power_w,
+            e.perf_per_watt,
+            p.perf_per_watt,
+        );
+        // the reproduction bands: utilization within 1%, performance
+        // within 2%, power within 6%
+        assert!((e.timing.utilization - p.utilization).abs() / p.utilization < 0.01);
+        assert!(
+            (e.timing.performance_gflops - p.performance_gflops).abs()
+                / p.performance_gflops
+                < 0.02
+        );
+        assert!((e.power_w - p.power_w).abs() / p.power_w < 0.06);
+    }
+
+    // eq. (10): peak performance at nm = 4 is 94.32 GFlop/s
+    let e14 = evaluate(&LbmDesign::new(1, 4, 720, 300), &cfg).unwrap();
+    println!(
+        "\neq. (10) peak at nm=4: {:.2} GFlop/s (paper: 94.32)",
+        e14.timing.peak_gflops
+    );
+    assert!((e14.timing.peak_gflops - 94.32).abs() < 0.05);
+
+    section("timing-simulation speed (720x300 grid)");
+    for d in [LbmDesign::new(1, 1, 720, 300), LbmDesign::new(1, 4, 720, 300)] {
+        bench(
+            &format!("evaluate (n={}, m={}), 3 passes", d.n, d.m),
+            1,
+            5,
+            || {
+                let _ = evaluate(&d, &cfg).unwrap();
+            },
+        );
+    }
+}

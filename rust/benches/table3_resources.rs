@@ -1,0 +1,81 @@
+//! T3-res: regenerate Table III's resource columns (ALM / Regs / BRAM /
+//! DSP) for the paper's six designs and report deltas vs the measured
+//! values, plus the time the structural estimator takes per design.
+
+mod common;
+
+use common::{bench, section};
+use spdx::dfg::OpLatency;
+use spdx::lbm::spd_gen::{generate, LbmDesign};
+use spdx::power::PAPER_TABLE3;
+use spdx::resource::{estimate_hierarchical, CostTable, DesignMeta, STRATIX_V_5SGXEA7};
+use spdx::util::commas;
+
+fn main() {
+    section("Table III — resource columns (model vs paper)");
+    println!(
+        "{:<8} {:>9} {:>9} {:>6} | {:>10} {:>10} {:>6} | {:>11} {:>11} {:>6} | {:>5} {:>5}",
+        "(n,m)", "ALM", "paper", "d%", "Regs", "paper", "d%", "BRAM", "paper", "d%", "DSP", "ppr"
+    );
+    let mut worst: (f64, &str) = (0.0, "");
+    for d in LbmDesign::paper_designs() {
+        let g = generate(&d).expect("generate");
+        let est = estimate_hierarchical(
+            &g.top,
+            &g.registry,
+            OpLatency::default(),
+            &DesignMeta { lanes: d.n, pes: d.m },
+            &CostTable::default(),
+            &STRATIX_V_5SGXEA7,
+        )
+        .expect("estimate");
+        let p = PAPER_TABLE3
+            .iter()
+            .find(|p| p.n == d.n && p.m == d.m)
+            .unwrap();
+        let dp = |ours: f64, paper: f64| 100.0 * (ours - paper) / paper;
+        let (da, dr, db) = (
+            dp(est.core.alms as f64, p.alms),
+            dp(est.core.regs as f64, p.regs),
+            dp(est.core.bram_bits as f64, p.bram_bits),
+        );
+        for (v, tag) in [(da, "ALM"), (dr, "Regs"), (db, "BRAM")] {
+            if v.abs() > worst.0.abs() {
+                worst = (v, tag);
+            }
+        }
+        println!(
+            "({}, {})   {:>9} {:>9} {:>6.1} | {:>10} {:>10} {:>6.1} | {:>11} {:>11} {:>6.1} | {:>5} {:>5}",
+            d.n,
+            d.m,
+            commas(est.core.alms),
+            commas(p.alms as u64),
+            da,
+            commas(est.core.regs),
+            commas(p.regs as u64),
+            dr,
+            commas(est.core.bram_bits),
+            commas(p.bram_bits as u64),
+            db,
+            est.core.dsps,
+            p.dsps as u64,
+        );
+        assert_eq!(est.core.dsps, p.dsps as u64, "DSP column must be exact");
+    }
+    println!("worst relative error: {:+.1}% ({})", worst.0, worst.1);
+
+    section("estimator speed");
+    let d = LbmDesign::new(1, 4, 720, 300);
+    let g = generate(&d).unwrap();
+    bench("estimate_hierarchical (1,4) @720x300", 2, 10, || {
+        let _ = estimate_hierarchical(
+            &g.top,
+            &g.registry,
+            OpLatency::default(),
+            &DesignMeta { lanes: 1, pes: 4 },
+            &CostTable::default(),
+            &STRATIX_V_5SGXEA7,
+        )
+        .unwrap();
+    });
+}

@@ -1,0 +1,38 @@
+//! T4: regenerate Table IV — the floating-point operator census of a
+//! PE pipeline — and verify it is exact at every spatial width.
+
+mod common;
+
+use common::{bench, section};
+use spdx::dfg;
+use spdx::lbm::spd_gen::{generate, LbmDesign};
+use spdx::report;
+
+fn main() {
+    section("Table IV — FP operators in a core (x1 pipeline)");
+    let g = generate(&LbmDesign::new(1, 1, 720, 300)).expect("generate");
+    let c = dfg::compile(&g.top, &g.registry).expect("compile");
+    let census = c.graph.census();
+    println!("{}", report::table4(&census));
+    assert_eq!(census.add, 70, "Adder");
+    assert_eq!(census.mul, 60, "Multiplier");
+    assert_eq!(census.div, 1, "Divider");
+    assert_eq!(census.total(), 131, "Total");
+
+    section("census scales exactly with n*m");
+    for (n, m) in [(2u32, 1u32), (4, 1), (1, 2), (1, 4), (2, 2)] {
+        let g = generate(&LbmDesign::new(n, m, 720, 300)).unwrap();
+        let c = dfg::compile(&g.top, &g.registry).unwrap();
+        let total = c.graph.census().total();
+        println!("  (n={n}, m={m}): {total} FP operators (= {})", 131 * n * m);
+        assert_eq!(total as u32, 131 * n * m);
+    }
+
+    section("census computation speed");
+    let g = generate(&LbmDesign::new(1, 4, 720, 300)).unwrap();
+    let c = dfg::compile(&g.top, &g.registry).unwrap();
+    bench("census of flat (1,4) graph", 3, 20, || {
+        let s = c.graph.census();
+        assert_eq!(s.total(), 4 * 131);
+    });
+}

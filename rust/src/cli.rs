@@ -1,0 +1,338 @@
+//! Hand-rolled CLI (clap is not in the offline crate set).
+//!
+//! Subcommands:
+//!   compile   <file.spd> [--dot] [--verilog]     compile one SPD core
+//!   table3    [--grid WxH] [--passes N]          regenerate Table III
+//!   table4                                       regenerate Table IV
+//!   explore   [--grid WxH] [--max-n N] [--max-m M] [--workers K]
+//!   simulate  --n N --m M [--grid WxH] [--steps S]
+//!   verify    [--grid WxH] [--steps S]           DFG sim vs PJRT oracle
+//!   emit-verilog --n N --m M [--grid WxH] [--out DIR]
+
+use std::collections::HashMap;
+
+use crate::coordinator::Coordinator;
+use crate::dfg;
+use crate::error::{Error, Result};
+use crate::explore::{evaluate, ExploreConfig};
+use crate::lbm::reference::LbmState;
+use crate::lbm::workload::{fluid_max_diff, LbmRunner};
+use crate::lbm::LbmDesign;
+use crate::report;
+use crate::runtime::{dense_to_state, state_to_dense, PjrtRuntime};
+use crate::spd::{parse_core, Registry};
+use crate::verilog;
+
+/// Parsed flag set: positionals + `--key value` / `--flag` options.
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let next_is_value =
+                    i + 1 < argv.len() && !argv[i + 1].starts_with("--");
+                if next_is_value {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Args { positional, flags }
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                Error::Explore(format!("bad value for --{name}: `{v}`"))
+            }),
+        }
+    }
+
+    pub fn grid(&self, default: (u32, u32)) -> Result<(u32, u32)> {
+        match self.flags.get("grid") {
+            None => Ok(default),
+            Some(v) => {
+                let (w, h) = v.split_once('x').ok_or_else(|| {
+                    Error::Explore(format!("bad --grid `{v}` (want WxH)"))
+                })?;
+                Ok((
+                    w.parse().map_err(|_| Error::Explore("bad grid W".into()))?,
+                    h.parse().map_err(|_| Error::Explore("bad grid H".into()))?,
+                ))
+            }
+        }
+    }
+}
+
+pub const USAGE: &str = "\
+spdx — SPD DSL compiler + FPGA-substrate design space exploration
+ (reproduction of Sano 2015, DSL-based DSE for stream computing)
+
+USAGE: spdx <command> [options]
+
+COMMANDS:
+  compile <file.spd> [--dot] [--verilog]   compile an SPD core, print stats
+  table3  [--grid WxH] [--passes N]        regenerate the paper's Table III
+  table4                                   regenerate the paper's Table IV
+  explore [--grid WxH] [--max-n N] [--max-m M] [--workers K]
+                                           full design-space exploration
+  simulate --n N --m M [--grid WxH] [--steps S] [--cycle-accurate]
+                                           run LBM through a compiled design
+  verify  [--grid WxH] [--steps S] [--artifacts DIR]
+                                           DFG simulation vs PJRT oracle
+  emit-verilog --n N --m M [--grid WxH]    print the generated Verilog
+  help                                     this text
+";
+
+/// Entry point used by `main.rs`.
+pub fn run(argv: Vec<String>) -> Result<i32> {
+    if argv.is_empty() {
+        println!("{USAGE}");
+        return Ok(2);
+    }
+    let cmd = argv[0].clone();
+    let args = Args::parse(&argv[1..]);
+    match cmd.as_str() {
+        "compile" => cmd_compile(&args),
+        "table3" => cmd_table3(&args),
+        "table4" => cmd_table4(),
+        "explore" => cmd_explore(&args),
+        "simulate" => cmd_simulate(&args),
+        "verify" => cmd_verify(&args),
+        "emit-verilog" => cmd_emit_verilog(&args),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(0)
+        }
+        other => {
+            eprintln!("unknown command `{other}`\n{USAGE}");
+            Ok(2)
+        }
+    }
+}
+
+fn cmd_compile(args: &Args) -> Result<i32> {
+    let path = args.positional.first().ok_or_else(|| {
+        Error::Explore("compile: missing <file.spd>".into())
+    })?;
+    let src = std::fs::read_to_string(path)?;
+    let core = parse_core(&src)?;
+    let registry = Registry::with_library();
+    let compiled = dfg::compile(&core, &registry)?;
+    let census = compiled.graph.census();
+    println!("core `{}`:", core.name);
+    println!("  nodes (flat)     : {}", compiled.graph.len());
+    println!("  pipeline depth   : {} stages", compiled.depth());
+    println!(
+        "  FP operators     : {} add, {} mul, {} div, {} sqrt ({} total)",
+        census.add, census.mul, census.div, census.sqrt, census.total()
+    );
+    println!(
+        "  balancing stages : {}",
+        compiled.schedule.total_balance_stages
+    );
+    if args.flag("dot").is_some() {
+        println!("{}", dfg::to_dot(&compiled.graph, Some(&compiled.schedule)));
+    }
+    if args.flag("verilog").is_some() {
+        println!("{}", verilog::emit(&compiled.graph, &compiled.schedule)?);
+    }
+    Ok(0)
+}
+
+fn explore_cfg(args: &Args) -> Result<ExploreConfig> {
+    let (grid_w, grid_h) = args.grid((720, 300))?;
+    Ok(ExploreConfig {
+        grid_w,
+        grid_h,
+        max_n: args.get("max-n", 4)?,
+        max_m: args.get("max-m", 4)?,
+        passes: args.get("passes", 3)?,
+        keep_infeasible: args.flag("keep-infeasible").is_some(),
+        ..Default::default()
+    })
+}
+
+fn cmd_table3(args: &Args) -> Result<i32> {
+    let cfg = explore_cfg(args)?;
+    let mut evals = Vec::new();
+    for design in LbmDesign::paper_designs() {
+        let d = LbmDesign { w: cfg.grid_w, h: cfg.grid_h, ..design };
+        evals.push(evaluate(&d, &cfg)?);
+    }
+    println!("{}", report::table3(&evals));
+    println!("comparison vs paper (Table III):");
+    println!("{}", report::table3_vs_paper(&evals));
+    Ok(0)
+}
+
+fn cmd_table4() -> Result<i32> {
+    let g = crate::lbm::spd_gen::generate(&LbmDesign::new(1, 1, 720, 300))?;
+    let c = dfg::compile(&g.top, &g.registry)?;
+    println!("{}", report::table4(&c.graph.census()));
+    Ok(0)
+}
+
+fn cmd_explore(args: &Args) -> Result<i32> {
+    let cfg = explore_cfg(args)?;
+    let workers: usize = args.get("workers", 0)?;
+    let mut coord = Coordinator::new(cfg);
+    if workers > 0 {
+        coord = coord.with_workers(workers);
+    }
+    let (evals, metrics) = coord.run()?;
+    println!("{}", report::table3(&evals));
+    if let Some(best) = evals.first() {
+        println!(
+            "best performance/power: (n, m) = ({}, {}) at {:.3} GFlop/sW",
+            best.design.n, best.design.m, best.perf_per_watt
+        );
+    }
+    println!(
+        "evaluated {} designs in {:.2}s total job time ({} workers)",
+        metrics.completed,
+        metrics.total_seconds(),
+        coord.workers
+    );
+    Ok(0)
+}
+
+fn cmd_simulate(args: &Args) -> Result<i32> {
+    let (w, h) = args.grid((64, 64))?;
+    let n: u32 = args.get("n", 1)?;
+    let m: u32 = args.get("m", 1)?;
+    let steps: u32 = args.get("steps", 100)?;
+    let one_tau: f32 = args.get("one-tau", 1.0 / 0.6)?;
+    let design = LbmDesign::new(n, m, w, h);
+    let runner = LbmRunner::new(design)?;
+    let state = LbmState::cavity(h as usize, w as usize);
+    let t0 = std::time::Instant::now();
+    let (final_state, cycles_info) = if args.flag("cycle-accurate").is_some() {
+        let (s, cycles) = runner.run_cycle_accurate(state, one_tau, steps)?;
+        (s, format!("{cycles} simulated cycles"))
+    } else {
+        (
+            runner.run_dataflow(state, one_tau, steps)?,
+            "dataflow mode".to_string(),
+        )
+    };
+    let dt = t0.elapsed().as_secs_f64();
+    // report a few macroscopic numbers
+    let mid = (h as usize / 2) * w as usize + w as usize / 2;
+    let (rho, ux, uy) = final_state.macros(mid);
+    println!(
+        "LBM x{n} m{m} on {w}x{h}, {steps} steps ({cycles_info}) in {dt:.2}s"
+    );
+    println!("  center cell: rho={rho:.5} u=({ux:.5}, {uy:.5})");
+    println!("  fluid mass : {:.4}", final_state.fluid_mass());
+    Ok(0)
+}
+
+fn cmd_verify(args: &Args) -> Result<i32> {
+    let (w, h) = args.grid((64, 64))?;
+    let steps: u32 = args.get("steps", 10)?;
+    let artifacts: String = args.get("artifacts", "artifacts".to_string())?;
+    let one_tau = 1.0f32 / 0.6;
+
+    let design = LbmDesign::new(1, 1, w, h);
+    let runner = LbmRunner::new(design)?;
+    let state = LbmState::cavity(h as usize, w as usize);
+
+    // DFG dataflow simulation
+    let hw = runner.run_dataflow(state.clone(), one_tau, steps)?;
+    // Rust reference
+    let sw = crate::lbm::reference::run(state.clone(), one_tau, steps as usize);
+    // PJRT oracle (Pallas kernel, scan-fused per step)
+    let mut rt = PjrtRuntime::new(&artifacts)?;
+    let (mut fdense, attr) = state_to_dense(&state);
+    let artifact = format!("lbm_step_{h}x{w}");
+    for _ in 0..steps {
+        fdense = rt.run_lbm(&artifact, &fdense, &attr, one_tau, h as usize, w as usize)?;
+    }
+    let oracle = dense_to_state(&fdense, &state);
+
+    let d_hw_sw = fluid_max_diff(&hw, &sw);
+    let d_hw_or = fluid_max_diff(&hw, &oracle);
+    let d_sw_or = fluid_max_diff(&sw, &oracle);
+    println!("verification on {w}x{h}, {steps} steps (PJRT platform: {}):", rt.platform());
+    println!("  DFG sim  vs rust reference : max fluid diff {d_hw_sw:.3e}");
+    println!("  DFG sim  vs PJRT oracle    : max fluid diff {d_hw_or:.3e}");
+    println!("  rust ref vs PJRT oracle    : max fluid diff {d_sw_or:.3e}");
+    let tol = 1e-4 * steps as f32;
+    if d_hw_sw < tol && d_hw_or < tol {
+        println!("VERIFY OK");
+        Ok(0)
+    } else {
+        println!("VERIFY FAILED (tolerance {tol:.1e})");
+        Ok(1)
+    }
+}
+
+fn cmd_emit_verilog(args: &Args) -> Result<i32> {
+    let (w, h) = args.grid((720, 300))?;
+    let n: u32 = args.get("n", 1)?;
+    let m: u32 = args.get("m", 1)?;
+    let g = crate::lbm::spd_gen::generate(&LbmDesign::new(n, m, w, h))?;
+    let c = dfg::compile(&g.top, &g.registry)?;
+    println!("// ==== IP shim library ====");
+    println!("{}", verilog::shim_library());
+    println!("// ==== {} ====", g.top.name);
+    println!("{}", verilog::emit(&c.hier_graph, &c.hier_schedule)?);
+    Ok(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn args_parse_flags_and_positionals() {
+        let a = Args::parse(&[
+            "file.spd".into(),
+            "--dot".into(),
+            "--grid".into(),
+            "64x32".into(),
+        ]);
+        assert_eq!(a.positional, vec!["file.spd"]);
+        assert_eq!(a.flag("dot"), Some("true"));
+        assert_eq!(a.grid((0, 0)).unwrap(), (64, 32));
+    }
+
+    #[test]
+    fn get_parses_with_default() {
+        let a = Args::parse(&["--n".into(), "4".into()]);
+        assert_eq!(a.get("n", 1u32).unwrap(), 4);
+        assert_eq!(a.get("m", 7u32).unwrap(), 7);
+        assert!(a.get::<u32>("n", 0).is_ok());
+    }
+
+    #[test]
+    fn bad_grid_is_error() {
+        let a = Args::parse(&["--grid".into(), "64".into()]);
+        assert!(a.grid((1, 1)).is_err());
+    }
+
+    #[test]
+    fn table4_runs() {
+        assert_eq!(cmd_table4().unwrap(), 0);
+    }
+}

@@ -1,0 +1,56 @@
+//! Run metrics for DSE jobs.
+
+/// Aggregated metrics of one exploration run.
+#[derive(Clone, Debug)]
+pub struct RunMetrics {
+    pub jobs: usize,
+    pub completed: usize,
+    pub feasible: usize,
+    /// per-job wall seconds, indexed by job id (0.0 = not finished)
+    pub job_seconds: Vec<f64>,
+}
+
+impl RunMetrics {
+    pub fn new(jobs: usize) -> Self {
+        RunMetrics { jobs, completed: 0, feasible: 0, job_seconds: vec![0.0; jobs] }
+    }
+
+    pub fn record(&mut self, index: usize, seconds: f64, feasible: bool) {
+        self.completed += 1;
+        if feasible {
+            self.feasible += 1;
+        }
+        if index < self.job_seconds.len() {
+            self.job_seconds[index] = seconds;
+        }
+    }
+
+    /// Sum of per-job evaluation time (CPU-ish seconds).
+    pub fn total_seconds(&self) -> f64 {
+        self.job_seconds.iter().sum()
+    }
+
+    pub fn slowest_job(&self) -> Option<(usize, f64)> {
+        self.job_seconds
+            .iter()
+            .cloned()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_accumulates() {
+        let mut m = RunMetrics::new(3);
+        m.record(0, 1.0, true);
+        m.record(2, 2.0, false);
+        assert_eq!(m.completed, 2);
+        assert_eq!(m.feasible, 1);
+        assert_eq!(m.total_seconds(), 3.0);
+        assert_eq!(m.slowest_job(), Some((2, 2.0)));
+    }
+}

@@ -1,0 +1,154 @@
+//! Multi-threaded DSE coordination.
+//!
+//! The coordinator owns the exploration run: it fans candidate design
+//! points out to worker threads (each worker compiles the SPD design,
+//! estimates resources, runs the timing simulation and the power
+//! model), collects the per-design evaluations, and assembles the
+//! final ranking.  This is the paper's (manual) explore-compile-measure
+//! loop, automated — the "future work" of §IV.
+//!
+//! No async runtime is available in the offline crate set; plain
+//! `std::thread` workers over an `mpsc` channel are used instead.
+
+pub mod metrics;
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+use crate::error::{Error, Result};
+use crate::explore::{candidates, evaluate, sort_by_perf_per_watt, Evaluation, ExploreConfig};
+use crate::lbm::spd_gen::LbmDesign;
+
+pub use metrics::RunMetrics;
+
+/// A DSE job: one design point to evaluate.
+#[derive(Clone, Copy, Debug)]
+pub struct Job {
+    pub index: usize,
+    pub design: LbmDesign,
+}
+
+/// The coordinator.
+pub struct Coordinator {
+    pub cfg: ExploreConfig,
+    pub workers: usize,
+}
+
+impl Coordinator {
+    pub fn new(cfg: ExploreConfig) -> Self {
+        let workers = thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        Coordinator { cfg, workers }
+    }
+
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers.max(1);
+        self
+    }
+
+    /// Run the exploration: evaluate every candidate in parallel,
+    /// return feasible evaluations sorted by perf/W (best first) plus
+    /// run metrics.
+    pub fn run(&self) -> Result<(Vec<Evaluation>, RunMetrics)> {
+        let designs = candidates(&self.cfg);
+        let n_jobs = designs.len();
+        let mut metrics = RunMetrics::new(n_jobs);
+
+        let jobs = Arc::new(Mutex::new(
+            designs
+                .into_iter()
+                .enumerate()
+                .map(|(index, design)| Job { index, design })
+                .collect::<Vec<_>>(),
+        ));
+        let (tx, rx) = mpsc::channel::<(usize, Result<Evaluation>, f64)>();
+
+        thread::scope(|scope| {
+            for _ in 0..self.workers.min(n_jobs.max(1)) {
+                let jobs = Arc::clone(&jobs);
+                let tx = tx.clone();
+                let cfg = self.cfg;
+                scope.spawn(move || loop {
+                    let job = { jobs.lock().unwrap().pop() };
+                    let Some(job) = job else { break };
+                    let t0 = std::time::Instant::now();
+                    let result = evaluate(&job.design, &cfg);
+                    let dt = t0.elapsed().as_secs_f64();
+                    if tx.send((job.index, result, dt)).is_err() {
+                        break;
+                    }
+                });
+            }
+            drop(tx);
+        });
+
+        let mut slots: Vec<Option<Evaluation>> = vec![None; n_jobs];
+        let mut first_err: Option<Error> = None;
+        for (index, result, dt) in rx {
+            match result {
+                Ok(e) => {
+                    metrics.record(index, dt, e.infeasible.is_none());
+                    slots[index] = Some(e);
+                }
+                Err(err) => {
+                    metrics.record(index, dt, false);
+                    if first_err.is_none() {
+                        first_err = Some(err);
+                    }
+                }
+            }
+        }
+        if let Some(err) = first_err {
+            return Err(err);
+        }
+
+        let mut evals: Vec<Evaluation> = slots
+            .into_iter()
+            .flatten()
+            .filter(|e| e.infeasible.is_none() || self.cfg.keep_infeasible)
+            .collect();
+        sort_by_perf_per_watt(&mut evals);
+        Ok((evals, metrics))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> ExploreConfig {
+        ExploreConfig {
+            grid_w: 64,
+            grid_h: 32,
+            max_n: 2,
+            max_m: 2,
+            passes: 2,
+            keep_infeasible: true,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn parallel_run_matches_sequential() {
+        let cfg = small_cfg();
+        let (par, metrics) = Coordinator::new(cfg).with_workers(3).run().unwrap();
+        let seq = crate::explore::explore(&cfg).unwrap();
+        assert_eq!(par.len(), seq.len());
+        assert_eq!(metrics.completed, 4);
+        for (a, b) in par.iter().zip(&seq) {
+            assert_eq!(a.design, b.design);
+            assert!((a.perf_per_watt - b.perf_per_watt).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn single_worker_works() {
+        let (evals, metrics) =
+            Coordinator::new(small_cfg()).with_workers(1).run().unwrap();
+        assert_eq!(evals.len(), 4);
+        assert_eq!(metrics.completed, 4);
+        assert!(metrics.total_seconds() > 0.0);
+    }
+}

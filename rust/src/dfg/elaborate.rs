@@ -1,0 +1,398 @@
+//! Hierarchy elaboration: flatten `Sub` nodes into their defining
+//! core's primitives (paper Fig. 3d — hierarchical construction).
+//!
+//! Each `HDL` node backed by an SPD core is replaced by a fresh
+//! instance of that core's (recursively elaborated) graph.  The
+//! statically declared HDL delay is verified against the sub-core's
+//! computed pipeline depth — the paper requires the delay of an HDL
+//! node to be known in advance, and a wrong declaration would silently
+//! corrupt delay balancing.
+
+use std::collections::HashMap;
+
+use super::build::build;
+use super::graph::{Edge, Graph, NodeId, NodeKind};
+use super::schedule::{schedule_with, OpLatency};
+use crate::error::{Error, Result};
+use crate::spd::Registry;
+
+/// Flatten all `Sub` nodes recursively.  `latency` is the operator
+/// latency table used to verify declared HDL delays.
+pub fn elaborate(g: &Graph, registry: &Registry) -> Result<Graph> {
+    elaborate_with(g, registry, OpLatency::default())
+}
+
+pub fn elaborate_with(
+    g: &Graph,
+    registry: &Registry,
+    latency: OpLatency,
+) -> Result<Graph> {
+    let mut memo: HashMap<String, (Graph, u32)> = HashMap::new();
+    let mut stack: Vec<String> = vec![g.core_name.clone()];
+    elaborate_inner(g, registry, latency, &mut memo, &mut stack)
+}
+
+fn elaborate_inner(
+    g: &Graph,
+    registry: &Registry,
+    latency: OpLatency,
+    memo: &mut HashMap<String, (Graph, u32)>,
+    stack: &mut Vec<String>,
+) -> Result<Graph> {
+    // fast path: nothing to do
+    if !g.nodes.iter().any(|n| matches!(n.kind, NodeKind::Sub { .. })) {
+        return Ok(g.clone());
+    }
+
+    let mut out = Graph { core_name: g.core_name.clone(), ..Default::default() };
+
+    // For every outer node: either a copied node id, or (for Sub nodes)
+    // a mapping from the sub's output ports to inner drivers.
+    enum Mapped {
+        Plain(NodeId),
+        /// For each sub output port: the (new-graph node, port) driving it.
+        Sub(Vec<(NodeId, usize)>),
+    }
+    let mut mapped: Vec<Option<Mapped>> = (0..g.len()).map(|_| None).collect();
+    // Deferred outer edges: (new dst, slot, outer src id, outer src port, branch)
+    let mut deferred: Vec<(NodeId, usize, NodeId, usize, bool)> = Vec::new();
+
+    for (id, node) in g.nodes.iter().enumerate() {
+        match &node.kind {
+            NodeKind::Sub { core, declared_delay } => {
+                // recursively obtain the elaborated sub-graph + depth
+                if !memo.contains_key(&core.name) {
+                    if stack.contains(&core.name) {
+                        return Err(Error::Elaborate(format!(
+                            "recursive module instantiation: {} -> {}",
+                            stack.join(" -> "),
+                            core.name
+                        )));
+                    }
+                    stack.push(core.name.clone());
+                    let sub_g = build(core, registry)?;
+                    // elaborate first (this recursively verifies the
+                    // sub-core's own HDL delay declarations) ...
+                    let sub_flat =
+                        elaborate_inner(&sub_g, registry, latency, memo, stack)?;
+                    // ... then compute the *modular* (hierarchical)
+                    // depth — the declared-delay semantics of an HDL
+                    // node is the module's aligned-port latency, which
+                    // may exceed the flattened schedule's depth.
+                    let depth = schedule_with(&sub_g, latency)?.depth;
+                    stack.pop();
+                    memo.insert(core.name.clone(), (sub_flat, depth));
+                }
+                let (sub_flat, depth) = memo.get(&core.name).unwrap().clone();
+                if depth != *declared_delay {
+                    return Err(Error::Elaborate(format!(
+                        "HDL node `{}`: declared delay {} but core `{}` \
+                         schedules to depth {} (fix the SPD declaration)",
+                        node.name, declared_delay, core.name, depth
+                    )));
+                }
+
+                // instantiate: copy all inner nodes except Input/Output
+                let mut inner_map: Vec<Option<(NodeId, bool)>> =
+                    vec![None; sub_flat.len()]; // (new id, _) for copied
+                // input splice table: inner Input index (creation order)
+                // -> outer edge (resolved later via `deferred` against
+                // the outer slot).
+                let inner_inputs: Vec<NodeId> = sub_flat
+                    .nodes
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, n)| matches!(n.kind, NodeKind::Input { .. }))
+                    .map(|(i, _)| i)
+                    .collect();
+                let inner_outputs: Vec<NodeId> = sub_flat
+                    .nodes
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, n)| matches!(n.kind, NodeKind::Output { .. }))
+                    .map(|(i, _)| i)
+                    .collect();
+                // map inner input node -> outer input slot index
+                let mut input_slot: HashMap<NodeId, usize> = HashMap::new();
+                for (slot, &iid) in inner_inputs.iter().enumerate() {
+                    input_slot.insert(iid, slot);
+                }
+
+                for (iid, inode) in sub_flat.nodes.iter().enumerate() {
+                    if matches!(inode.kind, NodeKind::Input { .. } | NodeKind::Output { .. })
+                    {
+                        continue;
+                    }
+                    let nid = out.add(
+                        format!("{}.{}", node.name, inode.name),
+                        inode.kind.clone(),
+                    );
+                    inner_map[iid] = Some((nid, false));
+                }
+                // wire inner edges
+                for (iid, inode) in sub_flat.nodes.iter().enumerate() {
+                    if matches!(inode.kind, NodeKind::Input { .. } | NodeKind::Output { .. })
+                    {
+                        continue;
+                    }
+                    let (nid, _) = inner_map[iid].unwrap();
+                    for (slot, e) in sub_flat.inputs[iid].iter().enumerate() {
+                        let Some(e) = e else { continue };
+                        if let Some(&outer_slot) = input_slot.get(&e.src) {
+                            // reads a sub input port: splice to the
+                            // outer driver of that slot
+                            if let Some(outer_edge) = g.inputs[id][outer_slot] {
+                                deferred.push((
+                                    nid,
+                                    slot,
+                                    outer_edge.src,
+                                    outer_edge.src_port,
+                                    e.branch || outer_edge.branch,
+                                ));
+                            }
+                        } else {
+                            let (src_new, _) = inner_map[e.src].unwrap_or_else(|| {
+                                panic!(
+                                    "inner edge from unmapped node {}",
+                                    sub_flat.node(e.src).name
+                                )
+                            });
+                            out.connect(
+                                nid,
+                                slot,
+                                Edge { src: src_new, src_port: e.src_port, branch: e.branch },
+                            );
+                        }
+                    }
+                }
+                // sub output port -> driving inner node (already copied)
+                let mut outs = Vec::with_capacity(inner_outputs.len());
+                for &oid in &inner_outputs {
+                    let e = sub_flat.inputs[oid][0].ok_or_else(|| {
+                        Error::Elaborate(format!(
+                            "core `{}` output `{}` undriven",
+                            core.name,
+                            sub_flat.node(oid).name
+                        ))
+                    })?;
+                    // output driven directly by a sub input port: the
+                    // driver is the outer edge of that slot — resolve
+                    // through a pass-through record (rare; handle by
+                    // pointing at the outer driver once deferred edges
+                    // resolve).  We insert a zero-delay Delay node to
+                    // keep the mapping uniform.
+                    if let Some(&outer_slot) = input_slot.get(&e.src) {
+                        let pass = out.add(
+                            format!("{}.pass{}", node.name, outs.len()),
+                            NodeKind::Lib(crate::library::LibKind::Delay { cycles: 0 }),
+                        );
+                        if let Some(outer_edge) = g.inputs[id][outer_slot] {
+                            deferred.push((
+                                pass,
+                                0,
+                                outer_edge.src,
+                                outer_edge.src_port,
+                                e.branch || outer_edge.branch,
+                            ));
+                        }
+                        outs.push((pass, 0));
+                    } else {
+                        let (src_new, _) = inner_map[e.src].unwrap();
+                        outs.push((src_new, e.src_port));
+                    }
+                }
+                mapped[id] = Some(Mapped::Sub(outs));
+            }
+            _ => {
+                let nid = out.add(node.name.clone(), node.kind.clone());
+                mapped[id] = Some(Mapped::Plain(nid));
+            }
+        }
+    }
+
+    // wire outer edges between copied nodes
+    for (id, node) in g.nodes.iter().enumerate() {
+        if matches!(node.kind, NodeKind::Sub { .. }) {
+            continue; // handled above
+        }
+        let Some(Mapped::Plain(nid)) = &mapped[id] else { unreachable!() };
+        let nid = *nid;
+        for (slot, e) in g.inputs[id].iter().enumerate() {
+            let Some(e) = e else { continue };
+            deferred.push((nid, slot, e.src, e.src_port, e.branch));
+        }
+    }
+
+    // resolve deferred edges (sources may be Sub outputs)
+    for (dst, slot, src, src_port, branch) in deferred {
+        let (new_src, new_port) = match &mapped[src] {
+            Some(Mapped::Plain(nid)) => (*nid, src_port),
+            Some(Mapped::Sub(outs)) => outs[src_port],
+            None => unreachable!(),
+        };
+        out.connect(dst, slot, Edge { src: new_src, src_port: new_port, branch });
+    }
+
+    out.check_fully_connected()
+        .map_err(|m| Error::Elaborate(format!("core `{}`: {m}", g.core_name)))?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::schedule::schedule;
+    use crate::spd::parse_core;
+
+    fn reg_with(srcs: &[&str]) -> Registry {
+        let mut r = Registry::with_library();
+        for s in srcs {
+            r.register_source(s).unwrap();
+        }
+        r
+    }
+
+    const INNER: &str = r#"
+        Name inner;
+        Main_In {i::a, b};
+        Main_Out {o::z};
+        EQU n1, z = a * b + 1.0;
+    "#;
+
+    #[test]
+    fn flattens_one_level() {
+        // inner depth = mul + add = 10 with defaults
+        let reg = reg_with(&[INNER]);
+        let parent = parse_core(
+            "Name up; Main_In {i::x, y}; Main_Out {o::w};
+             HDL C, 10, (w) = inner(x, y);",
+        )
+        .unwrap();
+        let g = build(&parent, &reg).unwrap();
+        let flat = elaborate(&g, &reg).unwrap();
+        assert!(!flat.nodes.iter().any(|n| matches!(n.kind, NodeKind::Sub { .. })));
+        let s = schedule(&flat).unwrap();
+        assert_eq!(s.depth, 10);
+        assert_eq!(flat.census().total(), 2);
+    }
+
+    #[test]
+    fn declared_delay_mismatch_rejected() {
+        let reg = reg_with(&[INNER]);
+        let parent = parse_core(
+            "Name up; Main_In {i::x, y}; Main_Out {o::w};
+             HDL C, 99, (w) = inner(x, y);",
+        )
+        .unwrap();
+        let g = build(&parent, &reg).unwrap();
+        let e = elaborate(&g, &reg).unwrap_err().to_string();
+        assert!(e.contains("declared delay 99"), "{e}");
+        assert!(e.contains("depth 10"), "{e}");
+    }
+
+    #[test]
+    fn two_levels_of_hierarchy() {
+        let mid = "
+            Name mid; Main_In {i::p, q}; Main_Out {o::r};
+            HDL C1, 10, (t) = inner(p, q);
+            EQU n2, r = t + p;
+        ";
+        let reg = reg_with(&[INNER, mid]);
+        let parent = parse_core(
+            "Name top; Main_In {i::x, y}; Main_Out {o::w};
+             HDL C, 16, (w) = mid(x, y);",
+        )
+        .unwrap();
+        let g = build(&parent, &reg).unwrap();
+        let flat = elaborate(&g, &reg).unwrap();
+        let s = schedule(&flat).unwrap();
+        assert_eq!(s.depth, 16); // 10 + add(6)
+        // names are hierarchical
+        assert!(flat.nodes.iter().any(|n| n.name.starts_with("C.C1.")));
+    }
+
+    #[test]
+    fn multiple_instances_are_independent() {
+        let reg = reg_with(&[INNER]);
+        let parent = parse_core(
+            "Name up; Main_In {i::x, y}; Main_Out {o::w};
+             HDL C1, 10, (t1) = inner(x, y);
+             HDL C2, 10, (t2) = inner(y, x);
+             EQU n, w = t1 - t2;",
+        )
+        .unwrap();
+        let g = build(&parent, &reg).unwrap();
+        let flat = elaborate(&g, &reg).unwrap();
+        assert_eq!(flat.census().mul, 2);
+        assert_eq!(flat.census().add, 3); // 2 inner adds + outer sub
+        let s = schedule(&flat).unwrap();
+        assert_eq!(s.depth, 10 + 6);
+    }
+
+    #[test]
+    fn recursion_is_detected() {
+        // self-referential module
+        let mut reg = Registry::with_library();
+        // register a core that calls itself; must be registered before
+        // parsing the call is fine since resolution happens in build
+        reg.register_source(
+            "Name rec; Main_In {i::a}; Main_Out {o::z};
+             HDL C, 1, (z) = rec(a);",
+        )
+        .unwrap();
+        let parent = parse_core(
+            "Name up; Main_In {i::x}; Main_Out {o::w};
+             HDL C, 1, (w) = rec(x);",
+        )
+        .unwrap();
+        let g = build(&parent, &reg).unwrap();
+        let e = elaborate(&g, &reg).unwrap_err().to_string();
+        assert!(e.contains("recursive"), "{e}");
+    }
+
+    #[test]
+    fn cross_coupled_branches_fig5_style() {
+        // two instances exchanging data through branch ports (Fig. 5)
+        let leaf = "
+            Name leaf;
+            Main_In {i::a};
+            Main_Out {o::z};
+            Brch_In {bi::bin};
+            Brch_Out {bo::bout};
+            EQU n1, z = a + bin;
+            DRCT (bout) = (a);
+        ";
+        let reg = reg_with(&[leaf]);
+        let parent = parse_core(
+            "Name up; Main_In {i::x, y}; Main_Out {o::w1, w2};
+             HDL A, 6, (w1)(ba) = leaf(x)(bb);
+             HDL B, 6, (w2)(bb) = leaf(y)(ba);",
+        )
+        .unwrap();
+        let g = build(&parent, &reg).unwrap();
+        let flat = elaborate(&g, &reg).unwrap();
+        // branch cycle must not break main-edge scheduling
+        let s = schedule(&flat).unwrap();
+        assert_eq!(s.depth, 6);
+    }
+
+    #[test]
+    fn passthrough_output() {
+        // sub core whose output is directly its input (DRCT)
+        let pass = "
+            Name pass; Main_In {i::a}; Main_Out {o::z};
+            DRCT (z) = (a);
+        ";
+        let reg = reg_with(&[pass]);
+        let parent = parse_core(
+            "Name up; Main_In {i::x}; Main_Out {o::w};
+             HDL P, 0, (t) = pass(x);
+             EQU n, w = t + 1.0;",
+        )
+        .unwrap();
+        let g = build(&parent, &reg).unwrap();
+        let flat = elaborate(&g, &reg).unwrap();
+        let s = schedule(&flat).unwrap();
+        assert_eq!(s.depth, 6);
+    }
+}

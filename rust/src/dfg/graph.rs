@@ -1,0 +1,275 @@
+//! Data-flow-graph representation (paper Fig. 3).
+//!
+//! A `Graph` is built from one `SpdCore` (`build`), optionally
+//! flattened through the module hierarchy (`elaborate`), and scheduled
+//! into an equal-path-length pipeline (`schedule`).
+
+use std::sync::Arc;
+
+use crate::expr::BinOp;
+use crate::library::LibKind;
+use crate::spd::SpdCore;
+
+pub type NodeId = usize;
+
+/// Kind of a DFG node.
+#[derive(Clone, Debug)]
+pub enum NodeKind {
+    /// Stream input port (source).  `reg` marks `Append_Reg` run-time
+    /// constant registers (not part of the per-cycle stream; excluded
+    /// from delay balancing).  `branch` marks `Brch_In` ports.
+    Input { port: String, reg: bool, branch: bool },
+    /// Stream output port (sink).
+    Output { port: String, branch: bool },
+    /// Compile-time constant (from literals / substituted `Param`s).
+    Const(f32),
+    /// Floating-point binary operator (from an `EQU` formula).
+    Op(BinOp),
+    /// Floating-point square root.
+    Sqrt,
+    /// Atomic library module instance (paper §II-D).
+    Lib(LibKind),
+    /// Unelaborated reference to another SPD core (an `HDL` node whose
+    /// module is not a library module).  Replaced by `elaborate`.
+    Sub {
+        core: Arc<SpdCore>,
+        /// Delay declared in the HDL statement; verified against the
+        /// sub-core's computed pipeline depth during elaboration.
+        declared_delay: u32,
+    },
+}
+
+impl NodeKind {
+    pub fn n_inputs(&self) -> usize {
+        match self {
+            NodeKind::Input { .. } | NodeKind::Const(_) => 0,
+            NodeKind::Output { .. } => 1,
+            NodeKind::Op(_) => 2,
+            NodeKind::Sqrt => 1,
+            NodeKind::Lib(k) => k.arity().0,
+            NodeKind::Sub { core, .. } => {
+                core.main_in_ports().len()
+                    + core.reg_ports().len()
+                    + core.brch_in_ports().len()
+            }
+        }
+    }
+
+    pub fn n_outputs(&self) -> usize {
+        match self {
+            NodeKind::Output { .. } => 0,
+            NodeKind::Input { .. } | NodeKind::Const(_) => 1,
+            NodeKind::Op(_) | NodeKind::Sqrt => 1,
+            NodeKind::Lib(k) => k.arity().1,
+            NodeKind::Sub { core, .. } => {
+                core.main_out_ports().len() + core.brch_out_ports().len()
+            }
+        }
+    }
+}
+
+/// One DFG node.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub name: String,
+    pub kind: NodeKind,
+}
+
+/// A driven input slot: which node/output-port feeds it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Edge {
+    pub src: NodeId,
+    pub src_port: usize,
+    /// Branch edges (through `Brch_In`/`Brch_Out`) are excluded from
+    /// delay balancing and may form registered feedback loops
+    /// (paper Fig. 3d / Fig. 5).
+    pub branch: bool,
+}
+
+/// The data-flow graph of one core.
+#[derive(Clone, Debug, Default)]
+pub struct Graph {
+    pub core_name: String,
+    pub nodes: Vec<Node>,
+    /// `inputs[id][slot]` — driver of each input slot of node `id`.
+    pub inputs: Vec<Vec<Option<Edge>>>,
+}
+
+impl Graph {
+    pub fn add(&mut self, name: impl Into<String>, kind: NodeKind) -> NodeId {
+        let n_in = kind.n_inputs();
+        self.nodes.push(Node { name: name.into(), kind });
+        self.inputs.push(vec![None; n_in]);
+        self.nodes.len() - 1
+    }
+
+    pub fn connect(&mut self, dst: NodeId, slot: usize, edge: Edge) {
+        self.inputs[dst][slot] = Some(edge);
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Ids of all stream (non-reg) input nodes, in creation order.
+    pub fn stream_inputs(&self) -> Vec<NodeId> {
+        self.ids_where(|k| matches!(k, NodeKind::Input { reg: false, .. }))
+    }
+
+    /// Ids of `Append_Reg` register input nodes.
+    pub fn reg_inputs(&self) -> Vec<NodeId> {
+        self.ids_where(|k| matches!(k, NodeKind::Input { reg: true, .. }))
+    }
+
+    /// Ids of all output sink nodes.
+    pub fn outputs(&self) -> Vec<NodeId> {
+        self.ids_where(|k| matches!(k, NodeKind::Output { .. }))
+    }
+
+    /// Ids of main (non-branch) output sinks.
+    pub fn main_outputs(&self) -> Vec<NodeId> {
+        self.ids_where(|k| matches!(k, NodeKind::Output { branch: false, .. }))
+    }
+
+    fn ids_where(&self, pred: impl Fn(&NodeKind) -> bool) -> Vec<NodeId> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| pred(&n.kind))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Kahn topological order ignoring branch edges.  Returns
+    /// `Err(cycle_members)` if the main (non-branch) graph is cyclic.
+    pub fn toposort_main(&self) -> Result<Vec<NodeId>, Vec<NodeId>> {
+        let n = self.nodes.len();
+        let mut indeg = vec![0usize; n];
+        let mut fanout: Vec<Vec<NodeId>> = vec![Vec::new(); n];
+        for (dst, slots) in self.inputs.iter().enumerate() {
+            for e in slots.iter().flatten() {
+                if !e.branch {
+                    indeg[dst] += 1;
+                    fanout[e.src].push(dst);
+                }
+            }
+        }
+        let mut queue: Vec<NodeId> =
+            (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(id) = queue.pop() {
+            order.push(id);
+            for &next in &fanout[id] {
+                indeg[next] -= 1;
+                if indeg[next] == 0 {
+                    queue.push(next);
+                }
+            }
+        }
+        if order.len() != n {
+            let leftover: Vec<NodeId> =
+                (0..n).filter(|&i| indeg[i] > 0).collect();
+            return Err(leftover);
+        }
+        Ok(order)
+    }
+
+    /// Count floating-point operators (Table IV census).
+    pub fn census(&self) -> crate::expr::OpCensus {
+        let mut c = crate::expr::OpCensus::default();
+        for node in &self.nodes {
+            match &node.kind {
+                NodeKind::Op(BinOp::Add) | NodeKind::Op(BinOp::Sub) => c.add += 1,
+                NodeKind::Op(BinOp::Mul) => c.mul += 1,
+                NodeKind::Op(BinOp::Div) => c.div += 1,
+                NodeKind::Sqrt => c.sqrt += 1,
+                _ => {}
+            }
+        }
+        c
+    }
+
+    /// Find a node id by exact name (diagnostics/tests).
+    pub fn find(&self, name: &str) -> Option<NodeId> {
+        self.nodes.iter().position(|n| n.name == name)
+    }
+
+    /// Sanity check: every input slot of every node is driven.
+    pub fn check_fully_connected(&self) -> Result<(), String> {
+        for (id, slots) in self.inputs.iter().enumerate() {
+            for (slot, e) in slots.iter().enumerate() {
+                if e.is_none() {
+                    return Err(format!(
+                        "node `{}` (id {id}) input slot {slot} undriven",
+                        self.nodes[id].name
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arity_of_kinds() {
+        assert_eq!(NodeKind::Op(BinOp::Add).n_inputs(), 2);
+        assert_eq!(NodeKind::Sqrt.n_inputs(), 1);
+        assert_eq!(NodeKind::Const(1.0).n_inputs(), 0);
+        assert_eq!(
+            NodeKind::Output { port: "z".into(), branch: false }.n_outputs(),
+            0
+        );
+    }
+
+    #[test]
+    fn toposort_linear_chain() {
+        let mut g = Graph::default();
+        let a = g.add("a", NodeKind::Input { port: "a".into(), reg: false, branch: false });
+        let op = g.add("op", NodeKind::Sqrt);
+        let z = g.add("z", NodeKind::Output { port: "z".into(), branch: false });
+        g.connect(op, 0, Edge { src: a, src_port: 0, branch: false });
+        g.connect(z, 0, Edge { src: op, src_port: 0, branch: false });
+        let order = g.toposort_main().unwrap();
+        let pos = |id| order.iter().position(|&x| x == id).unwrap();
+        assert!(pos(a) < pos(op) && pos(op) < pos(z));
+    }
+
+    #[test]
+    fn toposort_detects_main_cycle() {
+        let mut g = Graph::default();
+        let x = g.add("x", NodeKind::Sqrt);
+        let y = g.add("y", NodeKind::Sqrt);
+        g.connect(x, 0, Edge { src: y, src_port: 0, branch: false });
+        g.connect(y, 0, Edge { src: x, src_port: 0, branch: false });
+        assert!(g.toposort_main().is_err());
+    }
+
+    #[test]
+    fn branch_cycle_is_allowed() {
+        let mut g = Graph::default();
+        let x = g.add("x", NodeKind::Sqrt);
+        let y = g.add("y", NodeKind::Sqrt);
+        g.connect(x, 0, Edge { src: y, src_port: 0, branch: true });
+        g.connect(y, 0, Edge { src: x, src_port: 0, branch: false });
+        assert!(g.toposort_main().is_ok());
+    }
+
+    #[test]
+    fn undriven_slot_detected() {
+        let mut g = Graph::default();
+        g.add("op", NodeKind::Sqrt);
+        assert!(g.check_fully_connected().is_err());
+    }
+}

@@ -1,0 +1,58 @@
+//! Data-flow-graph middle end: build → elaborate → schedule → dot.
+
+pub mod build;
+pub mod dot;
+pub mod elaborate;
+pub mod graph;
+pub mod schedule;
+
+pub use build::build;
+pub use dot::to_dot;
+pub use elaborate::{elaborate, elaborate_with};
+pub use graph::{Edge, Graph, Node, NodeId, NodeKind};
+pub use schedule::{node_latency, schedule, schedule_with, OpLatency, Schedule};
+
+use crate::error::Result;
+use crate::spd::{Registry, SpdCore};
+
+/// One-shot compilation of a core.
+///
+/// Two views are produced (DESIGN.md §4):
+/// * `graph`/`schedule` — the fully *elaborated* (flat) pipeline, used
+///   by the value-level simulators;
+/// * `hier_graph`/`hier_schedule` — the *hierarchical* pipeline with
+///   HDL sub-cores as atomic modules (paper Fig. 3c/3d).  Its depth and
+///   balancing are the modular hardware's (the paper's 855-stage PE);
+///   a flat schedule can be shallower because it may overlap a module's
+///   early-available inputs with upstream modules.
+pub struct Compiled {
+    pub graph: Graph,
+    pub schedule: Schedule,
+    pub hier_graph: Graph,
+    pub hier_schedule: Schedule,
+}
+
+impl Compiled {
+    /// The modular pipeline depth (the paper's §III-B stage counts).
+    pub fn depth(&self) -> u32 {
+        self.hier_schedule.depth
+    }
+}
+
+/// Compile a core with default latencies.
+pub fn compile(core: &SpdCore, registry: &Registry) -> Result<Compiled> {
+    compile_with(core, registry, OpLatency::default())
+}
+
+pub fn compile_with(
+    core: &SpdCore,
+    registry: &Registry,
+    latency: OpLatency,
+) -> Result<Compiled> {
+    let g = build(core, registry)?;
+    // elaboration also verifies every declared HDL delay
+    let flat = elaborate_with(&g, registry, latency)?;
+    let schedule = schedule_with(&flat, latency)?;
+    let hier_schedule = schedule_with(&g, latency)?;
+    Ok(Compiled { graph: flat, schedule, hier_graph: g, hier_schedule })
+}

@@ -1,0 +1,324 @@
+//! ASAP pipeline scheduling with delay balancing (paper Fig. 3b/3c).
+//!
+//! Every node's inputs must arrive at the same pipeline stage; earlier
+//! arrivals are delayed by inserted registers ("we have to equalize all
+//! the path lengths by inserting additional delays").  Main outputs are
+//! aligned to a common exit stage, which defines the core's pipeline
+//! depth — the statically-known delay used when the core is called as
+//! an HDL node.
+
+use super::graph::{Graph, NodeId, NodeKind};
+use crate::error::{Error, Result};
+use crate::expr::BinOp;
+
+/// Pipeline latencies (cycles) of the floating-point operators.
+///
+/// Defaults model single-precision Altera/Stratix-V FP megafunction IP
+/// at the paper's 180 MHz: 6-cycle adder, 4-cycle multiplier, 10-cycle
+/// divider, 16-cycle square root.  With these the LBM collision core
+/// schedules to exactly 110 stages and the PE depths come out at the
+/// paper's 855 (x1) / 495 (x2) stages (§III-B):
+/// `110 + (720/n + 2) + 23`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OpLatency {
+    pub add: u32,
+    pub mul: u32,
+    pub div: u32,
+    pub sqrt: u32,
+}
+
+impl Default for OpLatency {
+    fn default() -> Self {
+        OpLatency { add: 6, mul: 4, div: 10, sqrt: 16 }
+    }
+}
+
+impl OpLatency {
+    pub fn of_op(&self, op: BinOp) -> u32 {
+        match op {
+            BinOp::Add | BinOp::Sub => self.add,
+            BinOp::Mul => self.mul,
+            BinOp::Div => self.div,
+        }
+    }
+}
+
+/// The scheduled pipeline.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    pub latency: OpLatency,
+    /// Topological order over main edges.
+    pub order: Vec<NodeId>,
+    /// Stage at which each node's inputs are aligned (fire stage).
+    pub ready: Vec<u32>,
+    /// Stage at which each node's outputs are available.
+    pub stage_out: Vec<u32>,
+    /// Nodes with no timing constraint (constants, Append_Reg
+    /// registers): broadcast, never balanced.
+    pub free: Vec<bool>,
+    /// Balancing delay (cycles) inserted on each input slot.
+    pub slot_delay: Vec<Vec<u32>>,
+    /// Pipeline depth: main-input to aligned main-output latency.
+    pub depth: u32,
+    /// Total inserted balancing-register stages (Σ slot delays), the
+    /// dominant register cost in Table III.
+    pub total_balance_stages: u64,
+}
+
+/// Latency of one node under a latency table.
+///
+/// `Sub` nodes (unelaborated HDL instances of other cores) are atomic
+/// with their statically declared delay — this is the paper's module
+/// semantics (Fig. 3c): a core presents aligned inputs and a single
+/// pipeline latency, and the *hierarchical* schedule computed over such
+/// nodes is the schedule of the real modular hardware.  (A flattened
+/// schedule may be shallower, because cross-module balancing could
+/// overlap a module's early-available inputs with an upstream module —
+/// an optimization the modular design does not perform.)
+pub fn node_latency(kind: &NodeKind, lat: &OpLatency) -> u32 {
+    match kind {
+        NodeKind::Input { .. } | NodeKind::Output { .. } | NodeKind::Const(_) => 0,
+        NodeKind::Op(op) => lat.of_op(*op),
+        NodeKind::Sqrt => lat.sqrt,
+        NodeKind::Lib(k) => k.latency(),
+        NodeKind::Sub { declared_delay, .. } => *declared_delay,
+    }
+}
+
+/// Schedule with the default latency table.
+pub fn schedule(g: &Graph) -> Result<Schedule> {
+    schedule_with(g, OpLatency::default())
+}
+
+/// Schedule with an explicit latency table.  `Sub` nodes are treated as
+/// atomic modules (see [`node_latency`]).
+pub fn schedule_with(g: &Graph, latency: OpLatency) -> Result<Schedule> {
+    let order = g.toposort_main().map_err(|cycle| {
+        let names: Vec<&str> = cycle
+            .iter()
+            .take(8)
+            .map(|&id| g.node(id).name.as_str())
+            .collect();
+        Error::Schedule(format!(
+            "combinational cycle through main edges near {names:?}"
+        ))
+    })?;
+
+    let n = g.len();
+    let mut ready = vec![0u32; n];
+    let mut stage_out = vec![0u32; n];
+    let mut free = vec![false; n];
+    let mut slot_delay: Vec<Vec<u32>> =
+        g.inputs.iter().map(|s| vec![0; s.len()]).collect();
+
+    for &id in &order {
+        let node = g.node(id);
+        free[id] = matches!(
+            node.kind,
+            NodeKind::Const(_) | NodeKind::Input { reg: true, .. }
+        );
+        // fire when the latest main, non-free input arrives
+        let mut fire = 0u32;
+        for e in g.inputs[id].iter().flatten() {
+            if e.branch || free[e.src] {
+                continue;
+            }
+            fire = fire.max(stage_out[e.src]);
+        }
+        ready[id] = fire;
+        for (slot, e) in g.inputs[id].iter().enumerate() {
+            if let Some(e) = e {
+                if !e.branch && !free[e.src] {
+                    slot_delay[id][slot] = fire - stage_out[e.src];
+                }
+            }
+        }
+        stage_out[id] = fire + node_latency(&node.kind, &latency);
+    }
+
+    // align all main outputs to a common exit stage = pipeline depth
+    let main_outs = g.main_outputs();
+    let depth = main_outs.iter().map(|&o| ready[o]).max().unwrap_or_else(|| {
+        // a core with no main outputs: depth = latest stage anywhere
+        (0..n).map(|i| stage_out[i]).max().unwrap_or(0)
+    });
+    for &o in &main_outs {
+        slot_delay[o][0] += depth - ready[o];
+        ready[o] = depth;
+        stage_out[o] = depth;
+    }
+
+    let total_balance_stages = slot_delay
+        .iter()
+        .flat_map(|s| s.iter())
+        .map(|&d| d as u64)
+        .sum();
+
+    Ok(Schedule {
+        latency,
+        order,
+        ready,
+        stage_out,
+        free,
+        slot_delay,
+        depth,
+        total_balance_stages,
+    })
+}
+
+impl Schedule {
+    /// Verify the balancing invariant: for every non-branch edge into a
+    /// non-free node, producer stage + slot delay == consumer fire
+    /// stage.  (Property-tested; also used as a debug assertion.)
+    pub fn check_balanced(&self, g: &Graph) -> std::result::Result<(), String> {
+        for (id, slots) in g.inputs.iter().enumerate() {
+            for (slot, e) in slots.iter().enumerate() {
+                let Some(e) = e else { continue };
+                if e.branch || self.free[e.src] {
+                    continue;
+                }
+                let arrive = self.stage_out[e.src] + self.slot_delay[id][slot];
+                if arrive != self.ready[id] {
+                    return Err(format!(
+                        "unbalanced edge {} -> {} slot {slot}: {} + {} != {}",
+                        g.node(e.src).name,
+                        g.node(id).name,
+                        self.stage_out[e.src],
+                        self.slot_delay[id][slot],
+                        self.ready[id]
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::build;
+    use crate::spd::{parse_core, Registry};
+
+    fn sched(src: &str) -> (Graph, Schedule) {
+        let core = parse_core(src).unwrap();
+        let g = build(&core, &Registry::with_library()).unwrap();
+        let s = schedule(&g).unwrap();
+        s.check_balanced(&g).unwrap();
+        (g, s)
+    }
+
+    #[test]
+    fn single_op_depth_is_latency() {
+        let (_, s) = sched("Name t; Main_In {i::a,b}; Main_Out {o::z}; EQU n, z = a + b;");
+        assert_eq!(s.depth, OpLatency::default().add);
+        assert_eq!(s.total_balance_stages, 0);
+    }
+
+    #[test]
+    fn unbalanced_paths_get_delays() {
+        // z = (a*b) + c : c must wait for the multiplier
+        let (g, s) =
+            sched("Name t; Main_In {i::a,b,c}; Main_Out {o::z}; EQU n, z = a * b + c;");
+        let lat = OpLatency::default();
+        assert_eq!(s.depth, lat.mul + lat.add);
+        // one balancing delay of `mul` cycles on the c input
+        assert_eq!(s.total_balance_stages, lat.mul as u64);
+        g.check_fully_connected().unwrap();
+    }
+
+    #[test]
+    fn outputs_are_aligned() {
+        // z1 is a short path, z2 long: both must exit at the same stage
+        let (g, s) = sched(
+            "Name t; Main_In {i::a,b}; Main_Out {o::z1,z2};
+             EQU n1, z1 = a + b;
+             EQU n2, z2 = sqrt(a / b);",
+        );
+        let lat = OpLatency::default();
+        assert_eq!(s.depth, lat.div + lat.sqrt);
+        for o in g.main_outputs() {
+            assert_eq!(s.ready[o], s.depth);
+        }
+    }
+
+    #[test]
+    fn chained_adds_accumulate() {
+        let (_, s) = sched(
+            "Name t; Main_In {i::a,b,c,d}; Main_Out {o::z};
+             EQU n, z = a + b + c + d;",
+        );
+        assert_eq!(s.depth, 3 * OpLatency::default().add);
+    }
+
+    #[test]
+    fn free_inputs_are_not_balanced() {
+        // one_tau is an Append_Reg: broadcast, no balancing registers
+        let (_, s) = sched(
+            "Name t; Main_In {i::a,b}; Append_Reg {i::k}; Main_Out {o::z};
+             EQU n, z = (a + b) * k;",
+        );
+        let lat = OpLatency::default();
+        assert_eq!(s.depth, lat.add + lat.mul);
+        assert_eq!(s.total_balance_stages, 0);
+    }
+
+    #[test]
+    fn const_has_no_balance() {
+        let (_, s) = sched(
+            "Name t; Main_In {i::a}; Main_Out {o::z};
+             Param c = 2.5;
+             EQU n, z = a * c;",
+        );
+        assert_eq!(s.total_balance_stages, 0);
+    }
+
+    #[test]
+    fn library_delay_participates() {
+        let (_, s) = sched(
+            "Name t; Main_In {i::a}; Main_Out {o::z};
+             HDL D, 10, (ad) = Delay(a), 10;
+             EQU n, z = ad + a;",
+        );
+        let lat = OpLatency::default();
+        assert_eq!(s.depth, 10 + lat.add);
+        // the direct a path gets a 10-cycle balance
+        assert_eq!(s.total_balance_stages, 10);
+    }
+
+    #[test]
+    fn custom_latency_table() {
+        let core = parse_core(
+            "Name t; Main_In {i::a,b}; Main_Out {o::z}; EQU n, z = a + b;",
+        )
+        .unwrap();
+        let g = build(&core, &Registry::new()).unwrap();
+        let s = schedule_with(&g, OpLatency { add: 9, mul: 5, div: 30, sqrt: 28 })
+            .unwrap();
+        assert_eq!(s.depth, 9);
+    }
+
+    #[test]
+    fn sub_nodes_schedule_atomically() {
+        // hierarchical scheduling: a Sub node is a module with its
+        // declared delay (paper Fig. 3c)
+        let mut reg = Registry::with_library();
+        reg.register_source("Name inner; Main_In {i::a}; Main_Out {o::z}; EQU n, z = a + 1;")
+            .unwrap();
+        let parent = parse_core(
+            "Name up; Main_In {i::x}; Main_Out {o::y, w};
+             HDL C, 6, (t) = inner(x);
+             EQU n1, y = t + x;
+             EQU n2, w = x + 1.0;",
+        )
+        .unwrap();
+        let g = build(&parent, &reg).unwrap();
+        let s = schedule(&g).unwrap();
+        assert_eq!(s.depth, 12); // 6 (module) + 6 (add), w aligned
+        // the x path into n1 is balanced by the module delay
+        assert_eq!(
+            s.total_balance_stages,
+            6 /* x into n1 */ + 6 /* w alignment */
+        );
+    }
+}

@@ -1,0 +1,77 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Tokenizer-level failure (bad character, unterminated field...).
+    #[error("lex error at line {line}: {msg}")]
+    Lex { line: usize, msg: String },
+
+    /// SPD statement-level parse failure.
+    #[error("parse error at line {line}: {msg}")]
+    Parse { line: usize, msg: String },
+
+    /// Formula expression parse failure.
+    #[error("expression error in `{expr}`: {msg}")]
+    Expr { expr: String, msg: String },
+
+    /// Semantic errors during DFG construction (undriven ports,
+    /// multiple drivers, unknown modules, ...).
+    #[error("DFG error in core `{core}`: {msg}")]
+    Dfg { core: String, msg: String },
+
+    /// Hierarchy elaboration errors (recursion, missing modules).
+    #[error("elaboration error: {0}")]
+    Elaborate(String),
+
+    /// Scheduling / delay-balancing errors (combinational cycles...).
+    #[error("schedule error: {0}")]
+    Schedule(String),
+
+    /// Simulation configuration or runtime errors.
+    #[error("simulation error: {0}")]
+    Sim(String),
+
+    /// Resource estimation / device capacity errors.
+    #[error("resource error: {0}")]
+    Resource(String),
+
+    /// Design-space exploration errors.
+    #[error("explore error: {0}")]
+    Explore(String),
+
+    /// PJRT runtime errors.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Verilog backend errors.
+    #[error("verilog error: {0}")]
+    Verilog(String),
+
+    #[error("I/O error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("XLA error: {0}")]
+    Xla(String),
+}
+
+impl Error {
+    pub fn parse(line: usize, msg: impl Into<String>) -> Self {
+        Error::Parse { line, msg: msg.into() }
+    }
+    pub fn lex(line: usize, msg: impl Into<String>) -> Self {
+        Error::Lex { line, msg: msg.into() }
+    }
+    pub fn dfg(core: impl Into<String>, msg: impl Into<String>) -> Self {
+        Error::Dfg { core: core.into(), msg: msg.into() }
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}

@@ -1,0 +1,221 @@
+//! Design-space exploration over (n, m) — the paper's §II-B / §III.
+//!
+//! For each candidate mix of spatial parallelism n (pipelines per PE)
+//! and temporal parallelism m (cascaded PEs), the explorer compiles the
+//! generated SPD design, estimates resources (Table III columns),
+//! runs the timing simulation against the DDR3 model (utilization,
+//! sustained performance), applies the power model, and ranks by
+//! performance and performance-per-watt.
+
+use crate::dfg::OpLatency;
+use crate::error::Result;
+use crate::lbm::spd_gen::{generate_with, LbmDesign};
+use crate::lbm::{FLOPS_PER_CELL, WORDS_PER_CELL};
+use crate::power;
+use crate::resource::{
+    estimate_hierarchical, CostTable, DesignMeta, ResourceEstimate, STRATIX_V_5SGXEA7,
+};
+use crate::sim::{run_timing, DdrConfig, TimingDesign, TimingReport};
+
+/// One evaluated design point (a Table III row).
+#[derive(Clone, Debug)]
+pub struct Evaluation {
+    pub design: LbmDesign,
+    pub pe_depth: u32,
+    pub resources: ResourceEstimate,
+    pub timing: TimingReport,
+    pub power_w: f64,
+    pub perf_per_watt: f64,
+    /// None if the design fits the device.
+    pub infeasible: Option<&'static str>,
+}
+
+/// Exploration parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct ExploreConfig {
+    pub grid_w: u32,
+    pub grid_h: u32,
+    /// candidate spatial widths (must divide grid_w)
+    pub max_n: u32,
+    /// candidate cascade lengths
+    pub max_m: u32,
+    /// timing-simulation passes per design
+    pub passes: u64,
+    pub latency: OpLatency,
+    pub ddr: DdrConfig,
+    /// include design points that exceed the device (marked infeasible)
+    pub keep_infeasible: bool,
+}
+
+impl Default for ExploreConfig {
+    fn default() -> Self {
+        ExploreConfig {
+            grid_w: 720,
+            grid_h: 300,
+            max_n: 4,
+            max_m: 4,
+            passes: 3,
+            latency: OpLatency::default(),
+            ddr: DdrConfig::default(),
+            keep_infeasible: false,
+        }
+    }
+}
+
+/// Candidate (n, m) points: powers of two n dividing the grid width,
+/// m from 1 to max_m.
+pub fn candidates(cfg: &ExploreConfig) -> Vec<LbmDesign> {
+    let mut out = Vec::new();
+    let mut n = 1;
+    while n <= cfg.max_n {
+        if cfg.grid_w % n == 0 {
+            for m in 1..=cfg.max_m {
+                out.push(LbmDesign::new(n, m, cfg.grid_w, cfg.grid_h));
+            }
+        }
+        n *= 2;
+    }
+    out
+}
+
+/// Evaluate a single design point.
+pub fn evaluate(design: &LbmDesign, cfg: &ExploreConfig) -> Result<Evaluation> {
+    let generated = generate_with(design, cfg.latency)?;
+    let meta = DesignMeta { lanes: design.n, pes: design.m };
+    let resources = estimate_hierarchical(
+        &generated.top,
+        &generated.registry,
+        cfg.latency,
+        &meta,
+        &CostTable::default(),
+        &STRATIX_V_5SGXEA7,
+    )?;
+
+    let timing_design = TimingDesign {
+        lanes: design.n as usize,
+        words_per_cell: WORDS_PER_CELL,
+        depth: generated.pe_depth * design.m,
+        cells: design.w as u64 * design.h as u64,
+        steps_per_pass: design.m,
+        flops_per_cell_step: FLOPS_PER_CELL,
+    };
+    let timing = run_timing(&timing_design, cfg.ddr, cfg.passes);
+
+    let power_w = power::MODEL.predict(resources.core.regs, resources.core.bram_bits);
+    let perf_per_watt = timing.performance_gflops / power_w;
+
+    Ok(Evaluation {
+        design: *design,
+        pe_depth: generated.pe_depth,
+        resources: resources.clone(),
+        timing,
+        power_w,
+        perf_per_watt,
+        infeasible: resources.over_capacity,
+    })
+}
+
+/// Evaluate all candidates sequentially (see `coordinator` for the
+/// multi-threaded version).  Feasible results are sorted by
+/// performance-per-watt, best first.
+pub fn explore(cfg: &ExploreConfig) -> Result<Vec<Evaluation>> {
+    let mut evals = Vec::new();
+    for design in candidates(cfg) {
+        let e = evaluate(&design, cfg)?;
+        if e.infeasible.is_none() || cfg.keep_infeasible {
+            evals.push(e);
+        }
+    }
+    sort_by_perf_per_watt(&mut evals);
+    Ok(evals)
+}
+
+/// Sort feasible-first, by perf/W descending.
+pub fn sort_by_perf_per_watt(evals: &mut [Evaluation]) {
+    evals.sort_by(|a, b| {
+        (a.infeasible.is_some(), -a.perf_per_watt)
+            .partial_cmp(&(b.infeasible.is_some(), -b.perf_per_watt))
+            .unwrap()
+    });
+}
+
+/// Pareto frontier over (performance, -power): designs not dominated
+/// by any other feasible design.
+pub fn pareto(evals: &[Evaluation]) -> Vec<&Evaluation> {
+    let feasible: Vec<&Evaluation> =
+        evals.iter().filter(|e| e.infeasible.is_none()).collect();
+    feasible
+        .iter()
+        .filter(|e| {
+            !feasible.iter().any(|o| {
+                o.timing.performance_gflops > e.timing.performance_gflops
+                    && o.power_w <= e.power_w
+            })
+        })
+        .copied()
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> ExploreConfig {
+        // small grid so compile+timing are fast in tests
+        ExploreConfig {
+            grid_w: 64,
+            grid_h: 32,
+            max_n: 2,
+            max_m: 2,
+            passes: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn candidates_respect_divisibility() {
+        let cfg = ExploreConfig { grid_w: 30, max_n: 4, max_m: 2, ..small_cfg() };
+        let c = candidates(&cfg);
+        // n=1 and n=2 divide 30, n=4 does not
+        assert!(c.iter().all(|d| d.n != 4));
+        assert_eq!(c.len(), 4);
+    }
+
+    #[test]
+    fn evaluate_produces_consistent_row() {
+        let cfg = small_cfg();
+        let d = LbmDesign::new(1, 1, 64, 32);
+        let e = evaluate(&d, &cfg).unwrap();
+        assert!(e.infeasible.is_none());
+        assert!(e.power_w > 20.0 && e.power_w < 60.0);
+        assert!(e.timing.utilization > 0.9); // n=1 never BW-bound
+        assert!(e.perf_per_watt > 0.0);
+        assert_eq!(e.resources.core.dsps, 48);
+    }
+
+    #[test]
+    fn explore_ranks_temporal_best() {
+        // at equal nm, the cascade (1,2) must beat the wide (2,1)
+        let evals = explore(&small_cfg()).unwrap();
+        assert!(!evals.is_empty());
+        let pos = |n: u32, m: u32| {
+            evals
+                .iter()
+                .position(|e| e.design.n == n && e.design.m == m)
+                .unwrap()
+        };
+        assert!(pos(1, 2) < pos(2, 1), "temporal should rank above spatial");
+    }
+
+    #[test]
+    fn pareto_contains_best() {
+        let evals = explore(&small_cfg()).unwrap();
+        let p = pareto(&evals);
+        assert!(!p.is_empty());
+        // the best perf/W design should not be dominated
+        let best = &evals[0];
+        assert!(p
+            .iter()
+            .any(|e| e.design == best.design));
+    }
+}

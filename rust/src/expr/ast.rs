@@ -1,0 +1,95 @@
+//! Expression AST for `EQU` formulas.
+
+use std::fmt;
+
+/// Binary operator (paper §II-C1: `+ - * /`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+}
+
+impl BinOp {
+    pub fn symbol(&self) -> char {
+        match self {
+            BinOp::Add => '+',
+            BinOp::Sub => '-',
+            BinOp::Mul => '*',
+            BinOp::Div => '/',
+        }
+    }
+
+    /// Binding power (higher binds tighter).
+    pub fn precedence(&self) -> u8 {
+        match self {
+            BinOp::Add | BinOp::Sub => 1,
+            BinOp::Mul | BinOp::Div => 2,
+        }
+    }
+}
+
+/// Expression tree.  Every interior node becomes one hardware operator
+/// in the DFG (the compiler performs no cross-node CSE — paper Fig. 3).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Expr {
+    /// Numeric literal (f64 in the AST; hardware is single precision).
+    Num(f64),
+    /// Port or parameter reference.
+    Var(String),
+    /// Binary arithmetic.
+    Bin(BinOp, Box<Expr>, Box<Expr>),
+    /// Square-root function.
+    Sqrt(Box<Expr>),
+}
+
+impl Expr {
+    pub fn bin(op: BinOp, a: Expr, b: Expr) -> Expr {
+        Expr::Bin(op, Box::new(a), Box::new(b))
+    }
+
+    pub fn var(name: impl Into<String>) -> Expr {
+        Expr::Var(name.into())
+    }
+}
+
+impl fmt::Display for Expr {
+    /// Fully-parenthesized rendering: re-parsing the output yields an
+    /// identical tree (round-trip property tested in `parser.rs`).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Expr::Num(v) => {
+                if *v == v.trunc() && v.abs() < 1e15 {
+                    write!(f, "{v:.1}")
+                } else {
+                    write!(f, "{v}")
+                }
+            }
+            Expr::Var(n) => write!(f, "{n}"),
+            Expr::Sqrt(x) => write!(f, "sqrt({x})"),
+            Expr::Bin(op, a, b) => write!(f, "({a} {} {b})", op.symbol()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_parenthesizes() {
+        let e = Expr::bin(
+            BinOp::Add,
+            Expr::var("a"),
+            Expr::bin(BinOp::Mul, Expr::var("b"), Expr::Num(2.0)),
+        );
+        assert_eq!(e.to_string(), "(a + (b * 2.0))");
+    }
+
+    #[test]
+    fn precedence_ordering() {
+        assert!(BinOp::Mul.precedence() > BinOp::Add.precedence());
+        assert_eq!(BinOp::Add.precedence(), BinOp::Sub.precedence());
+    }
+}

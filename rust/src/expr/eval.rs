@@ -1,0 +1,64 @@
+//! Reference (software) evaluation of expressions in f32.
+//!
+//! The hardware datapath is single precision (paper §II-C1: "all related
+//! variables are treated as single precision floating-point numbers"),
+//! so evaluation is done in `f32` with one rounding per operator — the
+//! same numerics the elaborated DFG produces.
+
+use super::ast::{BinOp, Expr};
+use crate::error::{Error, Result};
+
+/// Evaluate an expression; `env` resolves free variables.
+pub fn eval(e: &Expr, env: &dyn Fn(&str) -> Option<f32>) -> Result<f32> {
+    match e {
+        Expr::Num(v) => Ok(*v as f32),
+        Expr::Var(name) => env(name).ok_or_else(|| Error::Expr {
+            expr: e.to_string(),
+            msg: format!("unbound variable `{name}`"),
+        }),
+        Expr::Sqrt(x) => Ok(eval(x, env)?.sqrt()),
+        Expr::Bin(op, a, b) => {
+            let a = eval(a, env)?;
+            let b = eval(b, env)?;
+            Ok(apply(*op, a, b))
+        }
+    }
+}
+
+/// One hardware operator application (single f32 rounding).
+#[inline]
+pub fn apply(op: BinOp, a: f32, b: f32) -> f32 {
+    match op {
+        BinOp::Add => a + b,
+        BinOp::Sub => a - b,
+        BinOp::Mul => a * b,
+        BinOp::Div => a / b,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::expr::parse;
+
+    #[test]
+    fn eval_is_f32_rounded() {
+        // 0.1 + 0.2 in f32 differs from f64 rounding
+        let e = parse("0.1 + 0.2").unwrap();
+        let v = eval(&e, &|_| None).unwrap();
+        assert_eq!(v, 0.1f32 + 0.2f32);
+    }
+
+    #[test]
+    fn unbound_variable_errors() {
+        let e = parse("x + 1").unwrap();
+        assert!(eval(&e, &|_| None).is_err());
+    }
+
+    #[test]
+    fn division_by_zero_is_ieee() {
+        let e = parse("1.0 / x").unwrap();
+        let v = eval(&e, &|_| Some(0.0)).unwrap();
+        assert!(v.is_infinite());
+    }
+}

@@ -1,0 +1,146 @@
+//! Formula expression engine for `EQU` nodes (paper Table II).
+//!
+//! Grammar (paper §II-C): parentheses, binary `+ - * /`, the `sqrt()`
+//! function, numeric literals, and identifiers (input ports, node
+//! outputs, or `Param` constants).  As a convenience extension a leading
+//! unary minus is accepted and desugared to `0.0 - x` (the SPD grammar
+//! itself has no unary operator; the desugaring makes the hardware cost
+//! explicit — it becomes a real subtractor).
+
+pub mod ast;
+pub mod eval;
+pub mod parser;
+
+pub use ast::{BinOp, Expr};
+pub use eval::eval;
+pub use parser::parse;
+
+/// Floating-point operator census of an expression (paper Table IV).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OpCensus {
+    pub add: usize,
+    pub mul: usize,
+    pub div: usize,
+    pub sqrt: usize,
+}
+
+impl OpCensus {
+    pub fn total(&self) -> usize {
+        self.add + self.mul + self.div + self.sqrt
+    }
+
+    pub fn accumulate(&mut self, other: &OpCensus) {
+        self.add += other.add;
+        self.mul += other.mul;
+        self.div += other.div;
+        self.sqrt += other.sqrt;
+    }
+}
+
+/// Count FP operators in an expression.  Additions and subtractions are
+/// both "Adder" in the paper's Table IV.
+pub fn census(e: &Expr) -> OpCensus {
+    let mut c = OpCensus::default();
+    walk_census(e, &mut c);
+    c
+}
+
+fn walk_census(e: &Expr, c: &mut OpCensus) {
+    match e {
+        Expr::Num(_) | Expr::Var(_) => {}
+        Expr::Sqrt(x) => {
+            c.sqrt += 1;
+            walk_census(x, c);
+        }
+        Expr::Bin(op, a, b) => {
+            match op {
+                BinOp::Add | BinOp::Sub => c.add += 1,
+                BinOp::Mul => c.mul += 1,
+                BinOp::Div => c.div += 1,
+            }
+            walk_census(a, c);
+            walk_census(b, c);
+        }
+    }
+}
+
+/// Collect the free variables (port references) of an expression, in
+/// first-occurrence order without duplicates.
+pub fn free_vars(e: &Expr) -> Vec<String> {
+    let mut out = Vec::new();
+    walk_vars(e, &mut out);
+    out
+}
+
+fn walk_vars(e: &Expr, out: &mut Vec<String>) {
+    match e {
+        Expr::Num(_) => {}
+        Expr::Var(v) => {
+            if !out.iter().any(|x| x == v) {
+                out.push(v.clone());
+            }
+        }
+        Expr::Sqrt(x) => walk_vars(x, out),
+        Expr::Bin(_, a, b) => {
+            walk_vars(a, out);
+            walk_vars(b, out);
+        }
+    }
+}
+
+/// Substitute `Param` constants into an expression (the preprocessor's
+/// static replacement, paper §II-C1).
+pub fn substitute_params(e: &Expr, params: &dyn Fn(&str) -> Option<f64>) -> Expr {
+    match e {
+        Expr::Num(v) => Expr::Num(*v),
+        Expr::Var(v) => match params(v) {
+            Some(c) => Expr::Num(c),
+            None => Expr::Var(v.clone()),
+        },
+        Expr::Sqrt(x) => Expr::Sqrt(Box::new(substitute_params(x, params))),
+        Expr::Bin(op, a, b) => Expr::Bin(
+            *op,
+            Box::new(substitute_params(a, params)),
+            Box::new(substitute_params(b, params)),
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(s: &str) -> Expr {
+        parse(s).unwrap()
+    }
+
+    #[test]
+    fn census_counts_table2_example() {
+        // out = ( in1 + in2 * ( t1 - t2 ) ) / in3 + sqrt( in4 )
+        let e = p("( in1 + in2 * ( t1 - t2 ) ) / in3 + sqrt( in4 )");
+        let c = census(&e);
+        assert_eq!(c.add, 3); // +, -, +
+        assert_eq!(c.mul, 1);
+        assert_eq!(c.div, 1);
+        assert_eq!(c.sqrt, 1);
+        assert_eq!(c.total(), 6);
+    }
+
+    #[test]
+    fn free_vars_order_and_dedup() {
+        let e = p("a * b + a - c");
+        assert_eq!(free_vars(&e), vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn substitute_replaces_params_only() {
+        let e = p("x * cnst + y");
+        let s = substitute_params(&e, &|n| (n == "cnst").then_some(123.456));
+        assert_eq!(free_vars(&s), vec!["x", "y"]);
+        let mut env = std::collections::HashMap::new();
+        env.insert("x".to_string(), 2.0f32);
+        env.insert("y".to_string(), 1.0f32);
+        let v = eval(&s, &|n| env.get(n).copied()).unwrap();
+        assert!((v - (2.0 * 123.456f32 + 1.0)).abs() < 1e-3);
+    }
+}

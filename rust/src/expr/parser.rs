@@ -1,0 +1,327 @@
+//! Precedence-climbing parser for `EQU` formulas.
+
+use super::ast::{BinOp, Expr};
+use crate::error::{Error, Result};
+
+/// Parse a formula string into an expression tree.
+///
+/// Binary operators are left-associative; `*` `/` bind tighter than
+/// `+` `-` (ordinary arithmetic).  A leading `-` (at the start of the
+/// expression or after `(` or an operator) is desugared to `0.0 - x`.
+pub fn parse(src: &str) -> Result<Expr> {
+    let tokens = tokenize(src)?;
+    let mut p = Parser { src, tokens, pos: 0 };
+    let e = p.expr(0)?;
+    if p.pos != p.tokens.len() {
+        return Err(p.err(format!(
+            "unexpected trailing token `{}`",
+            p.tokens[p.pos]
+        )));
+    }
+    Ok(e)
+}
+
+#[derive(Clone, Debug, PartialEq)]
+enum Tok {
+    Num(f64),
+    Ident(String),
+    Op(char),
+    LParen,
+    RParen,
+}
+
+impl std::fmt::Display for Tok {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Tok::Num(v) => write!(f, "{v}"),
+            Tok::Ident(s) => write!(f, "{s}"),
+            Tok::Op(c) => write!(f, "{c}"),
+            Tok::LParen => write!(f, "("),
+            Tok::RParen => write!(f, ")"),
+        }
+    }
+}
+
+fn tokenize(src: &str) -> Result<Vec<Tok>> {
+    let mut out = Vec::new();
+    let bytes: Vec<char> = src.chars().collect();
+    let mut i = 0;
+    while i < bytes.len() {
+        let c = bytes[i];
+        match c {
+            ' ' | '\t' | '\r' | '\n' => i += 1,
+            '(' => {
+                out.push(Tok::LParen);
+                i += 1;
+            }
+            ')' => {
+                out.push(Tok::RParen);
+                i += 1;
+            }
+            '+' | '-' | '*' | '/' => {
+                out.push(Tok::Op(c));
+                i += 1;
+            }
+            '0'..='9' | '.' => {
+                let start = i;
+                while i < bytes.len()
+                    && (bytes[i].is_ascii_digit()
+                        || bytes[i] == '.'
+                        || bytes[i] == 'e'
+                        || bytes[i] == 'E'
+                        || ((bytes[i] == '+' || bytes[i] == '-')
+                            && i > start
+                            && (bytes[i - 1] == 'e' || bytes[i - 1] == 'E')))
+                {
+                    i += 1;
+                }
+                let text: String = bytes[start..i].iter().collect();
+                let v = text.parse::<f64>().map_err(|_| Error::Expr {
+                    expr: src.to_string(),
+                    msg: format!("bad number literal `{text}`"),
+                })?;
+                out.push(Tok::Num(v));
+            }
+            c if c.is_ascii_alphabetic() || c == '_' => {
+                let start = i;
+                while i < bytes.len()
+                    && (bytes[i].is_ascii_alphanumeric()
+                        || bytes[i] == '_'
+                        || bytes[i] == ':')
+                {
+                    // allow interface-qualified names like `Mi::sop`
+                    if bytes[i] == ':'
+                        && !(i + 1 < bytes.len() && bytes[i + 1] == ':')
+                        && !(i > start && bytes[i - 1] == ':')
+                    {
+                        break;
+                    }
+                    i += 1;
+                }
+                out.push(Tok::Ident(bytes[start..i].iter().collect()));
+            }
+            other => {
+                return Err(Error::Expr {
+                    expr: src.to_string(),
+                    msg: format!("unexpected character `{other}`"),
+                })
+            }
+        }
+    }
+    Ok(out)
+}
+
+struct Parser<'a> {
+    src: &'a str,
+    tokens: Vec<Tok>,
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn err(&self, msg: String) -> Error {
+        Error::Expr { expr: self.src.to_string(), msg }
+    }
+
+    fn peek(&self) -> Option<&Tok> {
+        self.tokens.get(self.pos)
+    }
+
+    fn next(&mut self) -> Option<Tok> {
+        let t = self.tokens.get(self.pos).cloned();
+        if t.is_some() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn expr(&mut self, min_prec: u8) -> Result<Expr> {
+        let mut lhs = self.atom()?;
+        while let Some(Tok::Op(c)) = self.peek() {
+            let op = match c {
+                '+' => BinOp::Add,
+                '-' => BinOp::Sub,
+                '*' => BinOp::Mul,
+                '/' => BinOp::Div,
+                _ => unreachable!(),
+            };
+            if op.precedence() < min_prec {
+                break;
+            }
+            self.next();
+            let rhs = self.expr(op.precedence() + 1)?;
+            lhs = Expr::bin(op, lhs, rhs);
+        }
+        Ok(lhs)
+    }
+
+    fn atom(&mut self) -> Result<Expr> {
+        match self.next() {
+            Some(Tok::Num(v)) => Ok(Expr::Num(v)),
+            Some(Tok::Ident(name)) => {
+                if name == "sqrt" {
+                    match self.next() {
+                        Some(Tok::LParen) => {}
+                        other => {
+                            return Err(self.err(format!(
+                                "expected `(` after sqrt, got {other:?}"
+                            )))
+                        }
+                    }
+                    let inner = self.expr(0)?;
+                    match self.next() {
+                        Some(Tok::RParen) => Ok(Expr::Sqrt(Box::new(inner))),
+                        other => Err(self.err(format!(
+                            "expected `)` closing sqrt, got {other:?}"
+                        ))),
+                    }
+                } else {
+                    Ok(Expr::Var(name))
+                }
+            }
+            Some(Tok::LParen) => {
+                let inner = self.expr(0)?;
+                match self.next() {
+                    Some(Tok::RParen) => Ok(inner),
+                    other => Err(self.err(format!(
+                        "expected `)`, got {other:?}"
+                    ))),
+                }
+            }
+            Some(Tok::Op('-')) => {
+                // unary minus extension: desugar to (0.0 - x)
+                let inner = self.atom()?;
+                Ok(Expr::bin(BinOp::Sub, Expr::Num(0.0), inner))
+            }
+            other => Err(self.err(format!("expected operand, got {other:?}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::expr::{census, eval, free_vars};
+    use crate::prop::{forall, Config};
+    use crate::util::XorShift64;
+    use std::collections::HashMap;
+
+    fn ev(src: &str, env: &[(&str, f32)]) -> f32 {
+        let map: HashMap<String, f32> =
+            env.iter().map(|(k, v)| (k.to_string(), *v)).collect();
+        eval(&parse(src).unwrap(), &|n| map.get(n).copied()).unwrap()
+    }
+
+    #[test]
+    fn precedence() {
+        assert_eq!(ev("1 + 2 * 3", &[]), 7.0);
+        assert_eq!(ev("(1 + 2) * 3", &[]), 9.0);
+        assert_eq!(ev("8 / 2 / 2", &[]), 2.0); // left assoc
+        assert_eq!(ev("8 - 2 - 2", &[]), 4.0);
+    }
+
+    #[test]
+    fn sqrt_and_vars() {
+        assert_eq!(ev("sqrt(x) + 1", &[("x", 9.0)]), 4.0);
+        assert_eq!(ev("a * a - b", &[("a", 3.0), ("b", 1.0)]), 8.0);
+    }
+
+    #[test]
+    fn unary_minus_desugars() {
+        let e = parse("-x + 1").unwrap();
+        assert_eq!(census(&e).add, 2); // (0 - x) + 1
+        assert_eq!(ev("-x + 1", &[("x", 3.0)]), -2.0);
+    }
+
+    #[test]
+    fn qualified_names() {
+        let e = parse("Mi::sop + x").unwrap();
+        assert_eq!(free_vars(&e), vec!["Mi::sop", "x"]);
+    }
+
+    #[test]
+    fn scientific_literals() {
+        assert!((ev("1.5e2", &[]) - 150.0).abs() < 1e-6);
+        assert!((ev("2e-2", &[]) - 0.02).abs() < 1e-8);
+    }
+
+    #[test]
+    fn errors_are_reported() {
+        assert!(parse("1 +").is_err());
+        assert!(parse("(1 + 2").is_err());
+        assert!(parse("sqrt 4").is_err());
+        assert!(parse("a $ b").is_err());
+        assert!(parse("1 2").is_err());
+    }
+
+    // ---- property tests -------------------------------------------
+
+    fn random_expr(rng: &mut XorShift64, depth: usize) -> Expr {
+        if depth == 0 || rng.chance(0.3) {
+            if rng.chance(0.5) {
+                // non-negative: a leading `-` re-parses as (0.0 - x)
+                Expr::Num(rng.below(800) as f64 / 8.0)
+            } else {
+                Expr::Var(format!("v{}", rng.below(5)))
+            }
+        } else {
+            match rng.below(5) {
+                0 => Expr::bin(
+                    BinOp::Add,
+                    random_expr(rng, depth - 1),
+                    random_expr(rng, depth - 1),
+                ),
+                1 => Expr::bin(
+                    BinOp::Sub,
+                    random_expr(rng, depth - 1),
+                    random_expr(rng, depth - 1),
+                ),
+                2 => Expr::bin(
+                    BinOp::Mul,
+                    random_expr(rng, depth - 1),
+                    random_expr(rng, depth - 1),
+                ),
+                3 => Expr::bin(
+                    BinOp::Div,
+                    random_expr(rng, depth - 1),
+                    random_expr(rng, depth - 1),
+                ),
+                _ => Expr::Sqrt(Box::new(random_expr(rng, depth - 1))),
+            }
+        }
+    }
+
+    #[test]
+    fn prop_print_parse_roundtrip() {
+        forall(Config::cases(200).seed(11), |rng| {
+            let e = random_expr(rng, 4);
+            let printed = e.to_string();
+            let back = parse(&printed)
+                .map_err(|err| format!("reparse of `{printed}`: {err}"))?;
+            if back != e {
+                return Err(format!("round-trip mismatch: `{printed}`"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_roundtrip_preserves_census_and_eval() {
+        forall(Config::cases(200).seed(13), |rng| {
+            let e = random_expr(rng, 4);
+            let back = parse(&e.to_string()).unwrap();
+            if census(&back) != census(&e) {
+                return Err("census changed".into());
+            }
+            let env: HashMap<String, f32> = (0..5)
+                .map(|i| (format!("v{i}"), rng.range_f32(0.5, 4.0)))
+                .collect();
+            let a = eval(&e, &|n| env.get(n).copied()).unwrap();
+            let b = eval(&back, &|n| env.get(n).copied()).unwrap();
+            // identical trees must evaluate bit-identically
+            if a.to_bits() != b.to_bits() && !(a.is_nan() && b.is_nan()) {
+                return Err(format!("eval mismatch {a} vs {b}"));
+            }
+            Ok(())
+        });
+    }
+}

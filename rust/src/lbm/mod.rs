@@ -1,0 +1,85 @@
+//! The paper's case study (§III): D2Q9 lattice-Boltzmann fluid
+//! simulation as generated SPD stream-computing hardware.
+//!
+//! The *golden formulation* implemented here is shared verbatim with
+//! `python/compile/kernels/ref.py` (see its module docstring): the
+//! same operator decomposition, the same association order, the same
+//! boundary scheme — so the compiled DFG, the Rust reference, the
+//! pure-jnp oracle and the Pallas kernel all agree on fluid cells to
+//! f32 accuracy.
+//!
+//! Census (paper Table IV), per pipeline:
+//!   collision 66 add + 56 mul + 1 div, boundary 4 add + 4 mul
+//!   = 70 Adder + 60 Multiplier + 1 Divider = 131 FP operators.
+
+pub mod reference;
+pub mod spd_gen;
+pub mod workload;
+
+pub use spd_gen::LbmDesign;
+
+/// D2Q9 direction vectors (ex[i], ey[i]) — identical to ref.py.
+pub const EX: [i32; 9] = [0, 1, 0, -1, 0, 1, -1, -1, 1];
+pub const EY: [i32; 9] = [0, 0, 1, 0, -1, 1, 1, -1, -1];
+
+/// Lattice weights.
+pub const W: [f64; 9] = [
+    4.0 / 9.0,
+    1.0 / 9.0,
+    1.0 / 9.0,
+    1.0 / 9.0,
+    1.0 / 9.0,
+    1.0 / 36.0,
+    1.0 / 36.0,
+    1.0 / 36.0,
+    1.0 / 36.0,
+];
+
+/// Opposite directions (bounce-back pairs).
+pub const OPP: [usize; 9] = [0, 3, 4, 1, 2, 7, 8, 5, 6];
+
+/// Cell attribute codes (streamed as exact small floats).
+pub const FLUID: f32 = 0.0;
+pub const WALL: f32 = 1.0;
+pub const LID: f32 = 2.0;
+
+/// Default lid velocity (+x), runtime register in the hardware.
+pub const U_LID: f32 = 0.1;
+
+/// 6*w for the two lid-arriving diagonal directions (5 and 6).
+pub const W6_5: f64 = 6.0 * W[5];
+pub const W6_6: f64 = 6.0 * W[6];
+
+/// FP operators per cell per time step (Table IV total).
+pub const FLOPS_PER_CELL: u64 = 131;
+
+/// Stream words per cell on the memory interface: 9 distributions + 1
+/// attribute word (7.2 GB/s per direction per pipeline at 180 MHz).
+pub const WORDS_PER_CELL: usize = 10;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn opposites_are_involutive() {
+        for i in 0..9 {
+            assert_eq!(OPP[OPP[i]], i);
+            assert_eq!(EX[OPP[i]], -EX[i]);
+            assert_eq!(EY[OPP[i]], -EY[i]);
+        }
+    }
+
+    #[test]
+    fn weights_sum_to_one() {
+        let s: f64 = W.iter().sum();
+        assert!((s - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bandwidth_per_pipeline_matches_paper() {
+        // 10 words x 4 B x 180 MHz = 7.2 GB/s (paper §III-C)
+        let gbps = WORDS_PER_CELL as f64 * 4.0 * crate::CORE_FREQ_MHZ * 1e6 / 1e9;
+        assert!((gbps - 7.2).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,272 @@
+//! Software reference D2Q9 LBM — the Rust copy of the golden
+//! formulation (ref.py), used as the oracle for the compiled hardware.
+//!
+//! Operation order is reproduced exactly (every `+` below is one f32
+//! rounding, in the same order as the SPD formulas and the jnp code),
+//! so agreement with the DFG simulators is bitwise on fluid cells
+//! within one step and to f32 accumulation accuracy over many steps.
+
+use super::{EX, EY, FLUID, LID, OPP, U_LID, W, W6_5, W6_6, WALL};
+
+/// Simulation state: `f[i][y*w + x]`, row-major raster order.
+#[derive(Clone, Debug)]
+pub struct LbmState {
+    pub h: usize,
+    pub w: usize,
+    pub f: [Vec<f32>; 9],
+    pub attr: Vec<f32>,
+}
+
+impl LbmState {
+    /// Uniform equilibrium rest state with the lid-driven-cavity
+    /// attribute ring (lid at y = 0).
+    pub fn cavity(h: usize, w: usize) -> Self {
+        let f = std::array::from_fn(|i| vec![(W[i]) as f32; h * w]);
+        LbmState { h, w, f, attr: cavity_attr(h, w) }
+    }
+
+    /// Fully periodic equilibrium state (no walls).
+    pub fn periodic(h: usize, w: usize) -> Self {
+        let f = std::array::from_fn(|i| vec![(W[i]) as f32; h * w]);
+        LbmState { h, w, f, attr: vec![FLUID; h * w] }
+    }
+
+    pub fn cells(&self) -> usize {
+        self.h * self.w
+    }
+
+    /// Density and momentum at a cell.
+    pub fn macros(&self, idx: usize) -> (f32, f32, f32) {
+        let f: [f32; 9] = std::array::from_fn(|i| self.f[i][idx]);
+        let rho = f[0] + f[1] + f[2] + f[3] + f[4] + f[5] + f[6] + f[7] + f[8];
+        let jx = f[1] + f[5] + f[8] - f[3] - f[6] - f[7];
+        let jy = f[2] + f[5] + f[6] - f[4] - f[7] - f[8];
+        (rho, jx / rho, jy / rho)
+    }
+
+    /// Total mass over fluid cells.
+    pub fn fluid_mass(&self) -> f64 {
+        let mut m = 0.0;
+        for idx in 0..self.cells() {
+            if self.attr[idx] == FLUID {
+                for i in 0..9 {
+                    m += self.f[i][idx] as f64;
+                }
+            }
+        }
+        m
+    }
+}
+
+/// Lid-driven-cavity attributes: lid row y=0, wall ring elsewhere.
+pub fn cavity_attr(h: usize, w: usize) -> Vec<f32> {
+    let mut a = vec![FLUID; h * w];
+    for x in 0..w {
+        a[(h - 1) * w + x] = WALL;
+    }
+    for y in 0..h {
+        a[y * w] = WALL;
+        a[y * w + w - 1] = WALL;
+    }
+    for x in 0..w {
+        a[x] = LID;
+    }
+    a
+}
+
+/// The BGK collision of one cell — golden formulation, 66a + 56m + 1d.
+/// Returns (fstar[9], rho).
+#[inline]
+pub fn collide_cell(f: &[f32; 9], one_tau: f32) -> ([f32; 9], f32) {
+    let one = 1.0f32;
+    let rho = f[0] + f[1] + f[2] + f[3] + f[4] + f[5] + f[6] + f[7] + f[8];
+    let ir = one / rho;
+    let jx = f[1] + f[5] + f[8] - f[3] - f[6] - f[7];
+    let jy = f[2] + f[5] + f[6] - f[4] - f[7] - f[8];
+    let ux = jx * ir;
+    let uy = jy * ir;
+    let sqx = ux * ux;
+    let sqy = uy * uy;
+    let usq = sqx + sqy;
+    let cu = 1.5f32 * usq;
+
+    let eu5 = ux + uy;
+    let eu6 = uy - ux;
+    let eu7 = ux + uy; // deliberate duplicate: its own hardware adder
+    let eu8 = ux - uy;
+
+    #[inline]
+    fn inner(eu: f32, sign: f32, cu: f32) -> f32 {
+        let t3 = 3.0f32 * eu;
+        let sq = eu * eu;
+        let q = 4.5f32 * sq;
+        if sign > 0.0 {
+            ((1.0f32 + t3) + q) - cu
+        } else {
+            ((1.0f32 - t3) + q) - cu
+        }
+    }
+
+    let inn = [
+        one - cu,
+        inner(ux, 1.0, cu),
+        inner(uy, 1.0, cu),
+        inner(ux, -1.0, cu),
+        inner(uy, -1.0, cu),
+        inner(eu5, 1.0, cu),
+        inner(eu6, 1.0, cu),
+        inner(eu7, -1.0, cu),
+        inner(eu8, 1.0, cu),
+    ];
+
+    let mut fstar = [0.0f32; 9];
+    for i in 0..9 {
+        let wr = (W[i] as f32) * rho;
+        let feq = wr * inn[i];
+        let df = feq - f[i];
+        let tdf = one_tau * df;
+        fstar[i] = f[i] + tdf;
+    }
+    (fstar, rho)
+}
+
+/// One full time step: collide, stream (periodic wrap), half-way
+/// bounce-back boundary at fluid cells.  `uw = (uwx, uwy)` is the lid
+/// velocity register pair.
+pub fn step(state: &LbmState, one_tau: f32, uwx: f32, uwy: f32) -> LbmState {
+    let (h, w) = (state.h, state.w);
+    let cells = h * w;
+    let mut fstar: [Vec<f32>; 9] = std::array::from_fn(|_| vec![0.0; cells]);
+    let mut rho_field = vec![0.0f32; cells];
+
+    for idx in 0..cells {
+        let f: [f32; 9] = std::array::from_fn(|i| state.f[i][idx]);
+        let (fs, rho) = collide_cell(&f, one_tau);
+        for i in 0..9 {
+            fstar[i][idx] = fs[i];
+        }
+        rho_field[idx] = rho;
+    }
+
+    // streaming with periodic wrap (matches jnp.roll; physically
+    // irrelevant behind the wall ring — see ref.py)
+    let mut fp: [Vec<f32>; 9] = std::array::from_fn(|_| vec![0.0; cells]);
+    for i in 0..9 {
+        for y in 0..h {
+            for x in 0..w {
+                let sy = (y as i32 - EY[i]).rem_euclid(h as i32) as usize;
+                let sx = (x as i32 - EX[i]).rem_euclid(w as i32) as usize;
+                fp[i][y * w + x] = fstar[i][sy * w + sx];
+            }
+        }
+    }
+
+    // boundary: half-way bounce-back + moving-lid Ladd correction
+    let euw5 = uwx + uwy;
+    let euw6 = uwy - uwx;
+    let cc5 = (W6_5 as f32) * euw5;
+    let cc6 = (W6_6 as f32) * euw6;
+
+    let mut out: [Vec<f32>; 9] = std::array::from_fn(|_| vec![0.0; cells]);
+    for y in 0..h {
+        for x in 0..w {
+            let idx = y * w + x;
+            let is_fluid = state.attr[idx] == FLUID;
+            for i in 0..9 {
+                let sy = (y as i32 - EY[i]).rem_euclid(h as i32) as usize;
+                let sx = (x as i32 - EX[i]).rem_euclid(w as i32) as usize;
+                let src_attr = state.attr[sy * w + sx];
+                let src_solid = src_attr == WALL || src_attr == LID;
+                let v = if is_fluid && src_solid {
+                    let bounce = fstar[OPP[i]][idx];
+                    if src_attr == LID {
+                        match i {
+                            5 => bounce + cc5 * rho_field[idx],
+                            6 => bounce + cc6 * rho_field[idx],
+                            _ => bounce,
+                        }
+                    } else {
+                        bounce
+                    }
+                } else {
+                    fp[i][idx]
+                };
+                out[i][idx] = v;
+            }
+        }
+    }
+
+    LbmState { h, w, f: out, attr: state.attr.clone() }
+}
+
+/// Run `steps` sequential steps with the default lid velocity.
+pub fn run(mut state: LbmState, one_tau: f32, steps: usize) -> LbmState {
+    for _ in 0..steps {
+        state = step(&state, one_tau, U_LID, 0.0);
+    }
+    state
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn equilibrium_is_fixed_point_periodic() {
+        let s0 = LbmState::periodic(8, 8);
+        let s1 = step(&s0, 1.7, 0.0, 0.0);
+        for i in 0..9 {
+            for idx in 0..s0.cells() {
+                assert!((s1.f[i][idx] - s0.f[i][idx]).abs() < 1e-7);
+            }
+        }
+    }
+
+    #[test]
+    fn cavity_fluid_mass_conserved() {
+        let s0 = LbmState::cavity(16, 16);
+        let m0 = s0.fluid_mass();
+        let s = run(s0, 1.0 / 0.6, 200);
+        assert!((s.fluid_mass() - m0).abs() / m0 < 1e-5);
+    }
+
+    #[test]
+    fn cavity_develops_shear_flow() {
+        let s = run(LbmState::cavity(16, 16), 1.0 / 0.6, 400);
+        // row just below the lid follows the lid (+x)
+        let mut ux_top = 0.0;
+        let mut ux_mid = 0.0;
+        for x in 3..13 {
+            ux_top += s.macros(s.w + x).1;
+            ux_mid += s.macros(8 * s.w + x).1;
+        }
+        assert!(ux_top / 10.0 > 0.02, "ux_top {}", ux_top / 10.0);
+        assert!(ux_mid / 10.0 < 0.0, "ux_mid {}", ux_mid / 10.0);
+    }
+
+    #[test]
+    fn cavity_stays_finite() {
+        let s = run(LbmState::cavity(12, 12), 1.0 / 0.55, 800);
+        for idx in 0..s.cells() {
+            if s.attr[idx] == FLUID {
+                for i in 0..9 {
+                    assert!(s.f[i][idx].is_finite());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn collide_conserves_mass_and_momentum() {
+        let f: [f32; 9] =
+            [0.44, 0.10, 0.12, 0.11, 0.09, 0.03, 0.02, 0.028, 0.031];
+        let (fs, rho) = collide_cell(&f, 1.25);
+        let mass_in: f32 = f.iter().sum();
+        let mass_out: f32 = fs.iter().sum();
+        assert!((mass_in - mass_out).abs() < 1e-6);
+        assert!((rho - mass_in).abs() < 1e-6);
+        let jx_in: f32 = f[1] + f[5] + f[8] - f[3] - f[6] - f[7];
+        let jx_out: f32 = fs[1] + fs[5] + fs[8] - fs[3] - fs[6] - fs[7];
+        assert!((jx_in - jx_out).abs() < 1e-6);
+    }
+}

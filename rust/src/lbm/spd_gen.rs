@@ -1,0 +1,560 @@
+//! SPD code generation for the LBM stream-computing hardware
+//! (paper §III-B, Figs. 6–11).
+//!
+//! Three generated cores, mirroring the paper's hierarchy:
+//!
+//! * `uLBM_calc`  — the collision stage (one pipeline), 66a+56m+1d;
+//! * `uLBM_bndry` — the boundary stage (one pipeline), 4a+4m + muxes;
+//! * `PEx{n}_w{W}` — a processing element: n collision/boundary
+//!   pipelines sharing the Trans2D translation buffers (Fig. 2b);
+//! * `LBM_x{n}_m{m}_w{W}` — m cascaded PEs (Fig. 2c / Figs. 10–12).
+//!
+//! The formulas are the golden formulation (identical operator order to
+//! `ref.py` / `reference.rs`), hitting the paper's Table IV census
+//! exactly: 70 Adder + 60 Multiplier + 1 Divider per pipeline.
+
+use std::fmt::Write as _;
+use std::sync::Arc;
+
+use super::{EX, EY, OPP, W, W6_5, W6_6};
+use crate::dfg::{self, OpLatency};
+use crate::error::Result;
+use crate::spd::{Registry, SpdCore};
+
+/// A point in the paper's design space.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LbmDesign {
+    /// spatial parallelism: pipelines per PE
+    pub n: u32,
+    /// temporal parallelism: cascaded PEs
+    pub m: u32,
+    /// grid width (paper: 720)
+    pub w: u32,
+    /// grid height (paper: 300)
+    pub h: u32,
+}
+
+impl LbmDesign {
+    pub fn new(n: u32, m: u32, w: u32, h: u32) -> Self {
+        LbmDesign { n, m, w, h }
+    }
+
+    /// The paper's six evaluated configurations on the 720x300 grid.
+    pub fn paper_designs() -> Vec<LbmDesign> {
+        [(1, 1), (1, 2), (1, 4), (2, 1), (2, 2), (4, 1)]
+            .iter()
+            .map(|&(n, m)| LbmDesign::new(n, m, 720, 300))
+            .collect()
+    }
+
+    pub fn top_name(&self) -> String {
+        format!("LBM_x{}_m{}_w{}", self.n, self.m, self.w)
+    }
+
+    pub fn pe_name(&self) -> String {
+        format!("PEx{}_w{}", self.n, self.w)
+    }
+}
+
+/// Generated sources + populated registry for a design.
+pub struct LbmGenerated {
+    pub registry: Registry,
+    pub top: Arc<SpdCore>,
+    pub calc_src: String,
+    pub bndry_src: String,
+    pub pe_src: String,
+    pub top_src: String,
+    /// computed PE pipeline depth (paper: 855 for x1 at W=720)
+    pub pe_depth: u32,
+}
+
+/// Generate all SPD sources for a design and register them.
+pub fn generate(design: &LbmDesign) -> Result<LbmGenerated> {
+    generate_with(design, OpLatency::default())
+}
+
+pub fn generate_with(design: &LbmDesign, lat: OpLatency) -> Result<LbmGenerated> {
+    let mut registry = Registry::with_library();
+
+    let calc_src = gen_calc();
+    let calc = registry.register_source(&calc_src)?;
+    let calc_depth = depth_of(&calc, &registry, lat)?;
+
+    let bndry_src = gen_bndry();
+    let bndry = registry.register_source(&bndry_src)?;
+    let bndry_depth = depth_of(&bndry, &registry, lat)?;
+
+    let pe_src = gen_pe(design, calc_depth, bndry_depth);
+    let pe = registry.register_source(&pe_src)?;
+    let pe_depth = depth_of(&pe, &registry, lat)?;
+
+    let top_src = gen_cascade(design, pe_depth);
+    let top = registry.register_source(&top_src)?;
+
+    Ok(LbmGenerated { registry, top, calc_src, bndry_src, pe_src, top_src, pe_depth })
+}
+
+fn depth_of(core: &Arc<SpdCore>, registry: &Registry, lat: OpLatency) -> Result<u32> {
+    let compiled = dfg::compile_with(core, registry, lat)?;
+    Ok(compiled.depth())
+}
+
+/// Collision core: the uLBM_calc of Fig. 7 (golden formulation).
+pub fn gen_calc() -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "Name uLBM_calc;  # D2Q9 BGK collision, 66a+56m+1d");
+    let ports: Vec<String> = (0..9).map(|i| format!("f{i}")).collect();
+    let _ = writeln!(s, "Main_In {{ci::{}}};", ports.join(","));
+    let _ = writeln!(s, "Append_Reg {{cr::one_tau}};");
+    let outs: Vec<String> = (0..9).map(|i| format!("fs{i}")).collect();
+    let _ = writeln!(s, "Main_Out {{co::{},rho}};", outs.join(","));
+    for i in 0..9 {
+        let _ = writeln!(s, "Param w{i} = {:?};", W[i]);
+    }
+    let _ = writeln!(
+        s,
+        "EQU Nrho, rho = f0 + f1 + f2 + f3 + f4 + f5 + f6 + f7 + f8;"
+    );
+    let _ = writeln!(s, "EQU Nir,  ir = 1.0 / rho;");
+    let _ = writeln!(s, "EQU Njx,  jx = f1 + f5 + f8 - f3 - f6 - f7;");
+    let _ = writeln!(s, "EQU Njy,  jy = f2 + f5 + f6 - f4 - f7 - f8;");
+    let _ = writeln!(s, "EQU Nux,  ux = jx * ir;");
+    let _ = writeln!(s, "EQU Nuy,  uy = jy * ir;");
+    let _ = writeln!(s, "EQU Nsqx, sqx = ux * ux;");
+    let _ = writeln!(s, "EQU Nsqy, sqy = uy * uy;");
+    let _ = writeln!(s, "EQU Nusq, usq = sqx + sqy;");
+    let _ = writeln!(s, "EQU Ncu,  cu = 1.5 * usq;");
+    // per-direction signed projections (eu7 duplicates eu5 on purpose:
+    // the compiler performs no cross-node CSE — each formula is its own
+    // hardware operator, as in the paper's Fig. 3 mapping)
+    let _ = writeln!(s, "EQU Neu5, eu5 = ux + uy;");
+    let _ = writeln!(s, "EQU Neu6, eu6 = uy - ux;");
+    let _ = writeln!(s, "EQU Neu7, eu7 = ux + uy;");
+    let _ = writeln!(s, "EQU Neu8, eu8 = ux - uy;");
+    let _ = writeln!(s, "EQU Ninn0, inn0 = 1.0 - cu;");
+    // (eu expression, sign) per direction 1..8
+    let dirs: [(&str, char); 8] = [
+        ("ux", '+'),
+        ("uy", '+'),
+        ("ux", '-'),
+        ("uy", '-'),
+        ("eu5", '+'),
+        ("eu6", '+'),
+        ("eu7", '-'),
+        ("eu8", '+'),
+    ];
+    for (k, (eu, sign)) in dirs.iter().enumerate() {
+        let i = k + 1;
+        let _ = writeln!(s, "EQU Nt3_{i}, t3_{i} = 3.0 * {eu};");
+        let _ = writeln!(s, "EQU Nsq_{i}, sq_{i} = {eu} * {eu};");
+        let _ = writeln!(s, "EQU Nq_{i},  q_{i} = 4.5 * sq_{i};");
+        let _ = writeln!(
+            s,
+            "EQU Ninn{i}, inn{i} = ((1.0 {sign} t3_{i}) + q_{i}) - cu;"
+        );
+    }
+    for i in 0..9 {
+        let _ = writeln!(s, "EQU Nwr{i},  wr{i} = w{i} * rho;");
+        let _ = writeln!(s, "EQU Nfeq{i}, feq{i} = wr{i} * inn{i};");
+        let _ = writeln!(s, "EQU Ndf{i},  df{i} = feq{i} - f{i};");
+        let _ = writeln!(s, "EQU Ntdf{i}, tdf{i} = one_tau * df{i};");
+        let _ = writeln!(s, "EQU Nfo{i},  fs{i} = f{i} + tdf{i};");
+    }
+    s
+}
+
+/// Boundary core: half-way bounce-back + moving-lid Ladd correction
+/// (4a + 4m + attribute comparators and multiplexers).
+pub fn gen_bndry() -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "Name uLBM_bndry;  # half-way bounce-back, 4a+4m");
+    let fp: Vec<String> = (0..9).map(|i| format!("fp{i}")).collect();
+    let fs: Vec<String> = (0..9).map(|i| format!("fs{i}")).collect();
+    let at: Vec<String> = (0..9).map(|i| format!("a{i}")).collect();
+    let _ = writeln!(
+        s,
+        "Main_In {{bi::{},{},rho,{}}};",
+        fp.join(","),
+        fs.join(","),
+        at.join(",")
+    );
+    let _ = writeln!(s, "Append_Reg {{br::uwx,uwy}};");
+    let outs: Vec<String> = (0..9).map(|i| format!("o{i}")).collect();
+    let _ = writeln!(s, "Main_Out {{bo::{}}};", outs.join(","));
+    let _ = writeln!(s, "Param w65 = {:?};", W6_5);
+    let _ = writeln!(s, "Param w66 = {:?};", W6_6);
+    let _ = writeln!(s, "EQU Kone, k_one = 1.0;");
+    // the Ladd correction for the two lid-arriving diagonals
+    let _ = writeln!(s, "EQU Neuw5, euw5 = uwx + uwy;");
+    let _ = writeln!(s, "EQU Neuw6, euw6 = uwy - uwx;");
+    let _ = writeln!(s, "EQU Ncc5,  cc5 = w65 * euw5;");
+    let _ = writeln!(s, "EQU Ncc6,  cc6 = w66 * euw6;");
+    let _ = writeln!(s, "EQU Ncr5,  corr5 = cc5 * rho;");
+    let _ = writeln!(s, "EQU Ncr6,  corr6 = cc6 * rho;");
+    let _ = writeln!(s, "EQU Nb5,   badd5 = fs{} + corr5;", OPP[5]);
+    let _ = writeln!(s, "EQU Nb6,   badd6 = fs{} + corr6;", OPP[6]);
+    // attribute decode (raw-word comparators; a0 is the center tap)
+    let _ = writeln!(s, "HDL Cfl, 1, (is_fluid) = CompEq(a0), 0;");
+    for i in 0..9 {
+        let _ = writeln!(s, "HDL CW{i}, 1, (wsel{i}) = CompEq(a{i}), 1;");
+        let _ = writeln!(s, "HDL CL{i}, 1, (lsel{i}) = CompEq(a{i}), 2;");
+        let _ = writeln!(
+            s,
+            "HDL MS{i}, 1, (solid{i}) = SyncMux(wsel{i}, k_one, lsel{i});"
+        );
+        let bb = match i {
+            5 => {
+                let _ = writeln!(
+                    s,
+                    "HDL MB5, 1, (bb5) = SyncMux(lsel5, badd5, fs{});",
+                    OPP[5]
+                );
+                "bb5".to_string()
+            }
+            6 => {
+                let _ = writeln!(
+                    s,
+                    "HDL MB6, 1, (bb6) = SyncMux(lsel6, badd6, fs{});",
+                    OPP[6]
+                );
+                "bb6".to_string()
+            }
+            _ => format!("fs{}", OPP[i]),
+        };
+        let _ = writeln!(
+            s,
+            "HDL MA{i}, 1, (selbb{i}) = SyncMux(solid{i}, {bb}, fp{i});"
+        );
+        let _ = writeln!(
+            s,
+            "HDL MF{i}, 1, (o{i}) = SyncMux(is_fluid, selbb{i}, fp{i});"
+        );
+    }
+    s
+}
+
+/// PE core: n collision/boundary pipelines around shared Trans2D
+/// buffers (Fig. 2b; Figs. 6–9).
+pub fn gen_pe(design: &LbmDesign, calc_depth: u32, bndry_depth: u32) -> String {
+    let (n, w) = (design.n, design.w);
+    let trans_delay = w / n + 2;
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "Name {};  # LBM PE: {n} pipeline(s), grid width {w}", design.pe_name()
+    );
+    let _ = writeln!(
+        s,
+        "# stage depths: calc {calc_depth}, translation {trans_delay}, boundary {bndry_depth}"
+    );
+    // main stream in: per lane f0..f8 + attr, then frame markers
+    let mut in_ports = Vec::new();
+    for l in 0..n {
+        for i in 0..9 {
+            in_ports.push(format!("f{i}_{l}"));
+        }
+        in_ports.push(format!("a_{l}"));
+    }
+    in_ports.push("sop".into());
+    in_ports.push("eop".into());
+    let _ = writeln!(s, "Main_In {{Mi::{}}};", in_ports.join(","));
+    let _ = writeln!(s, "Append_Reg {{Mr::one_tau,uwx,uwy}};");
+    let mut out_ports = Vec::new();
+    for l in 0..n {
+        for i in 0..9 {
+            out_ports.push(format!("o{i}_{l}"));
+        }
+        out_ports.push(format!("ao_{l}"));
+    }
+    out_ports.push("sop_o".into());
+    out_ports.push("eop_o".into());
+    let _ = writeln!(s, "Main_Out {{Mo::{}}};", out_ports.join(","));
+
+    // collision per lane
+    for l in 0..n {
+        let ins: Vec<String> = (0..9).map(|i| format!("f{i}_{l}")).collect();
+        let outs: Vec<String> = (0..9).map(|i| format!("fs{i}_{l}")).collect();
+        let _ = writeln!(
+            s,
+            "HDL CALC{l}, {calc_depth}, ({},rho_{l}) = uLBM_calc({},one_tau);",
+            outs.join(","),
+            ins.join(",")
+        );
+    }
+    // translation: one shared Trans2D per moving channel (i = 1..8),
+    // each with TWO taps — the lattice shift (ex, ey) feeding the
+    // streamed value fp_i, and the center tap (0, 0) feeding the
+    // boundary stage's bounce source fc_i.  The center taps reuse the
+    // same line buffer storage (no separate balancing lines), exactly
+    // as a real stencil buffer would.  Channel 0 has zero offset and
+    // needs no buffer (delay balancing aligns it).  The n lanes share
+    // each buffer (Fig. 2b).
+    for i in 1..9 {
+        let ins: Vec<String> = (0..n).map(|l| format!("fs{i}_{l}")).collect();
+        let mut outs: Vec<String> = (0..n).map(|l| format!("fp{i}_{l}")).collect();
+        outs.extend((0..n).map(|l| format!("fc{i}_{l}")));
+        let _ = writeln!(
+            s,
+            "HDL TR{i}, {trans_delay}, ({}) = Trans2D({}), {w}, {n}, {}, {}, 0, 0;",
+            outs.join(","),
+            ins.join(","),
+            EX[i],
+            EY[i]
+        );
+    }
+    // attribute translation: 8 direction taps + the center tap on one
+    // shared buffer.
+    {
+        let ins: Vec<String> = (0..n).map(|l| format!("a_{l}")).collect();
+        let mut outs = Vec::new();
+        for i in 1..9 {
+            for l in 0..n {
+                outs.push(format!("at{i}_{l}"));
+            }
+        }
+        for l in 0..n {
+            outs.push(format!("ac_{l}"));
+        }
+        let mut taps: Vec<String> =
+            (1..9).map(|i| format!("{}, {}", EX[i], EY[i])).collect();
+        taps.push("0, 0".into());
+        let _ = writeln!(
+            s,
+            "HDL TRA, {trans_delay}, ({}) = Trans2D({}), {w}, {n}, {};",
+            outs.join(","),
+            ins.join(","),
+            taps.join(", ")
+        );
+    }
+    // boundary per lane
+    for l in 0..n {
+        let mut ins = Vec::new();
+        ins.push(format!("fs0_{l}")); // fp0 = fs0 (zero offset)
+        for i in 1..9 {
+            ins.push(format!("fp{i}_{l}"));
+        }
+        ins.push(format!("fs0_{l}")); // fc0 = fs0 (zero offset)
+        for i in 1..9 {
+            ins.push(format!("fc{i}_{l}"));
+        }
+        ins.push(format!("rho_{l}"));
+        ins.push(format!("ac_{l}")); // a0: center attribute (buffer tap)
+        for i in 1..9 {
+            ins.push(format!("at{i}_{l}"));
+        }
+        ins.push("uwx".into());
+        ins.push("uwy".into());
+        let outs: Vec<String> = (0..9).map(|i| format!("o{i}_{l}")).collect();
+        let _ = writeln!(
+            s,
+            "HDL BND{l}, {bndry_depth}, ({}) = uLBM_bndry({});",
+            outs.join(","),
+            ins.join(",")
+        );
+        let _ = writeln!(s, "DRCT (ao_{l}) = (ac_{l});");
+    }
+    let _ = writeln!(s, "DRCT (sop_o, eop_o) = (Mi::sop, Mi::eop);");
+    s
+}
+
+/// Cascade top: m PEs chained (Fig. 2c; Figs. 10–12).
+pub fn gen_cascade(design: &LbmDesign, pe_depth: u32) -> String {
+    let (n, m) = (design.n, design.m);
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "Name {};  # {m} cascaded PE(s) x {n} pipeline(s)",
+        design.top_name()
+    );
+    let mut in_ports = Vec::new();
+    for l in 0..n {
+        for i in 0..9 {
+            in_ports.push(format!("if{i}_{l}"));
+        }
+        in_ports.push(format!("ia_{l}"));
+    }
+    in_ports.push("sop".into());
+    in_ports.push("eop".into());
+    let _ = writeln!(s, "Main_In {{Mi::{}}};", in_ports.join(","));
+    let _ = writeln!(s, "Append_Reg {{Mr::one_tau,uwx,uwy}};");
+    let mut out_ports = Vec::new();
+    for l in 0..n {
+        for i in 0..9 {
+            out_ports.push(format!("of{i}_{l}"));
+        }
+        out_ports.push(format!("oa_{l}"));
+    }
+    out_ports.push("sop_o".into());
+    out_ports.push("eop_o".into());
+    let _ = writeln!(s, "Main_Out {{Mo::{}}};", out_ports.join(","));
+
+    // stage k consumes stage k-1's signals
+    let sig = |k: u32, i: usize, l: u32| {
+        if k == 0 {
+            format!("if{i}_{l}")
+        } else {
+            format!("f{i}_{l}_s{k}")
+        }
+    };
+    let asig = |k: u32, l: u32| {
+        if k == 0 {
+            format!("ia_{l}")
+        } else {
+            format!("a_{l}_s{k}")
+        }
+    };
+    let msig = |k: u32, which: &str| {
+        if k == 0 {
+            format!("Mi::{which}")
+        } else {
+            format!("{which}_s{k}")
+        }
+    };
+    for k in 0..m {
+        let mut ins = Vec::new();
+        for l in 0..n {
+            for i in 0..9 {
+                ins.push(sig(k, i, l));
+            }
+            ins.push(asig(k, l));
+        }
+        ins.push(msig(k, "sop"));
+        ins.push(msig(k, "eop"));
+        ins.push("one_tau".into());
+        ins.push("uwx".into());
+        ins.push("uwy".into());
+        let mut outs = Vec::new();
+        for l in 0..n {
+            for i in 0..9 {
+                outs.push(sig(k + 1, i, l));
+            }
+            outs.push(asig(k + 1, l));
+        }
+        outs.push(format!("sop_s{}", k + 1));
+        outs.push(format!("eop_s{}", k + 1));
+        let _ = writeln!(
+            s,
+            "HDL PE{}, {pe_depth}, ({}) = {}({});",
+            k + 1,
+            outs.join(","),
+            design.pe_name(),
+            ins.join(",")
+        );
+    }
+    // route the last stage to the main outputs
+    let mut dsts = Vec::new();
+    let mut srcs = Vec::new();
+    for l in 0..n {
+        for i in 0..9 {
+            dsts.push(format!("of{i}_{l}"));
+            srcs.push(sig(m, i, l));
+        }
+        dsts.push(format!("oa_{l}"));
+        srcs.push(asig(m, l));
+    }
+    dsts.push("sop_o".into());
+    srcs.push(format!("sop_s{m}"));
+    dsts.push("eop_o".into());
+    srcs.push(format!("eop_s{m}"));
+    let _ = writeln!(s, "DRCT ({}) = ({});", dsts.join(","), srcs.join(","));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg;
+
+    #[test]
+    fn calc_census_matches_table4_collision() {
+        let mut reg = Registry::with_library();
+        let calc = reg.register_source(&gen_calc()).unwrap();
+        let c = dfg::compile(&calc, &reg).unwrap();
+        let census = c.graph.census();
+        assert_eq!(census.add, 66);
+        assert_eq!(census.mul, 56);
+        assert_eq!(census.div, 1);
+        assert_eq!(census.sqrt, 0);
+    }
+
+    #[test]
+    fn bndry_census_matches_table4_boundary() {
+        let mut reg = Registry::with_library();
+        let b = reg.register_source(&gen_bndry()).unwrap();
+        let c = dfg::compile(&b, &reg).unwrap();
+        let census = c.graph.census();
+        assert_eq!(census.add, 4);
+        assert_eq!(census.mul, 4);
+        assert_eq!(census.div, 0);
+    }
+
+    #[test]
+    fn calc_depth_is_110() {
+        let mut reg = Registry::with_library();
+        let calc = reg.register_source(&gen_calc()).unwrap();
+        let c = dfg::compile(&calc, &reg).unwrap();
+        assert_eq!(c.schedule.depth, 110);
+    }
+
+    #[test]
+    fn pe_census_matches_table4_total() {
+        // Table IV: 70 Adder, 60 Multiplier, 1 Divider, 131 total
+        let g = generate(&LbmDesign::new(1, 1, 720, 300)).unwrap();
+        let pe = match g.registry.lookup(&g.top.name.replace("LBM_x1_m1_w720", "PEx1_w720")) {
+            Some(crate::spd::ModuleDef::Spd(c)) => c.clone(),
+            _ => panic!("PE not registered"),
+        };
+        let c = dfg::compile(&pe, &g.registry).unwrap();
+        let census = c.graph.census();
+        assert_eq!(census.add, 70, "Adder");
+        assert_eq!(census.mul, 60, "Multiplier");
+        assert_eq!(census.div, 1, "Divider");
+        assert_eq!(census.total(), 131);
+    }
+
+    #[test]
+    fn pe_depths_match_paper() {
+        // paper §III-B: 855 stages (x1), 495 (x2); hence 315 (x4)
+        for (n, want) in [(1u32, 855u32), (2, 495), (4, 315)] {
+            let g = generate(&LbmDesign::new(n, 1, 720, 300)).unwrap();
+            assert_eq!(g.pe_depth, want, "PE x{n}");
+        }
+    }
+
+    #[test]
+    fn cascade_compiles_and_census_scales() {
+        let design = LbmDesign::new(1, 2, 64, 32);
+        let g = generate(&design).unwrap();
+        let c = dfg::compile(&g.top, &g.registry).unwrap();
+        let census = c.graph.census();
+        assert_eq!(census.total(), 2 * 131);
+        // cascade depth = 2 x PE depth
+        assert_eq!(c.depth(), 2 * g.pe_depth);
+    }
+
+    #[test]
+    fn spatial_census_scales_with_n() {
+        let design = LbmDesign::new(2, 1, 64, 32);
+        let g = generate(&design).unwrap();
+        let c = dfg::compile(&g.top, &g.registry).unwrap();
+        assert_eq!(c.graph.census().total(), 2 * 131);
+    }
+
+    #[test]
+    fn dsp_class_split_is_17_logic_43_dsp() {
+        // 3.0/4.5/1.5 muls synthesize to logic; the rest (incl. the
+        // w_i*rho and boundary muls) take a DSP each: 43 + 5 (div) = 48
+        let g = generate(&LbmDesign::new(1, 1, 720, 300)).unwrap();
+        let c = dfg::compile(&g.top, &g.registry).unwrap();
+        let est = crate::resource::estimate(
+            &c.graph,
+            &c.schedule,
+            &crate::resource::DesignMeta { lanes: 1, pes: 1 },
+            &crate::resource::CostTable::default(),
+            &crate::resource::STRATIX_V_5SGXEA7,
+        );
+        assert_eq!(est.logic_muls, 17);
+        assert_eq!(est.dsp_muls, 43);
+        assert_eq!(est.core.dsps, 48);
+    }
+}

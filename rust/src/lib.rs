@@ -1,0 +1,76 @@
+//! # spdx — SPD DSL compiler and FPGA-substrate simulator
+//!
+//! Reproduction of Sano (2015), *"DSL-based Design Space Exploration for
+//! Temporal and Spatial Parallelism of Custom Stream Computing"*.
+//!
+//! The crate implements the paper's full stack on a simulated FPGA
+//! substrate (see `DESIGN.md` for the substitution map):
+//!
+//! * [`spd`] — the stream-processing-description DSL front-end
+//!   (lexer, parser, preprocessor, hierarchical module registry);
+//! * [`expr`] — the formula expression engine used by `EQU` nodes;
+//! * [`dfg`] — data-flow-graph construction, hierarchy elaboration,
+//!   ASAP pipeline scheduling and delay balancing (Fig. 3);
+//! * [`library`] — the paper's library HDL modules (§II-D);
+//! * [`sim`] — cycle-accurate stream simulation with a DDR3 bandwidth
+//!   model and the paper's hardware utilization counters (§III-C);
+//! * [`resource`] — Stratix V resource estimation (Table III);
+//! * [`power`] — calibrated board-power model (Table III);
+//! * [`verilog`] — Verilog-HDL emission backend;
+//! * [`explore`] — the (n, m) design-space explorer (§II-B);
+//! * [`lbm`] — the D2Q9 lattice-Boltzmann case study (§III);
+//! * [`runtime`] — PJRT execution of the JAX/Pallas AOT artifacts;
+//! * [`coordinator`] — multi-threaded DSE job orchestration.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use spdx::prelude::*;
+//!
+//! let src = r#"
+//!     Name demo;
+//!     Main_In  {main_i::x1, x2};
+//!     Main_Out {main_o::z};
+//!     EQU n1, z = x1 * x2 + sqrt(x1);
+//! "#;
+//! let core = spdx::spd::parse_core(src).unwrap();
+//! let registry = spdx::spd::Registry::with_library();
+//! let dfg = spdx::dfg::build(&core, &registry).unwrap();
+//! let sched = spdx::dfg::schedule(&dfg).unwrap();
+//! println!("pipeline depth = {}", sched.depth);
+//! ```
+
+pub mod cli;
+pub mod coordinator;
+pub mod dfg;
+pub mod error;
+pub mod explore;
+pub mod expr;
+pub mod lbm;
+pub mod library;
+pub mod power;
+pub mod prop;
+pub mod report;
+pub mod resource;
+pub mod runtime;
+pub mod sim;
+pub mod spd;
+pub mod util;
+pub mod verilog;
+
+pub use error::{Error, Result};
+
+/// Common imports for downstream users.
+pub mod prelude {
+    pub use crate::dfg::{build, elaborate, schedule};
+    pub use crate::error::{Error, Result};
+    pub use crate::spd::{parse_core, Registry};
+}
+
+/// Operating frequency of the stream-computing cores (paper §III-A).
+pub const CORE_FREQ_MHZ: f64 = 180.0;
+
+/// DDR3 controller frequency and bus width (paper §III-A): 512-bit at
+/// 200 MHz gives 12.8 GB/s peak per controller.
+pub const DDR_FREQ_MHZ: f64 = 200.0;
+pub const DDR_BUS_BYTES: u64 = 64;

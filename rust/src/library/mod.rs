@@ -1,0 +1,298 @@
+//! Library HDL modules (paper §II-D).
+//!
+//! "The library of the present version contains Synchronous multiplexer,
+//! Comparator, Eliminator, Delay, Stream forward, Stream backward, and
+//! 2D stencil buffer modules."
+//!
+//! Each module is an *atomic* DFG node: it has a statically known
+//! pipeline latency, a port signature, cycle-accurate functional
+//! semantics (implemented in `sim`), and a resource cost (implemented
+//! in `resource`).  Raw 32-bit semantics (paper §II-C2): comparators and
+//! multiplexers operate on the bit patterns, not on FP values, so they
+//! do not count toward the Table IV floating-point operator census.
+
+use crate::error::{Error, Result};
+
+/// A resolved library module instance.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LibKind {
+    /// `Delay(x), N` — plain N-cycle delay line (1 in, 1 out).
+    /// "Stream backward" is the same element viewed as a reference to
+    /// the element N cells in the past.
+    Delay { cycles: u32 },
+    /// `SyncMux(sel, a, b)` — synchronous multiplexer:
+    /// `out = (sel != 0.0) ? a : b`, latency 1.
+    SyncMux,
+    /// `CompEq(x), C` — comparator against a constant:
+    /// `out = (x == C) ? 1.0 : 0.0` on the raw word, latency 1.
+    CompEq { value: f32 },
+    /// `CompLt(a, b)` — two-input less-than comparator, latency 1.
+    CompLt,
+    /// `Eliminator(x, en)` — removes elements whose enable flag is 0
+    /// from the stream (a rate-changing gate).  Latency 1.  In the
+    /// value-level simulator it forwards `x` when `en != 0` and holds
+    /// the previous valid element otherwise (sample-and-hold view of
+    /// the eliminated slot).
+    Eliminator,
+    /// `StreamFwd(x), K, BASE` — offset reference to the element K
+    /// cells in the *future* (paper's "stream forward").  The node
+    /// presents a uniform declared latency of BASE cycles (so delay
+    /// balancing shifts the whole core by BASE) while internally
+    /// delaying only BASE-K cycles: relative to the balanced timeline,
+    /// `out(t) = in(t + K)`.  Requires K <= BASE.
+    StreamFwd { ahead: u32, base: u32 },
+    /// `StreamBwd(x), K, BASE` — offset reference to the element K
+    /// cells in the past: declared latency BASE, internal delay
+    /// BASE+K, i.e. `out(t) = in(t - K)` on the balanced timeline.
+    StreamBwd { back: u32, base: u32 },
+    /// `Trans2D(lane0, ..., lane<n-1>), W, N, ex0, ey0, ex1, ey1, ...`
+    /// — the 2-D stencil buffer / translation unit: a shared line
+    /// buffer over an n-lane raster stream of a W-wide grid, producing
+    /// one output group per tap `(ex, ey)`:
+    /// `out_tap(cell t) = in(cell t - (ey*W + ex))`.
+    /// Uniform latency `W/n + 2` cycles covers the most-future tap
+    /// (|ex|,|ey| <= 1) with one cycle of registering margin.
+    /// Outputs are tap-major, lane-minor.
+    Trans2D { w: u32, n: u32, taps: Vec<(i32, i32)> },
+}
+
+impl LibKind {
+    /// Pipeline latency in cycles (statically known, paper §II-C2).
+    pub fn latency(&self) -> u32 {
+        match self {
+            LibKind::Delay { cycles } => *cycles,
+            LibKind::SyncMux | LibKind::CompEq { .. } | LibKind::CompLt => 1,
+            LibKind::Eliminator => 1,
+            LibKind::StreamFwd { base, .. } => *base,
+            LibKind::StreamBwd { base, .. } => *base,
+            LibKind::Trans2D { w, n, .. } => w / n + 2,
+        }
+    }
+
+    /// (input ports, output ports).
+    pub fn arity(&self) -> (usize, usize) {
+        match self {
+            LibKind::Delay { .. }
+            | LibKind::StreamFwd { .. }
+            | LibKind::StreamBwd { .. } => (1, 1),
+            LibKind::SyncMux => (3, 1),
+            LibKind::CompEq { .. } => (1, 1),
+            LibKind::CompLt => (2, 1),
+            LibKind::Eliminator => (2, 1),
+            LibKind::Trans2D { n, taps, .. } => {
+                (*n as usize, *n as usize * taps.len())
+            }
+        }
+    }
+
+    /// Internal cell delay (buffer residence) of a Trans2D tap: a cell
+    /// consumed at stream time `s` is emitted on tap `(ex, ey)` at
+    /// stream time `s + offset + base_cells`, so it stays buffered for
+    /// `delay_cells = (W + 2n) + (ey*W + ex)` cells.  Past taps
+    /// (positive offset, e.g. `(1,1)` -> `2W+2n+1`) need the deepest
+    /// storage; the most-future tap `(-1,-1)` (offset `-(W+1)`) still
+    /// has `2n-1 >= 1` cells of registering margin.
+    pub fn trans2d_tap_delay(w: u32, n: u32, ex: i32, ey: i32) -> i64 {
+        (w as i64 + 2 * n as i64) + (ey as i64 * w as i64 + ex as i64)
+    }
+
+    /// Cell offset of a Trans2D tap: `out(t) = in(t - offset)`.
+    pub fn tap_offset(w: u32, ex: i32, ey: i32) -> i64 {
+        ey as i64 * w as i64 + ex as i64
+    }
+}
+
+/// Library module names as used in SPD `HDL` calls.
+pub const LIB_NAMES: &[&str] = &[
+    "Delay",
+    "SyncMux",
+    "CompEq",
+    "CompLt",
+    "Eliminator",
+    "StreamFwd",
+    "StreamBwd",
+    "Trans2D",
+];
+
+/// Resolve a library module call: `module` name + numeric parameter
+/// list (Param identifiers already substituted).
+pub fn resolve(module: &str, params: &[f64]) -> Result<LibKind> {
+    let bad = |msg: String| Error::Elaborate(format!("{module}: {msg}"));
+    match module {
+        "Delay" => {
+            let [cycles] = expect_params::<1>(module, params)?;
+            if cycles < 0.0 || cycles.fract() != 0.0 {
+                return Err(bad(format!("bad delay {cycles}")));
+            }
+            Ok(LibKind::Delay { cycles: cycles as u32 })
+        }
+        "SyncMux" => {
+            expect_params::<0>(module, params)?;
+            Ok(LibKind::SyncMux)
+        }
+        "CompEq" => {
+            let [value] = expect_params::<1>(module, params)?;
+            Ok(LibKind::CompEq { value: value as f32 })
+        }
+        "CompLt" => {
+            expect_params::<0>(module, params)?;
+            Ok(LibKind::CompLt)
+        }
+        "Eliminator" => {
+            expect_params::<0>(module, params)?;
+            Ok(LibKind::Eliminator)
+        }
+        "StreamFwd" => {
+            let [ahead, base] = expect_params::<2>(module, params)?;
+            let (ahead, base) = (ahead as i64, base as i64);
+            if ahead < 0 || base < ahead {
+                return Err(bad(format!(
+                    "need 0 <= ahead <= base, got ahead={ahead} base={base}"
+                )));
+            }
+            Ok(LibKind::StreamFwd { ahead: ahead as u32, base: base as u32 })
+        }
+        "StreamBwd" => {
+            let [back, base] = expect_params::<2>(module, params)?;
+            let (back, base) = (back as i64, base as i64);
+            if back < 0 || base < 0 {
+                return Err(bad(format!(
+                    "need back, base >= 0, got back={back} base={base}"
+                )));
+            }
+            Ok(LibKind::StreamBwd { back: back as u32, base: base as u32 })
+        }
+        "Trans2D" => {
+            if params.len() < 4 || (params.len() - 2) % 2 != 0 {
+                return Err(bad(format!(
+                    "expected W, n, (ex, ey)+ params, got {} values",
+                    params.len()
+                )));
+            }
+            let w = params[0];
+            let n = params[1];
+            if w <= 0.0 || w.fract() != 0.0 || n <= 0.0 || n.fract() != 0.0 {
+                return Err(bad(format!("bad W={w} n={n}")));
+            }
+            let (w, n) = (w as u32, n as u32);
+            if w % n != 0 {
+                return Err(bad(format!("n={n} must divide W={w}")));
+            }
+            let mut taps = Vec::new();
+            for pair in params[2..].chunks(2) {
+                let (ex, ey) = (pair[0], pair[1]);
+                if ex.fract() != 0.0 || ey.fract() != 0.0 || ex.abs() > 1.0 || ey.abs() > 1.0
+                {
+                    return Err(bad(format!("bad tap ({ex}, {ey})")));
+                }
+                let (ex, ey) = (ex as i32, ey as i32);
+                // internal delay must be representable (>= 0)
+                let d = LibKind::trans2d_tap_delay(w, n, ex, ey);
+                if d < 0 {
+                    return Err(bad(format!("tap ({ex},{ey}) beyond buffer window")));
+                }
+                taps.push((ex, ey));
+            }
+            Ok(LibKind::Trans2D { w, n, taps })
+        }
+        other => Err(Error::Elaborate(format!("unknown library module `{other}`"))),
+    }
+}
+
+fn expect_params<const K: usize>(module: &str, params: &[f64]) -> Result<[f64; K]> {
+    if params.len() != K {
+        return Err(Error::Elaborate(format!(
+            "{module}: expected {K} parameters, got {}",
+            params.len()
+        )));
+    }
+    let mut out = [0.0; K];
+    out.copy_from_slice(params);
+    Ok(out)
+}
+
+/// True if `name` is a library module.
+pub fn is_library(name: &str) -> bool {
+    LIB_NAMES.contains(&name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delay_latency_and_arity() {
+        let d = resolve("Delay", &[7.0]).unwrap();
+        assert_eq!(d.latency(), 7);
+        assert_eq!(d.arity(), (1, 1));
+    }
+
+    #[test]
+    fn mux_and_comparators() {
+        assert_eq!(resolve("SyncMux", &[]).unwrap().latency(), 1);
+        assert_eq!(resolve("SyncMux", &[]).unwrap().arity(), (3, 1));
+        assert_eq!(
+            resolve("CompEq", &[2.0]).unwrap(),
+            LibKind::CompEq { value: 2.0 }
+        );
+        assert_eq!(resolve("CompLt", &[]).unwrap().arity(), (2, 1));
+    }
+
+    #[test]
+    fn stream_offsets_have_uniform_base_latency() {
+        let f = resolve("StreamFwd", &[3.0, 10.0]).unwrap();
+        assert_eq!(f.latency(), 10);
+        assert!(resolve("StreamFwd", &[11.0, 10.0]).is_err());
+        let b = resolve("StreamBwd", &[256.0, 10.0]).unwrap();
+        assert_eq!(b.latency(), 10);
+    }
+
+    #[test]
+    fn trans2d_latency_matches_paper_depths() {
+        // paper §III-B: translation of a 720-wide grid
+        let t = resolve("Trans2D", &[720.0, 1.0, 0.0, 0.0]).unwrap();
+        assert_eq!(t.latency(), 722);
+        let t2 = resolve("Trans2D", &[720.0, 2.0, 0.0, 0.0]).unwrap();
+        assert_eq!(t2.latency(), 362);
+        let t4 = resolve("Trans2D", &[720.0, 4.0, 0.0, 0.0]).unwrap();
+        assert_eq!(t4.latency(), 182);
+    }
+
+    #[test]
+    fn trans2d_tap_delays() {
+        // past-most tap (ex=1, ey=1): (W+2n) + (W+1)
+        assert_eq!(LibKind::trans2d_tap_delay(720, 1, 1, 1), 1443);
+        assert_eq!(LibKind::trans2d_tap_delay(720, 2, 1, 1), 1445);
+        // future-most tap (ex=-1, ey=-1): delay (W+2n) - (W+1) = 2n-1
+        assert_eq!(LibKind::trans2d_tap_delay(720, 1, -1, -1), 1);
+        // center tap: W+2n
+        assert_eq!(LibKind::trans2d_tap_delay(720, 1, 0, 0), 722);
+        // offsets
+        assert_eq!(LibKind::tap_offset(720, 1, 1), 721);
+        assert_eq!(LibKind::tap_offset(720, -1, 0), -1);
+    }
+
+    #[test]
+    fn trans2d_validates() {
+        assert!(resolve("Trans2D", &[720.0, 7.0, 0.0, 0.0]).is_err()); // 7 ∤ 720
+        assert!(resolve("Trans2D", &[720.0, 1.0, 2.0, 0.0]).is_err()); // |ex|>1
+        assert!(resolve("Trans2D", &[720.0, 1.0]).is_err()); // no taps
+    }
+
+    #[test]
+    fn trans2d_multi_tap_arity() {
+        let t = resolve(
+            "Trans2D",
+            &[8.0, 2.0, 0.0, 0.0, 1.0, 0.0, -1.0, 0.0],
+        )
+        .unwrap();
+        assert_eq!(t.arity(), (2, 6)); // 2 lanes, 3 taps
+    }
+
+    #[test]
+    fn unknown_module_rejected() {
+        assert!(resolve("Bogus", &[]).is_err());
+        assert!(!is_library("Bogus"));
+        assert!(is_library("Trans2D"));
+    }
+}

@@ -1,0 +1,180 @@
+//! Minimal property-based testing support.
+//!
+//! `proptest` is not in the offline crate set, so this module provides a
+//! small deterministic generator/runner with best-effort shrinking.  It
+//! is used by the DFG/scheduler/simulator invariant tests (DESIGN.md §7).
+//!
+//! ```no_run
+//! use spdx::prop::{forall, Config};
+//! forall(Config::cases(64).seed(9), |rng| {
+//!     let a = rng.range_f32(-10.0, 10.0);
+//!     let b = rng.range_f32(-10.0, 10.0);
+//!     let sum = a + b;
+//!     if (sum - b - a).abs() > 1e-3 {
+//!         return Err(format!("not associative enough: {a} {b}"));
+//!     }
+//!     Ok(())
+//! });
+//! ```
+
+use crate::util::XorShift64;
+
+/// Runner configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Config {
+    pub fn cases(n: usize) -> Self {
+        Config { cases: n, seed: 0xC0FFEE }
+    }
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config::cases(100)
+    }
+}
+
+/// Run `prop` for `cfg.cases` random cases.  Each case gets a fresh RNG
+/// derived from the base seed, so a failure message's case index fully
+/// reproduces it.  Panics (test failure) on the first failing case.
+pub fn forall<F>(cfg: Config, mut prop: F)
+where
+    F: FnMut(&mut XorShift64) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let mut rng = XorShift64::new(cfg.seed ^ (case as u64).wrapping_mul(0x9E37));
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property failed at case {case}/{} (seed {:#x}): {msg}",
+                cfg.cases, cfg.seed
+            );
+        }
+    }
+}
+
+/// Run a property over generated values with best-effort shrinking: on
+/// failure, the shrink function proposes smaller candidates; the
+/// smallest still-failing value is reported.
+pub fn forall_shrink<T, G, S, P>(cfg: Config, mut gen: G, shrink: S, mut prop: P)
+where
+    T: Clone + std::fmt::Debug,
+    G: FnMut(&mut XorShift64) -> T,
+    S: Fn(&T) -> Vec<T>,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let mut rng = XorShift64::new(cfg.seed ^ (case as u64).wrapping_mul(0x9E37));
+        let value = gen(&mut rng);
+        if let Err(first_msg) = prop(&value) {
+            // shrink loop: greedily accept any failing shrink candidate,
+            // bounded to avoid non-decreasing shrinker cycles
+            let mut current = value;
+            let mut msg = first_msg;
+            let mut budget = 200;
+            'outer: while budget > 0 {
+                budget -= 1;
+                for cand in shrink(&current) {
+                    if let Err(m) = prop(&cand) {
+                        current = cand;
+                        msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed at case {case} (seed {:#x})\n  shrunk input: {current:?}\n  error: {msg}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Shrinker for vectors: strictly smaller candidates only (halves,
+/// then single-element drops) so the shrink loop always terminates.
+pub fn shrink_vec<T: Clone>(v: &[T]) -> Vec<Vec<T>> {
+    let mut out: Vec<Vec<T>> = Vec::new();
+    let n = v.len();
+    if n == 0 {
+        return out;
+    }
+    if n / 2 < n {
+        out.push(v[..n / 2].to_vec());
+    }
+    if n - n / 2 < n {
+        out.push(v[n / 2..].to_vec());
+    }
+    if n <= 8 {
+        for i in 0..n {
+            let mut w = v.to_vec();
+            w.remove(i);
+            out.push(w);
+        }
+    }
+    out.retain(|w| w.len() < n);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivially() {
+        forall(Config::cases(10), |_| Ok(()));
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failure() {
+        forall(Config::cases(10), |rng| {
+            if rng.next_f64() >= 0.0 {
+                Err("always".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "shrunk input")]
+    fn shrinking_reduces_vec() {
+        forall_shrink(
+            Config::cases(5),
+            |rng| (0..10).map(|_| rng.below(100) as u32).collect::<Vec<_>>(),
+            |v| shrink_vec(v),
+            |v| {
+                // property: no vector contains any element (always fails
+                // for non-empty vectors, so shrinking drives to size ~1).
+                if v.is_empty() {
+                    Ok(())
+                } else {
+                    Err(format!("len {}", v.len()))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn forall_is_deterministic() {
+        let mut seen = Vec::new();
+        forall(Config::cases(5).seed(77), |rng| {
+            seen.push(rng.next_u64());
+            Ok(())
+        });
+        let mut again = Vec::new();
+        forall(Config::cases(5).seed(77), |rng| {
+            again.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(seen, again);
+    }
+}

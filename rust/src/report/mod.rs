@@ -1,0 +1,131 @@
+//! Table rendering: regenerates the paper's Table III / Table IV rows
+//! from evaluations.
+
+use crate::explore::Evaluation;
+use crate::power::PAPER_TABLE3;
+use crate::resource::soc_peripherals;
+use crate::util::commas;
+
+/// Render the Table III analogue for a set of evaluations.
+pub fn table3(evals: &[Evaluation]) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{:<22} {:>8} {:>9} {:>12} {:>5} {:>6} {:>8} {:>9} {:>7} {:>9}\n",
+        "Device / Modules",
+        "ALMs",
+        "Regs",
+        "BRAM[bits]",
+        "DSPs",
+        "Freq",
+        "Util(u)",
+        "GFlop/s",
+        "P[W]",
+        "GF/sW"
+    ));
+    let soc = soc_peripherals();
+    s.push_str(&format!(
+        "{:<22} {:>8} {:>9} {:>12} {:>5} {:>6} {:>8} {:>9} {:>7} {:>9}\n",
+        "SoC peripherals",
+        commas(soc.alms),
+        commas(soc.regs),
+        commas(soc.bram_bits),
+        soc.dsps,
+        "-",
+        "-",
+        "-",
+        "-",
+        "-"
+    ));
+    for e in evals {
+        let d = e.design;
+        let label = format!(
+            "(n,m) = ({}, {}){}",
+            d.n,
+            d.m,
+            if e.infeasible.is_some() { " !fit" } else { "" }
+        );
+        s.push_str(&format!(
+            "{:<22} {:>8} {:>9} {:>12} {:>5} {:>6} {:>8.3} {:>9.1} {:>7.1} {:>9.3}\n",
+            label,
+            commas(e.resources.core.alms),
+            commas(e.resources.core.regs),
+            commas(e.resources.core.bram_bits),
+            e.resources.core.dsps,
+            180,
+            e.timing.utilization,
+            e.timing.performance_gflops,
+            e.power_w,
+            e.perf_per_watt,
+        ));
+    }
+    s
+}
+
+/// Side-by-side comparison against the paper's measured Table III.
+pub fn table3_vs_paper(evals: &[Evaluation]) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{:<10} | {:>9} {:>9} {:>6} | {:>9} {:>9} {:>6} | {:>7} {:>7} {:>6}\n",
+        "(n,m)", "ALM:ours", "ALM:ppr", "d%", "u:ours", "u:ppr", "d%", "GF:ours",
+        "GF:ppr", "d%"
+    ));
+    for e in evals {
+        let Some(p) = PAPER_TABLE3
+            .iter()
+            .find(|p| p.n == e.design.n && p.m == e.design.m)
+        else {
+            continue;
+        };
+        let dp = |ours: f64, paper: f64| 100.0 * (ours - paper) / paper;
+        s.push_str(&format!(
+            "({}, {})     | {:>9} {:>9} {:>6.1} | {:>9.3} {:>9.3} {:>6.1} | {:>7.1} {:>7.1} {:>6.1}\n",
+            e.design.n,
+            e.design.m,
+            commas(e.resources.core.alms),
+            commas(p.alms as u64),
+            dp(e.resources.core.alms as f64, p.alms),
+            e.timing.utilization,
+            p.utilization,
+            dp(e.timing.utilization, p.utilization),
+            e.timing.performance_gflops,
+            p.performance_gflops,
+            dp(e.timing.performance_gflops, p.performance_gflops),
+        ));
+    }
+    s
+}
+
+/// Render the Table IV analogue (operator census of one pipeline).
+pub fn table4(census: &crate::expr::OpCensus) -> String {
+    format!(
+        "{:<22} {:>6} {:>11} {:>8} {:>6}\n{:<22} {:>6} {:>11} {:>8} {:>6}\n",
+        "", "Adder", "Multiplier", "Divider", "Total",
+        "PE with x1 pipeline",
+        census.add,
+        census.mul,
+        census.div,
+        census.total(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::expr::OpCensus;
+
+    #[test]
+    fn table4_formats_paper_census() {
+        let c = OpCensus { add: 70, mul: 60, div: 1, sqrt: 0 };
+        let t = table4(&c);
+        assert!(t.contains("70"));
+        assert!(t.contains("60"));
+        assert!(t.contains("131"));
+    }
+
+    #[test]
+    fn table3_renders_soc_row() {
+        let t = table3(&[]);
+        assert!(t.contains("SoC peripherals"));
+        assert!(t.contains("54,997"));
+    }
+}

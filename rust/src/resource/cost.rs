@@ -1,0 +1,134 @@
+//! Per-element resource cost tables, calibrated to the paper's flow
+//! (Altera FP megafunctions on Stratix V, Quartus II 14.1).
+//!
+//! Calibration notes (DESIGN.md §6, EXPERIMENTS.md T3-res):
+//!
+//! * fp32 multiplier: 1 DSP (27x27 mode) unless one operand is a
+//!   compile-time constant whose significand has <= 2 set bits (1.5,
+//!   3.0, 4.5, powers of two): those synthesize to shift-and-add ALM
+//!   logic.  The LBM pipeline has 17 such muls and 43 DSP muls.
+//! * fp32 divider: Goldschmidt, 5 DSPs + logic.  43 + 5 = 48 DSPs per
+//!   pipeline — exactly Table III's DSP column at every (n, m).
+//! * balancing delays shorter than `shift_reg_threshold` stay in ALM
+//!   registers; longer ones use ALTSHIFT_TAPS in BRAM.
+
+/// Calibrated per-element costs.
+#[derive(Clone, Copy, Debug)]
+pub struct CostTable {
+    /// fp32 adder/subtractor: ALMs and pipeline registers.
+    pub add_alm: f64,
+    pub add_regs: f64,
+    /// fp32 multiplier on DSP: ALM glue + registers + 1 DSP.
+    pub mul_dsp_alm: f64,
+    pub mul_dsp_regs: f64,
+    /// fp32 multiplier by a simple (<=2-bit significand) constant:
+    /// shift-and-add in logic, no DSP.
+    pub mul_logic_alm: f64,
+    pub mul_logic_regs: f64,
+    /// fp32 divider: logic + `div_dsps` DSPs.
+    pub div_alm: f64,
+    pub div_regs: f64,
+    pub div_dsps: u64,
+    /// fp32 square root (unused by LBM, needed for generic designs).
+    pub sqrt_alm: f64,
+    pub sqrt_regs: f64,
+    /// comparator / synchronous mux (raw 32-bit).
+    pub cmp_alm: f64,
+    pub mux_alm: f64,
+    /// per balancing-register stage (32-bit word in ALM registers).
+    pub bal_regs_per_stage: f64,
+    /// delays at or above this many stages use BRAM shift registers.
+    pub shift_reg_threshold: u32,
+    /// per-PE stream framing (sop/eop handling, valid tree): ALMs.
+    pub pe_framing_alm: f64,
+    pub pe_framing_regs: f64,
+    /// inter-PE elasticity buffering coefficient: BRAM bits per
+    /// m*(m-1) (skid depth grows with downstream cascade distance).
+    pub inter_pe_fifo_bits: f64,
+    /// per additional lane sharing a Trans2D buffer: lane-crossing mux
+    /// ALMs per channel tap.
+    pub lane_mux_alm: f64,
+    /// per-design constants: DMA engines, stream adapters.
+    pub design_alm: f64,
+    pub design_regs: f64,
+    pub design_fifo_bits: f64,
+    /// fitting-pressure: extra ALMs ~ kappa * linear^2 / device_alms
+    /// (routing/packing overhead grows with device fill).
+    pub fit_kappa: f64,
+}
+
+impl Default for CostTable {
+    fn default() -> Self {
+        CostTable {
+            add_alm: 188.0,
+            add_regs: 355.0,
+            mul_dsp_alm: 46.0,
+            mul_dsp_regs: 178.0,
+            mul_logic_alm: 248.0,
+            mul_logic_regs: 230.0,
+            div_alm: 690.0,
+            div_regs: 847.0,
+            div_dsps: 5,
+            sqrt_alm: 460.0,
+            sqrt_regs: 620.0,
+            cmp_alm: 11.0,
+            mux_alm: 17.0,
+            bal_regs_per_stage: 33.4,
+            shift_reg_threshold: 24,
+            pe_framing_alm: 3_398.0,
+            pe_framing_regs: 669.0,
+            inter_pe_fifo_bits: 67_500.0,
+            lane_mux_alm: 160.0,
+            design_alm: 7_040.0,
+            design_regs: 1_463.0,
+            design_fifo_bits: 36_000.0,
+            fit_kappa: 0.5,
+        }
+    }
+}
+
+/// True if an f32 constant's significand (with implicit leading 1) has
+/// at most 2 set bits — multipliers by such constants synthesize to
+/// shift-and-add logic rather than a DSP.
+pub fn is_simple_constant(c: f32) -> bool {
+    if c == 0.0 || !c.is_finite() {
+        return true;
+    }
+    let bits = c.abs().to_bits();
+    let mantissa = bits & 0x7F_FFFF;
+    let with_hidden = mantissa | 0x80_0000; // implicit leading 1
+    with_hidden.count_ones() <= 2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simple_constants_detected() {
+        // the three LBM equilibrium constants synthesize to logic
+        assert!(is_simple_constant(1.5)); // 1.1b
+        assert!(is_simple_constant(3.0)); // 11b
+        assert!(is_simple_constant(4.5)); // 100.1b
+        assert!(is_simple_constant(2.0));
+        assert!(is_simple_constant(0.5));
+        assert!(is_simple_constant(-3.0));
+    }
+
+    #[test]
+    fn general_constants_need_dsp() {
+        assert!(!is_simple_constant(1.0 / 9.0)); // w1
+        assert!(!is_simple_constant(4.0 / 9.0)); // w0
+        assert!(!is_simple_constant(1.0 / 36.0)); // w5
+        assert!(!is_simple_constant(1.0 / 6.0)); // 6*w5
+        assert!(!is_simple_constant(0.1));
+        assert!(!is_simple_constant(123.456));
+    }
+
+    #[test]
+    fn lbm_dsp_budget_is_48() {
+        // 43 DSP muls + 5 divider DSPs = 48 per pipeline (Table III)
+        let t = CostTable::default();
+        assert_eq!(43 + t.div_dsps, 48);
+    }
+}

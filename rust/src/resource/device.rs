@@ -1,0 +1,60 @@
+//! FPGA device capacities.
+
+/// Device capacity (Table III header row).
+#[derive(Clone, Copy, Debug)]
+pub struct Device {
+    pub name: &'static str,
+    pub alms: u64,
+    pub regs: u64,
+    pub bram_bits: u64,
+    pub dsps: u64,
+}
+
+/// ALTERA Stratix V 5SGXEA7N2 (Terasic DE5-NET), paper §III-A.
+pub const STRATIX_V_5SGXEA7: Device = Device {
+    name: "Stratix V 5SGXEA7",
+    alms: 234_720,
+    regs: 938_880,
+    bram_bits: 52_428_800,
+    dsps: 256,
+};
+
+impl Device {
+    /// Check a total against capacity; returns the limiting resource
+    /// name if over.
+    pub fn check(&self, alms: u64, regs: u64, bram_bits: u64, dsps: u64) -> Option<&'static str> {
+        if alms > self.alms {
+            Some("ALMs")
+        } else if regs > self.regs {
+            Some("registers")
+        } else if bram_bits > self.bram_bits {
+            Some("BRAM bits")
+        } else if dsps > self.dsps {
+            Some("DSPs")
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacities_match_table3_header() {
+        let d = STRATIX_V_5SGXEA7;
+        assert_eq!(d.alms, 234_720);
+        assert_eq!(d.regs, 938_880);
+        assert_eq!(d.bram_bits, 52_428_800);
+        assert_eq!(d.dsps, 256);
+    }
+
+    #[test]
+    fn check_flags_the_limiting_resource() {
+        let d = STRATIX_V_5SGXEA7;
+        assert_eq!(d.check(1, 1, 1, 1), None);
+        assert_eq!(d.check(d.alms + 1, 0, 0, 0), Some("ALMs"));
+        assert_eq!(d.check(0, 0, 0, 257), Some("DSPs"));
+    }
+}

@@ -1,0 +1,514 @@
+//! Structural resource estimation over an elaborated, scheduled design.
+
+use super::cost::{is_simple_constant, CostTable};
+use super::device::Device;
+use crate::dfg::{Graph, NodeKind, Schedule};
+use crate::expr::BinOp;
+use crate::library::LibKind;
+
+/// Structural facts the graph alone cannot know.
+#[derive(Clone, Copy, Debug)]
+pub struct DesignMeta {
+    /// spatial pipelines per PE (n)
+    pub lanes: u32,
+    /// cascaded PEs (m)
+    pub pes: u32,
+}
+
+/// Resource totals.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Resources {
+    pub alms: u64,
+    pub regs: u64,
+    pub bram_bits: u64,
+    pub dsps: u64,
+}
+
+impl Resources {
+    pub fn add(&self, o: &Resources) -> Resources {
+        Resources {
+            alms: self.alms + o.alms,
+            regs: self.regs + o.regs,
+            bram_bits: self.bram_bits + o.bram_bits,
+            dsps: self.dsps + o.dsps,
+        }
+    }
+}
+
+/// SoC peripherals (PCIe, DDR3 controllers, DMA, interconnect) —
+/// Table III "SoC peripherals" row.
+pub fn soc_peripherals() -> Resources {
+    Resources { alms: 54_997, regs: 87_163, bram_bits: 3_110_753, dsps: 0 }
+}
+
+/// Full estimate for a design.
+#[derive(Clone, Debug)]
+pub struct ResourceEstimate {
+    /// the stream-computing core alone (a Table III design row)
+    pub core: Resources,
+    /// core + SoC peripherals
+    pub total: Resources,
+    /// limiting resource if over device capacity
+    pub over_capacity: Option<&'static str>,
+    /// diagnostic breakdown
+    pub fp_ops: usize,
+    pub dsp_muls: usize,
+    pub logic_muls: usize,
+    pub balance_stages_regs: u64,
+    pub balance_stages_bram: u64,
+}
+
+/// Estimate resources of an elaborated, scheduled graph.
+pub fn estimate(
+    g: &Graph,
+    sched: &Schedule,
+    meta: &DesignMeta,
+    cost: &CostTable,
+    device: &Device,
+) -> ResourceEstimate {
+    let mut alm = 0.0f64;
+    let mut regs = 0.0f64;
+    let mut bram = 0.0f64;
+    let mut dsps = 0u64;
+    let mut fp_ops = 0usize;
+    let mut dsp_muls = 0usize;
+    let mut logic_muls = 0usize;
+
+    for (id, node) in g.nodes.iter().enumerate() {
+        match &node.kind {
+            NodeKind::Op(op) => {
+                fp_ops += 1;
+                match op {
+                    BinOp::Add | BinOp::Sub => {
+                        alm += cost.add_alm;
+                        regs += cost.add_regs;
+                    }
+                    BinOp::Mul => {
+                        // multiplier class: simple-constant operand?
+                        let simple = g.inputs[id].iter().flatten().any(|e| {
+                            matches!(
+                                g.node(e.src).kind,
+                                NodeKind::Const(c) if is_simple_constant(c)
+                            )
+                        });
+                        if simple {
+                            logic_muls += 1;
+                            alm += cost.mul_logic_alm;
+                            regs += cost.mul_logic_regs;
+                        } else {
+                            dsp_muls += 1;
+                            alm += cost.mul_dsp_alm;
+                            regs += cost.mul_dsp_regs;
+                            dsps += 1;
+                        }
+                    }
+                    BinOp::Div => {
+                        alm += cost.div_alm;
+                        regs += cost.div_regs;
+                        dsps += cost.div_dsps;
+                    }
+                }
+            }
+            NodeKind::Sqrt => {
+                fp_ops += 1;
+                alm += cost.sqrt_alm;
+                regs += cost.sqrt_regs;
+            }
+            NodeKind::Lib(k) => match k {
+                LibKind::SyncMux => alm += cost.mux_alm,
+                LibKind::CompEq { .. } | LibKind::CompLt => alm += cost.cmp_alm,
+                LibKind::Eliminator => alm += cost.mux_alm,
+                LibKind::Delay { cycles } => {
+                    bucket_delay(*cycles as u64, cost, &mut regs, &mut bram);
+                }
+                LibKind::StreamFwd { ahead, base } => {
+                    bucket_delay((*base - *ahead) as u64, cost, &mut regs, &mut bram);
+                }
+                LibKind::StreamBwd { back, base } => {
+                    bucket_delay((*base + *back) as u64, cost, &mut regs, &mut bram);
+                }
+                LibKind::Trans2D { w, n, taps } => {
+                    // shared line buffer: deepest tap delay + n cells
+                    let deepest = taps
+                        .iter()
+                        .map(|&(ex, ey)| LibKind::trans2d_tap_delay(*w, *n, ex, ey))
+                        .max()
+                        .unwrap_or(0) as u64
+                        + *n as u64;
+                    bram += (deepest * 32) as f64;
+                    // address/control logic + per-lane crossing muxes
+                    alm += 90.0 + cost.lane_mux_alm * (*n as f64 - 1.0) * taps.len() as f64;
+                }
+            },
+            NodeKind::Input { .. } | NodeKind::Output { .. } | NodeKind::Const(_) => {}
+            NodeKind::Sub { .. } => {
+                // unelaborated — estimate cannot see inside; treated as
+                // zero (callers should elaborate first)
+            }
+        }
+    }
+
+    // balancing delays: registers for short, BRAM shift-regs for long
+    let mut bal_regs_stages = 0u64;
+    let mut bal_bram_stages = 0u64;
+    for slots in &sched.slot_delay {
+        for &d in slots {
+            let d = d as u64;
+            if d == 0 {
+                continue;
+            }
+            if d >= cost.shift_reg_threshold as u64 {
+                bal_bram_stages += d;
+            } else {
+                bal_regs_stages += d;
+            }
+        }
+    }
+    regs += bal_regs_stages as f64 * cost.bal_regs_per_stage;
+    bram += (bal_bram_stages * 32) as f64;
+
+    // per-PE framing and inter-PE elasticity FIFOs: each cascade hop
+    // provisions skid buffering proportional to its downstream depth,
+    // so the total grows as m*(m-1) (calibrated against Table III's
+    // (1,2)/(1,4) BRAM rows, which fit c*m*(m-1) to <1%).
+    let m = meta.pes as f64;
+    alm += m * cost.pe_framing_alm;
+    regs += m * cost.pe_framing_regs;
+    bram += m * (m - 1.0) * cost.inter_pe_fifo_bits;
+
+    // per-design DMA / adapters
+    alm += cost.design_alm;
+    regs += cost.design_regs;
+    bram += cost.design_fifo_bits;
+
+    // fitting pressure (routing/packing overhead grows with fill)
+    alm += cost.fit_kappa * alm * alm / device.alms as f64;
+
+    let core = Resources {
+        alms: alm.round() as u64,
+        regs: regs.round() as u64,
+        bram_bits: bram.round() as u64,
+        dsps,
+    };
+    let total = core.add(&soc_peripherals());
+    let over_capacity = device.check(total.alms, total.regs, total.bram_bits, total.dsps);
+
+    ResourceEstimate {
+        core,
+        total,
+        over_capacity,
+        fp_ops,
+        dsp_muls,
+        logic_muls,
+        balance_stages_regs: bal_regs_stages,
+        balance_stages_bram: bal_bram_stages,
+    }
+}
+
+/// Hierarchical (modular) estimate: each HDL sub-core instance is
+/// costed from its own build graph and *its own* internal schedule,
+/// plus the enclosing level's port-balancing delays — the structure
+/// the modular hardware actually has.  Overheads (PE framing, DMA,
+/// fitting pressure) are applied once at the top, as in [`estimate`].
+pub fn estimate_hierarchical(
+    core: &crate::spd::SpdCore,
+    registry: &crate::spd::Registry,
+    latency: crate::dfg::OpLatency,
+    meta: &DesignMeta,
+    cost: &CostTable,
+    device: &Device,
+) -> crate::error::Result<ResourceEstimate> {
+    let mut acc = Acc::default();
+    walk_core(core, registry, latency, cost, &mut acc)?;
+
+    let mut alm = acc.alm;
+    let mut regs = acc.regs + acc.bal_regs_stages as f64 * cost.bal_regs_per_stage;
+    let mut bram = acc.bram + (acc.bal_bram_stages * 32) as f64;
+
+    let m = meta.pes as f64;
+    alm += m * cost.pe_framing_alm;
+    regs += m * cost.pe_framing_regs;
+    bram += m * (m - 1.0) * cost.inter_pe_fifo_bits;
+    alm += cost.design_alm;
+    regs += cost.design_regs;
+    bram += cost.design_fifo_bits;
+    alm += cost.fit_kappa * alm * alm / device.alms as f64;
+
+    let core_res = Resources {
+        alms: alm.round() as u64,
+        regs: regs.round() as u64,
+        bram_bits: bram.round() as u64,
+        dsps: acc.dsps,
+    };
+    let total = core_res.add(&soc_peripherals());
+    let over_capacity =
+        device.check(total.alms, total.regs, total.bram_bits, total.dsps);
+    Ok(ResourceEstimate {
+        core: core_res,
+        total,
+        over_capacity,
+        fp_ops: acc.fp_ops,
+        dsp_muls: acc.dsp_muls,
+        logic_muls: acc.logic_muls,
+        balance_stages_regs: acc.bal_regs_stages,
+        balance_stages_bram: acc.bal_bram_stages,
+    })
+}
+
+#[derive(Default)]
+struct Acc {
+    alm: f64,
+    regs: f64,
+    bram: f64,
+    dsps: u64,
+    fp_ops: usize,
+    dsp_muls: usize,
+    logic_muls: usize,
+    bal_regs_stages: u64,
+    bal_bram_stages: u64,
+}
+
+fn walk_core(
+    core: &crate::spd::SpdCore,
+    registry: &crate::spd::Registry,
+    latency: crate::dfg::OpLatency,
+    cost: &CostTable,
+    acc: &mut Acc,
+) -> crate::error::Result<()> {
+    let g = crate::dfg::build(core, registry)?;
+    let sched = crate::dfg::schedule_with(&g, latency)?;
+
+    // local elements (Sub nodes contribute nothing locally)
+    for (id, node) in g.nodes.iter().enumerate() {
+        match &node.kind {
+            NodeKind::Sub { core: sub, .. } => {
+                walk_core(sub, registry, latency, cost, acc)?;
+            }
+            _ => {
+                tally_node(&g, id, cost, acc);
+            }
+        }
+    }
+    // local port balancing
+    for slots in &sched.slot_delay {
+        for &d in slots {
+            let d = d as u64;
+            if d == 0 {
+                continue;
+            }
+            if d >= cost.shift_reg_threshold as u64 {
+                acc.bal_bram_stages += d;
+            } else {
+                acc.bal_regs_stages += d;
+            }
+        }
+    }
+    Ok(())
+}
+
+fn tally_node(g: &Graph, id: usize, cost: &CostTable, acc: &mut Acc) {
+    match &g.nodes[id].kind {
+        NodeKind::Op(op) => {
+            acc.fp_ops += 1;
+            match op {
+                BinOp::Add | BinOp::Sub => {
+                    acc.alm += cost.add_alm;
+                    acc.regs += cost.add_regs;
+                }
+                BinOp::Mul => {
+                    let simple = g.inputs[id].iter().flatten().any(|e| {
+                        matches!(
+                            g.node(e.src).kind,
+                            NodeKind::Const(c) if is_simple_constant(c)
+                        )
+                    });
+                    if simple {
+                        acc.logic_muls += 1;
+                        acc.alm += cost.mul_logic_alm;
+                        acc.regs += cost.mul_logic_regs;
+                    } else {
+                        acc.dsp_muls += 1;
+                        acc.alm += cost.mul_dsp_alm;
+                        acc.regs += cost.mul_dsp_regs;
+                        acc.dsps += 1;
+                    }
+                }
+                BinOp::Div => {
+                    acc.alm += cost.div_alm;
+                    acc.regs += cost.div_regs;
+                    acc.dsps += cost.div_dsps;
+                }
+            }
+        }
+        NodeKind::Sqrt => {
+            acc.fp_ops += 1;
+            acc.alm += cost.sqrt_alm;
+            acc.regs += cost.sqrt_regs;
+        }
+        NodeKind::Lib(k) => match k {
+            LibKind::SyncMux | LibKind::Eliminator => acc.alm += cost.mux_alm,
+            LibKind::CompEq { .. } | LibKind::CompLt => acc.alm += cost.cmp_alm,
+            LibKind::Delay { cycles } => {
+                bucket_delay(*cycles as u64, cost, &mut acc.regs, &mut acc.bram)
+            }
+            LibKind::StreamFwd { ahead, base } => bucket_delay(
+                (*base - *ahead) as u64,
+                cost,
+                &mut acc.regs,
+                &mut acc.bram,
+            ),
+            LibKind::StreamBwd { back, base } => bucket_delay(
+                (*back + *base) as u64,
+                cost,
+                &mut acc.regs,
+                &mut acc.bram,
+            ),
+            LibKind::Trans2D { w, n, taps } => {
+                let deepest = taps
+                    .iter()
+                    .map(|&(ex, ey)| LibKind::trans2d_tap_delay(*w, *n, ex, ey))
+                    .max()
+                    .unwrap_or(0) as u64
+                    + *n as u64;
+                acc.bram += (deepest * 32) as f64;
+                acc.alm +=
+                    90.0 + cost.lane_mux_alm * (*n as f64 - 1.0) * taps.len() as f64;
+            }
+        },
+        _ => {}
+    }
+}
+
+fn bucket_delay(cycles: u64, cost: &CostTable, regs: &mut f64, bram: &mut f64) {
+    if cycles == 0 {
+        return;
+    }
+    if cycles >= cost.shift_reg_threshold as u64 {
+        *bram += (cycles * 32) as f64;
+    } else {
+        *regs += cycles as f64 * cost.bal_regs_per_stage;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::{build, elaborate, schedule};
+    use crate::resource::STRATIX_V_5SGXEA7;
+    use crate::spd::{parse_core, Registry};
+
+    fn est(src: &str) -> ResourceEstimate {
+        let core = parse_core(src).unwrap();
+        let reg = Registry::with_library();
+        let g = build(&core, &reg).unwrap();
+        let flat = elaborate(&g, &reg).unwrap();
+        let s = schedule(&flat).unwrap();
+        estimate(
+            &flat,
+            &s,
+            &DesignMeta { lanes: 1, pes: 1 },
+            &CostTable::default(),
+            &STRATIX_V_5SGXEA7,
+        )
+    }
+
+    #[test]
+    fn dsp_classification() {
+        // a*b (DSP), a*3.0 (logic), a*0.1 (DSP: 0.1 is not simple)
+        let e = est(
+            "Name t; Main_In {i::a,b}; Main_Out {o::z};
+             EQU n1, t1 = a * b;
+             EQU n2, t2 = a * 3.0;
+             EQU n3, z = t1 + t2 * 0.1;",
+        );
+        assert_eq!(e.dsp_muls, 2);
+        assert_eq!(e.logic_muls, 1);
+        assert_eq!(e.core.dsps, 2);
+        assert_eq!(e.fp_ops, 4);
+    }
+
+    #[test]
+    fn divider_uses_five_dsps() {
+        let e = est("Name t; Main_In {i::a,b}; Main_Out {o::z}; EQU n, z = a / b;");
+        assert_eq!(e.core.dsps, 5);
+    }
+
+    #[test]
+    fn balancing_split_regs_vs_bram() {
+        // `c` waits div+mul = 16 cycles (< threshold 24 -> registers);
+        // a long Delay goes to BRAM.
+        let e = est(
+            "Name t; Main_In {i::a,b,c}; Main_Out {o::z, zl};
+             EQU n, z = a / b * c;
+             HDL D, 100, (dl) = Delay(a), 100;
+             EQU n2, zl = dl + 0.0;",
+        );
+        assert!(e.balance_stages_regs > 0);
+        // the long delay shows in BRAM bits
+        assert!(e.core.bram_bits as f64 >= 100.0 * 32.0);
+    }
+
+    #[test]
+    fn trans2d_bram_accounts_deepest_tap() {
+        let e = est(
+            "Name t; Main_In {i::a}; Main_Out {o::z};
+             HDL T, 6, (c, d) = Trans2D(a), 4, 1, 0, 0, 1, 1;
+             EQU n, z = c + d;",
+        );
+        // deepest tap (1,1): (4+2) + 5 = 11 cells + 1 = 12 cells * 32 bits
+        assert!(e.core.bram_bits >= 12 * 32);
+    }
+
+    #[test]
+    fn capacity_check_fires() {
+        // 60 dividers -> 300 DSPs > 256 (ALMs still fit)
+        let mut src = String::from("Name t; Main_In {i::a,b}; Main_Out {o::z};");
+        let mut sum = String::from("0.0");
+        for i in 0..60 {
+            src.push_str(&format!("EQU n{i}, t{i} = a / b;"));
+            sum = format!("{sum} + t{i}");
+        }
+        src.push_str(&format!("EQU nz, z = {sum};"));
+        let e = est(&src);
+        assert_eq!(e.over_capacity, Some("DSPs"));
+    }
+
+    #[test]
+    fn soc_row_matches_table3() {
+        let s = soc_peripherals();
+        assert_eq!(s.alms, 54_997);
+        assert_eq!(s.bram_bits, 3_110_753);
+        assert_eq!(s.dsps, 0);
+    }
+}
+
+#[cfg(test)]
+mod calib_tests {
+    use super::*;
+    use crate::resource::STRATIX_V_5SGXEA7;
+
+    #[test]
+    #[ignore]
+    fn print_bram_breakdown() {
+        for (n, m) in [(1u32, 1u32), (1, 2), (1, 4), (2, 1), (2, 2), (4, 1)] {
+            let d = crate::lbm::LbmDesign::new(n, m, 720, 300);
+            let g = crate::lbm::spd_gen::generate(&d).unwrap();
+            let e = estimate_hierarchical(
+                &g.top,
+                &g.registry,
+                crate::dfg::OpLatency::default(),
+                &DesignMeta { lanes: n, pes: m },
+                &CostTable::default(),
+                &STRATIX_V_5SGXEA7,
+            )
+            .unwrap();
+            println!(
+                "({n},{m}): bram={} bal_bram_stages={} (={} bits) trans+fifo={}",
+                e.core.bram_bits,
+                e.balance_stages_bram,
+                e.balance_stages_bram * 32,
+                e.core.bram_bits - e.balance_stages_bram * 32
+            );
+        }
+    }
+}

@@ -1,0 +1,21 @@
+//! Stratix V resource estimation (paper Table III).
+//!
+//! The estimator is *structural*: it walks the elaborated, scheduled
+//! graph and sums per-element costs — FP operators, balancing shift
+//! registers, stencil-buffer BRAM, multiplexers, stream framing — plus
+//! per-PE and per-design overheads and a fitting-pressure term.  The
+//! per-element constants are calibrated against the paper's Table III
+//! (see `cost::CostTable` docs and EXPERIMENTS.md for residuals); the
+//! *scaling* across (n, m) design points is then a prediction of the
+//! structural model, not a per-design fit.
+
+pub mod cost;
+pub mod device;
+pub mod estimate;
+
+pub use cost::CostTable;
+pub use device::{Device, STRATIX_V_5SGXEA7};
+pub use estimate::{
+    estimate, estimate_hierarchical, soc_peripherals, DesignMeta, ResourceEstimate,
+    Resources,
+};

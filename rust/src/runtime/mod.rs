@@ -1,0 +1,195 @@
+//! PJRT runtime: loads and executes the JAX/Pallas AOT artifacts
+//! (`artifacts/*.hlo.txt`) from the Rust side.
+//!
+//! Python runs only at build time (`make artifacts`); this module is
+//! the request-path consumer of the lowered HLO.  The interchange
+//! format is HLO *text* — see `python/compile/aot.py` and
+//! /opt/xla-example/README.md for why serialized protos are rejected
+//! by the pinned xla_extension.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+/// PJRT CPU runtime with a compiled-executable cache.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client rooted at an artifacts directory.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(PjrtRuntime {
+            client,
+            artifacts_dir: artifacts_dir.as_ref().to_path_buf(),
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (or fetch from cache) an artifact by name, e.g.
+    /// `lbm_step_64x64`.
+    pub fn load(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let path = self.artifacts_dir.join(format!("{name}.hlo.txt"));
+            if !path.exists() {
+                return Err(Error::Runtime(format!(
+                    "artifact `{}` not found (run `make artifacts`)",
+                    path.display()
+                )));
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| Error::Runtime("bad path".into()))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(self.cache.get(name).unwrap())
+    }
+
+    /// Execute one LBM step/cascade artifact:
+    /// `(f32[9,h,w], s32[h,w], f32[]) -> f32[9,h,w]`.
+    pub fn run_lbm(
+        &mut self,
+        artifact: &str,
+        f: &[f32],
+        attr: &[i32],
+        one_tau: f32,
+        h: usize,
+        w: usize,
+    ) -> Result<Vec<f32>> {
+        if f.len() != 9 * h * w {
+            return Err(Error::Runtime(format!(
+                "state length {} != 9*{h}*{w}",
+                f.len()
+            )));
+        }
+        if attr.len() != h * w {
+            return Err(Error::Runtime("bad attr length".into()));
+        }
+        let exe = self.load(artifact)?;
+        let f_lit = xla::Literal::vec1(f).reshape(&[9, h as i64, w as i64])?;
+        let attr_lit = xla::Literal::vec1(attr).reshape(&[h as i64, w as i64])?;
+        let tau_lit = xla::Literal::scalar(one_tau);
+        let result = exe.execute::<xla::Literal>(&[f_lit, attr_lit, tau_lit])?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Execute a macros artifact: `(f32[9,h,w]) -> f32[3,h,w]`.
+    pub fn run_macros(
+        &mut self,
+        artifact: &str,
+        f: &[f32],
+        h: usize,
+        w: usize,
+    ) -> Result<Vec<f32>> {
+        let exe = self.load(artifact)?;
+        let f_lit = xla::Literal::vec1(f).reshape(&[9, h as i64, w as i64])?;
+        let result =
+            exe.execute::<xla::Literal>(&[f_lit])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// Convert an `LbmState` (channel vectors over raster cells) into the
+/// dense `f32[9,h,w]` layout of the artifacts.
+pub fn state_to_dense(state: &crate::lbm::reference::LbmState) -> (Vec<f32>, Vec<i32>) {
+    let cells = state.cells();
+    let mut f = Vec::with_capacity(9 * cells);
+    for i in 0..9 {
+        f.extend_from_slice(&state.f[i]);
+    }
+    let attr: Vec<i32> = state.attr.iter().map(|&a| a as i32).collect();
+    (f, attr)
+}
+
+/// Convert a dense `f32[9,h,w]` state back.
+pub fn dense_to_state(
+    f: &[f32],
+    prev: &crate::lbm::reference::LbmState,
+) -> crate::lbm::reference::LbmState {
+    let cells = prev.cells();
+    assert_eq!(f.len(), 9 * cells);
+    let fs: [Vec<f32>; 9] =
+        std::array::from_fn(|i| f[i * cells..(i + 1) * cells].to_vec());
+    crate::lbm::reference::LbmState {
+        h: prev.h,
+        w: prev.w,
+        f: fs,
+        attr: prev.attr.clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("lbm_step_16x16.hlo.txt").exists()
+    }
+
+    #[test]
+    fn missing_artifact_is_reported() {
+        let mut rt = PjrtRuntime::new(artifacts_dir()).unwrap();
+        let e = match rt.load("no_such_artifact") {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("expected missing-artifact error"),
+        };
+        assert!(e.contains("make artifacts"), "{e}");
+    }
+
+    #[test]
+    fn pjrt_step_matches_rust_reference() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut rt = PjrtRuntime::new(artifacts_dir()).unwrap();
+        let state = crate::lbm::reference::LbmState::cavity(16, 16);
+        let (f, attr) = state_to_dense(&state);
+        let one_tau = 1.0f32 / 0.6;
+        let out = rt.run_lbm("lbm_step_16x16", &f, &attr, one_tau, 16, 16).unwrap();
+        let got = dense_to_state(&out, &state);
+        let want = crate::lbm::reference::step(&state, one_tau, crate::lbm::U_LID, 0.0);
+        let d = crate::lbm::workload::fluid_max_diff(&got, &want);
+        assert!(d < 1e-5, "PJRT vs rust reference: {d}");
+    }
+
+    #[test]
+    fn pjrt_cascade_matches_iterated_steps() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut rt = PjrtRuntime::new(artifacts_dir()).unwrap();
+        let state = crate::lbm::reference::LbmState::cavity(16, 16);
+        let (f, attr) = state_to_dense(&state);
+        let one_tau = 1.25f32;
+        let out = rt
+            .run_lbm("lbm_cascade4_16x16", &f, &attr, one_tau, 16, 16)
+            .unwrap();
+        let got = dense_to_state(&out, &state);
+        let mut want = state.clone();
+        for _ in 0..4 {
+            want = crate::lbm::reference::step(&want, one_tau, crate::lbm::U_LID, 0.0);
+        }
+        let d = crate::lbm::workload::fluid_max_diff(&got, &want);
+        assert!(d < 1e-5, "PJRT cascade vs iterated: {d}");
+    }
+}

@@ -1,0 +1,335 @@
+//! Dataflow evaluation: the *mathematical* semantics of a balanced
+//! pipeline.
+//!
+//! A delay-balanced stream pipeline computes, for every output cell t,
+//! a pure function of input cells at fixed offsets (offsets arise only
+//! from the offset-reference modules: Trans2D taps, StreamFwd/Bwd).
+//! This evaluator computes that function directly over whole streams —
+//! it is the fast path for numerical verification, and the reference
+//! semantics against which the cycle-accurate engine is property-tested
+//! (`engine::tests::prop_cycle_equals_dataflow`).
+//!
+//! Out-of-range cell references (before the first or after the last
+//! element of the frame) read as 0.0, matching the zero-initialized
+//! stencil buffers of the cycle engine on the first pass.
+
+use std::collections::HashMap;
+
+use crate::dfg::{Graph, NodeKind};
+use crate::error::{Error, Result};
+use crate::expr::eval::apply;
+use crate::library::LibKind;
+
+/// Per-port input streams (cells per lane-port) plus register values.
+pub struct DataflowInput<'a> {
+    /// stream port name -> cells (one vec per port, all equal length)
+    pub streams: &'a HashMap<String, Vec<f32>>,
+    /// Append_Reg register values by port name
+    pub regs: &'a HashMap<String, f32>,
+}
+
+/// Evaluate the elaborated graph over whole streams.  Returns one
+/// output vector per output port (keyed by port name).
+pub fn run(g: &Graph, input: &DataflowInput) -> Result<HashMap<String, Vec<f32>>> {
+    let order = g.toposort_main().map_err(|_| {
+        Error::Sim("dataflow evaluation requires an acyclic main graph".into())
+    })?;
+    // reject graphs with branch back-edges (registered feedback needs
+    // the cycle engine)
+    for (dst, slots) in g.inputs.iter().enumerate() {
+        for e in slots.iter().flatten() {
+            if e.branch {
+                let src_pos = order.iter().position(|&x| x == e.src).unwrap();
+                let dst_pos = order.iter().position(|&x| x == dst).unwrap();
+                if src_pos > dst_pos {
+                    return Err(Error::Sim(
+                        "dataflow evaluation cannot handle branch feedback; use the cycle engine"
+                            .into(),
+                    ));
+                }
+            }
+        }
+    }
+
+    // stream length T = length of any stream input
+    let mut t_len: Option<usize> = None;
+    for node in &g.nodes {
+        if let NodeKind::Input { port, reg: false, .. } = &node.kind {
+            if let Some(v) = input.streams.get(port) {
+                match t_len {
+                    None => t_len = Some(v.len()),
+                    Some(t) if t == v.len() => {}
+                    Some(t) => {
+                        return Err(Error::Sim(format!(
+                            "stream `{port}` length {} != {t}",
+                            v.len()
+                        )))
+                    }
+                }
+            }
+        }
+    }
+    let t_len = t_len.ok_or_else(|| Error::Sim("no stream inputs bound".into()))?;
+
+    // per node, per output port: value vector
+    let mut values: Vec<Vec<Vec<f32>>> = vec![Vec::new(); g.len()];
+    let zero_fill = |v: &[f32], idx: i64| -> f32 {
+        if idx < 0 || idx as usize >= v.len() {
+            0.0
+        } else {
+            v[idx as usize]
+        }
+    };
+
+    for &id in &order {
+        let node = g.node(id);
+        let get = |slot: usize| -> &Vec<f32> {
+            let e = g.inputs[id][slot].expect("connected");
+            &values[e.src][e.src_port]
+        };
+        let out: Vec<Vec<f32>> = match &node.kind {
+            NodeKind::Input { port, reg, .. } => {
+                if *reg {
+                    let v = *input.regs.get(port).ok_or_else(|| {
+                        Error::Sim(format!("register `{port}` unbound"))
+                    })?;
+                    vec![vec![v; t_len]]
+                } else {
+                    let v = input.streams.get(port).ok_or_else(|| {
+                        Error::Sim(format!("stream `{port}` unbound"))
+                    })?;
+                    vec![v.clone()]
+                }
+            }
+            NodeKind::Const(c) => vec![vec![*c; t_len]],
+            NodeKind::Op(op) => {
+                let (a, b) = (get(0), get(1));
+                vec![a.iter().zip(b).map(|(&x, &y)| apply(*op, x, y)).collect()]
+            }
+            NodeKind::Sqrt => {
+                vec![get(0).iter().map(|&x| x.sqrt()).collect()]
+            }
+            NodeKind::Output { .. } => {
+                vec![get(0).clone()]
+            }
+            NodeKind::Lib(kind) => match kind {
+                // pure pipeline alignment: identity in dataflow view
+                LibKind::Delay { .. } => vec![get(0).clone()],
+                LibKind::SyncMux => {
+                    let (sel, a, b) = (get(0), get(1), get(2));
+                    vec![sel
+                        .iter()
+                        .zip(a.iter().zip(b))
+                        .map(|(&s, (&x, &y))| if s != 0.0 { x } else { y })
+                        .collect()]
+                }
+                LibKind::CompEq { value } => {
+                    vec![get(0)
+                        .iter()
+                        .map(|&x| if x == *value { 1.0 } else { 0.0 })
+                        .collect()]
+                }
+                LibKind::CompLt => {
+                    let (a, b) = (get(0), get(1));
+                    vec![a
+                        .iter()
+                        .zip(b)
+                        .map(|(&x, &y)| if x < y { 1.0 } else { 0.0 })
+                        .collect()]
+                }
+                LibKind::Eliminator => {
+                    return Err(Error::Sim(
+                        "Eliminator is rate-changing; use the cycle engine".into(),
+                    ))
+                }
+                LibKind::StreamFwd { ahead, .. } => {
+                    let a = get(0);
+                    vec![(0..t_len as i64)
+                        .map(|t| zero_fill(a, t + *ahead as i64))
+                        .collect()]
+                }
+                LibKind::StreamBwd { back, .. } => {
+                    let a = get(0);
+                    vec![(0..t_len as i64)
+                        .map(|t| zero_fill(a, t - *back as i64))
+                        .collect()]
+                }
+                LibKind::Trans2D { w, n, taps } => {
+                    let n = *n as usize;
+                    // flatten lanes into the global cell stream
+                    let lanes: Vec<&Vec<f32>> = (0..n).map(get).collect();
+                    let cells = t_len * n;
+                    let read_cell = |c: i64| -> f32 {
+                        if c < 0 || c as usize >= cells {
+                            0.0
+                        } else {
+                            lanes[c as usize % n][c as usize / n]
+                        }
+                    };
+                    let mut outs = Vec::with_capacity(taps.len() * n);
+                    for &(ex, ey) in taps {
+                        let o = LibKind::tap_offset(*w, ex, ey);
+                        for l in 0..n {
+                            outs.push(
+                                (0..t_len)
+                                    .map(|p| read_cell((p * n + l) as i64 - o))
+                                    .collect(),
+                            );
+                        }
+                    }
+                    outs
+                }
+            },
+            NodeKind::Sub { .. } => {
+                return Err(Error::Sim("dataflow requires an elaborated graph".into()))
+            }
+        };
+        values[id] = out;
+    }
+
+    let mut result = HashMap::new();
+    for id in g.outputs() {
+        if let NodeKind::Output { port, .. } = &g.node(id).kind {
+            result.insert(port.clone(), values[id][0].clone());
+        }
+    }
+    Ok(result)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::{build, elaborate};
+    use crate::spd::{parse_core, Registry};
+
+    fn run_src(
+        src: &str,
+        streams: &[(&str, Vec<f32>)],
+        regs: &[(&str, f32)],
+    ) -> HashMap<String, Vec<f32>> {
+        let core = parse_core(src).unwrap();
+        let reg = Registry::with_library();
+        let g = build(&core, &reg).unwrap();
+        let flat = elaborate(&g, &reg).unwrap();
+        let streams: HashMap<String, Vec<f32>> =
+            streams.iter().map(|(k, v)| (k.to_string(), v.clone())).collect();
+        let regs: HashMap<String, f32> =
+            regs.iter().map(|(k, v)| (k.to_string(), *v)).collect();
+        run(&flat, &DataflowInput { streams: &streams, regs: &regs }).unwrap()
+    }
+
+    #[test]
+    fn elementwise_formula() {
+        let out = run_src(
+            "Name t; Main_In {i::a,b}; Main_Out {o::z}; EQU n, z = a * b + 1.0;",
+            &[("a", vec![1.0, 2.0, 3.0]), ("b", vec![4.0, 5.0, 6.0])],
+            &[],
+        );
+        assert_eq!(out["z"], vec![5.0, 11.0, 19.0]);
+    }
+
+    #[test]
+    fn register_broadcast() {
+        let out = run_src(
+            "Name t; Main_In {i::a}; Append_Reg {i::k}; Main_Out {o::z};
+             EQU n, z = a * k;",
+            &[("a", vec![1.0, 2.0])],
+            &[("k", 10.0)],
+        );
+        assert_eq!(out["z"], vec![10.0, 20.0]);
+    }
+
+    #[test]
+    fn delay_is_identity_in_dataflow() {
+        let out = run_src(
+            "Name t; Main_In {i::a}; Main_Out {o::z};
+             HDL D, 5, (d) = Delay(a), 5;
+             EQU n, z = d + a;",
+            &[("a", vec![1.0, 2.0, 3.0])],
+            &[],
+        );
+        assert_eq!(out["z"], vec![2.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn stream_bwd_shifts_cells() {
+        let out = run_src(
+            "Name t; Main_In {i::a}; Main_Out {o::z};
+             HDL B, 4, (p) = StreamBwd(a), 2, 4;
+             EQU n, z = a - p;",
+            &[("a", vec![1.0, 2.0, 3.0, 4.0])],
+            &[],
+        );
+        // z(t) = a(t) - a(t-2), zero fill
+        assert_eq!(out["z"], vec![1.0, 2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn stream_fwd_shifts_cells_forward() {
+        let out = run_src(
+            "Name t; Main_In {i::a}; Main_Out {o::z};
+             HDL F, 4, (p) = StreamFwd(a), 1, 4;
+             DRCT (z) = (p);",
+            &[("a", vec![1.0, 2.0, 3.0, 4.0])],
+            &[],
+        );
+        assert_eq!(out["z"], vec![2.0, 3.0, 4.0, 0.0]);
+    }
+
+    #[test]
+    fn trans2d_single_lane_taps() {
+        // W = 3 grid, taps: center (0,0), left (-1,0) => out = in(t+1)
+        let out = run_src(
+            "Name t; Main_In {i::a}; Main_Out {o::c, l};
+             HDL T, 5, (c, l) = Trans2D(a), 3, 1, 0, 0, -1, 0;
+             ",
+            &[("a", vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0])],
+            &[],
+        );
+        assert_eq!(out["c"], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        // tap (-1, 0): offset -1 -> out(t) = in(t+1)
+        assert_eq!(out["l"], vec![2.0, 3.0, 4.0, 5.0, 6.0, 0.0]);
+    }
+
+    #[test]
+    fn trans2d_row_tap() {
+        // tap (0, 1): offset +W = 3 -> previous row, same column
+        let out = run_src(
+            "Name t; Main_In {i::a}; Main_Out {o::u};
+             HDL T, 5, (u) = Trans2D(a), 3, 1, 0, 1;",
+            &[("a", vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0])],
+            &[],
+        );
+        assert_eq!(out["u"], vec![0.0, 0.0, 0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn trans2d_two_lanes_cross_lane() {
+        // W=4, n=2 lanes; tap (1,0): offset +1 -> lane crossing
+        // cells: lane0 = [c0, c2, c4, c6], lane1 = [c1, c3, c5, c7]
+        let out = run_src(
+            "Name t; Main_In {i::a0, a1}; Main_Out {o::z0, z1};
+             HDL T, 4, (z0, z1) = Trans2D(a0, a1), 4, 2, 1, 0;",
+            &[
+                ("a0", vec![0.0, 2.0, 4.0, 6.0]),
+                ("a1", vec![1.0, 3.0, 5.0, 7.0]),
+            ],
+            &[],
+        );
+        // out cell t = cell t-1: lane0 gets odd cells shifted, etc.
+        assert_eq!(out["z0"], vec![0.0, 1.0, 3.0, 5.0]); // cells -1,1,3,5
+        assert_eq!(out["z1"], vec![0.0, 2.0, 4.0, 6.0]); // cells 0,2,4,6
+    }
+
+    #[test]
+    fn mux_and_compare() {
+        let out = run_src(
+            "Name t; Main_In {i::a, s}; Main_Out {o::z};
+             HDL C, 1, (is2) = CompEq(s), 2.0;
+             HDL M, 1, (z) = SyncMux(is2, a, s);",
+            &[("a", vec![10.0, 20.0]), ("s", vec![2.0, 3.0])],
+            &[],
+        );
+        assert_eq!(out["z"], vec![10.0, 3.0]);
+    }
+}

@@ -1,0 +1,733 @@
+//! Cycle-accurate functional engine: streams values through every
+//! pipeline register of a scheduled DFG.
+//!
+//! This is the substrate substitute for running the synthesized core on
+//! the FPGA: each operator is an L-stage pipeline, each balancing delay
+//! a shift register, each Trans2D a line buffer.  The engine proves the
+//! scheduler's delay balancing: its outputs must equal the dataflow
+//! semantics (`dataflow::run`) exactly — see the property test.
+//!
+//! Frames are flushed with zero cells (the driver streams `depth`
+//! zero-input cycles after the last cell), reproducing the pipeline
+//! prologue/epilogue of the paper's §II-B.
+//!
+//! Performance (EXPERIMENTS.md §Perf): the constructor compiles the
+//! graph into a flat execution plan — one contiguous opcode table, one
+//! flat wire array, one shift-register arena with precomputed offsets —
+//! so the per-cycle loop runs without hash lookups, nested `Vec`
+//! indirection, enum dispatch over `NodeKind`, or `%` in ring indexing.
+
+use std::collections::HashMap;
+
+use crate::dfg::{node_latency, Graph, NodeKind, Schedule};
+use crate::error::{Error, Result};
+use crate::library::LibKind;
+
+/// Operation executed in phase B (inputs -> pipeline).
+#[derive(Clone, Debug)]
+enum Op {
+    Nop,
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Sqrt,
+    Pass,
+    Mux,
+    CmpEq(f32),
+    CmpLt,
+    Elim,
+    Trans { w: u32, n: u32, taps: Vec<(i32, i32)> },
+}
+
+/// Flat per-node execution record.
+#[derive(Clone, Debug)]
+struct Plan {
+    op: Op,
+    /// input descriptors: first index in the shared arena
+    /// (arity is implied by the opcode)
+    ins0: u32,
+    /// first wire slot for outputs
+    wire0: u32,
+    n_out: u32,
+    /// output pipeline rings: arena offset; capacity is a power of two
+    /// so ring indexing is a mask, not a division.  `ring_delay` is the
+    /// node's internal latency (0 = combinational wire).
+    ring0: u32,
+    ring_mask: u32,
+    ring_delay: u32,
+    /// Trans2D state indices (cell ring arena offset, mask)
+    trans0: u32,
+    trans_mask: u32,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct InDesc {
+    /// wire index of the producing output
+    src_wire: u32,
+    /// balancing shift register: arena offset, power-of-two mask, and
+    /// delay in cycles (0 = direct wire)
+    bal0: u32,
+    bal_mask: u32,
+    bal_delay: u32,
+}
+
+/// The cycle-accurate engine.
+pub struct Engine<'g> {
+    g: &'g Graph,
+    sched: &'g Schedule,
+    plans: Vec<Plan>,
+    ins: Vec<InDesc>,
+    /// flat list of balancing pushes: (arena offset, mask, source wire)
+    bal_pushes: Vec<(u32, u32, u32)>,
+    /// phase-A specialization: pipelined publishes (order-free), then
+    /// Trans2D publishes, then combinational passes in topo order
+    a_rings: Vec<(u32, u32, u32, u32, u32)>, // wire0, n_out, ring0, mask, delay
+    a_trans: Vec<u32>,                        // node ids
+    a_pass: Vec<(u32, u32)>,                  // wire0, ins0
+    /// execution order (phase A/B): topological over main edges,
+    /// with no-op nodes (inputs/constants) filtered out
+    order: Vec<u32>,
+    /// flat wire array: current visible value of every output port
+    wire: Vec<f32>,
+    /// pipeline ring arena (all node output rings, back to back)
+    rings: Vec<f32>,
+    /// balancing shift-register arena
+    bal: Vec<f32>,
+    /// global ring cursor (cycles since reset)
+    cursor: u64,
+    /// Trans2D cell arena
+    trans: Vec<f32>,
+    trans_pushed: Vec<i64>,
+    /// eliminator held values, by node id
+    elim_held: Vec<f32>,
+    /// per-node wire base (for outputs())
+    wire_base: Vec<u32>,
+    pub stream_ports: Vec<(usize, String)>,
+    pub reg_ports: Vec<(usize, String)>,
+    pub out_ports: Vec<(usize, String)>,
+    reg_values: Vec<f32>,
+    pub cycles: u64,
+}
+
+impl<'g> Engine<'g> {
+    pub fn new(g: &'g Graph, sched: &'g Schedule) -> Result<Self> {
+        if g.nodes.iter().any(|n| matches!(n.kind, NodeKind::Sub { .. })) {
+            return Err(Error::Sim("cycle engine requires an elaborated graph".into()));
+        }
+        let order: Vec<u32> = g
+            .toposort_main()
+            .map_err(|_| Error::Sim("cycle engine: main graph is cyclic".into()))?
+            .into_iter()
+            .map(|i| i as u32)
+            .collect();
+
+        // wire layout
+        let mut wire_base = vec![0u32; g.len()];
+        let mut n_wires = 0u32;
+        for (id, node) in g.nodes.iter().enumerate() {
+            wire_base[id] = n_wires;
+            n_wires += node.kind.n_outputs().max(1) as u32;
+        }
+
+        // arenas
+        let mut rings_len = 0u32;
+        let mut bal_len = 0u32;
+        let mut trans_len = 0u32;
+        let mut plans = Vec::with_capacity(g.len());
+        let mut ins_arena: Vec<InDesc> = Vec::new();
+        for (id, node) in g.nodes.iter().enumerate() {
+            // inputs
+            let ins0 = ins_arena.len() as u32;
+            for (slot, e) in g.inputs[id].iter().enumerate() {
+                let Some(e) = e else {
+                    return Err(Error::Sim(format!(
+                        "undriven input on `{}`",
+                        node.name
+                    )));
+                };
+                let d = if e.branch { 0 } else { sched.slot_delay[id][slot] };
+                let cap = if d == 0 { 0 } else { (d as usize).next_power_of_two() as u32 };
+                let desc = InDesc {
+                    src_wire: wire_base[e.src] + e.src_port as u32,
+                    bal0: bal_len,
+                    bal_mask: cap.saturating_sub(1),
+                    bal_delay: d,
+                };
+                bal_len += cap;
+                ins_arena.push(desc);
+            }
+
+            // op + internal delay
+            let (op, internal): (Op, u32) = match &node.kind {
+                NodeKind::Input { .. } | NodeKind::Const(_) => (Op::Nop, 0),
+                NodeKind::Output { .. } => (Op::Pass, 0),
+                NodeKind::Op(b) => (
+                    match b {
+                        crate::expr::BinOp::Add => Op::Add,
+                        crate::expr::BinOp::Sub => Op::Sub,
+                        crate::expr::BinOp::Mul => Op::Mul,
+                        crate::expr::BinOp::Div => Op::Div,
+                    },
+                    node_latency(&node.kind, &sched.latency),
+                ),
+                NodeKind::Sqrt => (Op::Sqrt, node_latency(&node.kind, &sched.latency)),
+                NodeKind::Lib(k) => match k {
+                    LibKind::Delay { cycles } => (Op::Pass, *cycles),
+                    LibKind::StreamFwd { ahead, base } => (Op::Pass, base - ahead),
+                    LibKind::StreamBwd { back, base } => (Op::Pass, base + back),
+                    LibKind::SyncMux => (Op::Mux, 1),
+                    LibKind::CompEq { value } => (Op::CmpEq(*value), 1),
+                    LibKind::CompLt => (Op::CmpLt, 1),
+                    LibKind::Eliminator => (Op::Elim, 1),
+                    LibKind::Trans2D { w, n, taps } => {
+                        (Op::Trans { w: *w, n: *n, taps: taps.clone() }, 0)
+                    }
+                },
+                NodeKind::Sub { .. } => unreachable!(),
+            };
+            let n_out = node.kind.n_outputs().max(1) as u32;
+            let (ring0, ring_cap) = if internal > 0 {
+                let cap = (internal as usize).next_power_of_two() as u32;
+                let r = (rings_len, cap);
+                rings_len += cap * n_out;
+                r
+            } else {
+                (0, 0)
+            };
+            let (trans0, trans_mask) = if let Op::Trans { w, n, taps } = &op {
+                let deepest = taps
+                    .iter()
+                    .map(|&(ex, ey)| LibKind::trans2d_tap_delay(*w, *n, ex, ey))
+                    .max()
+                    .unwrap_or(0) as u64
+                    + *n as u64;
+                let cap = (deepest as usize).next_power_of_two().max(2) as u32;
+                let t = (trans_len, cap - 1);
+                trans_len += cap;
+                t
+            } else {
+                (0, 0)
+            };
+            plans.push(Plan {
+                op,
+                ins0,
+                wire0: wire_base[id],
+                n_out,
+                ring0,
+                ring_mask: ring_cap.saturating_sub(1),
+                ring_delay: internal,
+                trans0,
+                trans_mask,
+            });
+        }
+
+        let mut stream_ports = Vec::new();
+        let mut reg_ports = Vec::new();
+        let mut out_ports = Vec::new();
+        for (id, node) in g.nodes.iter().enumerate() {
+            match &node.kind {
+                NodeKind::Input { port, reg, .. } => {
+                    if *reg {
+                        reg_ports.push((id, port.clone()));
+                    } else {
+                        stream_ports.push((id, port.clone()));
+                    }
+                }
+                NodeKind::Output { port, .. } => out_ports.push((id, port.clone())),
+                _ => {}
+            }
+        }
+        let n_regs = reg_ports.len();
+
+        // inputs/constants do nothing in either phase: drop them from
+        // the per-cycle execution order
+        let order: Vec<u32> = order
+            .into_iter()
+            .filter(|&id| !matches!(plans[id as usize].op, Op::Nop))
+            .collect();
+        let bal_pushes: Vec<(u32, u32, u32)> = ins_arena
+            .iter()
+            .filter(|d| d.bal_delay > 0)
+            .map(|d| (d.bal0, d.bal_mask, d.src_wire))
+            .collect();
+        let mut a_rings = Vec::new();
+        let mut a_trans = Vec::new();
+        let mut a_pass = Vec::new();
+        for &id in &order {
+            let p = &plans[id as usize];
+            match p.op {
+                Op::Trans { .. } => a_trans.push(id),
+                _ if p.ring_delay > 0 => a_rings.push((
+                    p.wire0,
+                    p.n_out,
+                    p.ring0,
+                    p.ring_mask,
+                    p.ring_delay,
+                )),
+                Op::Pass => a_pass.push((p.wire0, p.ins0)),
+                _ => {}
+            }
+        }
+        let mut engine = Engine {
+            plans,
+            ins: ins_arena,
+            bal_pushes,
+            a_rings,
+            a_trans,
+            a_pass,
+            order,
+            wire: vec![0.0; n_wires as usize],
+            rings: vec![0.0; rings_len as usize],
+            bal: vec![0.0; bal_len as usize],
+            cursor: 0,
+            trans: vec![0.0; trans_len as usize],
+            trans_pushed: vec![0; g.len()],
+            elim_held: vec![0.0; g.len()],
+            wire_base,
+            stream_ports,
+            reg_ports,
+            out_ports,
+            reg_values: vec![0.0; n_regs],
+            g,
+            sched,
+            cycles: 0,
+        };
+        // constants are fixed wires: set once
+        engine.init_consts();
+        Ok(engine)
+    }
+
+    fn init_consts(&mut self) {
+        for (id, node) in self.g.nodes.iter().enumerate() {
+            if let NodeKind::Const(c) = node.kind {
+                self.wire[self.wire_base[id] as usize] = c;
+            }
+        }
+    }
+
+    /// Set Append_Reg register values (held constant during a run).
+    pub fn set_regs(&mut self, regs: &HashMap<String, f32>) -> Result<()> {
+        for (k, (_, port)) in self.reg_ports.iter().enumerate() {
+            self.reg_values[k] = *regs
+                .get(port)
+                .ok_or_else(|| Error::Sim(format!("register `{port}` unbound")))?;
+        }
+        Ok(())
+    }
+
+    /// Read the value arriving at input descriptor `d` this cycle: the
+    /// producer's wire value from `bal_delay` cycles ago.
+    #[inline(always)]
+    fn in_val(&self, d: &InDesc) -> f32 {
+        if d.bal_delay == 0 {
+            self.wire[d.src_wire as usize]
+        } else {
+            let slot = (self.cursor.wrapping_sub(d.bal_delay as u64)) as u32 & d.bal_mask;
+            self.bal[(d.bal0 + slot) as usize]
+        }
+    }
+
+    /// Advance one clock cycle.  `inputs` are the stream-port values in
+    /// `stream_ports` order.
+    pub fn step(&mut self, inputs: &[f32]) {
+        debug_assert_eq!(inputs.len(), self.stream_ports.len());
+        let cursor = self.cursor;
+
+        // external inputs + registers
+        for (k, &(id, _)) in self.stream_ports.iter().enumerate() {
+            self.wire[self.wire_base[id] as usize] = inputs[k];
+        }
+        for (k, &(id, _)) in self.reg_ports.iter().enumerate() {
+            self.wire[self.wire_base[id] as usize] = self.reg_values[k];
+        }
+
+        // Phase A: publish each node's current (delayed) outputs.
+        // Pipelined publishes read only their own state — order-free.
+        for &(wire0, n_out, ring0, mask, delay) in &self.a_rings {
+            let slot = (cursor.wrapping_sub(delay as u64)) as u32 & mask;
+            for out in 0..n_out {
+                self.wire[(wire0 + out) as usize] =
+                    self.rings[(ring0 + out * (mask + 1) + slot) as usize];
+            }
+        }
+        for k in 0..self.a_trans.len() {
+            let id = self.a_trans[k];
+            let p = &self.plans[id as usize];
+            let Op::Trans { w, n, ref taps } = p.op else { unreachable!() };
+            let lat = (w / n + 2) as i64;
+            let group = self.cycles as i64 - lat;
+            let nn = n as i64;
+            let mask = p.trans_mask as usize;
+            let base = p.trans0 as usize;
+            let mut port = p.wire0 as usize;
+            for &(ex, ey) in taps {
+                let o = LibKind::tap_offset(w, ex, ey);
+                for l in 0..nn {
+                    let s = group * nn + l - o;
+                    self.wire[port] = if group < 0 || s < 0 {
+                        0.0
+                    } else {
+                        self.trans[base + (s as usize & mask)]
+                    };
+                    port += 1;
+                }
+            }
+        }
+        // combinational passes, in topological order
+        for &(wire0, ins0) in &self.a_pass {
+            let v = self.in_val(&self.ins[ins0 as usize]);
+            self.wire[wire0 as usize] = v;
+        }
+
+        // Phase B: gather inputs, compute, latch into pipelines; push
+        // producer wires into balancing shift registers.
+        for &id in &self.order {
+            let p = &self.plans[id as usize];
+            // compute the new value(s) from current in_vals
+            match &p.op {
+                Op::Nop => {}
+                Op::Trans { n, .. } => {
+                    let nn = *n as usize;
+                    let base = p.trans0 as usize;
+                    let mask = p.trans_mask as usize;
+                    let pushed = self.trans_pushed[id as usize];
+                    for l in 0..nn {
+                        let v = self.in_val(&self.ins[p.ins0 as usize + l]);
+                        self.trans[base + ((pushed as usize + l) & mask)] = v;
+                    }
+                    self.trans_pushed[id as usize] = pushed + nn as i64;
+                }
+                op => {
+                    if p.ring_delay > 0 {
+                        let i0 = p.ins0 as usize;
+                        let v = match op {
+                            Op::Add => {
+                                self.in_val(&self.ins[i0]) + self.in_val(&self.ins[i0 + 1])
+                            }
+                            Op::Sub => {
+                                self.in_val(&self.ins[i0]) - self.in_val(&self.ins[i0 + 1])
+                            }
+                            Op::Mul => {
+                                self.in_val(&self.ins[i0]) * self.in_val(&self.ins[i0 + 1])
+                            }
+                            Op::Div => {
+                                self.in_val(&self.ins[i0]) / self.in_val(&self.ins[i0 + 1])
+                            }
+                            Op::Sqrt => self.in_val(&self.ins[i0]).sqrt(),
+                            Op::Pass => self.in_val(&self.ins[i0]),
+                            Op::Mux => {
+                                if self.in_val(&self.ins[i0]) != 0.0 {
+                                    self.in_val(&self.ins[i0 + 1])
+                                } else {
+                                    self.in_val(&self.ins[i0 + 2])
+                                }
+                            }
+                            Op::CmpEq(c) => {
+                                if self.in_val(&self.ins[i0]) == *c {
+                                    1.0
+                                } else {
+                                    0.0
+                                }
+                            }
+                            Op::CmpLt => {
+                                if self.in_val(&self.ins[i0]) < self.in_val(&self.ins[i0 + 1])
+                                {
+                                    1.0
+                                } else {
+                                    0.0
+                                }
+                            }
+                            Op::Elim => {
+                                let en = self.in_val(&self.ins[i0 + 1]);
+                                if en != 0.0 {
+                                    let v = self.in_val(&self.ins[i0]);
+                                    self.elim_held[id as usize] = v;
+                                    v
+                                } else {
+                                    self.elim_held[id as usize]
+                                }
+                            }
+                            Op::Nop | Op::Trans { .. } => unreachable!(),
+                        };
+                        let slot = cursor as u32 & p.ring_mask;
+                        self.rings[(p.ring0 + slot) as usize] = v;
+                    }
+                }
+            }
+        }
+        // push producer wires into balancing shift registers (flat list:
+        // most input slots have no balancing delay)
+        for &(bal0, mask, src_wire) in &self.bal_pushes {
+            let slot = cursor as u32 & mask;
+            self.bal[(bal0 + slot) as usize] = self.wire[src_wire as usize];
+        }
+        self.cursor += 1;
+        self.cycles += 1;
+    }
+
+    /// Current output-port values (in `out_ports` order).
+    pub fn outputs(&self) -> Vec<f32> {
+        self.out_ports
+            .iter()
+            .map(|&(id, _)| self.wire[self.wire_base[id] as usize])
+            .collect()
+    }
+
+    /// Reset all pipeline state to zeros.
+    pub fn reset(&mut self) {
+        self.rings.fill(0.0);
+        self.bal.fill(0.0);
+        self.trans.fill(0.0);
+        self.trans_pushed.fill(0);
+        self.elim_held.fill(0.0);
+        self.wire.fill(0.0);
+        self.init_consts();
+        self.cursor = 0;
+        self.cycles = 0;
+    }
+
+    /// Stream one frame through the pipeline: feed the per-port cell
+    /// streams (all equal length C cycles), then flush with `depth`
+    /// zero cycles, collecting the C output groups that correspond to
+    /// the frame.  The engine's buffers are flushed to zeros by the
+    /// epilogue, so consecutive frames are independent.
+    pub fn run_frame(
+        &mut self,
+        streams: &HashMap<String, Vec<f32>>,
+    ) -> Result<HashMap<String, Vec<f32>>> {
+        let c_len = streams
+            .values()
+            .map(|v| v.len())
+            .next()
+            .ok_or_else(|| Error::Sim("empty frame".into()))?;
+        let columns: Vec<&Vec<f32>> = self
+            .stream_ports
+            .iter()
+            .map(|(_, port)| {
+                streams
+                    .get(port)
+                    .ok_or_else(|| Error::Sim(format!("stream `{port}` unbound")))
+            })
+            .collect::<Result<_>>()?;
+        if columns.iter().any(|v| v.len() != c_len) {
+            return Err(Error::Sim("unequal stream lengths".into()));
+        }
+
+        let depth = self.sched.depth as usize;
+        let n_out = self.out_ports.len();
+        let out_wires: Vec<usize> = self
+            .out_ports
+            .iter()
+            .map(|&(id, _)| self.wire_base[id] as usize)
+            .collect();
+        let mut out: Vec<Vec<f32>> = vec![Vec::with_capacity(c_len); n_out];
+        let mut inbuf = vec![0.0f32; self.stream_ports.len()];
+        let total = c_len + depth;
+        for cyc in 0..total {
+            if cyc < c_len {
+                for (k, col) in columns.iter().enumerate() {
+                    inbuf[k] = col[cyc];
+                }
+            } else {
+                inbuf.fill(0.0);
+            }
+            self.step(&inbuf);
+            if cyc >= depth {
+                for (k, &w) in out_wires.iter().enumerate() {
+                    out[k].push(self.wire[w]);
+                }
+            }
+        }
+        // keep flushing so internal buffers return to zero for the next
+        // frame (epilogue; Trans2D rings are longer than `depth` cells)
+        let mut extra = 0usize;
+        for node in &self.g.nodes {
+            if let NodeKind::Lib(LibKind::Trans2D { w, n, .. }) = node.kind {
+                extra = extra.max((2 * w / n + 6) as usize);
+            }
+            if let NodeKind::Lib(LibKind::StreamBwd { back, base }) = node.kind {
+                extra = extra.max((back + base) as usize + 2);
+            }
+        }
+        inbuf.fill(0.0);
+        for _ in 0..extra {
+            self.step(&inbuf);
+        }
+
+        Ok(self
+            .out_ports
+            .iter()
+            .enumerate()
+            .map(|(k, (_, port))| (port.clone(), std::mem::take(&mut out[k])))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::{build, elaborate, schedule};
+    use crate::prop::{forall, Config};
+    use crate::sim::dataflow::{self, DataflowInput};
+    use crate::spd::{parse_core, Registry};
+
+    fn compile(src: &str) -> (Graph, Schedule) {
+        let core = parse_core(src).unwrap();
+        let reg = Registry::with_library();
+        let g = build(&core, &reg).unwrap();
+        let flat = elaborate(&g, &reg).unwrap();
+        let s = schedule(&flat).unwrap();
+        (flat, s)
+    }
+
+    fn to_map(pairs: &[(&str, Vec<f32>)]) -> HashMap<String, Vec<f32>> {
+        pairs.iter().map(|(k, v)| (k.to_string(), v.clone())).collect()
+    }
+
+    #[test]
+    fn simple_formula_streams_through() {
+        let (g, s) = compile(
+            "Name t; Main_In {i::a,b}; Main_Out {o::z}; EQU n, z = a * b + 1.0;",
+        );
+        let mut e = Engine::new(&g, &s).unwrap();
+        let streams = to_map(&[
+            ("a", vec![1.0, 2.0, 3.0]),
+            ("b", vec![4.0, 5.0, 6.0]),
+        ]);
+        let out = e.run_frame(&streams).unwrap();
+        assert_eq!(out["z"], vec![5.0, 11.0, 19.0]);
+    }
+
+    #[test]
+    fn register_inputs_broadcast() {
+        let (g, s) = compile(
+            "Name t; Main_In {i::a}; Append_Reg {i::k}; Main_Out {o::z};
+             EQU n, z = a * k;",
+        );
+        let mut e = Engine::new(&g, &s).unwrap();
+        e.set_regs(&[("k".to_string(), 3.0)].into_iter().collect()).unwrap();
+        let out = e.run_frame(&to_map(&[("a", vec![1.0, 2.0])])).unwrap();
+        assert_eq!(out["z"], vec![3.0, 6.0]);
+    }
+
+    #[test]
+    fn consecutive_frames_are_independent() {
+        let (g, s) = compile(
+            "Name t; Main_In {i::a}; Main_Out {o::z};
+             HDL T, 6, (c, u) = Trans2D(a), 4, 1, 0, 0, 0, 1;
+             EQU n, z = c + u;",
+        );
+        let mut e = Engine::new(&g, &s).unwrap();
+        let f1 = e.run_frame(&to_map(&[("a", vec![1.0; 8])])).unwrap();
+        let f2 = e.run_frame(&to_map(&[("a", vec![1.0; 8])])).unwrap();
+        assert_eq!(f1["z"], f2["z"]);
+        // first row sees zero-fill above: 1+0; later rows 1+1
+        assert_eq!(f1["z"], vec![1.0, 1.0, 1.0, 1.0, 2.0, 2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn matches_dataflow_on_trans2d_stencil() {
+        let src = "
+            Name t; Main_In {i::a}; Main_Out {o::z};
+            HDL T, 6, (c, l, r, u, d) = Trans2D(a), 4, 1, 0,0, -1,0, 1,0, 0,-1, 0,1;
+            EQU n, z = c + l + r + u + d;
+        ";
+        let (g, s) = compile(src);
+        let cells: Vec<f32> = (0..24).map(|i| i as f32).collect();
+        let streams = to_map(&[("a", cells)]);
+        let want = dataflow::run(
+            &g,
+            &DataflowInput { streams: &streams, regs: &HashMap::new() },
+        )
+        .unwrap();
+        let mut e = Engine::new(&g, &s).unwrap();
+        let got = e.run_frame(&streams).unwrap();
+        assert_eq!(got["z"], want["z"]);
+    }
+
+    #[test]
+    fn prop_cycle_equals_dataflow() {
+        // random small stream programs: the cycle-accurate pipeline
+        // must compute exactly the dataflow semantics (the delay
+        // balancing theorem).
+        let programs = [
+            "Name p0; Main_In {i::a,b}; Main_Out {o::z};
+             EQU n1, t = a * b - 2.0;
+             EQU n2, z = t / (b + 3.0) + sqrt(a);",
+            "Name p1; Main_In {i::a,b}; Main_Out {o::z,y};
+             HDL B, 5, (p) = StreamBwd(a), 3, 5;
+             EQU n1, z = p * b;
+             EQU n2, y = a - p;",
+            "Name p2; Main_In {i::a,s}; Main_Out {o::z};
+             HDL C, 1, (m) = CompEq(s), 1.0;
+             HDL X, 1, (x) = SyncMux(m, a, s);
+             EQU n1, z = x + a;",
+            "Name p3; Main_In {i::a}; Main_Out {o::z};
+             HDL T, 5, (c, u, d) = Trans2D(a), 3, 1, 0,0, 0,1, 0,-1;
+             EQU n1, z = (c + u) * d;",
+        ];
+        for src in programs {
+            let (g, s) = compile(src);
+            let mut e = Engine::new(&g, &s).unwrap();
+            forall(Config::cases(12).seed(0xF00D), |rng| {
+                let t = rng.range_usize(3, 30);
+                let mut streams = HashMap::new();
+                for (_, port) in &e.stream_ports {
+                    let v: Vec<f32> = (0..t)
+                        .map(|_| (rng.below(16) as f32) / 4.0)
+                        .collect();
+                    streams.insert(port.clone(), v);
+                }
+                let want = dataflow::run(
+                    &g,
+                    &DataflowInput { streams: &streams, regs: &HashMap::new() },
+                )
+                .map_err(|e| e.to_string())?;
+                let got = e.run_frame(&streams).map_err(|e| e.to_string())?;
+                for (port, w) in &want {
+                    let gv = &got[port];
+                    if gv.len() != w.len() {
+                        return Err(format!("{port}: len {} vs {}", gv.len(), w.len()));
+                    }
+                    for (i, (x, y)) in gv.iter().zip(w).enumerate() {
+                        if x.to_bits() != y.to_bits() && !(x.is_nan() && y.is_nan()) {
+                            return Err(format!("{port}[{i}]: {x} != {y}"));
+                        }
+                    }
+                }
+                Ok(())
+            });
+        }
+    }
+
+    #[test]
+    fn eliminator_holds_last_valid() {
+        let (g, s) = compile(
+            "Name t; Main_In {i::a, en}; Main_Out {o::z};
+             HDL E, 1, (z) = Eliminator(a, en);",
+        );
+        let mut e = Engine::new(&g, &s).unwrap();
+        let out = e
+            .run_frame(&to_map(&[
+                ("a", vec![1.0, 2.0, 3.0, 4.0]),
+                ("en", vec![1.0, 0.0, 0.0, 1.0]),
+            ]))
+            .unwrap();
+        assert_eq!(out["z"], vec![1.0, 1.0, 1.0, 4.0]);
+    }
+
+    #[test]
+    fn reset_restores_initial_state() {
+        let (g, s) = compile(
+            "Name t; Main_In {i::a}; Main_Out {o::z};
+             HDL B, 4, (p) = StreamBwd(a), 2, 4;
+             EQU n1, z = a + p;",
+        );
+        let mut e = Engine::new(&g, &s).unwrap();
+        let f1 = e.run_frame(&to_map(&[("a", vec![5.0, 6.0, 7.0])])).unwrap();
+        e.reset();
+        let f2 = e.run_frame(&to_map(&[("a", vec![5.0, 6.0, 7.0])])).unwrap();
+        assert_eq!(f1["z"], f2["z"]);
+    }
+}

@@ -1,0 +1,22 @@
+//! Simulation substrate: three complementary views of a compiled
+//! stream-computing design (DESIGN.md §4).
+//!
+//! * [`dataflow`] — the mathematical (per-cell) semantics of a balanced
+//!   pipeline; fast, used for numerical verification against the JAX /
+//!   Pallas / Rust oracles.
+//! * [`engine`] — cycle-accurate functional simulation through every
+//!   pipeline register; proves the scheduler's delay balancing
+//!   (property-tested equal to `dataflow`).
+//! * [`timing`] + [`memory`] — cycle-accurate occupancy simulation
+//!   against the DDR3 model; produces the paper's utilization /
+//!   sustained-performance counters (Table III).
+
+pub mod dataflow;
+pub mod engine;
+pub mod memory;
+pub mod timing;
+
+pub use dataflow::{run as run_dataflow, DataflowInput};
+pub use engine::Engine;
+pub use memory::{DdrConfig, DdrSystem};
+pub use timing::{run as run_timing, TimingDesign, TimingReport, DMA_REARM_CYCLES};

@@ -1,0 +1,170 @@
+//! AST for the stream-processing description (SPD) language.
+//!
+//! One `SpdCore` corresponds to one SPD source file / one hardware core
+//! (paper Table I).  Interfaces append ports across repeated statements
+//! ("Append input ports for a main stream interface").
+
+use crate::expr::Expr;
+
+/// A named stream interface with ordered ports, e.g.
+/// `Main_In {main_i::x1,x2,x3,x4}`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Interface {
+    pub name: String,
+    pub ports: Vec<String>,
+}
+
+/// `EQU <node>, <out> = <formula>` — an equation node: a static single
+/// assignment to an output port variable (paper §II-C1).
+#[derive(Clone, Debug)]
+pub struct EquNode {
+    pub name: String,
+    pub output: String,
+    pub formula: Expr,
+    /// Original formula text (for diagnostics and Verilog comments).
+    pub raw: String,
+    /// Source line (1-based) for diagnostics.
+    pub line: usize,
+}
+
+/// A parameter in an HDL node's parameter list: a literal or a `Param`
+/// reference (resolved by the preprocessor).
+#[derive(Clone, Debug, PartialEq)]
+pub enum HdlParam {
+    Num(f64),
+    Ident(String),
+}
+
+/// `HDL <node>, <delay>, (<outs>)(<bouts>) = <module>(<ins>)(<bins>), <params>`
+/// — a node backed by an existing module: another SPD core or a library
+/// HDL module (paper §II-C2, Table II "module call").
+#[derive(Clone, Debug)]
+pub struct HdlNode {
+    pub name: String,
+    /// Statically-declared pipeline delay (verified against the
+    /// referenced module's computed delay during elaboration).
+    pub delay: u32,
+    pub outs: Vec<String>,
+    pub bouts: Vec<String>,
+    pub module: String,
+    pub ins: Vec<String>,
+    pub bins: Vec<String>,
+    pub params: Vec<HdlParam>,
+    pub line: usize,
+}
+
+/// `DRCT (<dsts>) = (<srcs>)` — direct port connection.
+#[derive(Clone, Debug)]
+pub struct Drct {
+    pub dsts: Vec<String>,
+    pub srcs: Vec<String>,
+    pub line: usize,
+}
+
+/// A full SPD core.
+#[derive(Clone, Debug, Default)]
+pub struct SpdCore {
+    pub name: String,
+    pub main_in: Vec<Interface>,
+    pub main_out: Vec<Interface>,
+    pub brch_in: Vec<Interface>,
+    pub brch_out: Vec<Interface>,
+    /// `Append_Reg {if::p1,...}` — run-time constant registers appended
+    /// to the main input interface (paper Fig. 10: one_tau, rho_in, ...).
+    pub append_reg: Vec<Interface>,
+    pub params: Vec<(String, f64)>,
+    pub equ: Vec<EquNode>,
+    pub hdl: Vec<HdlNode>,
+    pub drct: Vec<Drct>,
+}
+
+impl SpdCore {
+    /// Look up a `Param` constant.
+    pub fn param(&self, name: &str) -> Option<f64> {
+        self.params
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| *v)
+    }
+
+    /// All main-stream input ports in declaration order
+    /// (excluding Append_Reg registers).
+    pub fn main_in_ports(&self) -> Vec<&str> {
+        self.main_in
+            .iter()
+            .flat_map(|i| i.ports.iter().map(|s| s.as_str()))
+            .collect()
+    }
+
+    /// All Append_Reg register ports.
+    pub fn reg_ports(&self) -> Vec<&str> {
+        self.append_reg
+            .iter()
+            .flat_map(|i| i.ports.iter().map(|s| s.as_str()))
+            .collect()
+    }
+
+    pub fn main_out_ports(&self) -> Vec<&str> {
+        self.main_out
+            .iter()
+            .flat_map(|i| i.ports.iter().map(|s| s.as_str()))
+            .collect()
+    }
+
+    pub fn brch_in_ports(&self) -> Vec<&str> {
+        self.brch_in
+            .iter()
+            .flat_map(|i| i.ports.iter().map(|s| s.as_str()))
+            .collect()
+    }
+
+    pub fn brch_out_ports(&self) -> Vec<&str> {
+        self.brch_out
+            .iter()
+            .flat_map(|i| i.ports.iter().map(|s| s.as_str()))
+            .collect()
+    }
+}
+
+/// Strip an interface qualifier: `Mi::sop` -> `sop`; plain names pass
+/// through.  Interface-qualified references disambiguate identically
+/// named ports on different interfaces (paper Fig. 10 uses `Mi::sop`
+/// and `Mo::sop`).
+pub fn unqualified(name: &str) -> &str {
+    match name.rfind("::") {
+        Some(i) => &name[i + 2..],
+        None => name,
+    }
+}
+
+/// The interface qualifier if present: `Mi::sop` -> Some("Mi").
+pub fn qualifier(name: &str) -> Option<&str> {
+    name.rfind("::").map(|i| &name[..i])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qualified_name_helpers() {
+        assert_eq!(unqualified("Mi::sop"), "sop");
+        assert_eq!(unqualified("sop"), "sop");
+        assert_eq!(qualifier("Mi::sop"), Some("Mi"));
+        assert_eq!(qualifier("sop"), None);
+    }
+
+    #[test]
+    fn port_accessors_flatten_interfaces() {
+        let mut core = SpdCore::default();
+        core.main_in.push(Interface {
+            name: "a".into(),
+            ports: vec!["x".into(), "y".into()],
+        });
+        core.main_in.push(Interface {
+            name: "b".into(),
+            ports: vec!["z".into()],
+        });
+        assert_eq!(core.main_in_ports(), vec!["x", "y", "z"]);
+    }
+}

@@ -1,0 +1,13 @@
+//! SPD (stream processing description) language front-end.
+//!
+//! The DSL of the paper's §II-C: statements of `Function Fields;` form
+//! with `#` comments.  See `ast` for the core model, `parser` for the
+//! grammar, and `registry` for hierarchical module resolution.
+
+pub mod ast;
+pub mod parser;
+pub mod registry;
+
+pub use ast::{qualifier, unqualified, Drct, EquNode, HdlNode, HdlParam, Interface, SpdCore};
+pub use parser::parse_core;
+pub use registry::{ModuleDef, Registry};

@@ -1,0 +1,586 @@
+//! Statement-level parser for SPD source text.
+//!
+//! SPD is line/statement oriented (paper Fig. 4): `#` starts a comment,
+//! statements are terminated by `;`, and each statement is
+//! `Function fields` with `Function` one of Table I.
+
+use super::ast::*;
+use crate::error::{Error, Result};
+use crate::expr;
+
+/// Parse one SPD core from source text.
+pub fn parse_core(src: &str) -> Result<SpdCore> {
+    let mut core = SpdCore::default();
+    let mut saw_name = false;
+
+    for stmt in split_statements(src) {
+        let Statement { line, text } = stmt;
+        let (func, rest) = split_function(&text, line)?;
+        match func.as_str() {
+            "Name" => {
+                let name = rest.trim().trim_end_matches(';').trim();
+                if name.is_empty() || !is_ident(name) {
+                    return Err(Error::parse(line, format!("bad core name `{name}`")));
+                }
+                if saw_name {
+                    return Err(Error::parse(line, "duplicate Name statement"));
+                }
+                core.name = name.to_string();
+                saw_name = true;
+            }
+            "Main_In" => core.main_in.push(parse_interface(&rest, line)?),
+            "Main_Out" => core.main_out.push(parse_interface(&rest, line)?),
+            "Brch_In" => core.brch_in.push(parse_interface(&rest, line)?),
+            "Brch_Out" => core.brch_out.push(parse_interface(&rest, line)?),
+            "Append_Reg" => core.append_reg.push(parse_interface(&rest, line)?),
+            "Param" => {
+                let (name, value) = parse_param(&rest, line)?;
+                if core.param(&name).is_some() {
+                    return Err(Error::parse(
+                        line,
+                        format!("duplicate Param `{name}`"),
+                    ));
+                }
+                core.params.push((name, value));
+            }
+            "EQU" => core.equ.push(parse_equ(&rest, line)?),
+            "HDL" => core.hdl.push(parse_hdl(&rest, line)?),
+            "DRCT" => core.drct.push(parse_drct(&rest, line)?),
+            other => {
+                return Err(Error::parse(
+                    line,
+                    format!("unknown SPD function `{other}`"),
+                ))
+            }
+        }
+    }
+
+    if !saw_name {
+        return Err(Error::parse(1, "missing Name statement"));
+    }
+    validate(&core)?;
+    Ok(core)
+}
+
+struct Statement {
+    line: usize,
+    text: String,
+}
+
+/// Strip comments, join lines, split on `;`.  Tracks the starting line
+/// of each statement for diagnostics.
+fn split_statements(src: &str) -> Vec<Statement> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut cur_line = 0usize;
+    for (idx, raw) in src.lines().enumerate() {
+        let line_no = idx + 1;
+        let code = match raw.find('#') {
+            Some(i) => &raw[..i],
+            None => raw,
+        };
+        for ch in code.chars() {
+            if ch == ';' {
+                if !cur.trim().is_empty() {
+                    out.push(Statement {
+                        line: cur_line,
+                        text: cur.trim().to_string(),
+                    });
+                }
+                cur.clear();
+                cur_line = 0;
+            } else {
+                if cur.trim().is_empty() && !ch.is_whitespace() {
+                    cur_line = line_no;
+                }
+                cur.push(ch);
+            }
+        }
+        cur.push(' ');
+    }
+    if !cur.trim().is_empty() {
+        out.push(Statement { line: cur_line, text: cur.trim().to_string() });
+    }
+    out
+}
+
+fn split_function(text: &str, line: usize) -> Result<(String, String)> {
+    let t = text.trim_start();
+    let end = t
+        .find(|c: char| !(c.is_ascii_alphanumeric() || c == '_'))
+        .unwrap_or(t.len());
+    if end == 0 {
+        return Err(Error::parse(line, format!("bad statement `{text}`")));
+    }
+    Ok((t[..end].to_string(), t[end..].trim().to_string()))
+}
+
+fn is_ident(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars().next().unwrap().is_ascii_alphabetic()
+        && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+fn is_port_ref(s: &str) -> bool {
+    // allow one interface qualifier: If::port
+    match s.find("::") {
+        Some(i) => is_ident(&s[..i]) && is_ident(&s[i + 2..]),
+        None => is_ident(s),
+    }
+}
+
+/// `{<if name>::port1, port2, ...}`
+fn parse_interface(rest: &str, line: usize) -> Result<Interface> {
+    let t = rest.trim();
+    if !t.starts_with('{') || !t.ends_with('}') {
+        return Err(Error::parse(line, format!("expected {{if::ports}}, got `{t}`")));
+    }
+    let inner = &t[1..t.len() - 1];
+    let (name, ports_str) = inner.split_once("::").ok_or_else(|| {
+        Error::parse(line, format!("missing `::` in interface `{inner}`"))
+    })?;
+    let name = name.trim();
+    if !is_ident(name) {
+        return Err(Error::parse(line, format!("bad interface name `{name}`")));
+    }
+    let ports = split_names(ports_str, line)?;
+    if ports.is_empty() {
+        return Err(Error::parse(line, "interface with no ports"));
+    }
+    Ok(Interface { name: name.to_string(), ports })
+}
+
+fn split_names(s: &str, line: usize) -> Result<Vec<String>> {
+    let mut out = Vec::new();
+    for part in s.split(',') {
+        let p = part.trim();
+        if p.is_empty() {
+            continue;
+        }
+        if !is_port_ref(p) {
+            return Err(Error::parse(line, format!("bad port name `{p}`")));
+        }
+        out.push(p.to_string());
+    }
+    Ok(out)
+}
+
+/// `Param <name> = <value>`
+fn parse_param(rest: &str, line: usize) -> Result<(String, f64)> {
+    let (name, value) = rest.split_once('=').ok_or_else(|| {
+        Error::parse(line, format!("expected `name = value` in Param `{rest}`"))
+    })?;
+    let name = name.trim();
+    if !is_ident(name) {
+        return Err(Error::parse(line, format!("bad Param name `{name}`")));
+    }
+    let value: f64 = value.trim().parse().map_err(|_| {
+        Error::parse(line, format!("bad Param value `{}`", value.trim()))
+    })?;
+    Ok((name.to_string(), value))
+}
+
+/// `EQU <node>, <out> = <formula>`
+fn parse_equ(rest: &str, line: usize) -> Result<EquNode> {
+    let (name, eq) = rest.split_once(',').ok_or_else(|| {
+        Error::parse(line, format!("expected `node, out = formula` in EQU `{rest}`"))
+    })?;
+    let name = name.trim();
+    if !is_ident(name) {
+        return Err(Error::parse(line, format!("bad EQU node name `{name}`")));
+    }
+    let (out, formula) = eq.split_once('=').ok_or_else(|| {
+        Error::parse(line, format!("missing `=` in EQU `{eq}`"))
+    })?;
+    let out = out.trim();
+    if !is_port_ref(out) {
+        return Err(Error::parse(line, format!("bad EQU output `{out}`")));
+    }
+    let raw = formula.trim().to_string();
+    let parsed = expr::parse(&raw).map_err(|e| {
+        Error::parse(line, format!("in EQU `{name}`: {e}"))
+    })?;
+    Ok(EquNode {
+        name: name.to_string(),
+        output: out.to_string(),
+        formula: parsed,
+        raw,
+        line,
+    })
+}
+
+/// `HDL <node>, <delay>, (<outs>)[(<bouts>)] = <mod>(<ins>)[(<bins>)][, <params>]`
+fn parse_hdl(rest: &str, line: usize) -> Result<HdlNode> {
+    let (name, rest2) = rest.split_once(',').ok_or_else(|| {
+        Error::parse(line, "HDL: expected `node, delay, call`")
+    })?;
+    let name = name.trim();
+    if !is_ident(name) {
+        return Err(Error::parse(line, format!("bad HDL node name `{name}`")));
+    }
+    let (delay_s, call) = rest2.trim().split_once(',').ok_or_else(|| {
+        Error::parse(line, "HDL: expected `delay, call`")
+    })?;
+    let delay: u32 = delay_s.trim().parse().map_err(|_| {
+        Error::parse(line, format!("bad HDL delay `{}`", delay_s.trim()))
+    })?;
+
+    let (lhs, rhs) = call.split_once('=').ok_or_else(|| {
+        Error::parse(line, "HDL: missing `=` in module call")
+    })?;
+
+    // LHS: (outs)[(bouts)]
+    let mut lhs_groups = parse_paren_groups(lhs, line)?;
+    if lhs_groups.is_empty() || lhs_groups.len() > 2 {
+        return Err(Error::parse(line, "HDL: expected (outs) or (outs)(bouts)"));
+    }
+    let outs = split_names(&lhs_groups.remove(0), line)?;
+    let bouts = if lhs_groups.is_empty() {
+        vec![]
+    } else {
+        split_names(&lhs_groups.remove(0), line)?
+    };
+
+    // RHS: Module(ins)[(bins)][, params]
+    let rhs = rhs.trim();
+    let open = rhs.find('(').ok_or_else(|| {
+        Error::parse(line, "HDL: missing `(` after module name")
+    })?;
+    let module = rhs[..open].trim();
+    if !is_ident(module) {
+        return Err(Error::parse(line, format!("bad module name `{module}`")));
+    }
+    // scan paren groups directly after module name; anything after the
+    // final `)` separated by `,` is the parameter list.
+    let mut groups = Vec::new();
+    let chars: Vec<char> = rhs.chars().collect();
+    let mut i = open;
+    while i < chars.len() && chars[i] == '(' {
+        let mut depth = 0;
+        let start = i + 1;
+        let mut j = i;
+        loop {
+            if j >= chars.len() {
+                return Err(Error::parse(line, "HDL: unbalanced parentheses"));
+            }
+            match chars[j] {
+                '(' => depth += 1,
+                ')' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        groups.push(chars[start..j].iter().collect::<String>());
+        i = j + 1;
+        while i < chars.len() && chars[i].is_whitespace() {
+            i += 1;
+        }
+    }
+    if groups.is_empty() || groups.len() > 2 {
+        return Err(Error::parse(line, "HDL: expected Module(ins) or Module(ins)(bins)"));
+    }
+    let ins = split_names(&groups[0], line)?;
+    let bins = if groups.len() > 1 {
+        split_names(&groups[1], line)?
+    } else {
+        vec![]
+    };
+
+    // optional `, p1, p2, ...` parameter list
+    let tail: String = chars[i..].iter().collect();
+    let tail = tail.trim();
+    let mut params = Vec::new();
+    if !tail.is_empty() {
+        let tail = tail.strip_prefix(',').ok_or_else(|| {
+            Error::parse(line, format!("HDL: unexpected trailing `{tail}`"))
+        })?;
+        for p in tail.split(',') {
+            let p = p.trim();
+            if p.is_empty() {
+                continue;
+            }
+            if let Ok(v) = p.parse::<f64>() {
+                params.push(HdlParam::Num(v));
+            } else if is_ident(p) {
+                params.push(HdlParam::Ident(p.to_string()));
+            } else {
+                return Err(Error::parse(line, format!("bad HDL parameter `{p}`")));
+            }
+        }
+    }
+
+    Ok(HdlNode {
+        name: name.to_string(),
+        delay,
+        outs,
+        bouts,
+        module: module.to_string(),
+        ins,
+        bins,
+        params,
+        line,
+    })
+}
+
+/// `DRCT (<dsts>) = (<srcs>)`
+fn parse_drct(rest: &str, line: usize) -> Result<Drct> {
+    let (lhs, rhs) = rest.split_once('=').ok_or_else(|| {
+        Error::parse(line, "DRCT: missing `=`")
+    })?;
+    let mut l = parse_paren_groups(lhs, line)?;
+    let mut r = parse_paren_groups(rhs, line)?;
+    if l.len() != 1 || r.len() != 1 {
+        return Err(Error::parse(line, "DRCT: expected (dsts) = (srcs)"));
+    }
+    let dsts = split_names(&l.remove(0), line)?;
+    let srcs = split_names(&r.remove(0), line)?;
+    if dsts.len() != srcs.len() {
+        return Err(Error::parse(
+            line,
+            format!("DRCT: {} destinations vs {} sources", dsts.len(), srcs.len()),
+        ));
+    }
+    Ok(Drct { dsts, srcs, line })
+}
+
+/// Parse consecutive `(...)` groups from a string; anything else
+/// (besides whitespace) is an error.
+fn parse_paren_groups(s: &str, line: usize) -> Result<Vec<String>> {
+    let mut out = Vec::new();
+    let chars: Vec<char> = s.chars().collect();
+    let mut i = 0;
+    while i < chars.len() {
+        if chars[i].is_whitespace() {
+            i += 1;
+            continue;
+        }
+        if chars[i] != '(' {
+            return Err(Error::parse(
+                line,
+                format!("expected `(`, got `{}` in `{s}`", chars[i]),
+            ));
+        }
+        let start = i + 1;
+        let mut j = i;
+        let mut depth = 0;
+        loop {
+            if j >= chars.len() {
+                return Err(Error::parse(line, "unbalanced parentheses"));
+            }
+            match chars[j] {
+                '(' => depth += 1,
+                ')' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        out.push(chars[start..j].iter().collect());
+        i = j + 1;
+    }
+    Ok(out)
+}
+
+/// Static semantic checks that need no module registry: unique node
+/// names, unique port definitions.
+fn validate(core: &SpdCore) -> Result<()> {
+    let mut names = std::collections::HashSet::new();
+    for n in core.equ.iter().map(|n| &n.name).chain(core.hdl.iter().map(|n| &n.name)) {
+        if !names.insert(n.clone()) {
+            return Err(Error::dfg(&core.name, format!("duplicate node name `{n}`")));
+        }
+    }
+    let mut defined = std::collections::HashSet::new();
+    let mut define = |port: &str, what: &str| -> Result<()> {
+        if !defined.insert(port.to_string()) {
+            return Err(Error::dfg(
+                &core.name,
+                format!("multiple drivers for `{port}` ({what})"),
+            ));
+        }
+        Ok(())
+    };
+    for p in core.main_in_ports() {
+        define(p, "main input")?;
+    }
+    for p in core.reg_ports() {
+        define(p, "register input")?;
+    }
+    for p in core.brch_in_ports() {
+        define(p, "branch input")?;
+    }
+    for n in &core.equ {
+        define(&n.output, "EQU output")?;
+    }
+    for n in &core.hdl {
+        for o in n.outs.iter().chain(&n.bouts) {
+            define(o, "HDL output")?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's Fig. 4 example, verbatim structure.
+    pub const FIG4: &str = r#"
+        Name core;                         # name of this core
+        Main_In  {main_i::x1,x2,x3,x4};    # main stream in
+        Main_Out {main_o::z1,z2};          # main stream out
+        Brch_In  {brch_i::bin1};           # branch inputs
+        Brch_Out {brch_o::bout1};          # branch outputs
+
+        Param cnst = 123.456;              # define parameter
+        EQU Node1, t1 = x1 * x2;           # eq (5) (Node1)
+        EQU Node2, t2 = x3 + x4;           # eq (6) (Node2)
+        EQU Node3, z1 = t1 - t2 * bin1;    # eq (7) (Node3)
+        EQU Node4, z2 = t1 / t2 + cnst;    # eq (8) (Node4)
+        DRCT (bout1) = (t2);               # port connection
+    "#;
+
+    #[test]
+    fn parses_fig4() {
+        let core = parse_core(FIG4).unwrap();
+        assert_eq!(core.name, "core");
+        assert_eq!(core.main_in_ports(), vec!["x1", "x2", "x3", "x4"]);
+        assert_eq!(core.main_out_ports(), vec!["z1", "z2"]);
+        assert_eq!(core.brch_in_ports(), vec!["bin1"]);
+        assert_eq!(core.brch_out_ports(), vec!["bout1"]);
+        assert_eq!(core.params, vec![("cnst".to_string(), 123.456)]);
+        assert_eq!(core.equ.len(), 4);
+        assert_eq!(core.drct.len(), 1);
+        assert_eq!(core.equ[0].output, "t1");
+    }
+
+    /// The paper's Fig. 5 hierarchical example.
+    pub const FIG5: &str = r#"
+        Name Array;
+        Main_In {main_i::i1,i2,i3,i4,i5,i6,i7,i8};
+        Main_Out {main_o::o1,o2,o3};
+
+        HDL Node_a, 14, (t1,t2)(b_a) = core(i1,i2,i3,i4)(b_b);
+        HDL Node_b, 14, (t3,t4)(b_b) = core(i5,i6,i7,i8)(b_a);
+        HDL Node_c, 14, (o1,o2) = core(t1,t2,t3,t4);
+        EQU Node_d, o3 = t2 * t4;
+    "#;
+
+    #[test]
+    fn parses_fig5() {
+        let core = parse_core(FIG5).unwrap();
+        assert_eq!(core.name, "Array");
+        assert_eq!(core.hdl.len(), 3);
+        let a = &core.hdl[0];
+        assert_eq!(a.delay, 14);
+        assert_eq!(a.outs, vec!["t1", "t2"]);
+        assert_eq!(a.bouts, vec!["b_a"]);
+        assert_eq!(a.module, "core");
+        assert_eq!(a.ins, vec!["i1", "i2", "i3", "i4"]);
+        assert_eq!(a.bins, vec!["b_b"]);
+        let c = &core.hdl[2];
+        assert!(c.bouts.is_empty() && c.bins.is_empty());
+    }
+
+    #[test]
+    fn parses_append_reg_and_qualified_ports() {
+        let src = r#"
+            Name mQsys_Core10;
+            Main_In {Mi::if0_0, sop, eop};
+            Main_Out {Mo::of0_0, Mo::sop, Mo::eop};
+            Append_Reg {Mi::one_tau, rho_in, rho_out};
+            HDL Core_1, 495, (f0,s1,e1) = PEx1(if0_0, Mi::sop, Mi::eop, one_tau);
+            DRCT (of0_0, Mo::sop, Mo::eop) = (f0, s1, e1);
+        "#;
+        let core = parse_core(src).unwrap();
+        assert_eq!(core.reg_ports(), vec!["one_tau", "rho_in", "rho_out"]);
+        assert_eq!(core.hdl[0].delay, 495);
+        assert_eq!(core.hdl[0].ins[1], "Mi::sop");
+    }
+
+    #[test]
+    fn hdl_params_parse() {
+        let src = r#"
+            Name t;
+            Main_In {i::a};
+            Main_Out {o::z};
+            Param W = 720;
+            HDL D1, 3, (z) = DelayN(a), 3, W;
+        "#;
+        let core = parse_core(src).unwrap();
+        assert_eq!(
+            core.hdl[0].params,
+            vec![HdlParam::Num(3.0), HdlParam::Ident("W".into())]
+        );
+    }
+
+    #[test]
+    fn rejects_duplicate_drivers() {
+        let src = r#"
+            Name t;
+            Main_In {i::a};
+            Main_Out {o::z};
+            EQU n1, z = a + 1;
+            EQU n2, z = a + 2;
+        "#;
+        let e = parse_core(src).unwrap_err().to_string();
+        assert!(e.contains("multiple drivers"), "{e}");
+    }
+
+    #[test]
+    fn rejects_duplicate_node_names() {
+        let src = r#"
+            Name t;
+            Main_In {i::a};
+            Main_Out {o::z, y};
+            EQU n1, z = a + 1;
+            EQU n1, y = a + 2;
+        "#;
+        assert!(parse_core(src).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_function() {
+        assert!(parse_core("Name t; Main_In {i::a}; FOO bar;").is_err());
+    }
+
+    #[test]
+    fn rejects_missing_name() {
+        assert!(parse_core("Main_In {i::a};").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_drct_arity() {
+        let src = r#"
+            Name t;
+            Main_In {i::a, b};
+            Main_Out {o::z, y};
+            DRCT (z, y) = (a);
+        "#;
+        assert!(parse_core(src).is_err());
+    }
+
+    #[test]
+    fn comments_and_multiline_statements() {
+        let src = "Name t; # trailing\nMain_In {i::a,\n  b}; Main_Out {o::z};\nEQU n, z = a\n + b;";
+        let core = parse_core(src).unwrap();
+        assert_eq!(core.main_in_ports(), vec!["a", "b"]);
+        assert_eq!(core.equ[0].raw.replace(' ', ""), "a+b");
+    }
+
+    #[test]
+    fn error_carries_line_number() {
+        let src = "Name t;\nMain_In {i::a};\nMain_Out {o::z};\nEQU n, z = a +;\n";
+        let err = parse_core(src).unwrap_err().to_string();
+        assert!(err.contains("line 4"), "{err}");
+    }
+}

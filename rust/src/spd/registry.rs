@@ -1,0 +1,115 @@
+//! Module registry: resolves `HDL` node module names to SPD cores or
+//! library modules, enabling the paper's hierarchical construction
+//! (§II-C2, Fig. 3d: "a compiled core is itself an HDL node").
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::ast::SpdCore;
+use super::parser::parse_core;
+use crate::error::{Error, Result};
+use crate::library;
+
+/// How an `HDL` module name resolves.
+#[derive(Clone, Debug)]
+pub enum ModuleDef {
+    /// Another SPD core (hierarchical composition).
+    Spd(Arc<SpdCore>),
+    /// A built-in library module (resolved per-instance with its
+    /// parameter list; see `library::resolve`).
+    Library,
+}
+
+/// Registry of known modules.
+#[derive(Clone, Debug, Default)]
+pub struct Registry {
+    modules: HashMap<String, ModuleDef>,
+}
+
+impl Registry {
+    /// Empty registry (no library modules — mostly for tests).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Registry preloaded with the §II-D library modules.
+    pub fn with_library() -> Self {
+        let mut r = Self::default();
+        for name in library::LIB_NAMES {
+            r.modules.insert(name.to_string(), ModuleDef::Library);
+        }
+        r
+    }
+
+    /// Register a parsed SPD core under its `Name`.
+    pub fn register(&mut self, core: SpdCore) -> Result<Arc<SpdCore>> {
+        let name = core.name.clone();
+        if self.modules.contains_key(&name) {
+            return Err(Error::Elaborate(format!(
+                "module `{name}` registered twice"
+            )));
+        }
+        let arc = Arc::new(core);
+        self.modules.insert(name, ModuleDef::Spd(arc.clone()));
+        Ok(arc)
+    }
+
+    /// Parse SPD source and register the core.
+    pub fn register_source(&mut self, src: &str) -> Result<Arc<SpdCore>> {
+        self.register(parse_core(src)?)
+    }
+
+    pub fn lookup(&self, name: &str) -> Option<&ModuleDef> {
+        self.modules.get(name)
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.modules.contains_key(name)
+    }
+
+    /// Names of all registered SPD cores (not library modules).
+    pub fn core_names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self
+            .modules
+            .iter()
+            .filter(|(_, d)| matches!(d, ModuleDef::Spd(_)))
+            .map(|(n, _)| n.as_str())
+            .collect();
+        v.sort();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn library_preloaded() {
+        let r = Registry::with_library();
+        assert!(r.contains("Delay"));
+        assert!(r.contains("Trans2D"));
+        assert!(!r.contains("core"));
+    }
+
+    #[test]
+    fn register_and_lookup() {
+        let mut r = Registry::with_library();
+        r.register_source("Name c1; Main_In {i::a}; Main_Out {o::z}; EQU n, z = a + 1;")
+            .unwrap();
+        assert!(r.contains("c1"));
+        assert_eq!(r.core_names(), vec!["c1"]);
+        match r.lookup("c1") {
+            Some(ModuleDef::Spd(core)) => assert_eq!(core.name, "c1"),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn duplicate_registration_fails() {
+        let mut r = Registry::new();
+        let src = "Name c1; Main_In {i::a}; Main_Out {o::z}; EQU n, z = a + 1;";
+        r.register_source(src).unwrap();
+        assert!(r.register_source(src).is_err());
+    }
+}

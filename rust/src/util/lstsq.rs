@@ -1,0 +1,125 @@
+//! Dense least squares via normal equations + Gaussian elimination.
+//!
+//! Used by the power-model calibration (`power::calibrate`).  Problem
+//! sizes are tiny (6 rows x <=5 columns), so numerical sophistication
+//! beyond partial pivoting is unnecessary.
+
+/// Solve `A x = b` (square, n x n) by Gaussian elimination with partial
+/// pivoting.  Returns None if the matrix is (numerically) singular.
+pub fn solve(mut a: Vec<Vec<f64>>, mut b: Vec<f64>) -> Option<Vec<f64>> {
+    let n = b.len();
+    assert!(a.len() == n && a.iter().all(|r| r.len() == n));
+    for col in 0..n {
+        // pivot
+        let (piv, piv_val) = (col..n)
+            .map(|r| (r, a[r][col].abs()))
+            .max_by(|x, y| x.1.partial_cmp(&y.1).unwrap())?;
+        if piv_val < 1e-12 {
+            return None;
+        }
+        a.swap(col, piv);
+        b.swap(col, piv);
+        // eliminate below
+        for r in col + 1..n {
+            let factor = a[r][col] / a[col][col];
+            if factor == 0.0 {
+                continue;
+            }
+            for c in col..n {
+                a[r][c] -= factor * a[col][c];
+            }
+            b[r] -= factor * b[col];
+        }
+    }
+    // back substitution
+    let mut x = vec![0.0; n];
+    for col in (0..n).rev() {
+        let mut acc = b[col];
+        for c in col + 1..n {
+            acc -= a[col][c] * x[c];
+        }
+        x[col] = acc / a[col][col];
+    }
+    Some(x)
+}
+
+/// Least squares `min ||X beta - y||` via normal equations.
+/// `rows`: each row is a feature vector; `y`: targets.
+pub fn lstsq(rows: &[Vec<f64>], y: &[f64]) -> Option<Vec<f64>> {
+    let m = rows.len();
+    assert_eq!(m, y.len());
+    let k = rows[0].len();
+    assert!(rows.iter().all(|r| r.len() == k));
+    // X^T X and X^T y
+    let mut xtx = vec![vec![0.0; k]; k];
+    let mut xty = vec![0.0; k];
+    for (row, &yi) in rows.iter().zip(y) {
+        for i in 0..k {
+            xty[i] += row[i] * yi;
+            for j in 0..k {
+                xtx[i][j] += row[i] * row[j];
+            }
+        }
+    }
+    solve(xtx, xty)
+}
+
+/// Residuals `X beta - y`.
+pub fn residuals(rows: &[Vec<f64>], y: &[f64], beta: &[f64]) -> Vec<f64> {
+    rows.iter()
+        .zip(y)
+        .map(|(r, &yi)| r.iter().zip(beta).map(|(a, b)| a * b).sum::<f64>() - yi)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solve_identity() {
+        let a = vec![vec![1.0, 0.0], vec![0.0, 1.0]];
+        let x = solve(a, vec![3.0, 4.0]).unwrap();
+        assert_eq!(x, vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn solve_2x2() {
+        // 2x + y = 5 ; x - y = 1  => x = 2, y = 1
+        let a = vec![vec![2.0, 1.0], vec![1.0, -1.0]];
+        let x = solve(a, vec![5.0, 1.0]).unwrap();
+        assert!((x[0] - 2.0).abs() < 1e-12);
+        assert!((x[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solve_singular_returns_none() {
+        let a = vec![vec![1.0, 2.0], vec![2.0, 4.0]];
+        assert!(solve(a, vec![1.0, 2.0]).is_none());
+    }
+
+    #[test]
+    fn lstsq_exact_line() {
+        // y = 3 + 2 t, exactly determined
+        let rows: Vec<Vec<f64>> =
+            (0..5).map(|t| vec![1.0, t as f64]).collect();
+        let y: Vec<f64> = (0..5).map(|t| 3.0 + 2.0 * t as f64).collect();
+        let beta = lstsq(&rows, &y).unwrap();
+        assert!((beta[0] - 3.0).abs() < 1e-9);
+        assert!((beta[1] - 2.0).abs() < 1e-9);
+        let res = residuals(&rows, &y, &beta);
+        assert!(res.iter().all(|r| r.abs() < 1e-9));
+    }
+
+    #[test]
+    fn lstsq_overdetermined_minimizes() {
+        // noisy line; residuals must be orthogonal-ish to features
+        let rows: Vec<Vec<f64>> =
+            (0..10).map(|t| vec![1.0, t as f64]).collect();
+        let y: Vec<f64> = (0..10)
+            .map(|t| 1.0 + 0.5 * t as f64 + if t % 2 == 0 { 0.1 } else { -0.1 })
+            .collect();
+        let beta = lstsq(&rows, &y).unwrap();
+        assert!((beta[1] - 0.5).abs() < 0.02);
+    }
+}

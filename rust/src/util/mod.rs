@@ -1,0 +1,52 @@
+//! Small utilities: deterministic RNG, statistics, linear algebra.
+//!
+//! The offline crate set has no `rand`/`statrs`/`nalgebra`, so the few
+//! primitives the project needs are implemented here (DESIGN.md §4,
+//! "offline-crate substitutions").
+
+pub mod lstsq;
+pub mod rng;
+pub mod stats;
+
+pub use rng::XorShift64;
+
+/// Integer ceiling division.
+#[inline]
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// Pretty-print a large count with thousands separators.
+pub fn commas(n: u64) -> String {
+    let s = n.to_string();
+    let mut out = String::with_capacity(s.len() + s.len() / 3);
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+    }
+
+    #[test]
+    fn commas_formats() {
+        assert_eq!(commas(0), "0");
+        assert_eq!(commas(999), "999");
+        assert_eq!(commas(1000), "1,000");
+        assert_eq!(commas(52428800), "52,428,800");
+    }
+}

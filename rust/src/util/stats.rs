@@ -1,0 +1,97 @@
+//! Robust summary statistics for the bench harness (criterion is not in
+//! the offline crate set; `rust/benches/*` use this instead).
+
+/// Summary of a sample of measurements.
+#[derive(Clone, Copy, Debug)]
+pub struct Summary {
+    pub n: usize,
+    pub min: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub median: f64,
+    /// Median absolute deviation (scaled to ~sigma for normal data).
+    pub mad: f64,
+}
+
+/// Compute summary statistics; panics on an empty sample.
+pub fn summarize(samples: &[f64]) -> Summary {
+    assert!(!samples.is_empty(), "empty sample");
+    let mut sorted: Vec<f64> = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = sorted.len();
+    let median = percentile_sorted(&sorted, 50.0);
+    let mut devs: Vec<f64> = sorted.iter().map(|x| (x - median).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mad = 1.4826 * percentile_sorted(&devs, 50.0);
+    Summary {
+        n,
+        min: sorted[0],
+        max: sorted[n - 1],
+        mean: sorted.iter().sum::<f64>() / n as f64,
+        median,
+        mad,
+    }
+}
+
+/// Percentile (0..=100) of an already-sorted slice, linear interpolation.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Time a closure `iters` times after `warmup` runs; returns per-run
+/// seconds.
+pub fn time_runs<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    (0..iters)
+        .map(|_| {
+            let t0 = std::time::Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_constant_sample() {
+        let s = summarize(&[2.0; 10]);
+        assert_eq!(s.median, 2.0);
+        assert_eq!(s.mad, 0.0);
+        assert_eq!(s.min, 2.0);
+        assert_eq!(s.max, 2.0);
+    }
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(summarize(&[1.0, 2.0, 3.0]).median, 2.0);
+        assert_eq!(summarize(&[1.0, 2.0, 3.0, 4.0]).median, 2.5);
+    }
+
+    #[test]
+    fn percentiles() {
+        let v = [0.0, 1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile_sorted(&v, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&v, 100.0), 4.0);
+        assert_eq!(percentile_sorted(&v, 50.0), 2.0);
+    }
+
+    #[test]
+    fn mad_detects_spread() {
+        let tight = summarize(&[1.0, 1.01, 0.99, 1.0]);
+        let wide = summarize(&[1.0, 2.0, 0.0, 1.0]);
+        assert!(wide.mad > tight.mad);
+    }
+}
