@@ -64,24 +64,36 @@ fn main() -> spdx::Result<()> {
     let dt_sw = t0.elapsed().as_secs_f64();
 
     // ---- 4. PJRT oracle (Pallas kernel, scan-fused 10-step cascade) --
+    // degrades gracefully when the backend is unavailable (stub build
+    // without the `pjrt` feature, or artifacts not built)
     let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     let mut rt = PjrtRuntime::new(&artifacts)?;
-    let (mut fdense, attr) = state_to_dense(&init);
-    let t0 = std::time::Instant::now();
-    for _ in 0..STEPS / 10 {
-        fdense = rt.run_lbm("lbm_cascade10_64x64", &fdense, &attr, one_tau, H, W)?;
-    }
-    let dt_or = t0.elapsed().as_secs_f64();
-    let oracle = dense_to_state(&fdense, &init);
+    let oracle_run = (|| -> spdx::Result<(LbmState, f64)> {
+        let (mut fdense, attr) = state_to_dense(&init);
+        let t0 = std::time::Instant::now();
+        for _ in 0..STEPS / 10 {
+            fdense = rt.run_lbm("lbm_cascade10_64x64", &fdense, &attr, one_tau, H, W)?;
+        }
+        Ok((dense_to_state(&fdense, &init), t0.elapsed().as_secs_f64()))
+    })();
 
     // ---- cross-validation -------------------------------------------
     let d_hw_sw = fluid_max_diff(&hw, &sw);
-    let d_hw_or = fluid_max_diff(&hw, &oracle);
     println!("\n== verification ({STEPS} steps, fluid cells) ==");
     println!("SPD hardware vs rust reference : {d_hw_sw:.3e}");
-    println!("SPD hardware vs PJRT/Pallas    : {d_hw_or:.3e}");
+    let dt_or = match &oracle_run {
+        Ok((oracle, dt_or)) => {
+            let d_hw_or = fluid_max_diff(&hw, oracle);
+            println!("SPD hardware vs PJRT/Pallas    : {d_hw_or:.3e}");
+            assert!(d_hw_or < 5e-4, "hardware vs oracle diverged: {d_hw_or}");
+            Some(*dt_or)
+        }
+        Err(e) => {
+            println!("SPD hardware vs PJRT/Pallas    : skipped ({e})");
+            None
+        }
+    };
     assert!(d_hw_sw < 5e-4, "hardware vs reference diverged: {d_hw_sw}");
-    assert!(d_hw_or < 5e-4, "hardware vs oracle diverged: {d_hw_or}");
 
     // ---- physics ------------------------------------------------------
     println!("\n== physics of the developed cavity flow ==");
@@ -116,12 +128,16 @@ fn main() -> spdx::Result<()> {
         dt_sw,
         cells / dt_sw / 1e6
     );
-    println!(
-        "PJRT (Pallas AOT) : {:.2}s  ({:.2} Mcell-step/s, platform {})",
-        dt_or,
-        cells / dt_or / 1e6,
-        rt.platform()
-    );
+    if let Some(dt_or) = dt_or {
+        println!(
+            "PJRT (Pallas AOT) : {:.2}s  ({:.2} Mcell-step/s, platform {})",
+            dt_or,
+            cells / dt_or / 1e6,
+            rt.platform()
+        );
+    } else {
+        println!("PJRT (Pallas AOT) : skipped ({})", rt.platform());
+    }
 
     // count fluid cells for the record
     let n_fluid = init.attr.iter().filter(|&&a| a == FLUID).count();

@@ -1,12 +1,14 @@
 //! DSE: the full exploration loop (paper §III / §IV "automate the
 //! process of design space exploration") — sweep timing, parallel
-//! speedup of the coordinator, and the headline conclusions.
+//! speedup of the coordinator, per-workload sweep cost, and the
+//! headline conclusions.
 
 mod common;
 
 use common::{bench, section};
 use spdx::coordinator::Coordinator;
 use spdx::explore::{explore, ExploreConfig};
+use spdx::workload;
 
 fn main() {
     let cfg = ExploreConfig {
@@ -35,12 +37,32 @@ fn main() {
         s_seq.median / s_par.median
     );
 
+    section("per-workload sweep cost (6 candidates, 360x180)");
+    for name in workload::names() {
+        let wcfg = ExploreConfig {
+            workload: name,
+            grid_w: 360,
+            grid_h: 180,
+            max_n: 4,
+            max_m: 2,
+            passes: 2,
+            keep_infeasible: true,
+            ..Default::default()
+        };
+        bench(&format!("explore() {name}"), 0, 3, || {
+            let evals = explore(&wcfg).unwrap();
+            assert!(!evals.is_empty());
+            // every workload must produce at least one feasible design
+            assert!(evals.iter().any(|e| e.infeasible.is_none()), "{name}");
+        });
+    }
+
     section("headline conclusions");
     let (evals, _) = coord.run().unwrap();
     let feasible: Vec<_> = evals.iter().filter(|e| e.infeasible.is_none()).collect();
     let best = feasible
         .iter()
-        .max_by(|a, b| a.perf_per_watt.partial_cmp(&b.perf_per_watt).unwrap())
+        .max_by(|a, b| a.perf_per_watt.total_cmp(&b.perf_per_watt))
         .unwrap();
     println!(
         "  best perf/W: (n={}, m={}) {:.3} GFlop/sW (paper: (1,4) at 2.416)",

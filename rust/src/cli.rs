@@ -2,12 +2,13 @@
 //!
 //! Subcommands:
 //!   compile   <file.spd> [--dot] [--verilog]     compile one SPD core
+//!   workloads                                    list registered workloads
 //!   table3    [--grid WxH] [--passes N]          regenerate Table III
 //!   table4                                       regenerate Table IV
-//!   explore   [--grid WxH] [--max-n N] [--max-m M] [--workers K]
-//!   simulate  --n N --m M [--grid WxH] [--steps S]
-//!   verify    [--grid WxH] [--steps S]           DFG sim vs PJRT oracle
-//!   emit-verilog --n N --m M [--grid WxH] [--out DIR]
+//!   explore   [--workload NAME] [--grid WxH] [--max-n N] [--max-m M] [--workers K]
+//!   simulate  [--workload NAME] --n N --m M [--grid WxH] [--steps S]
+//!   verify    [--workload NAME|all] [--grid WxH] [--steps S]
+//!   emit-verilog [--workload NAME] --n N --m M [--grid WxH]
 
 use std::collections::HashMap;
 
@@ -16,12 +17,15 @@ use crate::dfg;
 use crate::error::{Error, Result};
 use crate::explore::{evaluate, ExploreConfig};
 use crate::lbm::reference::LbmState;
-use crate::lbm::workload::{fluid_max_diff, LbmRunner};
+use crate::lbm::workload::{
+    fluid_max_diff, grid_to_state, LbmRunner, DEFAULT_ONE_TAU,
+};
 use crate::lbm::LbmDesign;
 use crate::report;
 use crate::runtime::{dense_to_state, state_to_dense, PjrtRuntime};
 use crate::spd::{parse_core, Registry};
 use crate::verilog;
+use crate::workload::{self, DesignPoint, WorkloadRunner};
 
 /// Parsed flag set: positionals + `--key value` / `--flag` options.
 pub struct Args {
@@ -81,6 +85,11 @@ impl Args {
             }
         }
     }
+
+    /// Resolve `--workload NAME` against the registry (default `lbm`).
+    pub fn workload(&self) -> Result<&'static dyn workload::StencilKernel> {
+        workload::get(self.flag("workload").unwrap_or("lbm"))
+    }
 }
 
 pub const USAGE: &str = "\
@@ -91,16 +100,24 @@ USAGE: spdx <command> [options]
 
 COMMANDS:
   compile <file.spd> [--dot] [--verilog]   compile an SPD core, print stats
+  workloads                                list registered stencil workloads
   table3  [--grid WxH] [--passes N]        regenerate the paper's Table III
   table4                                   regenerate the paper's Table IV
-  explore [--grid WxH] [--max-n N] [--max-m M] [--workers K]
+  explore [--workload NAME] [--grid WxH] [--max-n N] [--max-m M] [--workers K]
                                            full design-space exploration
-  simulate --n N --m M [--grid WxH] [--steps S] [--cycle-accurate]
-                                           run LBM through a compiled design
-  verify  [--grid WxH] [--steps S] [--artifacts DIR]
-                                           DFG simulation vs PJRT oracle
-  emit-verilog --n N --m M [--grid WxH]    print the generated Verilog
+  simulate [--workload NAME] --n N --m M [--grid WxH] [--steps S]
+           [--cycle-accurate] [--<reg> V]  run a workload through a compiled design
+                                           (workload registers are overridable,
+                                           e.g. --one-tau for lbm, --c2 for wave)
+  verify  [--workload NAME|all] [--grid WxH] [--steps S] [--artifacts DIR]
+                                           DFG simulation vs software reference
+                                           (plus the PJRT oracle for lbm)
+  emit-verilog [--workload NAME] --n N --m M [--grid WxH]
+                                           print the generated Verilog
   help                                     this text
+
+Workloads are registered stencil kernels (see `spdx workloads`):
+lbm (default), jacobi, wave, blur.
 ";
 
 /// Entry point used by `main.rs`.
@@ -113,6 +130,7 @@ pub fn run(argv: Vec<String>) -> Result<i32> {
     let args = Args::parse(&argv[1..]);
     match cmd.as_str() {
         "compile" => cmd_compile(&args),
+        "workloads" => cmd_workloads(),
         "table3" => cmd_table3(&args),
         "table4" => cmd_table4(),
         "explore" => cmd_explore(&args),
@@ -159,9 +177,27 @@ fn cmd_compile(args: &Args) -> Result<i32> {
     Ok(0)
 }
 
+fn cmd_workloads() -> Result<i32> {
+    println!(
+        "{:<12} {:>10} {:>10}  {}",
+        "name", "words/cell", "flops/cell", "description"
+    );
+    for wl in workload::all() {
+        println!(
+            "{:<12} {:>10} {:>10}  {}",
+            wl.name(),
+            wl.words_per_cell(),
+            wl.flops_per_cell(),
+            wl.description()
+        );
+    }
+    Ok(0)
+}
+
 fn explore_cfg(args: &Args) -> Result<ExploreConfig> {
     let (grid_w, grid_h) = args.grid((720, 300))?;
     Ok(ExploreConfig {
+        workload: args.workload()?.name(),
         grid_w,
         grid_h,
         max_n: args.get("max-n", 4)?,
@@ -200,6 +236,7 @@ fn cmd_explore(args: &Args) -> Result<i32> {
         coord = coord.with_workers(workers);
     }
     let (evals, metrics) = coord.run()?;
+    println!("workload: {}", cfg.workload);
     println!("{}", report::table3(&evals));
     if let Some(best) = evals.first() {
         println!(
@@ -221,29 +258,51 @@ fn cmd_simulate(args: &Args) -> Result<i32> {
     let n: u32 = args.get("n", 1)?;
     let m: u32 = args.get("m", 1)?;
     let steps: u32 = args.get("steps", 100)?;
-    let one_tau: f32 = args.get("one-tau", 1.0 / 0.6)?;
-    let design = LbmDesign::new(n, m, w, h);
-    let runner = LbmRunner::new(design)?;
-    let state = LbmState::cavity(h as usize, w as usize);
+    let wl = args.workload()?;
+    let design = DesignPoint::new(n, m, w, h);
+    let runner = WorkloadRunner::new(wl, design)?;
+    // every workload register is overridable as `--<reg>` (underscores
+    // become dashes): --one-tau for lbm, --c2 for wave, ...
+    let mut regs = wl.regs();
+    let keys: Vec<String> = regs.keys().cloned().collect();
+    for key in keys {
+        let flag = key.replace('_', "-");
+        if let Some(v) = args.flag(&flag) {
+            let parsed: f32 = v.parse().map_err(|_| {
+                Error::Explore(format!("bad value for --{flag}: `{v}`"))
+            })?;
+            regs.insert(key, parsed);
+        }
+    }
+    let state = runner.init_state();
     let t0 = std::time::Instant::now();
     let (final_state, cycles_info) = if args.flag("cycle-accurate").is_some() {
-        let (s, cycles) = runner.run_cycle_accurate(state, one_tau, steps)?;
+        let (s, cycles) = runner.run_cycle_accurate_with(state, steps, &regs)?;
         (s, format!("{cycles} simulated cycles"))
     } else {
         (
-            runner.run_dataflow(state, one_tau, steps)?,
+            runner.run_dataflow_with(state, steps, &regs)?,
             "dataflow mode".to_string(),
         )
     };
     let dt = t0.elapsed().as_secs_f64();
-    // report a few macroscopic numbers
-    let mid = (h as usize / 2) * w as usize + w as usize / 2;
-    let (rho, ux, uy) = final_state.macros(mid);
     println!(
-        "LBM x{n} m{m} on {w}x{h}, {steps} steps ({cycles_info}) in {dt:.2}s"
+        "{} x{n} m{m} on {w}x{h}, {steps} steps ({cycles_info}) in {dt:.2}s",
+        wl.name()
     );
-    println!("  center cell: rho={rho:.5} u=({ux:.5}, {uy:.5})");
-    println!("  fluid mass : {:.4}", final_state.fluid_mass());
+    let (cy, cx) = (h as usize / 2, w as usize / 2);
+    for (ci, name) in wl.channel_names().iter().enumerate() {
+        println!(
+            "  center cell {name} = {:.5}",
+            final_state.at(ci, cy, cx)
+        );
+    }
+    if wl.name() == "lbm" {
+        let lbm_state = grid_to_state(&final_state);
+        let (rho, ux, uy) = lbm_state.macros(cy * w as usize + cx);
+        println!("  center cell: rho={rho:.5} u=({ux:.5}, {uy:.5})");
+        println!("  fluid mass : {:.4}", lbm_state.fluid_mass());
+    }
     Ok(0)
 }
 
@@ -251,34 +310,52 @@ fn cmd_verify(args: &Args) -> Result<i32> {
     let (w, h) = args.grid((64, 64))?;
     let steps: u32 = args.get("steps", 10)?;
     let artifacts: String = args.get("artifacts", "artifacts".to_string())?;
-    let one_tau = 1.0f32 / 0.6;
+    let which: String = args.get("workload", "all".to_string())?;
+    let wls: Vec<&'static dyn workload::StencilKernel> = if which == "all" {
+        workload::all().to_vec()
+    } else {
+        vec![workload::get(&which)?]
+    };
 
-    let design = LbmDesign::new(1, 1, w, h);
-    let runner = LbmRunner::new(design)?;
-    let state = LbmState::cavity(h as usize, w as usize);
-
-    // DFG dataflow simulation
-    let hw = runner.run_dataflow(state.clone(), one_tau, steps)?;
-    // Rust reference
-    let sw = crate::lbm::reference::run(state.clone(), one_tau, steps as usize);
-    // PJRT oracle (Pallas kernel, scan-fused per step)
-    let mut rt = PjrtRuntime::new(&artifacts)?;
-    let (mut fdense, attr) = state_to_dense(&state);
-    let artifact = format!("lbm_step_{h}x{w}");
-    for _ in 0..steps {
-        fdense = rt.run_lbm(&artifact, &fdense, &attr, one_tau, h as usize, w as usize)?;
-    }
-    let oracle = dense_to_state(&fdense, &state);
-
-    let d_hw_sw = fluid_max_diff(&hw, &sw);
-    let d_hw_or = fluid_max_diff(&hw, &oracle);
-    let d_sw_or = fluid_max_diff(&sw, &oracle);
-    println!("verification on {w}x{h}, {steps} steps (PJRT platform: {}):", rt.platform());
-    println!("  DFG sim  vs rust reference : max fluid diff {d_hw_sw:.3e}");
-    println!("  DFG sim  vs PJRT oracle    : max fluid diff {d_hw_or:.3e}");
-    println!("  rust ref vs PJRT oracle    : max fluid diff {d_sw_or:.3e}");
     let tol = 1e-4 * steps as f32;
-    if d_hw_sw < tol && d_hw_or < tol {
+    let mut ok = true;
+    println!("verification on {w}x{h}, {steps} steps (tolerance {tol:.1e}):");
+    for wl in wls {
+        let runner = WorkloadRunner::new(wl, DesignPoint::new(1, 1, w, h))?;
+        let d = runner.verify(steps)?;
+        let pass = d < tol;
+        ok &= pass;
+        println!(
+            "  {:<10} DFG sim vs rust reference : max interior diff {d:.3e}  [{}]",
+            wl.name(),
+            if pass { "ok" } else { "FAIL" }
+        );
+        if wl.name() == "lbm" {
+            match lbm_oracle_diff(&artifacts, w, h, steps) {
+                Ok((d_or, platform)) => {
+                    let pass_or = d_or < tol;
+                    ok &= pass_or;
+                    println!(
+                        "  {:<10} DFG sim vs PJRT oracle    : max fluid diff {d_or:.3e}  [{}] (platform: {platform})",
+                        "lbm",
+                        if pass_or { "ok" } else { "FAIL" }
+                    );
+                }
+                Err(e) if cfg!(feature = "pjrt") => {
+                    // a real backend that fails (missing artifacts,
+                    // runtime error) is a verification failure, as in
+                    // the pre-workload-subsystem verify command
+                    ok = false;
+                    println!("  {:<10} PJRT oracle               : FAILED ({e})", "lbm");
+                }
+                Err(e) => {
+                    // stub backend compiled out: a legitimate skip
+                    println!("  {:<10} PJRT oracle               : skipped ({e})", "lbm");
+                }
+            }
+        }
+    }
+    if ok {
         println!("VERIFY OK");
         Ok(0)
     } else {
@@ -287,11 +364,39 @@ fn cmd_verify(args: &Args) -> Result<i32> {
     }
 }
 
+/// LBM vs the PJRT/Pallas oracle (the non-Rust cross-check).  Errors
+/// (missing artifacts, stub runtime) are reported by the caller as a
+/// skip, not a failure.
+fn lbm_oracle_diff(artifacts: &str, w: u32, h: u32, steps: u32) -> Result<(f32, String)> {
+    // run the oracle first: when the PJRT backend is unavailable (stub
+    // build, missing artifacts) this errors out before the expensive
+    // SPD compile + dataflow simulation is duplicated for nothing
+    let state = LbmState::cavity(h as usize, w as usize);
+    let mut rt = PjrtRuntime::new(artifacts)?;
+    let (mut fdense, attr) = state_to_dense(&state);
+    let artifact = format!("lbm_step_{h}x{w}");
+    for _ in 0..steps {
+        fdense = rt.run_lbm(
+            &artifact,
+            &fdense,
+            &attr,
+            DEFAULT_ONE_TAU,
+            h as usize,
+            w as usize,
+        )?;
+    }
+    let oracle = dense_to_state(&fdense, &state);
+    let runner = LbmRunner::new(LbmDesign::new(1, 1, w, h))?;
+    let hw = runner.run_dataflow(state, DEFAULT_ONE_TAU, steps)?;
+    Ok((fluid_max_diff(&hw, &oracle), rt.platform()))
+}
+
 fn cmd_emit_verilog(args: &Args) -> Result<i32> {
     let (w, h) = args.grid((720, 300))?;
     let n: u32 = args.get("n", 1)?;
     let m: u32 = args.get("m", 1)?;
-    let g = crate::lbm::spd_gen::generate(&LbmDesign::new(n, m, w, h))?;
+    let wl = args.workload()?;
+    let g = wl.generate(&DesignPoint::new(n, m, w, h), dfg::OpLatency::default())?;
     let c = dfg::compile(&g.top, &g.registry)?;
     println!("// ==== IP shim library ====");
     println!("{}", verilog::shim_library());
@@ -332,7 +437,39 @@ mod tests {
     }
 
     #[test]
+    fn workload_flag_resolves_or_errors() {
+        let a = Args::parse(&["--workload".into(), "jacobi".into()]);
+        assert_eq!(a.workload().unwrap().name(), "jacobi");
+        let d = Args::parse(&[]);
+        assert_eq!(d.workload().unwrap().name(), "lbm");
+        let bad = Args::parse(&["--workload".into(), "nope".into()]);
+        assert!(bad.workload().is_err());
+    }
+
+    #[test]
     fn table4_runs() {
         assert_eq!(cmd_table4().unwrap(), 0);
+    }
+
+    #[test]
+    fn workloads_listing_runs() {
+        assert_eq!(cmd_workloads().unwrap(), 0);
+    }
+
+    #[test]
+    fn simulate_runs_each_new_workload() {
+        for wl in ["jacobi", "wave", "blur"] {
+            let code = run(vec![
+                "simulate".into(),
+                "--workload".into(),
+                wl.into(),
+                "--grid".into(),
+                "16x12".into(),
+                "--steps".into(),
+                "4".into(),
+            ])
+            .unwrap();
+            assert_eq!(code, 0, "simulate {wl}");
+        }
     }
 }

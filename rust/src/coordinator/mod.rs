@@ -18,15 +18,16 @@ use std::thread;
 
 use crate::error::{Error, Result};
 use crate::explore::{candidates, evaluate, sort_by_perf_per_watt, Evaluation, ExploreConfig};
-use crate::lbm::spd_gen::LbmDesign;
+use crate::workload::DesignPoint;
 
 pub use metrics::RunMetrics;
 
-/// A DSE job: one design point to evaluate.
+/// A DSE job: one design point to evaluate (for the workload named in
+/// the coordinator's `ExploreConfig`).
 #[derive(Clone, Copy, Debug)]
 pub struct Job {
     pub index: usize,
-    pub design: LbmDesign,
+    pub design: DesignPoint,
 }
 
 /// The coordinator.

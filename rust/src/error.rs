@@ -1,61 +1,86 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls (`thiserror` is not in the
+//! offline crate set).
 
-use thiserror::Error;
+use std::fmt;
 
 pub type Result<T> = std::result::Result<T, Error>;
 
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Tokenizer-level failure (bad character, unterminated field...).
-    #[error("lex error at line {line}: {msg}")]
     Lex { line: usize, msg: String },
 
     /// SPD statement-level parse failure.
-    #[error("parse error at line {line}: {msg}")]
     Parse { line: usize, msg: String },
 
     /// Formula expression parse failure.
-    #[error("expression error in `{expr}`: {msg}")]
     Expr { expr: String, msg: String },
 
     /// Semantic errors during DFG construction (undriven ports,
     /// multiple drivers, unknown modules, ...).
-    #[error("DFG error in core `{core}`: {msg}")]
     Dfg { core: String, msg: String },
 
     /// Hierarchy elaboration errors (recursion, missing modules).
-    #[error("elaboration error: {0}")]
     Elaborate(String),
 
     /// Scheduling / delay-balancing errors (combinational cycles...).
-    #[error("schedule error: {0}")]
     Schedule(String),
 
     /// Simulation configuration or runtime errors.
-    #[error("simulation error: {0}")]
     Sim(String),
 
     /// Resource estimation / device capacity errors.
-    #[error("resource error: {0}")]
     Resource(String),
 
     /// Design-space exploration errors.
-    #[error("explore error: {0}")]
     Explore(String),
 
     /// PJRT runtime errors.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Verilog backend errors.
-    #[error("verilog error: {0}")]
     Verilog(String),
 
-    #[error("I/O error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
-    #[error("XLA error: {0}")]
     Xla(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Lex { line, msg } => write!(f, "lex error at line {line}: {msg}"),
+            Error::Parse { line, msg } => write!(f, "parse error at line {line}: {msg}"),
+            Error::Expr { expr, msg } => write!(f, "expression error in `{expr}`: {msg}"),
+            Error::Dfg { core, msg } => write!(f, "DFG error in core `{core}`: {msg}"),
+            Error::Elaborate(m) => write!(f, "elaboration error: {m}"),
+            Error::Schedule(m) => write!(f, "schedule error: {m}"),
+            Error::Sim(m) => write!(f, "simulation error: {m}"),
+            Error::Resource(m) => write!(f, "resource error: {m}"),
+            Error::Explore(m) => write!(f, "explore error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Verilog(m) => write!(f, "verilog error: {m}"),
+            Error::Io(e) => write!(f, "I/O error: {e}"),
+            Error::Xla(m) => write!(f, "XLA error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl Error {
@@ -70,8 +95,30 @@ impl Error {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_previous_format() {
+        assert_eq!(
+            Error::parse(3, "bad token").to_string(),
+            "parse error at line 3: bad token"
+        );
+        assert_eq!(
+            Error::dfg("core1", "undriven signal `x`").to_string(),
+            "DFG error in core `core1`: undriven signal `x`"
+        );
+        assert_eq!(
+            Error::Explore("unknown workload".into()).to_string(),
+            "explore error: unknown workload"
+        );
     }
 }

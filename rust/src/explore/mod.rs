@@ -6,21 +6,28 @@
 //! runs the timing simulation against the DDR3 model (utilization,
 //! sustained performance), applies the power model, and ranks by
 //! performance and performance-per-watt.
+//!
+//! The explorer is workload-generic: `ExploreConfig::workload` names a
+//! kernel in the [`crate::workload`] registry (LBM, Jacobi, FDTD, 3×3
+//! convolution, ...), and everything the evaluation needs — SPD
+//! generation, stream words per cell, the FLOP census — comes through
+//! the [`StencilKernel`] trait.
 
 use crate::dfg::OpLatency;
 use crate::error::Result;
-use crate::lbm::spd_gen::{generate_with, LbmDesign};
-use crate::lbm::{FLOPS_PER_CELL, WORDS_PER_CELL};
 use crate::power;
 use crate::resource::{
     estimate_hierarchical, CostTable, DesignMeta, ResourceEstimate, STRATIX_V_5SGXEA7,
 };
 use crate::sim::{run_timing, DdrConfig, TimingDesign, TimingReport};
+use crate::workload::{self, DesignPoint, StencilKernel};
 
 /// One evaluated design point (a Table III row).
 #[derive(Clone, Debug)]
 pub struct Evaluation {
-    pub design: LbmDesign,
+    /// workload registry name this row was evaluated for
+    pub workload: &'static str,
+    pub design: DesignPoint,
     pub pe_depth: u32,
     pub resources: ResourceEstimate,
     pub timing: TimingReport,
@@ -33,6 +40,8 @@ pub struct Evaluation {
 /// Exploration parameters.
 #[derive(Clone, Copy, Debug)]
 pub struct ExploreConfig {
+    /// registered workload name (see `workload::names()`)
+    pub workload: &'static str,
     pub grid_w: u32,
     pub grid_h: u32,
     /// candidate spatial widths (must divide grid_w)
@@ -50,6 +59,7 @@ pub struct ExploreConfig {
 impl Default for ExploreConfig {
     fn default() -> Self {
         ExploreConfig {
+            workload: "lbm",
             grid_w: 720,
             grid_h: 300,
             max_n: 4,
@@ -64,13 +74,13 @@ impl Default for ExploreConfig {
 
 /// Candidate (n, m) points: powers of two n dividing the grid width,
 /// m from 1 to max_m.
-pub fn candidates(cfg: &ExploreConfig) -> Vec<LbmDesign> {
+pub fn candidates(cfg: &ExploreConfig) -> Vec<DesignPoint> {
     let mut out = Vec::new();
     let mut n = 1;
     while n <= cfg.max_n {
         if cfg.grid_w % n == 0 {
             for m in 1..=cfg.max_m {
-                out.push(LbmDesign::new(n, m, cfg.grid_w, cfg.grid_h));
+                out.push(DesignPoint::new(n, m, cfg.grid_w, cfg.grid_h));
             }
         }
         n *= 2;
@@ -78,9 +88,18 @@ pub fn candidates(cfg: &ExploreConfig) -> Vec<LbmDesign> {
     out
 }
 
-/// Evaluate a single design point.
-pub fn evaluate(design: &LbmDesign, cfg: &ExploreConfig) -> Result<Evaluation> {
-    let generated = generate_with(design, cfg.latency)?;
+/// Evaluate a single design point for the configured workload.
+pub fn evaluate(design: &DesignPoint, cfg: &ExploreConfig) -> Result<Evaluation> {
+    evaluate_with(workload::get(cfg.workload)?, design, cfg)
+}
+
+/// Evaluate a single design point for an explicit workload.
+pub fn evaluate_with(
+    wl: &dyn StencilKernel,
+    design: &DesignPoint,
+    cfg: &ExploreConfig,
+) -> Result<Evaluation> {
+    let generated = wl.generate(design, cfg.latency)?;
     let meta = DesignMeta { lanes: design.n, pes: design.m };
     let resources = estimate_hierarchical(
         &generated.top,
@@ -93,18 +112,19 @@ pub fn evaluate(design: &LbmDesign, cfg: &ExploreConfig) -> Result<Evaluation> {
 
     let timing_design = TimingDesign {
         lanes: design.n as usize,
-        words_per_cell: WORDS_PER_CELL,
+        words_per_cell: wl.words_per_cell(),
         depth: generated.pe_depth * design.m,
-        cells: design.w as u64 * design.h as u64,
+        cells: design.cells(),
         steps_per_pass: design.m,
-        flops_per_cell_step: FLOPS_PER_CELL,
+        flops_per_cell_step: wl.flops_per_cell(),
     };
     let timing = run_timing(&timing_design, cfg.ddr, cfg.passes);
 
-    let power_w = power::MODEL.predict(resources.core.regs, resources.core.bram_bits);
+    let power_w = power::model().predict(resources.core.regs, resources.core.bram_bits);
     let perf_per_watt = timing.performance_gflops / power_w;
 
     Ok(Evaluation {
+        workload: wl.name(),
         design: *design,
         pe_depth: generated.pe_depth,
         resources: resources.clone(),
@@ -119,9 +139,10 @@ pub fn evaluate(design: &LbmDesign, cfg: &ExploreConfig) -> Result<Evaluation> {
 /// multi-threaded version).  Feasible results are sorted by
 /// performance-per-watt, best first.
 pub fn explore(cfg: &ExploreConfig) -> Result<Vec<Evaluation>> {
+    let wl = workload::get(cfg.workload)?;
     let mut evals = Vec::new();
     for design in candidates(cfg) {
-        let e = evaluate(&design, cfg)?;
+        let e = evaluate_with(wl, &design, cfg)?;
         if e.infeasible.is_none() || cfg.keep_infeasible {
             evals.push(e);
         }
@@ -130,12 +151,22 @@ pub fn explore(cfg: &ExploreConfig) -> Result<Vec<Evaluation>> {
     Ok(evals)
 }
 
-/// Sort feasible-first, by perf/W descending.
+/// Sort feasible-first, by perf/W descending.  Total order: a NaN
+/// perf/W (e.g. from a degenerate power prediction) ranks last within
+/// its feasibility class instead of panicking mid-sort.
 pub fn sort_by_perf_per_watt(evals: &mut [Evaluation]) {
+    fn key(e: &Evaluation) -> f64 {
+        if e.perf_per_watt.is_nan() {
+            f64::NEG_INFINITY
+        } else {
+            e.perf_per_watt
+        }
+    }
     evals.sort_by(|a, b| {
-        (a.infeasible.is_some(), -a.perf_per_watt)
-            .partial_cmp(&(b.infeasible.is_some(), -b.perf_per_watt))
-            .unwrap()
+        a.infeasible
+            .is_some()
+            .cmp(&b.infeasible.is_some())
+            .then_with(|| key(b).total_cmp(&key(a)))
     });
 }
 
@@ -184,8 +215,9 @@ mod tests {
     #[test]
     fn evaluate_produces_consistent_row() {
         let cfg = small_cfg();
-        let d = LbmDesign::new(1, 1, 64, 32);
+        let d = DesignPoint::new(1, 1, 64, 32);
         let e = evaluate(&d, &cfg).unwrap();
+        assert_eq!(e.workload, "lbm");
         assert!(e.infeasible.is_none());
         assert!(e.power_w > 20.0 && e.power_w < 60.0);
         assert!(e.timing.utilization > 0.9); // n=1 never BW-bound
@@ -217,5 +249,58 @@ mod tests {
         assert!(p
             .iter()
             .any(|e| e.design == best.design));
+    }
+
+    #[test]
+    fn unknown_workload_is_reported() {
+        let cfg = ExploreConfig { workload: "no_such_kernel", ..small_cfg() };
+        let err = explore(&cfg).unwrap_err().to_string();
+        assert!(err.contains("unknown workload"), "{err}");
+    }
+
+    #[test]
+    fn sort_survives_nan_perf_per_watt() {
+        // regression: partial_cmp().unwrap() used to panic on NaN
+        let cfg = small_cfg();
+        let mut evals = vec![
+            evaluate(&DesignPoint::new(1, 1, 64, 32), &cfg).unwrap(),
+            evaluate(&DesignPoint::new(1, 2, 64, 32), &cfg).unwrap(),
+            evaluate(&DesignPoint::new(2, 1, 64, 32), &cfg).unwrap(),
+        ];
+        evals[0].perf_per_watt = f64::NAN;
+        evals[2].infeasible = Some("DSPs");
+        sort_by_perf_per_watt(&mut evals);
+        // feasible rows first; the NaN row ranks last among feasible
+        assert!(evals[0].infeasible.is_none());
+        assert!(!evals[0].perf_per_watt.is_nan());
+        assert!(evals[1].perf_per_watt.is_nan());
+        assert!(evals[2].infeasible.is_some());
+    }
+
+    #[test]
+    fn pareto_of_empty_input_is_empty() {
+        assert!(pareto(&[]).is_empty());
+    }
+
+    #[test]
+    fn pareto_of_all_infeasible_is_empty() {
+        let cfg = small_cfg();
+        let mut evals = vec![
+            evaluate(&DesignPoint::new(1, 1, 64, 32), &cfg).unwrap(),
+            evaluate(&DesignPoint::new(2, 1, 64, 32), &cfg).unwrap(),
+        ];
+        for e in &mut evals {
+            e.infeasible = Some("ALMs");
+        }
+        assert!(pareto(&evals).is_empty());
+    }
+
+    #[test]
+    fn pareto_of_single_point_is_that_point() {
+        let cfg = small_cfg();
+        let evals = vec![evaluate(&DesignPoint::new(1, 1, 64, 32), &cfg).unwrap()];
+        let p = pareto(&evals);
+        assert_eq!(p.len(), 1);
+        assert_eq!(p[0].design, evals[0].design);
     }
 }

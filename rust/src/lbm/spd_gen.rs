@@ -20,37 +20,32 @@ use super::{EX, EY, OPP, W, W6_5, W6_6};
 use crate::dfg::{self, OpLatency};
 use crate::error::Result;
 use crate::spd::{Registry, SpdCore};
+use crate::workload::stencil_gen::{self, CascadeSpec};
+use crate::workload::DesignPoint;
 
-/// A point in the paper's design space.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub struct LbmDesign {
-    /// spatial parallelism: pipelines per PE
-    pub n: u32,
-    /// temporal parallelism: cascaded PEs
-    pub m: u32,
-    /// grid width (paper: 720)
-    pub w: u32,
-    /// grid height (paper: 300)
-    pub h: u32,
-}
+/// A point in the paper's design space — now the workload-neutral
+/// [`DesignPoint`]; the old name is kept as an alias for the paper
+/// benches and examples.
+pub use crate::workload::DesignPoint as LbmDesign;
 
-impl LbmDesign {
-    pub fn new(n: u32, m: u32, w: u32, h: u32) -> Self {
-        LbmDesign { n, m, w, h }
-    }
-
+/// LBM-specific naming of the paper's generated cores (kept as
+/// inherent methods so `design.top_name()` in the Table III/IV benches
+/// and examples keeps reading naturally).
+impl DesignPoint {
     /// The paper's six evaluated configurations on the 720x300 grid.
-    pub fn paper_designs() -> Vec<LbmDesign> {
+    pub fn paper_designs() -> Vec<DesignPoint> {
         [(1, 1), (1, 2), (1, 4), (2, 1), (2, 2), (4, 1)]
             .iter()
-            .map(|&(n, m)| LbmDesign::new(n, m, 720, 300))
+            .map(|&(n, m)| DesignPoint::new(n, m, 720, 300))
             .collect()
     }
 
+    /// LBM cascade-top core name, e.g. `LBM_x1_m4_w720`.
     pub fn top_name(&self) -> String {
         format!("LBM_x{}_m{}_w{}", self.n, self.m, self.w)
     }
 
+    /// LBM PE core name, e.g. `PEx1_w720`.
     pub fn pe_name(&self) -> String {
         format!("PEx{}_w{}", self.n, self.w)
     }
@@ -357,107 +352,22 @@ pub fn gen_pe(design: &LbmDesign, calc_depth: u32, bndry_depth: u32) -> String {
     s
 }
 
-/// Cascade top: m PEs chained (Fig. 2c; Figs. 10–12).
+/// Cascade top: m PEs chained (Fig. 2c; Figs. 10–12), emitted through
+/// the workload-generic cascade generator.
 pub fn gen_cascade(design: &LbmDesign, pe_depth: u32) -> String {
-    let (n, m) = (design.n, design.m);
-    let mut s = String::new();
-    let _ = writeln!(
-        s,
-        "Name {};  # {m} cascaded PE(s) x {n} pipeline(s)",
-        design.top_name()
-    );
-    let mut in_ports = Vec::new();
-    for l in 0..n {
-        for i in 0..9 {
-            in_ports.push(format!("if{i}_{l}"));
-        }
-        in_ports.push(format!("ia_{l}"));
-    }
-    in_ports.push("sop".into());
-    in_ports.push("eop".into());
-    let _ = writeln!(s, "Main_In {{Mi::{}}};", in_ports.join(","));
-    let _ = writeln!(s, "Append_Reg {{Mr::one_tau,uwx,uwy}};");
-    let mut out_ports = Vec::new();
-    for l in 0..n {
-        for i in 0..9 {
-            out_ports.push(format!("of{i}_{l}"));
-        }
-        out_ports.push(format!("oa_{l}"));
-    }
-    out_ports.push("sop_o".into());
-    out_ports.push("eop_o".into());
-    let _ = writeln!(s, "Main_Out {{Mo::{}}};", out_ports.join(","));
-
-    // stage k consumes stage k-1's signals
-    let sig = |k: u32, i: usize, l: u32| {
-        if k == 0 {
-            format!("if{i}_{l}")
-        } else {
-            format!("f{i}_{l}_s{k}")
-        }
-    };
-    let asig = |k: u32, l: u32| {
-        if k == 0 {
-            format!("ia_{l}")
-        } else {
-            format!("a_{l}_s{k}")
-        }
-    };
-    let msig = |k: u32, which: &str| {
-        if k == 0 {
-            format!("Mi::{which}")
-        } else {
-            format!("{which}_s{k}")
-        }
-    };
-    for k in 0..m {
-        let mut ins = Vec::new();
-        for l in 0..n {
-            for i in 0..9 {
-                ins.push(sig(k, i, l));
-            }
-            ins.push(asig(k, l));
-        }
-        ins.push(msig(k, "sop"));
-        ins.push(msig(k, "eop"));
-        ins.push("one_tau".into());
-        ins.push("uwx".into());
-        ins.push("uwy".into());
-        let mut outs = Vec::new();
-        for l in 0..n {
-            for i in 0..9 {
-                outs.push(sig(k + 1, i, l));
-            }
-            outs.push(asig(k + 1, l));
-        }
-        outs.push(format!("sop_s{}", k + 1));
-        outs.push(format!("eop_s{}", k + 1));
-        let _ = writeln!(
-            s,
-            "HDL PE{}, {pe_depth}, ({}) = {}({});",
-            k + 1,
-            outs.join(","),
-            design.pe_name(),
-            ins.join(",")
-        );
-    }
-    // route the last stage to the main outputs
-    let mut dsts = Vec::new();
-    let mut srcs = Vec::new();
-    for l in 0..n {
-        for i in 0..9 {
-            dsts.push(format!("of{i}_{l}"));
-            srcs.push(sig(m, i, l));
-        }
-        dsts.push(format!("oa_{l}"));
-        srcs.push(asig(m, l));
-    }
-    dsts.push("sop_o".into());
-    srcs.push(format!("sop_s{m}"));
-    dsts.push("eop_o".into());
-    srcs.push(format!("eop_s{m}"));
-    let _ = writeln!(s, "DRCT ({}) = ({});", dsts.join(","), srcs.join(","));
-    s
+    let mut channels: Vec<(String, String, String)> = (0..9)
+        .map(|i| (format!("f{i}"), format!("if{i}"), format!("of{i}")))
+        .collect();
+    channels.push(("a".into(), "ia".into(), "oa".into()));
+    stencil_gen::gen_cascade(&CascadeSpec {
+        top_name: design.top_name(),
+        pe_name: design.pe_name(),
+        n: design.n,
+        m: design.m,
+        pe_depth,
+        channels,
+        regs: vec!["one_tau".into(), "uwx".into(), "uwy".into()],
+    })
 }
 
 #[cfg(test)]

@@ -7,12 +7,94 @@
 
 use std::collections::HashMap;
 
-use super::reference::LbmState;
-use super::spd_gen::{generate, LbmDesign, LbmGenerated};
-use super::{FLUID, U_LID};
-use crate::dfg::{self, Compiled};
+use super::reference::{self, LbmState};
+use super::spd_gen::{generate, generate_with, LbmDesign, LbmGenerated};
+use super::{FLOPS_PER_CELL, FLUID, U_LID};
+use crate::dfg::{self, Compiled, OpLatency};
 use crate::error::{Error, Result};
 use crate::sim::{self, DataflowInput};
+use crate::workload::{DesignPoint, GeneratedDesign, GridState, StencilKernel};
+
+/// Default relaxation rate (1/tau) used by the workload-registry
+/// scenario and the CLI defaults.
+pub const DEFAULT_ONE_TAU: f32 = 1.0 / 0.6;
+
+/// The D2Q9 LBM case study as a registered [`StencilKernel`] — the
+/// paper's original workload, now just one entry in the registry.
+pub struct LbmWorkload;
+
+impl StencilKernel for LbmWorkload {
+    fn name(&self) -> &'static str {
+        "lbm"
+    }
+
+    fn description(&self) -> &'static str {
+        "D2Q9 lattice-Boltzmann lid-driven cavity (paper SIII, 70a+60m+1d per cell)"
+    }
+
+    fn channel_names(&self) -> Vec<String> {
+        (0..9).map(|i| format!("f{i}")).collect()
+    }
+
+    fn flops_per_cell(&self) -> u64 {
+        FLOPS_PER_CELL
+    }
+
+    fn generate(&self, design: &DesignPoint, lat: OpLatency) -> Result<GeneratedDesign> {
+        let g = generate_with(design, lat)?;
+        Ok(GeneratedDesign {
+            pe_depth: g.pe_depth,
+            sources: vec![
+                ("uLBM_calc".to_string(), g.calc_src),
+                ("uLBM_bndry".to_string(), g.bndry_src),
+                (design.pe_name(), g.pe_src),
+                (design.top_name(), g.top_src),
+            ],
+            top: g.top,
+            registry: g.registry,
+        })
+    }
+
+    fn init_state(&self, h: usize, w: usize) -> GridState {
+        state_to_grid(&LbmState::cavity(h, w))
+    }
+
+    fn reference_step(&self, state: &GridState) -> GridState {
+        let s = grid_to_state(state);
+        state_to_grid(&reference::step(&s, DEFAULT_ONE_TAU, U_LID, 0.0))
+    }
+
+    fn regs(&self) -> HashMap<String, f32> {
+        [
+            ("one_tau".to_string(), DEFAULT_ONE_TAU),
+            ("uwx".to_string(), U_LID),
+            ("uwy".to_string(), 0.0),
+        ]
+        .into_iter()
+        .collect()
+    }
+}
+
+/// View an `LbmState` as the generic channel-major [`GridState`].
+pub fn state_to_grid(s: &LbmState) -> GridState {
+    GridState {
+        h: s.h,
+        w: s.w,
+        channels: s.f.to_vec(),
+        attr: s.attr.clone(),
+    }
+}
+
+/// Rebuild the LBM-typed state from the generic view.
+pub fn grid_to_state(g: &GridState) -> LbmState {
+    assert_eq!(g.channels.len(), 9);
+    LbmState {
+        h: g.h,
+        w: g.w,
+        f: std::array::from_fn(|i| g.channels[i].clone()),
+        attr: g.attr.clone(),
+    }
+}
 
 /// A compiled, runnable LBM design.
 pub struct LbmRunner {
@@ -108,6 +190,9 @@ impl LbmRunner {
 }
 
 /// Pack an LBM state into per-port lane streams for a design top core.
+/// Same layout as the generic `workload::pack_streams` (the `lbm`
+/// channel names are `f0..f8`), implemented directly over `LbmState`
+/// so the hot simulate loop avoids a full-state copy per pass.
 pub fn pack_streams(state: &LbmState, n: usize) -> HashMap<String, Vec<f32>> {
     let cells = state.cells();
     assert_eq!(cells % n, 0, "lanes must divide cell count");
@@ -247,6 +332,33 @@ mod tests {
         let d = fluid_max_diff(&df, &cy);
         assert!(d < 1e-7, "cycle vs dataflow: {d}");
         assert!(cycles > 0);
+    }
+
+    #[test]
+    fn trait_path_equals_lbm_runner() {
+        // LBM driven through the generic workload trait gives exactly
+        // the LbmRunner result (same packing, same compiled design)
+        let design = LbmDesign::new(1, 1, 16, 12);
+        let runner = LbmRunner::new(design).unwrap();
+        let s0 = LbmState::cavity(12, 16);
+        let direct = runner.run_dataflow(s0.clone(), DEFAULT_ONE_TAU, 2).unwrap();
+
+        let generic =
+            crate::workload::WorkloadRunner::new(&LbmWorkload, design).unwrap();
+        let out = generic.run_dataflow(state_to_grid(&s0), 2).unwrap();
+        let d = fluid_max_diff(&direct, &grid_to_state(&out));
+        assert_eq!(d, 0.0, "trait path diverged from LbmRunner: {d}");
+    }
+
+    #[test]
+    fn trait_verify_matches_reference() {
+        let generic = crate::workload::WorkloadRunner::new(
+            &LbmWorkload,
+            LbmDesign::new(1, 1, 16, 12),
+        )
+        .unwrap();
+        let d = generic.verify(4).unwrap();
+        assert!(d < 1e-5, "lbm trait verify diff {d}");
     }
 
     #[test]

@@ -17,9 +17,16 @@
 //! * [`resource`] — Stratix V resource estimation (Table III);
 //! * [`power`] — calibrated board-power model (Table III);
 //! * [`verilog`] — Verilog-HDL emission backend;
-//! * [`explore`] — the (n, m) design-space explorer (§II-B);
-//! * [`lbm`] — the D2Q9 lattice-Boltzmann case study (§III);
-//! * [`runtime`] — PJRT execution of the JAX/Pallas AOT artifacts;
+//! * [`explore`] — the (n, m) design-space explorer (§II-B), generic
+//!   over registered workloads;
+//! * [`workload`] — the stencil-workload subsystem: the
+//!   `StencilKernel` trait, the reusable stencil-to-SPD generator,
+//!   the workload registry, and the `jacobi` / `wave` /
+//!   `blur` kernels;
+//! * [`lbm`] — the D2Q9 lattice-Boltzmann case study (§III),
+//!   registered as the `lbm` workload;
+//! * [`runtime`] — PJRT execution of the JAX/Pallas AOT artifacts
+//!   (stubbed unless built with the `pjrt` feature);
 //! * [`coordinator`] — multi-threaded DSE job orchestration.
 //!
 //! ## Quickstart
@@ -57,6 +64,7 @@ pub mod sim;
 pub mod spd;
 pub mod util;
 pub mod verilog;
+pub mod workload;
 
 pub use error::{Error, Result};
 

@@ -19,8 +19,9 @@
 //! GFlop/sW, temporal-parallel designs beat spatial ones.  Residuals
 //! are recorded in EXPERIMENTS.md (T3-power).
 
+use std::sync::OnceLock;
+
 use crate::util::lstsq::{lstsq, residuals};
-use once_cell::sync::Lazy;
 
 /// One Table III measurement row used for calibration.
 #[derive(Clone, Copy, Debug)]
@@ -73,8 +74,12 @@ pub fn calibrate() -> PowerModel {
     PowerModel { beta: [beta[0], beta[1], beta[2]], max_residual_w }
 }
 
-/// Lazily calibrated global model.
-pub static MODEL: Lazy<PowerModel> = Lazy::new(calibrate);
+/// Lazily calibrated global model (`once_cell` is not in the offline
+/// crate set; a `OnceLock` accessor replaces the `Lazy` static).
+pub fn model() -> &'static PowerModel {
+    static MODEL: OnceLock<PowerModel> = OnceLock::new();
+    MODEL.get_or_init(calibrate)
+}
 
 impl PowerModel {
     /// Predict board power (W) for a design's core resources

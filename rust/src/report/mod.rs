@@ -1,5 +1,6 @@
 //! Table rendering: regenerates the paper's Table III / Table IV rows
-//! from evaluations.
+//! from evaluations.  Rows are labeled with the workload they were
+//! evaluated for (the explorer is workload-generic).
 
 use crate::explore::Evaluation;
 use crate::power::PAPER_TABLE3;
@@ -10,7 +11,7 @@ use crate::util::commas;
 pub fn table3(evals: &[Evaluation]) -> String {
     let mut s = String::new();
     s.push_str(&format!(
-        "{:<22} {:>8} {:>9} {:>12} {:>5} {:>6} {:>8} {:>9} {:>7} {:>9}\n",
+        "{:<26} {:>8} {:>9} {:>12} {:>5} {:>6} {:>8} {:>9} {:>7} {:>9}\n",
         "Device / Modules",
         "ALMs",
         "Regs",
@@ -24,7 +25,7 @@ pub fn table3(evals: &[Evaluation]) -> String {
     ));
     let soc = soc_peripherals();
     s.push_str(&format!(
-        "{:<22} {:>8} {:>9} {:>12} {:>5} {:>6} {:>8} {:>9} {:>7} {:>9}\n",
+        "{:<26} {:>8} {:>9} {:>12} {:>5} {:>6} {:>8} {:>9} {:>7} {:>9}\n",
         "SoC peripherals",
         commas(soc.alms),
         commas(soc.regs),
@@ -39,13 +40,14 @@ pub fn table3(evals: &[Evaluation]) -> String {
     for e in evals {
         let d = e.design;
         let label = format!(
-            "(n,m) = ({}, {}){}",
+            "{} (n,m)=({}, {}){}",
+            e.workload,
             d.n,
             d.m,
             if e.infeasible.is_some() { " !fit" } else { "" }
         );
         s.push_str(&format!(
-            "{:<22} {:>8} {:>9} {:>12} {:>5} {:>6} {:>8.3} {:>9.1} {:>7.1} {:>9.3}\n",
+            "{:<26} {:>8} {:>9} {:>12} {:>5} {:>6} {:>8.3} {:>9.1} {:>7.1} {:>9.3}\n",
             label,
             commas(e.resources.core.alms),
             commas(e.resources.core.regs),

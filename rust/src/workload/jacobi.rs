@@ -1,0 +1,171 @@
+//! `jacobi` — 4-point Jacobi heat diffusion.
+//!
+//! Per interior cell: `u' = 0.25 * ((u_up + u_down) + (u_left +
+//! u_right))`; boundary cells (attribute 1) hold their value through
+//! the boundary multiplexer, giving Dirichlet conditions.  The
+//! canonical scenario is a heat plate: the top edge held at 1.0, the
+//! other edges at 0.0, interior relaxing toward the harmonic solution.
+//!
+//! 4 FP operators per cell per step (3 adders + 1 multiplier).  Stream
+//! interface: 2 words per cell (u + attribute).
+
+use std::fmt::Write as _;
+
+use super::stencil_gen::{self, ChannelSpec, StencilSpec};
+use super::{DesignPoint, GeneratedDesign, GridState, StencilKernel, BOUNDARY};
+use crate::dfg::OpLatency;
+use crate::error::Result;
+
+/// Tap order consumed by the kernel: center, up, down, left, right.
+/// Tap (ex, ey) delivers cell (y - ey, x - ex).
+const TAPS: [(i32, i32); 5] = [(0, 0), (0, 1), (0, -1), (1, 0), (-1, 0)];
+
+pub const SPEC: StencilSpec = StencilSpec {
+    name: "JAC2D",
+    kernel_name: "uJAC2D_kern",
+    channels: &[ChannelSpec { name: "u", taps: &TAPS }],
+    regs: &[],
+};
+
+/// The per-cell kernel core (golden formulation — the software
+/// reference performs the same f32 operations in the same order).
+pub fn gen_kernel() -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "Name uJAC2D_kern;  # 4-point Jacobi, 3a+1m");
+    let _ = writeln!(s, "Main_In {{ki::uc, uu, ud, ul, ur, a}};");
+    let _ = writeln!(s, "Main_Out {{ko::ou}};");
+    let _ = writeln!(s, "EQU Nsv, sv = uu + ud;");
+    let _ = writeln!(s, "EQU Nsh, sh = ul + ur;");
+    let _ = writeln!(s, "EQU Nst, st = sv + sh;");
+    let _ = writeln!(s, "EQU Nav, av = 0.25 * st;");
+    let _ = writeln!(s, "HDL CB, 1, (bsel) = CompEq(a), 1;");
+    let _ = writeln!(s, "HDL MB, 1, (ou) = SyncMux(bsel, uc, av);");
+    s
+}
+
+/// Generate the full core stack for a design point.
+pub fn generate(design: &DesignPoint, lat: OpLatency) -> Result<GeneratedDesign> {
+    stencil_gen::generate_stencil(&SPEC, gen_kernel(), design, lat)
+}
+
+pub struct Jacobi2d;
+
+impl StencilKernel for Jacobi2d {
+    fn name(&self) -> &'static str {
+        "jacobi"
+    }
+
+    fn description(&self) -> &'static str {
+        "4-point Jacobi heat diffusion (Dirichlet plate, 3a+1m per cell)"
+    }
+
+    fn channel_names(&self) -> Vec<String> {
+        vec!["u".to_string()]
+    }
+
+    fn flops_per_cell(&self) -> u64 {
+        4
+    }
+
+    fn generate(&self, design: &DesignPoint, lat: OpLatency) -> Result<GeneratedDesign> {
+        generate(design, lat)
+    }
+
+    fn init_state(&self, h: usize, w: usize) -> GridState {
+        let mut s = GridState::ringed(h, w, 1);
+        // hot top edge, cold elsewhere
+        for x in 0..w {
+            s.channels[0][x] = 1.0;
+        }
+        s
+    }
+
+    fn reference_step(&self, state: &GridState) -> GridState {
+        let (h, w) = (state.h, state.w);
+        let cells = h * w;
+        let u = &state.channels[0];
+        // raster-offset neighbor reads with zero fill: exactly the
+        // Trans2D stream semantics of the generated hardware
+        let get = |i: i64| -> f32 {
+            if i < 0 || i as usize >= cells {
+                0.0
+            } else {
+                u[i as usize]
+            }
+        };
+        let mut out = vec![0.0f32; cells];
+        for idx in 0..cells {
+            if state.attr[idx] == BOUNDARY {
+                out[idx] = u[idx];
+                continue;
+            }
+            let i = idx as i64;
+            let sv = get(i - w as i64) + get(i + w as i64);
+            let sh = get(i - 1) + get(i + 1);
+            let st = sv + sh;
+            out[idx] = 0.25 * st;
+        }
+        GridState { h, w, channels: vec![out], attr: state.attr.clone() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{max_interior_diff, WorkloadRunner};
+
+    #[test]
+    fn kernel_census_is_3a_1m() {
+        let mut reg = crate::spd::Registry::with_library();
+        let core = reg.register_source(&gen_kernel()).unwrap();
+        let c = crate::dfg::compile(&core, &reg).unwrap();
+        let census = c.graph.census();
+        assert_eq!(census.add, 3);
+        assert_eq!(census.mul, 1);
+        assert_eq!(census.div, 0);
+        assert_eq!(census.total(), Jacobi2d.flops_per_cell() as usize);
+    }
+
+    #[test]
+    fn hardware_matches_reference_exactly() {
+        let runner = WorkloadRunner::new(&Jacobi2d, DesignPoint::new(1, 1, 16, 12)).unwrap();
+        let d = runner.verify(8).unwrap();
+        assert!(d < 1e-7, "jacobi hw vs ref diff {d}");
+    }
+
+    #[test]
+    fn lanes_and_cascade_match_reference() {
+        for (n, m) in [(2u32, 1u32), (1, 2), (2, 2), (4, 1)] {
+            let runner =
+                WorkloadRunner::new(&Jacobi2d, DesignPoint::new(n, m, 16, 12)).unwrap();
+            let d = runner.verify(4).unwrap();
+            assert!(d < 1e-6, "jacobi x{n} m{m}: diff {d}");
+        }
+    }
+
+    #[test]
+    fn cycle_engine_matches_dataflow() {
+        let runner = WorkloadRunner::new(&Jacobi2d, DesignPoint::new(2, 2, 8, 8)).unwrap();
+        let s0 = runner.init_state();
+        let df = runner.run_dataflow(s0.clone(), 4).unwrap();
+        let (cy, cycles) = runner.run_cycle_accurate(s0, 4).unwrap();
+        assert!(max_interior_diff(&df, &cy) < 1e-7);
+        assert!(cycles > 0);
+    }
+
+    #[test]
+    fn heat_diffuses_from_hot_edge() {
+        let runner = WorkloadRunner::new(&Jacobi2d, DesignPoint::new(1, 1, 16, 16)).unwrap();
+        let s0 = runner.init_state();
+        let s = runner.run_dataflow(s0, 60).unwrap();
+        // the row below the hot lid warms up; the far row stays cooler
+        let near: f32 = (1..15).map(|x| s.at(0, 1, x)).sum::<f32>() / 14.0;
+        let far: f32 = (1..15).map(|x| s.at(0, 14, x)).sum::<f32>() / 14.0;
+        assert!(near > 0.2, "near {near}");
+        assert!(far < near, "far {far} near {near}");
+        // all interior values bounded by the boundary extremes
+        for idx in 0..s.cells() {
+            assert!(s.channels[0][idx] >= -1e-6 && s.channels[0][idx] <= 1.0 + 1e-6);
+        }
+    }
+}

@@ -1,0 +1,471 @@
+//! Generic stencil-workload subsystem.
+//!
+//! The paper's DSE flow (§II-B/§III) is demonstrated on a single
+//! workload (D2Q9 LBM); this module abstracts what the explorer
+//! actually needs from a kernel so that *any* iterative stencil
+//! computation can drive the (n, m) design space:
+//!
+//! * [`StencilKernel`] — the trait: SPD generation for a design
+//!   point, stream-interface geometry (words per cell), the FLOP
+//!   census, a software reference step, and stream pack/unpack;
+//! * [`DesignPoint`] — a workload-neutral (n, m, w, h) point of the
+//!   paper's design space (spatial lanes × cascaded PEs on a grid);
+//! * [`GridState`] — a channel-major raster grid with a per-cell
+//!   attribute word (0 = interior, 1 = boundary), the common state
+//!   representation streamed through compiled designs;
+//! * [`stencil_gen`] — the reusable stencil-to-SPD generator (shared
+//!   Trans2D line buffers, n-lane PE wrapping, m-PE cascading)
+//!   factored out of the original LBM-only generator;
+//! * [`jacobi`], [`fdtd`], [`smooth`] — three kernels built on the
+//!   generator (4-point heat diffusion, scalar wave propagation, 3×3
+//!   weighted convolution), each with a golden-formulation software
+//!   reference that the compiled hardware matches bit-for-bit;
+//! * the registry ([`all`]/[`get`]/[`names`]) through which `explore`,
+//!   the coordinator and the CLI resolve `--workload NAME`; LBM is
+//!   registered here like any other workload.
+
+pub mod fdtd;
+pub mod jacobi;
+pub mod smooth;
+pub mod stencil_gen;
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::dfg::{self, Compiled, OpLatency};
+use crate::error::{Error, Result};
+use crate::sim::{self, DataflowInput};
+use crate::spd::{Registry, SpdCore};
+
+/// Attribute word of cells the kernel computes.
+pub const INTERIOR: f32 = 0.0;
+/// Attribute word of boundary cells (held by the boundary multiplexer).
+pub const BOUNDARY: f32 = 1.0;
+
+/// A point in the paper's design space: n parallel pipelines per PE
+/// (spatial), m cascaded PEs (temporal), on a w × h grid.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DesignPoint {
+    /// spatial parallelism: pipelines per PE
+    pub n: u32,
+    /// temporal parallelism: cascaded PEs
+    pub m: u32,
+    /// grid width (paper: 720)
+    pub w: u32,
+    /// grid height (paper: 300)
+    pub h: u32,
+}
+
+impl DesignPoint {
+    pub fn new(n: u32, m: u32, w: u32, h: u32) -> Self {
+        DesignPoint { n, m, w, h }
+    }
+
+    pub fn cells(&self) -> u64 {
+        self.w as u64 * self.h as u64
+    }
+}
+
+/// Channel-major grid state in raster order (`channels[c][y*w + x]`),
+/// plus the per-cell attribute word streamed alongside the data.
+#[derive(Clone, Debug)]
+pub struct GridState {
+    pub h: usize,
+    pub w: usize,
+    pub channels: Vec<Vec<f32>>,
+    pub attr: Vec<f32>,
+}
+
+impl GridState {
+    /// All-interior state with a one-cell boundary ring, all channels
+    /// zero-filled.
+    pub fn ringed(h: usize, w: usize, n_channels: usize) -> Self {
+        GridState {
+            h,
+            w,
+            channels: vec![vec![0.0; h * w]; n_channels],
+            attr: ring_attr(h, w),
+        }
+    }
+
+    pub fn cells(&self) -> usize {
+        self.h * self.w
+    }
+
+    /// Value of channel `c` at `(y, x)`.
+    pub fn at(&self, c: usize, y: usize, x: usize) -> f32 {
+        self.channels[c][y * self.w + x]
+    }
+}
+
+/// One-cell boundary ring: edge cells are `BOUNDARY`, the rest
+/// `INTERIOR`.
+pub fn ring_attr(h: usize, w: usize) -> Vec<f32> {
+    let mut a = vec![INTERIOR; h * w];
+    for x in 0..w {
+        a[x] = BOUNDARY;
+        a[(h - 1) * w + x] = BOUNDARY;
+    }
+    for y in 0..h {
+        a[y * w] = BOUNDARY;
+        a[y * w + w - 1] = BOUNDARY;
+    }
+    a
+}
+
+/// Maximum |difference| over interior cells (attribute == `INTERIOR`),
+/// across all channels.
+pub fn max_interior_diff(a: &GridState, b: &GridState) -> f32 {
+    assert_eq!(a.cells(), b.cells());
+    assert_eq!(a.channels.len(), b.channels.len());
+    let mut worst = 0.0f32;
+    for idx in 0..a.cells() {
+        if a.attr[idx] != INTERIOR {
+            continue;
+        }
+        for (ca, cb) in a.channels.iter().zip(&b.channels) {
+            let d = (ca[idx] - cb[idx]).abs();
+            if d.is_nan() {
+                // f32::max would silently drop NaN and report 0.0 for
+                // a numerically diverged design; propagate it instead
+                // so every `diff < tol` check fails
+                return f32::NAN;
+            }
+            worst = worst.max(d);
+        }
+    }
+    worst
+}
+
+/// Generated sources + populated registry for one design point.
+pub struct GeneratedDesign {
+    pub registry: Registry,
+    pub top: Arc<SpdCore>,
+    /// pipeline depth of one PE (the cascade is `m` times deeper)
+    pub pe_depth: u32,
+    /// (core name, SPD source) in registration order
+    pub sources: Vec<(String, String)>,
+}
+
+/// What the (n, m) explorer needs from a kernel.
+///
+/// Implementations are registered in [`all`] and looked up by name via
+/// `ExploreConfig::workload` and the CLI's `--workload` flag.
+pub trait StencilKernel: Send + Sync {
+    /// Registry key (e.g. `jacobi`).
+    fn name(&self) -> &'static str;
+
+    /// One-line description for `spdx workloads`.
+    fn description(&self) -> &'static str;
+
+    /// Streamed value-channel names, in stream-port order.  The
+    /// attribute channel is implicit and always last.
+    fn channel_names(&self) -> Vec<String>;
+
+    /// 32-bit stream words per cell per direction on the memory
+    /// interface (value channels + the attribute word).
+    fn words_per_cell(&self) -> usize {
+        self.channel_names().len() + 1
+    }
+
+    /// FP operators per cell per time step (the Table IV census).
+    fn flops_per_cell(&self) -> u64;
+
+    /// Generate and register all SPD sources for a design point.
+    fn generate(&self, design: &DesignPoint, lat: OpLatency) -> Result<GeneratedDesign>;
+
+    /// The workload's canonical scenario on an h × w grid.
+    fn init_state(&self, h: usize, w: usize) -> GridState;
+
+    /// One software-reference time step (golden formulation: the same
+    /// f32 operations in the same order as the generated hardware).
+    fn reference_step(&self, state: &GridState) -> GridState;
+
+    /// Runtime register values for hardware runs.
+    fn regs(&self) -> HashMap<String, f32> {
+        HashMap::new()
+    }
+
+    /// Pack a state into the top core's input streams (`n` lanes).
+    fn pack(&self, state: &GridState, n: usize) -> HashMap<String, Vec<f32>> {
+        pack_streams(state, &self.channel_names(), n)
+    }
+
+    /// Unpack the top core's output streams into a new state.
+    fn unpack(
+        &self,
+        out: &HashMap<String, Vec<f32>>,
+        prev: &GridState,
+        n: usize,
+    ) -> Result<GridState> {
+        unpack_streams(out, prev, &self.channel_names(), n)
+    }
+}
+
+/// Pack a grid state into per-port lane streams for a generated top
+/// core: cells go out in raster order, `n` lanes wide — cell t is
+/// carried by lane `t % n` at stream position `t / n`.  Port names are
+/// `i<channel>_<lane>`, the attribute is `ia_<lane>`, plus the `sop` /
+/// `eop` frame markers.
+pub fn pack_streams(
+    state: &GridState,
+    names: &[String],
+    n: usize,
+) -> HashMap<String, Vec<f32>> {
+    assert_eq!(state.channels.len(), names.len(), "channel/name count");
+    let cells = state.cells();
+    assert_eq!(cells % n, 0, "lanes must divide cell count");
+    let positions = cells / n;
+    let mut map = HashMap::new();
+    for l in 0..n {
+        for (ch, name) in state.channels.iter().zip(names) {
+            let mut v = Vec::with_capacity(positions);
+            for p in 0..positions {
+                v.push(ch[p * n + l]);
+            }
+            map.insert(format!("i{name}_{l}"), v);
+        }
+        let mut a = Vec::with_capacity(positions);
+        for p in 0..positions {
+            a.push(state.attr[p * n + l]);
+        }
+        map.insert(format!("ia_{l}"), a);
+    }
+    // frame markers: sop on the first group, eop on the last
+    let mut sop = vec![0.0; positions];
+    let mut eop = vec![0.0; positions];
+    sop[0] = 1.0;
+    eop[positions - 1] = 1.0;
+    map.insert("sop".into(), sop);
+    map.insert("eop".into(), eop);
+    map
+}
+
+/// Unpack `o<channel>_<lane>` output streams into a new state (the
+/// attribute is carried through from `prev`).
+pub fn unpack_streams(
+    out: &HashMap<String, Vec<f32>>,
+    prev: &GridState,
+    names: &[String],
+    n: usize,
+) -> Result<GridState> {
+    let cells = prev.cells();
+    let positions = cells / n;
+    let mut channels = vec![vec![0.0f32; cells]; names.len()];
+    for l in 0..n {
+        for (ci, name) in names.iter().enumerate() {
+            let port = format!("o{name}_{l}");
+            let v = out
+                .get(&port)
+                .ok_or_else(|| Error::Sim(format!("missing output {port}")))?;
+            if v.len() != positions {
+                return Err(Error::Sim(format!(
+                    "output {port}: {} positions, want {positions}",
+                    v.len()
+                )));
+            }
+            for (p, &x) in v.iter().enumerate() {
+                channels[ci][p * n + l] = x;
+            }
+        }
+    }
+    Ok(GridState { h: prev.h, w: prev.w, channels, attr: prev.attr.clone() })
+}
+
+/// All registered workloads (the explorer's menu).
+pub fn all() -> &'static [&'static dyn StencilKernel] {
+    static ALL: [&'static dyn StencilKernel; 4] = [
+        &crate::lbm::workload::LbmWorkload,
+        &jacobi::Jacobi2d,
+        &fdtd::Fdtd2d,
+        &smooth::Smooth3x3,
+    ];
+    &ALL
+}
+
+/// Registered workload names, in registry order.
+pub fn names() -> Vec<&'static str> {
+    all().iter().map(|w| w.name()).collect()
+}
+
+/// Look a workload up by name.
+pub fn get(name: &str) -> Result<&'static dyn StencilKernel> {
+    all()
+        .iter()
+        .copied()
+        .find(|w| w.name() == name)
+        .ok_or_else(|| {
+            Error::Explore(format!(
+                "unknown workload `{name}` (available: {})",
+                names().join(", ")
+            ))
+        })
+}
+
+/// A compiled, runnable design for any registered workload — the
+/// generic counterpart of `lbm::workload::LbmRunner`.
+pub struct WorkloadRunner<'w> {
+    pub workload: &'w dyn StencilKernel,
+    pub design: DesignPoint,
+    pub generated: GeneratedDesign,
+    pub compiled: Compiled,
+}
+
+impl<'w> WorkloadRunner<'w> {
+    pub fn new(workload: &'w dyn StencilKernel, design: DesignPoint) -> Result<Self> {
+        let lat = OpLatency::default();
+        let generated = workload.generate(&design, lat)?;
+        let compiled = dfg::compile_with(&generated.top, &generated.registry, lat)?;
+        Ok(WorkloadRunner { workload, design, generated, compiled })
+    }
+
+    /// The workload's canonical scenario on this design's grid.
+    pub fn init_state(&self) -> GridState {
+        self.workload.init_state(self.design.h as usize, self.design.w as usize)
+    }
+
+    fn check_steps(&self, steps: u32) -> Result<()> {
+        if steps % self.design.m != 0 {
+            return Err(Error::Sim(format!(
+                "steps {steps} not a multiple of cascade length {}",
+                self.design.m
+            )));
+        }
+        Ok(())
+    }
+
+    /// One pass through the design (m time steps) in dataflow mode.
+    pub fn run_pass_dataflow(
+        &self,
+        state: &GridState,
+        regs: &HashMap<String, f32>,
+    ) -> Result<GridState> {
+        let streams = self.workload.pack(state, self.design.n as usize);
+        let out = sim::run_dataflow(
+            &self.compiled.graph,
+            &DataflowInput { streams: &streams, regs },
+        )?;
+        self.workload.unpack(&out, state, self.design.n as usize)
+    }
+
+    /// Run `steps` time steps (must be a multiple of m) in dataflow
+    /// mode with the workload's default registers.
+    pub fn run_dataflow(&self, state: GridState, steps: u32) -> Result<GridState> {
+        self.run_dataflow_with(state, steps, &self.workload.regs())
+    }
+
+    pub fn run_dataflow_with(
+        &self,
+        mut state: GridState,
+        steps: u32,
+        regs: &HashMap<String, f32>,
+    ) -> Result<GridState> {
+        self.check_steps(steps)?;
+        for _ in 0..steps / self.design.m {
+            state = self.run_pass_dataflow(&state, regs)?;
+        }
+        Ok(state)
+    }
+
+    /// Run `steps` time steps through the cycle-accurate engine
+    /// (slower; exercises every pipeline register).
+    pub fn run_cycle_accurate(
+        &self,
+        state: GridState,
+        steps: u32,
+    ) -> Result<(GridState, u64)> {
+        self.run_cycle_accurate_with(state, steps, &self.workload.regs())
+    }
+
+    pub fn run_cycle_accurate_with(
+        &self,
+        mut state: GridState,
+        steps: u32,
+        regs: &HashMap<String, f32>,
+    ) -> Result<(GridState, u64)> {
+        self.check_steps(steps)?;
+        let mut engine = sim::Engine::new(&self.compiled.graph, &self.compiled.schedule)?;
+        engine.set_regs(regs)?;
+        for _ in 0..steps / self.design.m {
+            let streams = self.workload.pack(&state, self.design.n as usize);
+            let out = engine.run_frame(&streams)?;
+            state = self.workload.unpack(&out, &state, self.design.n as usize)?;
+        }
+        Ok((state, engine.cycles))
+    }
+
+    /// Run the software reference for `steps` time steps.
+    pub fn reference_run(&self, mut state: GridState, steps: u32) -> GridState {
+        for _ in 0..steps {
+            state = self.workload.reference_step(&state);
+        }
+        state
+    }
+
+    /// Verification: run `steps` steps of the compiled design (dataflow
+    /// semantics) and of the software reference from the canonical
+    /// initial state, return the max |difference| over interior cells.
+    pub fn verify(&self, steps: u32) -> Result<f32> {
+        let s0 = self.init_state();
+        let hw = self.run_dataflow(s0.clone(), steps)?;
+        let sw = self.reference_run(s0, steps);
+        Ok(max_interior_diff(&hw, &sw))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_all_four_workloads() {
+        let names = names();
+        for want in ["lbm", "jacobi", "wave", "blur"] {
+            assert!(names.contains(&want), "missing `{want}` in {names:?}");
+        }
+        assert!(get("lbm").is_ok());
+        let e = get("bogus").unwrap_err().to_string();
+        assert!(e.contains("unknown workload"), "{e}");
+        assert!(e.contains("jacobi"), "{e}");
+    }
+
+    #[test]
+    fn words_per_cell_counts_channels_plus_attr() {
+        assert_eq!(get("lbm").unwrap().words_per_cell(), 10);
+        assert_eq!(get("jacobi").unwrap().words_per_cell(), 2);
+        assert_eq!(get("wave").unwrap().words_per_cell(), 3);
+        assert_eq!(get("blur").unwrap().words_per_cell(), 2);
+    }
+
+    #[test]
+    fn ring_attr_marks_edges_only() {
+        let a = ring_attr(4, 5);
+        let interior: usize = a.iter().filter(|&&x| x == INTERIOR).count();
+        assert_eq!(interior, 2 * 3); // (4-2) * (5-2)... rows 1..3 x cols 1..4
+        assert_eq!(a[0], BOUNDARY);
+        assert_eq!(a[1 * 5 + 1], INTERIOR);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_generic() {
+        let mut s = GridState::ringed(4, 8, 2);
+        for (ci, ch) in s.channels.iter_mut().enumerate() {
+            for (i, v) in ch.iter_mut().enumerate() {
+                *v = (ci * 100 + i) as f32;
+            }
+        }
+        let names: Vec<String> = vec!["p".into(), "q".into()];
+        for n in [1usize, 2, 4] {
+            let packed = pack_streams(&s, &names, n);
+            assert_eq!(packed["sop"][0], 1.0);
+            // rename i* -> o* to reuse unpack
+            let renamed: HashMap<String, Vec<f32>> = packed
+                .iter()
+                .filter(|(k, _)| k.starts_with("ip") || k.starts_with("iq"))
+                .map(|(k, v)| (format!("o{}", &k[1..]), v.clone()))
+                .collect();
+            let back = unpack_streams(&renamed, &s, &names, n).unwrap();
+            assert_eq!(back.channels, s.channels);
+        }
+    }
+}

@@ -1,0 +1,214 @@
+//! `blur` — 3×3 weighted convolution (Gaussian-binomial blur).
+//!
+//! Per interior cell: the binomial kernel `1/16 · [1 2 1; 2 4 2; 1 2 1]`
+//! applied over the full 3×3 neighborhood; boundary cells (attribute 1)
+//! pass their center value through.  All nine weights are exact binary
+//! fractions, so the hardware and the software reference agree to the
+//! last bit.  The canonical scenario is a deterministic high-frequency
+//! pattern being blurred.
+//!
+//! 17 FP operators per cell per step (8 adders + 9 multipliers).
+//! Stream interface: 2 words per cell (v + attribute).
+
+use std::fmt::Write as _;
+
+use super::stencil_gen::{self, ChannelSpec, StencilSpec};
+use super::{DesignPoint, GeneratedDesign, GridState, StencilKernel, BOUNDARY};
+use crate::dfg::OpLatency;
+use crate::error::Result;
+
+/// Neighborhood order k = 0..9 over (dy, dx) row-major; the Trans2D
+/// tap reading cell (y + dy, x + dx) is (-dx, -dy).
+const OFFSETS: [(i32, i32); 9] = [
+    (-1, -1), (-1, 0), (-1, 1),
+    (0, -1), (0, 0), (0, 1),
+    (1, -1), (1, 0), (1, 1),
+];
+
+const TAPS: [(i32, i32); 9] = [
+    (1, 1), (0, 1), (-1, 1),
+    (1, 0), (0, 0), (-1, 0),
+    (1, -1), (0, -1), (-1, -1),
+];
+
+/// Binomial weights over `OFFSETS` — all exact in f32.
+const WEIGHTS: [f32; 9] = [
+    0.0625, 0.125, 0.0625,
+    0.125, 0.25, 0.125,
+    0.0625, 0.125, 0.0625,
+];
+
+pub const SPEC: StencilSpec = StencilSpec {
+    name: "SMOOTH3",
+    kernel_name: "uSMOOTH3_kern",
+    channels: &[ChannelSpec { name: "v", taps: &TAPS }],
+    regs: &[],
+};
+
+/// The per-cell kernel core (golden formulation: weighted products in
+/// neighborhood order, then a left-to-right accumulation chain).
+pub fn gen_kernel() -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "Name uSMOOTH3_kern;  # 3x3 binomial blur, 8a+9m");
+    let vs: Vec<String> = (0..9).map(|k| format!("v{k}")).collect();
+    let _ = writeln!(s, "Main_In {{ki::{}, a}};", vs.join(", "));
+    let _ = writeln!(s, "Main_Out {{ko::ov}};");
+    for (k, wk) in WEIGHTS.iter().enumerate() {
+        let _ = writeln!(s, "Param k{k} = {wk:?};");
+    }
+    for k in 0..9 {
+        let _ = writeln!(s, "EQU Nm{k}, m{k} = k{k} * v{k};");
+    }
+    let _ = writeln!(s, "EQU Ns1, s1 = m0 + m1;");
+    for k in 2..9 {
+        let _ = writeln!(s, "EQU Ns{k}, s{k} = s{} + m{k};", k - 1);
+    }
+    let _ = writeln!(s, "HDL CB, 1, (bsel) = CompEq(a), 1;");
+    let _ = writeln!(s, "HDL MB, 1, (ov) = SyncMux(bsel, v4, s8);");
+    s
+}
+
+/// Generate the full core stack for a design point.
+pub fn generate(design: &DesignPoint, lat: OpLatency) -> Result<GeneratedDesign> {
+    stencil_gen::generate_stencil(&SPEC, gen_kernel(), design, lat)
+}
+
+pub struct Smooth3x3;
+
+impl StencilKernel for Smooth3x3 {
+    fn name(&self) -> &'static str {
+        "blur"
+    }
+
+    fn description(&self) -> &'static str {
+        "3x3 binomial convolution blur (8a+9m per cell)"
+    }
+
+    fn channel_names(&self) -> Vec<String> {
+        vec!["v".to_string()]
+    }
+
+    fn flops_per_cell(&self) -> u64 {
+        17
+    }
+
+    fn generate(&self, design: &DesignPoint, lat: OpLatency) -> Result<GeneratedDesign> {
+        generate(design, lat)
+    }
+
+    fn init_state(&self, h: usize, w: usize) -> GridState {
+        let mut s = GridState::ringed(h, w, 1);
+        // deterministic high-frequency pattern on the interior
+        for y in 0..h {
+            for x in 0..w {
+                let idx = y * w + x;
+                if s.attr[idx] == BOUNDARY {
+                    continue;
+                }
+                s.channels[0][idx] = ((x * 7 + y * 13) % 17) as f32 / 16.0;
+            }
+        }
+        s
+    }
+
+    fn reference_step(&self, state: &GridState) -> GridState {
+        let (h, w) = (state.h, state.w);
+        let cells = h * w;
+        let v = &state.channels[0];
+        let get = |i: i64| -> f32 {
+            if i < 0 || i as usize >= cells {
+                0.0
+            } else {
+                v[i as usize]
+            }
+        };
+        let mut out = vec![0.0f32; cells];
+        for idx in 0..cells {
+            if state.attr[idx] == BOUNDARY {
+                out[idx] = v[idx];
+                continue;
+            }
+            let i = idx as i64;
+            let mut m = [0.0f32; 9];
+            for (k, &(dy, dx)) in OFFSETS.iter().enumerate() {
+                m[k] = WEIGHTS[k] * get(i + dy as i64 * w as i64 + dx as i64);
+            }
+            let mut acc = m[0] + m[1];
+            for mk in &m[2..] {
+                acc += *mk;
+            }
+            out[idx] = acc;
+        }
+        GridState { h, w, channels: vec![out], attr: state.attr.clone() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::WorkloadRunner;
+
+    #[test]
+    fn weights_sum_to_one_and_are_exact() {
+        let sum: f32 = WEIGHTS.iter().sum();
+        assert_eq!(sum, 1.0);
+        for w in WEIGHTS {
+            // exact binary fractions survive the f64 -> f32 Param path
+            assert_eq!(w as f64 as f32, w);
+        }
+    }
+
+    #[test]
+    fn taps_invert_offsets() {
+        for (k, &(dy, dx)) in OFFSETS.iter().enumerate() {
+            assert_eq!(TAPS[k], (-dx, -dy), "tap {k}");
+        }
+    }
+
+    #[test]
+    fn kernel_census_is_8a_9m() {
+        let mut reg = crate::spd::Registry::with_library();
+        let core = reg.register_source(&gen_kernel()).unwrap();
+        let c = crate::dfg::compile(&core, &reg).unwrap();
+        let census = c.graph.census();
+        assert_eq!(census.add, 8);
+        assert_eq!(census.mul, 9);
+        assert_eq!(census.total(), Smooth3x3.flops_per_cell() as usize);
+    }
+
+    #[test]
+    fn hardware_matches_reference() {
+        let runner =
+            WorkloadRunner::new(&Smooth3x3, DesignPoint::new(1, 1, 16, 12)).unwrap();
+        let d = runner.verify(6).unwrap();
+        assert!(d < 1e-6, "smooth hw vs ref diff {d}");
+    }
+
+    #[test]
+    fn lanes_and_cascade_match_reference() {
+        for (n, m) in [(2u32, 1u32), (1, 2), (4, 1)] {
+            let runner =
+                WorkloadRunner::new(&Smooth3x3, DesignPoint::new(n, m, 16, 12)).unwrap();
+            let d = runner.verify(4).unwrap();
+            assert!(d < 1e-6, "smooth x{n} m{m}: diff {d}");
+        }
+    }
+
+    #[test]
+    fn blur_reduces_total_variation() {
+        let runner =
+            WorkloadRunner::new(&Smooth3x3, DesignPoint::new(1, 1, 16, 16)).unwrap();
+        let tv = |s: &GridState| -> f32 {
+            let mut t = 0.0;
+            for y in 1..15 {
+                for x in 1..14 {
+                    t += (s.at(0, y, x + 1) - s.at(0, y, x)).abs();
+                }
+            }
+            t
+        };
+        let s0 = runner.init_state();
+        let s = runner.run_dataflow(s0.clone(), 3).unwrap();
+        assert!(tv(&s) < tv(&s0) * 0.8, "blur should smooth the pattern");
+    }
+}

@@ -1,0 +1,380 @@
+//! Reusable stencil-to-SPD generation: the structural boilerplate that
+//! was originally embedded in the LBM-only generator
+//! (`lbm/spd_gen.rs`), factored out so any point kernel over a
+//! translated neighborhood can be wrapped into the paper's hardware
+//! shapes:
+//!
+//! * [`gen_pe`] — a processing element: shared Trans2D line buffers
+//!   per streamed channel (one buffer serves all n lanes, Fig. 2b),
+//!   feeding n point-kernel pipelines, with the attribute word and the
+//!   sop/eop frame markers routed through;
+//! * [`gen_cascade`] — m PEs chained in time (Fig. 2c), workload-
+//!   agnostic over the per-lane channel port lists (the LBM cascade is
+//!   generated through this same function);
+//! * [`generate_stencil`] — the kernel-core → PE → cascade pipeline
+//!   with depth verification, producing a [`GeneratedDesign`].
+
+use std::fmt::Write as _;
+use std::sync::Arc;
+
+use super::{DesignPoint, GeneratedDesign};
+use crate::dfg::{self, OpLatency};
+use crate::error::{Error, Result};
+use crate::spd::{Registry, SpdCore};
+
+/// One streamed value channel of a stencil kernel.
+pub struct ChannelSpec {
+    /// channel name; stream ports are `i<name>_<lane>` / `o<name>_<lane>`
+    pub name: &'static str,
+    /// Trans2D taps `(ex, ey)` consumed by the kernel, in kernel port
+    /// order: tap `(ex, ey)` delivers the value of cell
+    /// `(y - ey, x - ex)` (out(t) = in(t - (ey*W + ex))).  A lone
+    /// center tap `(0, 0)` bypasses the line buffer entirely.
+    pub taps: &'static [(i32, i32)],
+}
+
+/// Structural description of a point-kernel stencil workload.
+pub struct StencilSpec {
+    /// short tag used in generated core names, e.g. `JAC2D`
+    pub name: &'static str,
+    /// name of the per-cell kernel core, e.g. `uJAC2D_kern`.  The
+    /// kernel's `Main_In` must list, in order: every channel's taps
+    /// (channel-major, tap order), then the cell's attribute word; its
+    /// `Append_Reg` must match `regs`; its `Main_Out` must produce one
+    /// output per channel, in channel order.
+    pub kernel_name: &'static str,
+    pub channels: &'static [ChannelSpec],
+    /// runtime registers threaded from the top core into every PE
+    pub regs: &'static [&'static str],
+}
+
+impl StencilSpec {
+    pub fn pe_name(&self, d: &DesignPoint) -> String {
+        format!("{}_PEx{}_w{}", self.name, d.n, d.w)
+    }
+
+    pub fn top_name(&self, d: &DesignPoint) -> String {
+        format!("{}_x{}_m{}_w{}", self.name, d.n, d.m, d.w)
+    }
+}
+
+/// True when the channel's lone tap is the center: the line buffer is
+/// bypassed and the raw lane input feeds the kernel (delay balancing
+/// aligns it with the buffered channels).
+fn bypassed(ch: &ChannelSpec) -> bool {
+    ch.taps.len() == 1 && ch.taps[0] == (0, 0)
+}
+
+/// Generate the full core stack (kernel → PE → cascade) for a design
+/// point, registering everything into a fresh library registry.
+pub fn generate_stencil(
+    spec: &StencilSpec,
+    kernel_src: String,
+    design: &DesignPoint,
+    lat: OpLatency,
+) -> Result<GeneratedDesign> {
+    if design.n == 0 || design.m == 0 || design.w == 0 || design.h == 0 {
+        return Err(Error::Explore(format!(
+            "bad design point (n={}, m={}, grid {}x{})",
+            design.n, design.m, design.w, design.h
+        )));
+    }
+    if design.w % design.n != 0 {
+        return Err(Error::Explore(format!(
+            "spatial width n={} must divide grid width {} (Trans2D lane sharing)",
+            design.n, design.w
+        )));
+    }
+    let mut registry = Registry::with_library();
+
+    let kern = registry.register_source(&kernel_src)?;
+    let kern_depth = depth_of(&kern, &registry, lat)?;
+
+    let pe_src = gen_pe(spec, design, kern_depth);
+    let pe = registry.register_source(&pe_src)?;
+    let pe_depth = depth_of(&pe, &registry, lat)?;
+
+    let top_src = gen_cascade(&cascade_spec(spec, design, pe_depth));
+    let top = registry.register_source(&top_src)?;
+
+    Ok(GeneratedDesign {
+        registry,
+        top,
+        pe_depth,
+        sources: vec![
+            (spec.kernel_name.to_string(), kernel_src),
+            (spec.pe_name(design), pe_src),
+            (spec.top_name(design), top_src),
+        ],
+    })
+}
+
+/// Modular pipeline depth of a registered core.
+pub fn depth_of(core: &Arc<SpdCore>, registry: &Registry, lat: OpLatency) -> Result<u32> {
+    let compiled = dfg::compile_with(core, registry, lat)?;
+    Ok(compiled.depth())
+}
+
+/// PE core: n kernel pipelines around shared Trans2D buffers.
+pub fn gen_pe(spec: &StencilSpec, design: &DesignPoint, kern_depth: u32) -> String {
+    let (n, w) = (design.n, design.w);
+    let trans_delay = w / n + 2;
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "Name {};  # {} PE: {n} pipeline(s), grid width {w}",
+        spec.pe_name(design),
+        spec.name
+    );
+    let _ = writeln!(
+        s,
+        "# stage depths: translation {trans_delay}, kernel {kern_depth}"
+    );
+
+    let mut in_ports = Vec::new();
+    for l in 0..n {
+        for ch in spec.channels {
+            in_ports.push(format!("{}_{l}", ch.name));
+        }
+        in_ports.push(format!("a_{l}"));
+    }
+    in_ports.push("sop".into());
+    in_ports.push("eop".into());
+    let _ = writeln!(s, "Main_In {{Mi::{}}};", in_ports.join(","));
+    if !spec.regs.is_empty() {
+        let _ = writeln!(s, "Append_Reg {{Mr::{}}};", spec.regs.join(","));
+    }
+    let mut out_ports = Vec::new();
+    for l in 0..n {
+        for ch in spec.channels {
+            out_ports.push(format!("o{}_{l}", ch.name));
+        }
+        out_ports.push(format!("ao_{l}"));
+    }
+    out_ports.push("sop_o".into());
+    out_ports.push("eop_o".into());
+    let _ = writeln!(s, "Main_Out {{Mo::{}}};", out_ports.join(","));
+
+    // one shared translation buffer per tapped channel (the n lanes
+    // share each buffer, Fig. 2b); outputs are tap-major, lane-minor
+    for ch in spec.channels {
+        if bypassed(ch) {
+            continue;
+        }
+        let ins: Vec<String> = (0..n).map(|l| format!("{}_{l}", ch.name)).collect();
+        let mut outs = Vec::new();
+        for k in 0..ch.taps.len() {
+            for l in 0..n {
+                outs.push(format!("{}t{k}_{l}", ch.name));
+            }
+        }
+        let taps: Vec<String> =
+            ch.taps.iter().map(|&(ex, ey)| format!("{ex}, {ey}")).collect();
+        let _ = writeln!(
+            s,
+            "HDL TR{}, {trans_delay}, ({}) = Trans2D({}), {w}, {n}, {};",
+            ch.name.to_uppercase(),
+            outs.join(","),
+            ins.join(","),
+            taps.join(", ")
+        );
+    }
+
+    // kernel pipeline per lane
+    for l in 0..n {
+        let mut ins = Vec::new();
+        for ch in spec.channels {
+            if bypassed(ch) {
+                ins.push(format!("{}_{l}", ch.name));
+            } else {
+                for k in 0..ch.taps.len() {
+                    ins.push(format!("{}t{k}_{l}", ch.name));
+                }
+            }
+        }
+        ins.push(format!("a_{l}"));
+        ins.extend(spec.regs.iter().map(|r| r.to_string()));
+        let outs: Vec<String> = spec
+            .channels
+            .iter()
+            .map(|ch| format!("o{}_{l}", ch.name))
+            .collect();
+        let _ = writeln!(
+            s,
+            "HDL KERN{l}, {kern_depth}, ({}) = {}({});",
+            outs.join(","),
+            spec.kernel_name,
+            ins.join(",")
+        );
+        let _ = writeln!(s, "DRCT (ao_{l}) = (Mi::a_{l});");
+    }
+    let _ = writeln!(s, "DRCT (sop_o, eop_o) = (Mi::sop, Mi::eop);");
+    s
+}
+
+/// Port-name plan for a cascade top core.
+pub struct CascadeSpec {
+    pub top_name: String,
+    pub pe_name: String,
+    pub n: u32,
+    pub m: u32,
+    pub pe_depth: u32,
+    /// per channel: (pe input, top input, top output) port base names;
+    /// per-lane ports are `<base>_<lane>`
+    pub channels: Vec<(String, String, String)>,
+    pub regs: Vec<String>,
+}
+
+fn cascade_spec(spec: &StencilSpec, design: &DesignPoint, pe_depth: u32) -> CascadeSpec {
+    let mut channels: Vec<(String, String, String)> = spec
+        .channels
+        .iter()
+        .map(|ch| {
+            (
+                ch.name.to_string(),
+                format!("i{}", ch.name),
+                format!("o{}", ch.name),
+            )
+        })
+        .collect();
+    channels.push(("a".into(), "ia".into(), "oa".into()));
+    CascadeSpec {
+        top_name: spec.top_name(design),
+        pe_name: spec.pe_name(design),
+        n: design.n,
+        m: design.m,
+        pe_depth,
+        channels,
+        regs: spec.regs.iter().map(|r| r.to_string()).collect(),
+    }
+}
+
+/// Cascade top: m PEs chained (Fig. 2c).  Workload-agnostic — the LBM
+/// cascade is generated through this same function.
+pub fn gen_cascade(spec: &CascadeSpec) -> String {
+    let (n, m, pe_depth) = (spec.n, spec.m, spec.pe_depth);
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "Name {};  # {m} cascaded PE(s) x {n} pipeline(s)",
+        spec.top_name
+    );
+    let mut in_ports = Vec::new();
+    for l in 0..n {
+        for (_, top_in, _) in &spec.channels {
+            in_ports.push(format!("{top_in}_{l}"));
+        }
+    }
+    in_ports.push("sop".into());
+    in_ports.push("eop".into());
+    let _ = writeln!(s, "Main_In {{Mi::{}}};", in_ports.join(","));
+    if !spec.regs.is_empty() {
+        let _ = writeln!(s, "Append_Reg {{Mr::{}}};", spec.regs.join(","));
+    }
+    let mut out_ports = Vec::new();
+    for l in 0..n {
+        for (_, _, top_out) in &spec.channels {
+            out_ports.push(format!("{top_out}_{l}"));
+        }
+    }
+    out_ports.push("sop_o".into());
+    out_ports.push("eop_o".into());
+    let _ = writeln!(s, "Main_Out {{Mo::{}}};", out_ports.join(","));
+
+    // stage k consumes stage k-1's signals
+    let sig = |k: u32, ci: usize, l: u32| {
+        let (pe_in, top_in, _) = &spec.channels[ci];
+        if k == 0 {
+            format!("{top_in}_{l}")
+        } else {
+            format!("{pe_in}_{l}_s{k}")
+        }
+    };
+    let msig = |k: u32, which: &str| {
+        if k == 0 {
+            format!("Mi::{which}")
+        } else {
+            format!("{which}_s{k}")
+        }
+    };
+    for k in 0..m {
+        let mut ins = Vec::new();
+        for l in 0..n {
+            for ci in 0..spec.channels.len() {
+                ins.push(sig(k, ci, l));
+            }
+        }
+        ins.push(msig(k, "sop"));
+        ins.push(msig(k, "eop"));
+        ins.extend(spec.regs.iter().cloned());
+        let mut outs = Vec::new();
+        for l in 0..n {
+            for ci in 0..spec.channels.len() {
+                outs.push(sig(k + 1, ci, l));
+            }
+        }
+        outs.push(format!("sop_s{}", k + 1));
+        outs.push(format!("eop_s{}", k + 1));
+        let _ = writeln!(
+            s,
+            "HDL PE{}, {pe_depth}, ({}) = {}({});",
+            k + 1,
+            outs.join(","),
+            spec.pe_name,
+            ins.join(",")
+        );
+    }
+    // route the last stage to the main outputs
+    let mut dsts = Vec::new();
+    let mut srcs = Vec::new();
+    for l in 0..n {
+        for (ci, (_, _, top_out)) in spec.channels.iter().enumerate() {
+            dsts.push(format!("{top_out}_{l}"));
+            srcs.push(sig(m, ci, l));
+        }
+    }
+    dsts.push("sop_o".into());
+    srcs.push(format!("sop_s{m}"));
+    dsts.push("eop_o".into());
+    srcs.push(format!("eop_s{m}"));
+    let _ = writeln!(s, "DRCT ({}) = ({});", dsts.join(","), srcs.join(","));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::jacobi;
+
+    #[test]
+    fn non_dividing_lane_count_is_rejected() {
+        let d = DesignPoint::new(3, 1, 16, 8);
+        let err = jacobi::generate(&d, OpLatency::default()).unwrap_err();
+        assert!(err.to_string().contains("divide"), "{err}");
+    }
+
+    #[test]
+    fn pe_and_cascade_compile_for_all_shapes() {
+        for (n, m) in [(1u32, 1u32), (2, 1), (1, 2), (2, 2), (4, 1)] {
+            let d = DesignPoint::new(n, m, 16, 8);
+            let g = jacobi::generate(&d, OpLatency::default()).unwrap();
+            let c = dfg::compile(&g.top, &g.registry).unwrap();
+            // m cascaded PEs are m PE-depths deep
+            assert_eq!(c.depth(), m * g.pe_depth, "({n},{m})");
+            // census scales with n*m: jacobi is 3 add + 1 mul per lane
+            let census = c.graph.census();
+            assert_eq!(census.add, (3 * n * m) as usize, "({n},{m}) adds");
+            assert_eq!(census.mul, (n * m) as usize, "({n},{m}) muls");
+        }
+    }
+
+    #[test]
+    fn trans2d_latency_drives_pe_depth() {
+        // wider lanes shorten the shared line buffer: PE depth strictly
+        // decreases from n=1 to n=4 on the same grid
+        let lat = OpLatency::default();
+        let d1 = jacobi::generate(&DesignPoint::new(1, 1, 32, 8), lat).unwrap();
+        let d4 = jacobi::generate(&DesignPoint::new(4, 1, 32, 8), lat).unwrap();
+        assert!(d1.pe_depth > d4.pe_depth);
+    }
+}

@@ -1,0 +1,187 @@
+//! Integration tests for the stencil-workload subsystem: every
+//! registered workload must drive the full (n, m) explorer, and each
+//! compiled kernel must match its software reference.
+
+use spdx::explore::{candidates, evaluate, explore, pareto, ExploreConfig};
+use spdx::workload::{self, DesignPoint, WorkloadRunner};
+
+fn small_cfg(workload: &'static str) -> ExploreConfig {
+    ExploreConfig {
+        workload,
+        grid_w: 64,
+        grid_h: 32,
+        max_n: 2,
+        max_m: 2,
+        passes: 2,
+        keep_infeasible: true,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn explore_ranks_every_registered_workload() {
+    for wl in workload::all() {
+        let cfg = small_cfg(wl.name());
+        let evals = explore(&cfg).unwrap();
+        assert_eq!(evals.len(), 4, "{}: 4 candidates (n,m in {{1,2}}^2)", wl.name());
+
+        // at least one feasible design, feasible rows first
+        let n_feasible = evals.iter().filter(|e| e.infeasible.is_none()).count();
+        assert!(n_feasible > 0, "{}: no feasible design", wl.name());
+        for pair in evals.windows(2) {
+            let (a, b) = (&pair[0], &pair[1]);
+            assert!(
+                !(a.infeasible.is_some() && b.infeasible.is_none()),
+                "{}: infeasible row ranked above feasible",
+                wl.name()
+            );
+            if a.infeasible.is_none() && b.infeasible.is_none() {
+                assert!(
+                    a.perf_per_watt >= b.perf_per_watt,
+                    "{}: ranking not sorted by perf/W",
+                    wl.name()
+                );
+            }
+        }
+
+        // rows are consistent
+        for e in &evals {
+            assert_eq!(e.workload, wl.name());
+            assert!(e.pe_depth > 0);
+            assert!(e.power_w > 0.0);
+            assert!(e.timing.performance_gflops > 0.0);
+            assert!(e.timing.utilization > 0.0 && e.timing.utilization <= 1.0);
+        }
+
+        // pareto frontier: non-empty subset of feasible rows containing
+        // the perf/W winner
+        let p = pareto(&evals);
+        assert!(!p.is_empty(), "{}: empty pareto set", wl.name());
+        assert!(p.iter().all(|e| e.infeasible.is_none()));
+        let best = evals.iter().find(|e| e.infeasible.is_none()).unwrap();
+        assert!(
+            p.iter().any(|e| e.design == best.design),
+            "{}: perf/W winner dominated",
+            wl.name()
+        );
+    }
+}
+
+#[test]
+fn every_new_kernel_matches_its_reference() {
+    // the acceptance check: compiled-sim output vs software reference
+    // within f32 tolerance on a small grid, for lanes and cascades
+    for name in ["jacobi", "wave", "blur"] {
+        let wl = workload::get(name).unwrap();
+        for (n, m) in [(1u32, 1u32), (2, 2)] {
+            let runner = WorkloadRunner::new(wl, DesignPoint::new(n, m, 16, 12)).unwrap();
+            let d = runner.verify(4).unwrap();
+            assert!(d < 1e-6, "{name} x{n} m{m}: hw vs ref diff {d}");
+        }
+    }
+}
+
+#[test]
+fn lbm_through_the_trait_reproduces_table3_ranking() {
+    // the seed's headline: temporal (1,2) beats spatial (2,1) at equal
+    // n*m — unchanged now that LBM runs through the workload trait
+    let cfg = ExploreConfig { keep_infeasible: false, ..small_cfg("lbm") };
+    let evals = explore(&cfg).unwrap();
+    let pos = |n: u32, m: u32| {
+        evals
+            .iter()
+            .position(|e| e.design.n == n && e.design.m == m)
+            .unwrap()
+    };
+    assert!(pos(1, 2) < pos(2, 1), "temporal must rank above spatial");
+    // and per-row numbers still look like the seed's
+    let e = evaluate(&DesignPoint::new(1, 1, 64, 32), &cfg).unwrap();
+    assert_eq!(e.resources.core.dsps, 48);
+    assert!(e.timing.utilization > 0.9);
+}
+
+#[test]
+fn workload_words_and_flops_flow_into_timing() {
+    // the same (n, m, grid) point demands less bandwidth for a 2-word
+    // kernel than for the 10-word LBM, and peaks at its own flop rate
+    let d = DesignPoint::new(1, 1, 64, 32);
+    let lbm = evaluate(&d, &small_cfg("lbm")).unwrap();
+    let jac = evaluate(&d, &small_cfg("jacobi")).unwrap();
+    assert!(jac.timing.demand_gbps < lbm.timing.demand_gbps / 4.0);
+    assert!(jac.timing.peak_gflops < lbm.timing.peak_gflops);
+    // jacobi peak = n*m*4 flops * 0.18 GHz
+    assert!((jac.timing.peak_gflops - 4.0 * 0.18).abs() < 1e-9);
+}
+
+#[test]
+fn candidates_skip_non_dividing_lane_counts() {
+    // grid width 30: n=4 does not divide it, n=1/2 do
+    let cfg = ExploreConfig { grid_w: 30, grid_h: 10, max_n: 4, max_m: 2, ..small_cfg("jacobi") };
+    let c = candidates(&cfg);
+    assert_eq!(c.len(), 4);
+    assert!(c.iter().all(|d| d.n != 4));
+    assert!(c.iter().all(|d| d.w == 30 && d.h == 10));
+}
+
+#[test]
+fn candidates_generate_for_every_new_workload() {
+    // every candidate the explorer proposes must actually generate and
+    // compile for every new kernel (lane counts divide the grid width)
+    for name in ["jacobi", "wave", "blur"] {
+        let wl = workload::get(name).unwrap();
+        let cfg = small_cfg(name);
+        let c = candidates(&cfg);
+        assert_eq!(c.len(), 4, "{name}");
+        for d in c {
+            assert_eq!(d.w % d.n, 0, "{name}: n must divide w");
+            let g = wl.generate(&d, Default::default()).unwrap();
+            assert!(g.pe_depth > 0, "{name} ({}, {})", d.n, d.m);
+        }
+    }
+}
+
+#[test]
+fn candidates_with_max_m_one_are_spatial_only() {
+    let cfg = ExploreConfig { grid_w: 64, grid_h: 16, max_n: 4, max_m: 1, ..small_cfg("blur") };
+    let c = candidates(&cfg);
+    assert_eq!(c.len(), 3); // n in {1, 2, 4}, m = 1
+    assert!(c.iter().all(|d| d.m == 1));
+    let evals = explore(&cfg).unwrap();
+    assert_eq!(evals.len(), 3);
+}
+
+#[test]
+fn cli_explore_flag_reaches_each_workload() {
+    for name in workload::names() {
+        let code = spdx::cli::run(vec![
+            "explore".to_string(),
+            "--workload".to_string(),
+            name.to_string(),
+            "--grid".to_string(),
+            "64x32".to_string(),
+            "--max-n".to_string(),
+            "2".to_string(),
+            "--max-m".to_string(),
+            "2".to_string(),
+            "--passes".to_string(),
+            "2".to_string(),
+            "--workers".to_string(),
+            "2".to_string(),
+        ])
+        .unwrap();
+        assert_eq!(code, 0, "explore --workload {name}");
+    }
+}
+
+#[test]
+fn cli_verify_covers_all_workloads_on_a_small_grid() {
+    let code = spdx::cli::run(vec![
+        "verify".to_string(),
+        "--grid".to_string(),
+        "16x12".to_string(),
+        "--steps".to_string(),
+        "4".to_string(),
+    ])
+    .unwrap();
+    assert_eq!(code, 0, "verify (all workloads) failed");
+}
