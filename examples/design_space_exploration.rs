@@ -1,103 +1,140 @@
-//! Design-space exploration (the paper's §III): evaluate the six
-//! (n, m) configurations — and every other feasible mix up to nm = 8 —
-//! on the 720x300 grid, and reproduce the paper's conclusion that the
-//! purely temporal (1, 4) design wins on performance per watt.
+//! Design-space exploration through the `dse` engine (the paper's
+//! §III, scaled up): sweep (n, m) up to 8×8 on the 720×300 grid across
+//! two devices, with branch-and-bound pruning and a shared evaluation
+//! cache — and reproduce the paper's conclusion that the purely
+//! temporal (1, 4) design wins performance per watt on the Stratix V.
 //!
 //! Run: `cargo run --release --example design_space_exploration`
 
-use spdx::coordinator::Coordinator;
-use spdx::explore::{pareto, ExploreConfig};
+use spdx::dse::{
+    BoundedPrune, DesignSpace, EvalCache, Exhaustive, SearchStrategy, Session,
+    SweepContext,
+};
 use spdx::report;
+use spdx::resource::{ARRIA_10_GX1150, STRATIX_V_5SGXEA7};
 
 fn main() -> spdx::Result<()> {
-    let cfg = ExploreConfig {
-        grid_w: 720,
-        grid_h: 300,
+    let space = DesignSpace {
+        workload: "lbm",
+        grids: vec![(720, 300)],
         max_n: 8,
         max_m: 8,
+        devices: vec![&STRATIX_V_5SGXEA7, &ARRIA_10_GX1150],
+        ddr_variants: vec![Default::default()],
         passes: 2,
-        keep_infeasible: true,
-        ..Default::default()
+        latency: Default::default(),
     };
+    let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let cache = EvalCache::new();
+    let ctx = SweepContext { cache: &cache, workers };
 
-    println!("exploring (n, m) up to n={}, m={} on {}x{} ...\n", cfg.max_n, cfg.max_m, cfg.grid_w, cfg.grid_h);
-    let coord = Coordinator::new(cfg);
-    let (evals, metrics) = coord.run()?;
-
-    println!("{}", report::table3(&evals));
-
-    let feasible: Vec<_> = evals.iter().filter(|e| e.infeasible.is_none()).collect();
-    let best = feasible.first().expect("some feasible design");
     println!(
-        "best perf/W overall: (n, m) = ({}, {}) at {:.3} GFlop/sW, {:.1} GFlop/s sustained",
-        best.design.n, best.design.m, best.perf_per_watt, best.timing.performance_gflops
+        "space: {} candidates ((n, m) up to {}x{}, {} devices)\n",
+        space.len(),
+        space.max_n,
+        space.max_m,
+        space.devices.len()
     );
 
-    // within the paper's evaluated set {nm <= 4}, the winner must be the
-    // pure temporal-parallel (1, 4) design (paper §III-C / §IV)
-    let paper_best = feasible
+    // 1. pruned sweep: skips provably-infeasible deep/wide designs
+    let pruned = BoundedPrune::default().run(&space, &ctx)?;
+    print!("{}", report::sweep_summary(&pruned));
+
+    // 2. exhaustive sweep over the same space, same cache: everything
+    //    the pruner evaluated comes back as a cache hit
+    let full = Exhaustive.run(&space, &ctx)?;
+    println!(
+        "exhaustive afterwards: {} evaluated fresh, {} from cache\n",
+        full.evaluated, full.cache_hits
+    );
+    println!("{}", report::dse_table(&full.evals));
+
+    // the paper's conclusions, checked mechanically on the Stratix V
+    let stratix: Vec<_> = full
+        .evals
         .iter()
-        .filter(|e| e.design.n * e.design.m <= 4)
-        .max_by(|a, b| a.perf_per_watt.partial_cmp(&b.perf_per_watt).unwrap())
-        .unwrap();
-    assert_eq!(
-        (paper_best.design.n, paper_best.design.m),
-        (1, 4),
-        "the paper's winner is the pure temporal-parallel design"
-    );
-    println!(
-        "paper-space winner : (1, 4) at {:.3} GFlop/sW (paper: 2.416)",
-        paper_best.perf_per_watt
-    );
-    if (best.design.n, best.design.m) != (1, 4) {
-        println!(
-            "NOTE: beyond the paper's nm <= 4 sweep the explorer finds ({}, {}) \
-             still fits the device ({} DSPs of 256) and improves perf/W — see \
-             EXPERIMENTS.md §Beyond-paper.",
-            best.design.n, best.design.m, best.resources.total.dsps
-        );
-    }
-
-    println!("\nPareto frontier (performance vs power):");
-    for e in pareto(&evals) {
-        println!(
-            "  (n={}, m={})  {:>6.1} GFlop/s  {:>5.1} W  u={:.3}",
-            e.design.n, e.design.m, e.timing.performance_gflops, e.power_w,
-            e.timing.utilization
-        );
-    }
-
-    // the paper's §III observations, checked mechanically:
+        .filter(|e| e.device == "Stratix V 5SGXEA7")
+        .collect();
     let get = |n: u32, m: u32| {
-        evals
+        stratix
             .iter()
             .find(|e| e.design.n == n && e.design.m == m)
             .expect("evaluated")
     };
-    // 1) x1 designs keep u ~ 1; x2 and x4 are bandwidth-bound
+    // 1) within the paper's nm <= 4 sweep, pure temporal (1, 4) wins
+    let paper_best = stratix
+        .iter()
+        .filter(|e| e.infeasible.is_none() && e.design.n * e.design.m <= 4)
+        .max_by(|a, b| a.perf_per_watt.total_cmp(&b.perf_per_watt))
+        .unwrap();
+    assert_eq!((paper_best.design.n, paper_best.design.m), (1, 4));
+    println!(
+        "paper-space winner : (1, 4) at {:.3} GFlop/sW (paper: 2.416)",
+        paper_best.perf_per_watt
+    );
+    // 2) x1 designs keep u ~ 1; x2 and x4 are bandwidth-bound
     assert!(get(1, 4).timing.utilization > 0.99);
     assert!(get(2, 1).timing.utilization < 0.6);
     assert!(get(4, 1).timing.utilization < 0.3);
-    // 2) cascading keeps the bandwidth requirement of one pipeline
+    // 3) cascading keeps the bandwidth requirement of one pipeline
     assert!((get(1, 4).timing.demand_gbps - 7.2).abs() < 0.01);
-    // 3) the four-PE cascade consumes ~3.5x the memory of the x4-wide
+    // 4) the four-PE cascade consumes ~3.5x the memory of the x4-wide
     //    PE (paper: "3.5 times more on-chip memories")
     let ratio = get(1, 4).resources.core.bram_bits as f64
         / get(4, 1).resources.core.bram_bits as f64;
-    println!("\nBRAM ratio (1,4)/(4,1) = {ratio:.2} (paper: 3.48)");
+    println!("BRAM ratio (1,4)/(4,1) = {ratio:.2} (paper: 3.48)");
     assert!((ratio - 3.48).abs() < 0.4);
-    // 4) nm = 8 designs exceed the device (the paper stopped at nm = 4)
-    assert!(evals
+    // 5) nm = 8 designs exceed the Stratix V (the paper stopped at 4) —
+    //    which is exactly what the pruner skips without compiling
+    assert!(stratix
         .iter()
         .filter(|e| e.design.n * e.design.m == 8)
         .all(|e| e.infeasible.is_some()));
 
+    // the bigger part changes the conclusion: deeper cascades fit
+    let arria_best = full
+        .evals
+        .iter()
+        .filter(|e| e.device == "Arria 10 GX1150" && e.infeasible.is_none())
+        .max_by(|a, b| a.perf_per_watt.total_cmp(&b.perf_per_watt))
+        .unwrap();
     println!(
-        "\nexplored {} designs ({} feasible) in {:.1}s of job time across {} workers",
-        metrics.completed,
-        metrics.feasible,
-        metrics.total_seconds(),
-        coord.workers
+        "Arria 10 winner    : ({}, {}) at {:.3} GFlop/sW",
+        arria_best.design.n, arria_best.design.m, arria_best.perf_per_watt
     );
+    assert!(arria_best.design.m > 4, "the bigger part rewards deeper cascades");
+
+    println!("\nPareto frontier (performance vs power, both devices):");
+    for e in full.pareto() {
+        println!(
+            "  ({}, {}) on {:<18} {:>6.1} GFlop/s  {:>5.1} W  u={:.3}",
+            e.design.n,
+            e.design.m,
+            e.device,
+            e.timing.performance_gflops,
+            e.power_w,
+            e.timing.utilization
+        );
+    }
+
+    // 3. sessions: persist the sweep, reload it, and show that a
+    //    resumed sweep recomputes nothing
+    let path = std::env::temp_dir()
+        .join(format!("spdx_dse_example_session_{}.json", std::process::id()));
+    Session::from_sweep(&full, &space).save(&path)?;
+    let loaded = Session::load(&path)?;
+    let cache2 = EvalCache::new();
+    loaded.preload(&cache2);
+    let resumed =
+        Exhaustive.run(&space, &SweepContext { cache: &cache2, workers })?;
+    println!(
+        "\nsession: {} rows saved to {}; resumed sweep: {} recomputed, {} from session",
+        loaded.rows.len(),
+        path.display(),
+        resumed.evaluated,
+        resumed.cache_hits
+    );
+    assert_eq!(resumed.evaluated, 0);
+    std::fs::remove_file(&path).ok();
     Ok(())
 }

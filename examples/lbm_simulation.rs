@@ -21,7 +21,7 @@
 
 use spdx::lbm::reference::{self, LbmState};
 use spdx::lbm::workload::{fluid_max_diff, LbmRunner};
-use spdx::lbm::{LbmDesign, FLUID};
+use spdx::lbm::{LbmCoreNames, LbmDesign, FLUID};
 use spdx::runtime::{dense_to_state, state_to_dense, PjrtRuntime};
 
 const H: usize = 64;

@@ -12,7 +12,7 @@ use std::fs;
 use std::path::PathBuf;
 
 use spdx::dfg;
-use spdx::lbm::spd_gen::{generate, LbmDesign};
+use spdx::lbm::spd_gen::{generate, LbmCoreNames, LbmDesign};
 use spdx::spd::ModuleDef;
 use spdx::verilog;
 

@@ -1,12 +1,16 @@
 //! DSE: the full exploration loop (paper §III / §IV "automate the
 //! process of design space exploration") — sweep timing, parallel
-//! speedup of the coordinator, per-workload sweep cost, and the
+//! speedup of the coordinator, per-workload sweep cost, cached-vs-cold
+//! sweeps through the `EvalCache`, strategy comparison, and the
 //! headline conclusions.
 
 mod common;
 
 use common::{bench, section};
 use spdx::coordinator::Coordinator;
+use spdx::dse::{
+    BoundedPrune, DesignSpace, EvalCache, Exhaustive, SearchStrategy, SweepContext,
+};
 use spdx::explore::{explore, ExploreConfig};
 use spdx::workload;
 
@@ -36,6 +40,50 @@ fn main() {
         "  -> parallel speedup {:.2}x on {workers} workers",
         s_seq.median / s_par.median
     );
+
+    section("eval cache: cold vs warm sweep (16 candidates, 720x300)");
+    let space = DesignSpace::from_explore(&cfg);
+    let s_cold = bench("exhaustive sweep, cold cache", 0, 3, || {
+        // a fresh cache every iteration: every point recomputed
+        let cache = EvalCache::new();
+        let r = Exhaustive
+            .run(&space, &SweepContext { cache: &cache, workers })
+            .unwrap();
+        assert_eq!(r.cache_hits, 0);
+        assert!(r.evaluated > 0);
+    });
+    let warm_cache = EvalCache::new();
+    Exhaustive
+        .run(&space, &SweepContext { cache: &warm_cache, workers })
+        .unwrap();
+    let s_warm = bench("exhaustive sweep, warm cache", 0, 3, || {
+        let r = Exhaustive
+            .run(&space, &SweepContext { cache: &warm_cache, workers })
+            .unwrap();
+        assert_eq!(r.evaluated, 0, "warm sweep must recompute nothing");
+        assert!(r.cache_hits > 0);
+    });
+    println!(
+        "  -> cache speedup {:.0}x (cold {:.1} ms -> warm {:.2} ms)",
+        s_cold.median / s_warm.median,
+        s_cold.median * 1e3,
+        s_warm.median * 1e3
+    );
+
+    section("strategy comparison: pruning vs exhaustive evaluation counts");
+    {
+        let cache = EvalCache::new();
+        let pr = BoundedPrune::default()
+            .run(&space, &SweepContext { cache: &cache, workers })
+            .unwrap();
+        println!(
+            "  bounded-prune: {} of {} candidates evaluated, {} pruned \
+             (same frontier as exhaustive)",
+            pr.evaluated, pr.candidates, pr.skipped
+        );
+        assert!(pr.evaluated < pr.candidates, "the 4x4 space has prunable points");
+        assert_eq!(pr.evaluated + pr.skipped, pr.candidates);
+    }
 
     section("per-workload sweep cost (6 candidates, 360x180)");
     for name in workload::names() {

@@ -14,6 +14,10 @@ use std::collections::HashMap;
 
 use crate::coordinator::Coordinator;
 use crate::dfg;
+use crate::dse::{
+    ddr_by_name, strategy_by_name, BoundedPrune, DesignSpace, EvalCache, Exhaustive,
+    HillClimb, SearchStrategy, Session, SweepContext, DDR_VARIANT_NAMES,
+};
 use crate::error::{Error, Result};
 use crate::explore::{evaluate, ExploreConfig};
 use crate::lbm::reference::LbmState;
@@ -22,6 +26,7 @@ use crate::lbm::workload::{
 };
 use crate::lbm::LbmDesign;
 use crate::report;
+use crate::resource::device;
 use crate::runtime::{dense_to_state, state_to_dense, PjrtRuntime};
 use crate::spd::{parse_core, Registry};
 use crate::verilog;
@@ -74,15 +79,7 @@ impl Args {
     pub fn grid(&self, default: (u32, u32)) -> Result<(u32, u32)> {
         match self.flags.get("grid") {
             None => Ok(default),
-            Some(v) => {
-                let (w, h) = v.split_once('x').ok_or_else(|| {
-                    Error::Explore(format!("bad --grid `{v}` (want WxH)"))
-                })?;
-                Ok((
-                    w.parse().map_err(|_| Error::Explore("bad grid W".into()))?,
-                    h.parse().map_err(|_| Error::Explore("bad grid H".into()))?,
-                ))
-            }
+            Some(v) => parse_grid(v, "--grid"),
         }
     }
 
@@ -90,6 +87,17 @@ impl Args {
     pub fn workload(&self) -> Result<&'static dyn workload::StencilKernel> {
         workload::get(self.flag("workload").unwrap_or("lbm"))
     }
+}
+
+/// Parse a `WxH` grid spec (shared by `--grid` and the `--grids` list).
+fn parse_grid(v: &str, flag: &str) -> Result<(u32, u32)> {
+    let (w, h) = v
+        .split_once('x')
+        .ok_or_else(|| Error::Explore(format!("bad {flag} `{v}` (want WxH)")))?;
+    Ok((
+        w.parse().map_err(|_| Error::Explore("bad grid W".into()))?,
+        h.parse().map_err(|_| Error::Explore("bad grid H".into()))?,
+    ))
 }
 
 pub const USAGE: &str = "\
@@ -105,6 +113,15 @@ COMMANDS:
   table4                                   regenerate the paper's Table IV
   explore [--workload NAME] [--grid WxH] [--max-n N] [--max-m M] [--workers K]
                                            full design-space exploration
+  dse sweep   [--workload NAME] [--strategy exhaustive|prune|hill]
+              [--grids WxH[,WxH...]] [--devices KEY[,KEY...]|all]
+              [--ddr NAME[,NAME...]] [--max-n N] [--max-m M] [--passes P]
+              [--min-util X] [--seed S] [--restarts R] [--workers K]
+              [--session FILE]           multi-device sweep (cached, resumable)
+  dse resume  --session FILE [space/strategy flags]
+                                           reload a session, finish the sweep
+  dse compare [space flags]                run all strategies, compare coverage
+  dse devices                              list the device catalog
   simulate [--workload NAME] --n N --m M [--grid WxH] [--steps S]
            [--cycle-accurate] [--<reg> V]  run a workload through a compiled design
                                            (workload registers are overridable,
@@ -134,6 +151,7 @@ pub fn run(argv: Vec<String>) -> Result<i32> {
         "table3" => cmd_table3(&args),
         "table4" => cmd_table4(),
         "explore" => cmd_explore(&args),
+        "dse" => cmd_dse(&args),
         "simulate" => cmd_simulate(&args),
         "verify" => cmd_verify(&args),
         "emit-verilog" => cmd_emit_verilog(&args),
@@ -250,6 +268,223 @@ fn cmd_explore(args: &Args) -> Result<i32> {
         metrics.total_seconds(),
         coord.workers
     );
+    Ok(0)
+}
+
+/// Build the sweep space from `--grids` / `--devices` / `--ddr` (each
+/// a comma-separated list) plus the shared lattice flags.
+fn dse_space(args: &Args) -> Result<DesignSpace> {
+    dse_space_from(args, &DesignSpace::default())
+}
+
+/// Like [`dse_space`], but axes the command line does not mention fall
+/// back to `base` — `dse resume` passes the session's recorded space
+/// here so a resumed sweep covers the same space by default.
+fn dse_space_from(args: &Args, base: &DesignSpace) -> Result<DesignSpace> {
+    let workload = match args.flag("workload") {
+        Some(name) => workload::get(name)?.name(),
+        None => base.workload,
+    };
+    let grids = match args.flag("grids") {
+        None if args.flag("grid").is_some() => vec![args.grid((720, 300))?],
+        None => base.grids.clone(),
+        Some(list) => {
+            let mut grids = Vec::new();
+            for item in list.split(',') {
+                grids.push(parse_grid(item, "--grids entry")?);
+            }
+            grids
+        }
+    };
+    let devices = match args.flag("devices") {
+        None => base.devices.clone(),
+        Some("all") => device::catalog().to_vec(),
+        Some(list) => {
+            let mut devices = Vec::new();
+            for key in list.split(',') {
+                devices.push(device::by_name(key).ok_or_else(|| {
+                    let known: Vec<&str> =
+                        device::catalog().iter().map(|d| d.key).collect();
+                    Error::Explore(format!(
+                        "unknown device `{key}` (available: {}, or `all`)",
+                        known.join(", ")
+                    ))
+                })?);
+            }
+            devices
+        }
+    };
+    let ddr_variants = match args.flag("ddr") {
+        None => base.ddr_variants.clone(),
+        Some(list) => {
+            let mut variants = Vec::new();
+            for name in list.split(',') {
+                variants.push(ddr_by_name(name).ok_or_else(|| {
+                    Error::Explore(format!(
+                        "unknown ddr variant `{name}` (available: {})",
+                        DDR_VARIANT_NAMES.join(", ")
+                    ))
+                })?);
+            }
+            variants
+        }
+    };
+    Ok(DesignSpace {
+        workload,
+        grids,
+        max_n: args.get("max-n", base.max_n)?,
+        max_m: args.get("max-m", base.max_m)?,
+        devices,
+        ddr_variants,
+        passes: args.get("passes", base.passes)?,
+        latency: base.latency,
+    })
+}
+
+/// Resolve `--strategy` (aliases via `dse::strategy_by_name`) and
+/// apply the strategy-specific CLI knobs.
+fn dse_strategy(args: &Args, name: &str) -> Result<Box<dyn SearchStrategy>> {
+    let canonical = strategy_by_name(name)
+        .ok_or_else(|| {
+            Error::Explore(format!(
+                "unknown strategy `{name}` (available: exhaustive, prune, hill)"
+            ))
+        })?
+        .name();
+    Ok(match canonical {
+        "exhaustive" => Box::new(Exhaustive),
+        "bounded-prune" => Box::new(BoundedPrune {
+            min_utilization: args.get("min-util", 0.0)?,
+        }),
+        _ => Box::new(HillClimb {
+            seed: args.get("seed", 0x5eed_u64)?,
+            restarts: args.get("restarts", 4)?,
+            max_steps: args.get("max-steps", 64)?,
+        }),
+    })
+}
+
+fn dse_workers(args: &Args) -> Result<usize> {
+    let workers: usize = args.get("workers", 0)?;
+    Ok(if workers > 0 {
+        workers
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
+}
+
+fn cmd_dse(args: &Args) -> Result<i32> {
+    match args.positional.first().map(String::as_str) {
+        Some("sweep") => cmd_dse_sweep(args),
+        Some("resume") => cmd_dse_resume(args),
+        Some("compare") => cmd_dse_compare(args),
+        Some("devices") => cmd_dse_devices(),
+        other => {
+            eprintln!(
+                "dse: unknown subcommand {:?} (sweep, resume, compare, devices)",
+                other.unwrap_or("<none>")
+            );
+            Ok(2)
+        }
+    }
+}
+
+fn cmd_dse_devices() -> Result<i32> {
+    println!(
+        "{:<12} {:<22} {:>9} {:>11} {:>13} {:>6}",
+        "key", "name", "ALMs", "Regs", "BRAM[bits]", "DSPs"
+    );
+    for d in device::catalog() {
+        println!(
+            "{:<12} {:<22} {:>9} {:>11} {:>13} {:>6}",
+            d.key, d.name, d.alms, d.regs, d.bram_bits, d.dsps
+        );
+    }
+    Ok(0)
+}
+
+fn cmd_dse_sweep(args: &Args) -> Result<i32> {
+    let space = dse_space(args)?;
+    let strategy = dse_strategy(args, args.flag("strategy").unwrap_or("exhaustive"))?;
+    let cache = EvalCache::new();
+    let ctx = SweepContext { cache: &cache, workers: dse_workers(args)? };
+    println!(
+        "sweeping {} candidates ({} workload, {} grids x {} devices x {} ddr) with `{}` ...",
+        space.len(),
+        space.workload,
+        space.grids.len(),
+        space.devices.len(),
+        space.ddr_variants.len(),
+        strategy.name()
+    );
+    let t0 = std::time::Instant::now();
+    let result = strategy.run(&space, &ctx)?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!("{}", report::dse_table(&result.evals));
+    print!("{}", report::sweep_summary(&result));
+    println!("  wall time {dt:.2}s on {} workers", ctx.workers);
+    if let Some(path) = args.flag("session") {
+        let session = Session::from_sweep(&result, &space);
+        session.save(path)?;
+        println!("  session saved to {path} ({} rows)", session.rows.len());
+    }
+    Ok(0)
+}
+
+fn cmd_dse_resume(args: &Args) -> Result<i32> {
+    let path = args
+        .flag("session")
+        .ok_or_else(|| Error::Explore("dse resume: --session FILE required".into()))?;
+    let prior = Session::load(path)?;
+    // the session records its space: flags only override axes they name
+    let space = dse_space_from(args, &prior.space)?;
+    let strategy_name = args
+        .flag("strategy")
+        .map(str::to_string)
+        .unwrap_or_else(|| prior.strategy.clone());
+    let strategy = dse_strategy(args, &strategy_name)?;
+    let cache = EvalCache::new();
+    let loaded = prior.preload(&cache);
+    let ctx = SweepContext { cache: &cache, workers: dse_workers(args)? };
+    println!(
+        "resuming from {path}: {loaded} rows preloaded, sweeping {} candidates with `{}` ...",
+        space.len(),
+        strategy.name()
+    );
+    let result = strategy.run(&space, &ctx)?;
+    println!("{}", report::dse_table(&result.evals));
+    print!("{}", report::sweep_summary(&result));
+    println!(
+        "  reuse: {} answered from the session, {} recomputed",
+        result.cache_hits, result.evaluated
+    );
+    let mut merged = prior;
+    merged.strategy = result.strategy.to_string();
+    merged.space = space.clone();
+    merged.merge(&Session::from_sweep(&result, &space))?;
+    merged.save(path)?;
+    println!("  session now {} rows ({path})", merged.rows.len());
+    Ok(0)
+}
+
+fn cmd_dse_compare(args: &Args) -> Result<i32> {
+    let space = dse_space(args)?;
+    let workers = dse_workers(args)?;
+    let mut results = Vec::new();
+    for name in ["exhaustive", "prune", "hill"] {
+        let strategy = dse_strategy(args, name)?;
+        // fresh cache per strategy so the evaluation counts compare
+        let cache = EvalCache::new();
+        let ctx = SweepContext { cache: &cache, workers };
+        results.push(strategy.run(&space, &ctx)?);
+    }
+    let refs: Vec<&crate::dse::SweepResult> = results.iter().collect();
+    println!(
+        "comparing strategies on {} candidates ({} workload):\n",
+        space.len(),
+        space.workload
+    );
+    print!("{}", report::strategy_comparison(&refs));
     Ok(0)
 }
 
@@ -454,6 +689,60 @@ mod tests {
     #[test]
     fn workloads_listing_runs() {
         assert_eq!(cmd_workloads().unwrap(), 0);
+    }
+
+    #[test]
+    fn dse_devices_listing_runs() {
+        assert_eq!(run(vec!["dse".into(), "devices".into()]).unwrap(), 0);
+    }
+
+    #[test]
+    fn dse_unknown_subcommand_is_reported() {
+        assert_eq!(run(vec!["dse".into(), "anneal".into()]).unwrap(), 2);
+    }
+
+    #[test]
+    fn dse_sweep_runs_on_a_small_space() {
+        let code = run(vec![
+            "dse".into(),
+            "sweep".into(),
+            "--grids".into(),
+            "64x32".into(),
+            "--max-n".into(),
+            "2".into(),
+            "--max-m".into(),
+            "2".into(),
+            "--passes".into(),
+            "2".into(),
+            "--strategy".into(),
+            "prune".into(),
+            "--devices".into(),
+            "stratix-v,arria-10".into(),
+        ])
+        .unwrap();
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn dse_space_flags_are_validated() {
+        let bad_dev = Args::parse(&["--devices".into(), "asic".into()]);
+        assert!(dse_space(&bad_dev).is_err());
+        let bad_ddr = Args::parse(&["--ddr".into(), "hbm3".into()]);
+        assert!(dse_space(&bad_ddr).is_err());
+        let bad_grid = Args::parse(&["--grids".into(), "64".into()]);
+        assert!(dse_space(&bad_grid).is_err());
+        let ok = Args::parse(&[
+            "--grids".into(),
+            "64x32,128x64".into(),
+            "--devices".into(),
+            "all".into(),
+            "--ddr".into(),
+            "default,single".into(),
+        ]);
+        let space = dse_space(&ok).unwrap();
+        assert_eq!(space.grids.len(), 2);
+        assert_eq!(space.devices.len(), 3);
+        assert_eq!(space.ddr_variants.len(), 2);
     }
 
     #[test]

@@ -7,33 +7,96 @@
 //! final ranking.  This is the paper's (manual) explore-compile-measure
 //! loop, automated — the "future work" of §IV.
 //!
+//! [`evaluate_batch`] is the shared primitive: every search strategy in
+//! [`crate::dse`] funnels its candidate waves through it, so pruned
+//! sweeps, hill-climb neighborhoods and plain exhaustive runs all use
+//! the same worker pool — and, when given an [`EvalCache`], the same
+//! result reuse.
+//!
 //! No async runtime is available in the offline crate set; plain
 //! `std::thread` workers over an `mpsc` channel are used instead.
 
 pub mod metrics;
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread;
 
+use crate::dse::EvalCache;
 use crate::error::{Error, Result};
 use crate::explore::{candidates, evaluate, sort_by_perf_per_watt, Evaluation, ExploreConfig};
 use crate::workload::DesignPoint;
 
 pub use metrics::RunMetrics;
 
-/// A DSE job: one design point to evaluate (for the workload named in
-/// the coordinator's `ExploreConfig`).
-#[derive(Clone, Copy, Debug)]
-pub struct Job {
-    pub index: usize,
-    pub design: DesignPoint,
+/// A DSE job: one design point plus the full evaluation context
+/// (workload, grid, device, DDR) it should be evaluated under.
+pub type BatchJob = (ExploreConfig, DesignPoint);
+
+/// Evaluate a batch of jobs on a worker pool, optionally through a
+/// shared [`EvalCache`].  Results come back in job order.  If any job
+/// fails, the batch still runs to completion (workers drain the queue)
+/// and one of the errors is returned instead of results.
+pub fn evaluate_batch(
+    jobs: &[BatchJob],
+    workers: usize,
+    cache: Option<&EvalCache>,
+) -> Result<(Vec<Evaluation>, RunMetrics)> {
+    let n_jobs = jobs.len();
+    let mut metrics = RunMetrics::new(n_jobs);
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, Result<Evaluation>, f64)>();
+
+    thread::scope(|scope| {
+        for _ in 0..workers.max(1).min(n_jobs.max(1)) {
+            let tx = tx.clone();
+            let next = &next;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                let Some((cfg, design)) = jobs.get(i) else { break };
+                let t0 = std::time::Instant::now();
+                let result = match cache {
+                    Some(c) => c.evaluate(design, cfg),
+                    None => evaluate(design, cfg),
+                };
+                let dt = t0.elapsed().as_secs_f64();
+                if tx.send((i, result, dt)).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+    });
+
+    let mut slots: Vec<Option<Evaluation>> = vec![None; n_jobs];
+    let mut first_err: Option<Error> = None;
+    for (index, result, dt) in rx {
+        match result {
+            Ok(e) => {
+                metrics.record(index, dt, e.infeasible.is_none());
+                slots[index] = Some(e);
+            }
+            Err(err) => {
+                metrics.record(index, dt, false);
+                if first_err.is_none() {
+                    first_err = Some(err);
+                }
+            }
+        }
+    }
+    if let Some(err) = first_err {
+        return Err(err);
+    }
+
+    Ok((slots.into_iter().flatten().collect(), metrics))
 }
 
 /// The coordinator.
 pub struct Coordinator {
     pub cfg: ExploreConfig,
     pub workers: usize,
+    cache: Option<Arc<EvalCache>>,
 }
 
 impl Coordinator {
@@ -41,7 +104,7 @@ impl Coordinator {
         let workers = thread::available_parallelism()
             .map(|n| n.get())
             .unwrap_or(1);
-        Coordinator { cfg, workers }
+        Coordinator { cfg, workers, cache: None }
     }
 
     pub fn with_workers(mut self, workers: usize) -> Self {
@@ -49,67 +112,24 @@ impl Coordinator {
         self
     }
 
+    /// Share an evaluation cache across runs of this coordinator (and
+    /// with any strategy using the same cache).
+    pub fn with_cache(mut self, cache: Arc<EvalCache>) -> Self {
+        self.cache = Some(cache);
+        self
+    }
+
     /// Run the exploration: evaluate every candidate in parallel,
     /// return feasible evaluations sorted by perf/W (best first) plus
     /// run metrics.
     pub fn run(&self) -> Result<(Vec<Evaluation>, RunMetrics)> {
-        let designs = candidates(&self.cfg);
-        let n_jobs = designs.len();
-        let mut metrics = RunMetrics::new(n_jobs);
-
-        let jobs = Arc::new(Mutex::new(
-            designs
-                .into_iter()
-                .enumerate()
-                .map(|(index, design)| Job { index, design })
-                .collect::<Vec<_>>(),
-        ));
-        let (tx, rx) = mpsc::channel::<(usize, Result<Evaluation>, f64)>();
-
-        thread::scope(|scope| {
-            for _ in 0..self.workers.min(n_jobs.max(1)) {
-                let jobs = Arc::clone(&jobs);
-                let tx = tx.clone();
-                let cfg = self.cfg;
-                scope.spawn(move || loop {
-                    let job = { jobs.lock().unwrap().pop() };
-                    let Some(job) = job else { break };
-                    let t0 = std::time::Instant::now();
-                    let result = evaluate(&job.design, &cfg);
-                    let dt = t0.elapsed().as_secs_f64();
-                    if tx.send((job.index, result, dt)).is_err() {
-                        break;
-                    }
-                });
-            }
-            drop(tx);
-        });
-
-        let mut slots: Vec<Option<Evaluation>> = vec![None; n_jobs];
-        let mut first_err: Option<Error> = None;
-        for (index, result, dt) in rx {
-            match result {
-                Ok(e) => {
-                    metrics.record(index, dt, e.infeasible.is_none());
-                    slots[index] = Some(e);
-                }
-                Err(err) => {
-                    metrics.record(index, dt, false);
-                    if first_err.is_none() {
-                        first_err = Some(err);
-                    }
-                }
-            }
-        }
-        if let Some(err) = first_err {
-            return Err(err);
-        }
-
-        let mut evals: Vec<Evaluation> = slots
+        let jobs: Vec<BatchJob> = candidates(&self.cfg)
             .into_iter()
-            .flatten()
-            .filter(|e| e.infeasible.is_none() || self.cfg.keep_infeasible)
+            .map(|design| (self.cfg, design))
             .collect();
+        let (mut evals, metrics) =
+            evaluate_batch(&jobs, self.workers, self.cache.as_deref())?;
+        evals.retain(|e| e.infeasible.is_none() || self.cfg.keep_infeasible);
         sort_by_perf_per_watt(&mut evals);
         Ok((evals, metrics))
     }
@@ -151,5 +171,45 @@ mod tests {
         assert_eq!(evals.len(), 4);
         assert_eq!(metrics.completed, 4);
         assert!(metrics.total_seconds() > 0.0);
+    }
+
+    #[test]
+    fn shared_cache_short_circuits_second_run() {
+        let cache = Arc::new(EvalCache::new());
+        let coord = Coordinator::new(small_cfg())
+            .with_workers(2)
+            .with_cache(Arc::clone(&cache));
+        let (first, _) = coord.run().unwrap();
+        let cold = cache.stats();
+        assert_eq!(cold.misses, 4);
+        assert_eq!(cold.hits, 0);
+
+        let (second, _) = coord.run().unwrap();
+        let warm = cache.stats();
+        assert_eq!(warm.misses, 4, "warm run must recompute nothing");
+        assert_eq!(warm.hits, 4);
+        assert_eq!(first.len(), second.len());
+        for (a, b) in first.iter().zip(&second) {
+            assert_eq!(a.design, b.design);
+            assert_eq!(a.perf_per_watt.to_bits(), b.perf_per_watt.to_bits());
+        }
+    }
+
+    #[test]
+    fn batch_preserves_job_order_and_contexts() {
+        let cfg = small_cfg();
+        let jacobi = ExploreConfig { workload: "jacobi", ..cfg };
+        let jobs: Vec<BatchJob> = vec![
+            (cfg, DesignPoint::new(2, 1, 64, 32)),
+            (jacobi, DesignPoint::new(1, 1, 64, 32)),
+            (cfg, DesignPoint::new(1, 2, 64, 32)),
+        ];
+        let (evals, metrics) = evaluate_batch(&jobs, 3, None).unwrap();
+        assert_eq!(evals.len(), 3);
+        assert_eq!(metrics.completed, 3);
+        assert_eq!(evals[0].design.n, 2);
+        assert_eq!(evals[0].workload, "lbm");
+        assert_eq!(evals[1].workload, "jacobi");
+        assert_eq!(evals[2].design.m, 2);
     }
 }

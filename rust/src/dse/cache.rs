@@ -1,0 +1,235 @@
+//! Content-addressed evaluation cache.
+//!
+//! A design-point evaluation is a pure function of (workload, design
+//! point, device, DDR configuration, operator latencies, passes) — so
+//! sweeps that revisit points (overlapping spaces, strategy
+//! comparisons, resumed sessions, hill-climb walks crossing their own
+//! path) should never recompute.  [`EvalCache`] keys on exactly those
+//! inputs, is safe to share across worker threads, and counts hits and
+//! misses so tests and reports can assert reuse.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::dfg::OpLatency;
+use crate::error::Result;
+use crate::explore::{evaluate, Evaluation, ExploreConfig};
+use crate::sim::DdrConfig;
+use crate::workload::DesignPoint;
+
+/// Full content address of one evaluation.  Float parameters are
+/// compared bit-exactly (`to_bits`), which is the right equality for
+/// "same computation": a DDR model differing in any parameter is a
+/// different memory system.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    workload: &'static str,
+    n: u32,
+    m: u32,
+    w: u32,
+    h: u32,
+    device: &'static str,
+    passes: u64,
+    latency: (u32, u32, u32, u32),
+    ddr: DdrBits,
+}
+
+/// `DdrConfig` with floats frozen to their bit patterns (hashable).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+struct DdrBits {
+    peak: u64,
+    n_dimms: usize,
+    burst: u64,
+    turnaround: u64,
+    trefi: u64,
+    trfc: u64,
+}
+
+impl CacheKey {
+    pub fn new(design: &DesignPoint, cfg: &ExploreConfig) -> CacheKey {
+        CacheKey::from_parts(
+            cfg.workload,
+            design,
+            cfg.device.name,
+            cfg.passes,
+            cfg.latency,
+            cfg.ddr,
+        )
+    }
+
+    /// Build a key from raw parts (used when reloading sessions, where
+    /// no `ExploreConfig` exists yet).
+    pub fn from_parts(
+        workload: &'static str,
+        design: &DesignPoint,
+        device: &'static str,
+        passes: u64,
+        latency: OpLatency,
+        ddr: DdrConfig,
+    ) -> CacheKey {
+        CacheKey {
+            workload,
+            n: design.n,
+            m: design.m,
+            w: design.w,
+            h: design.h,
+            device,
+            passes,
+            latency: (latency.add, latency.mul, latency.div, latency.sqrt),
+            ddr: DdrBits {
+                peak: ddr.peak_gbps.to_bits(),
+                n_dimms: ddr.n_dimms,
+                burst: ddr.burst_bytes,
+                turnaround: ddr.turnaround_ns.to_bits(),
+                trefi: ddr.trefi_ns.to_bits(),
+                trfc: ddr.trfc_ns.to_bits(),
+            },
+        }
+    }
+}
+
+/// Cache counters at one point in time.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub entries: usize,
+}
+
+/// Thread-safe in-memory evaluation cache.
+pub struct EvalCache {
+    map: Mutex<HashMap<CacheKey, Evaluation>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl Default for EvalCache {
+    fn default() -> Self {
+        EvalCache::new()
+    }
+}
+
+impl EvalCache {
+    pub fn new() -> Self {
+        EvalCache {
+            map: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Look a key up, counting the hit or miss.
+    pub fn lookup(&self, key: &CacheKey) -> Option<Evaluation> {
+        let found = self.map.lock().unwrap().get(key).cloned();
+        match &found {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        found
+    }
+
+    /// Insert without touching the counters (used by session preload).
+    pub fn seed(&self, key: CacheKey, eval: Evaluation) {
+        self.map.lock().unwrap().insert(key, eval);
+    }
+
+    /// Get-or-compute: the cached row if present, otherwise a real
+    /// `explore::evaluate` whose result is stored for next time.
+    pub fn evaluate(&self, design: &DesignPoint, cfg: &ExploreConfig) -> Result<Evaluation> {
+        let key = CacheKey::new(design, cfg);
+        if let Some(hit) = self.lookup(&key) {
+            return Ok(hit);
+        }
+        let e = evaluate(design, cfg)?;
+        self.seed(key, e.clone());
+        Ok(e)
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: self.map.lock().unwrap().len(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::resource::ARRIA_10_GX1150;
+
+    fn cfg() -> ExploreConfig {
+        ExploreConfig {
+            grid_w: 64,
+            grid_h: 32,
+            max_n: 2,
+            max_m: 2,
+            passes: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn keys_address_all_config_axes() {
+        let c = cfg();
+        let d = DesignPoint::new(1, 2, 64, 32);
+        let base = CacheKey::new(&d, &c);
+        assert_eq!(base, CacheKey::new(&d, &c));
+        // design point
+        assert_ne!(base, CacheKey::new(&DesignPoint::new(2, 1, 64, 32), &c));
+        // device
+        let other_dev = ExploreConfig { device: &ARRIA_10_GX1150, ..c };
+        assert_ne!(base, CacheKey::new(&d, &other_dev));
+        // workload
+        let other_wl = ExploreConfig { workload: "jacobi", ..c };
+        assert_ne!(base, CacheKey::new(&d, &other_wl));
+        // ddr
+        let mut ddr = c.ddr;
+        ddr.n_dimms = 1;
+        assert_ne!(base, CacheKey::new(&d, &ExploreConfig { ddr, ..c }));
+        // passes
+        assert_ne!(base, CacheKey::new(&d, &ExploreConfig { passes: 9, ..c }));
+        // keep_infeasible and max_n/max_m are search-shape, not
+        // evaluation inputs: same key
+        let shape = ExploreConfig { max_n: 8, max_m: 8, keep_infeasible: true, ..c };
+        assert_eq!(base, CacheKey::new(&d, &shape));
+    }
+
+    #[test]
+    fn evaluate_caches_and_counts() {
+        let cache = EvalCache::new();
+        let c = cfg();
+        let d = DesignPoint::new(1, 1, 64, 32);
+        let first = cache.evaluate(&d, &c).unwrap();
+        let s1 = cache.stats();
+        assert_eq!((s1.hits, s1.misses, s1.entries), (0, 1, 1));
+
+        let second = cache.evaluate(&d, &c).unwrap();
+        let s2 = cache.stats();
+        assert_eq!((s2.hits, s2.misses, s2.entries), (1, 1, 1));
+        assert_eq!(first.perf_per_watt.to_bits(), second.perf_per_watt.to_bits());
+        assert_eq!(first.resources.core, second.resources.core);
+    }
+
+    #[test]
+    fn seed_bypasses_counters() {
+        let cache = EvalCache::new();
+        let c = cfg();
+        let d = DesignPoint::new(1, 1, 64, 32);
+        let e = crate::explore::evaluate(&d, &c).unwrap();
+        cache.seed(CacheKey::new(&d, &c), e);
+        assert_eq!(cache.stats(), CacheStats { hits: 0, misses: 0, entries: 1 });
+        assert!(cache.lookup(&CacheKey::new(&d, &c)).is_some());
+        assert_eq!(cache.stats().hits, 1);
+    }
+}

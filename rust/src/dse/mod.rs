@@ -1,0 +1,142 @@
+//! The design-space-exploration engine.
+//!
+//! The paper's exploration is a 4×4 (n, m) sweep on one device; this
+//! subsystem scales the same evaluation pipeline to realistic spaces —
+//! multiple devices, grids and memory systems, thousands of candidate
+//! points — by adding the three things a big sweep needs:
+//!
+//! * **a design space** ([`DesignSpace`]) — the cross product of
+//!   (n, m) × grid × device × DDR configuration, sliced per evaluation
+//!   context;
+//! * **pluggable search** ([`SearchStrategy`]) — [`Exhaustive`] for
+//!   exact small sweeps, [`BoundedPrune`] branch-and-bound for exact
+//!   sweeps that skip provably-infeasible regions, [`HillClimb`] for
+//!   spaces too large to enumerate.  Strategy selection guide:
+//!   up to a few hundred candidates, `Exhaustive` is fine; if the
+//!   space has infeasible regions (deep cascades, wide designs,
+//!   small parts), `BoundedPrune` gives the same frontier for fewer
+//!   compiles; beyond that, `HillClimb` trades completeness for a
+//!   perf/W local optimum per restart;
+//! * **result reuse** ([`EvalCache`], [`Session`]) — evaluations are
+//!   pure functions of their content address (workload, design point,
+//!   device, DDR, latency, passes), so they are cached in memory
+//!   across strategies within a process, and serialized to JSON
+//!   session files across processes (`dse sweep --session`,
+//!   `dse resume`).
+//!
+//! All strategies evaluate through
+//! [`crate::coordinator::evaluate_batch`], so every sweep — pruned or
+//! not — uses the same worker pool and the same cache.
+//!
+//! `explore::explore` (the seed API) is a thin wrapper over
+//! [`Exhaustive`] on a single-device space.
+
+pub mod cache;
+pub mod json;
+pub mod session;
+pub mod space;
+pub mod strategy;
+
+pub use cache::{CacheKey, CacheStats, EvalCache};
+pub use session::Session;
+pub use space::{ddr_by_name, Candidate, DesignSpace, DDR_VARIANT_NAMES};
+pub use strategy::{
+    strategy_by_name, BoundedPrune, Exhaustive, HillClimb, SearchStrategy,
+    SweepContext, SweepResult,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explore::ExploreConfig;
+
+    fn small_space() -> DesignSpace {
+        DesignSpace::from_explore(&ExploreConfig {
+            grid_w: 64,
+            grid_h: 32,
+            max_n: 2,
+            max_m: 2,
+            passes: 2,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn exhaustive_covers_the_space() {
+        let cache = EvalCache::new();
+        let ctx = SweepContext { cache: &cache, workers: 2 };
+        let r = Exhaustive.run(&small_space(), &ctx).unwrap();
+        assert_eq!(r.candidates, 4);
+        assert_eq!(r.evals.len(), 4);
+        assert_eq!(r.evaluated, 4);
+        assert_eq!(r.skipped, 0);
+        assert_eq!(r.cache_hits, 0);
+        let best = r.best().unwrap();
+        assert!(best.infeasible.is_none());
+        assert!(!r.pareto().is_empty());
+    }
+
+    #[test]
+    fn strategies_resolve_by_name() {
+        for (name, want) in [
+            ("exhaustive", "exhaustive"),
+            ("prune", "bounded-prune"),
+            ("bounded-prune", "bounded-prune"),
+            ("hill", "hill-climb"),
+            ("hill-climb", "hill-climb"),
+        ] {
+            assert_eq!(strategy_by_name(name).unwrap().name(), want, "{name}");
+        }
+        assert!(strategy_by_name("simulated-annealing").is_none());
+    }
+
+    #[test]
+    fn bounded_prune_on_all_feasible_space_matches_exhaustive() {
+        // nothing to prune here: identical rows, zero skips
+        let cache = EvalCache::new();
+        let ctx = SweepContext { cache: &cache, workers: 2 };
+        let ex = Exhaustive.run(&small_space(), &ctx).unwrap();
+        let pr = BoundedPrune::default().run(&small_space(), &ctx).unwrap();
+        assert_eq!(pr.evals.len(), ex.evals.len());
+        assert_eq!(pr.skipped, 0);
+        // second pass was answered entirely from the shared cache
+        assert_eq!(pr.evaluated, 0);
+        assert_eq!(pr.cache_hits, 4);
+        for (a, b) in ex.evals.iter().zip(&pr.evals) {
+            assert_eq!(a.design, b.design);
+            assert_eq!(a.perf_per_watt.to_bits(), b.perf_per_watt.to_bits());
+        }
+    }
+
+    #[test]
+    fn strategies_handle_an_empty_space() {
+        // regression: an empty axis used to panic HillClimb's random
+        // start instead of yielding an empty sweep
+        let cache = EvalCache::new();
+        let ctx = SweepContext { cache: &cache, workers: 1 };
+        let space = DesignSpace { devices: vec![], ..small_space() };
+        for strategy in [
+            Box::new(Exhaustive) as Box<dyn SearchStrategy>,
+            Box::new(BoundedPrune::default()),
+            Box::new(HillClimb::default()),
+        ] {
+            let r = strategy.run(&space, &ctx).unwrap();
+            assert_eq!(r.candidates, 0, "{}", strategy.name());
+            assert!(r.evals.is_empty(), "{}", strategy.name());
+            assert_eq!(r.skipped, 0, "{}", strategy.name());
+        }
+    }
+
+    #[test]
+    fn hill_climb_touches_a_subset_and_finds_a_feasible_best() {
+        let cache = EvalCache::new();
+        let ctx = SweepContext { cache: &cache, workers: 2 };
+        let hc = HillClimb { seed: 7, restarts: 2, max_steps: 16 };
+        let r = hc.run(&small_space(), &ctx).unwrap();
+        assert!(!r.evals.is_empty());
+        assert!(r.evals.len() <= r.candidates);
+        assert_eq!(r.evals.len() + r.skipped, r.candidates);
+        let best = r.best().expect("a feasible design");
+        assert!(best.perf_per_watt > 0.0);
+    }
+}

@@ -1,0 +1,501 @@
+//! Sweep sessions: JSON serialization of evaluated rows so long runs
+//! can be stopped, resumed, and merged.
+//!
+//! A session file is the portable form of an [`EvalCache`]: every row
+//! carries the full content address of its evaluation (workload,
+//! design point, device, DDR, passes) plus the computed outputs, so
+//! loading a session and [`Session::preload`]-ing it into a cache
+//! makes a re-run of the same sweep a pure cache walk — `dse resume`
+//! reports the hit count and recomputes nothing.
+//!
+//! Format (`version` 1, one JSON object):
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "strategy": "exhaustive",
+//!   "space": { "workload": "lbm", "grids": [[720, 300]],
+//!              "max_n": 4, "max_m": 4, "devices": ["stratix-v"],
+//!              "ddr": [{...}], "passes": 3,
+//!              "latency": {"add": 6, "mul": 4, "div": 10, "sqrt": 16} },
+//!   "rows": [ { "workload": "lbm", "device": "Stratix V 5SGXEA7",
+//!               "n": 1, "m": 4, "w": 720, "h": 300, "pe_depth": 855,
+//!               "passes": 3, "ddr": {...}, "resources": {...},
+//!               "timing": {...}, "power_w": 39.0,
+//!               "perf_per_watt": 2.416, "infeasible": null }, ... ]
+//! }
+//! ```
+//!
+//! The session records the *design space* it swept, not just the rows,
+//! so `dse resume` re-sweeps the same space by default (CLI flags only
+//! override the recorded axes).  Floats use shortest-roundtrip
+//! formatting, so a save/load cycle reproduces every metric
+//! bit-exactly.
+
+use std::collections::HashSet;
+use std::path::Path;
+
+use crate::dfg::OpLatency;
+use crate::error::{Error, Result};
+use crate::explore::Evaluation;
+use crate::resource::device;
+use crate::resource::{ResourceEstimate, Resources};
+use crate::sim::{DdrConfig, TimingReport};
+use crate::workload::{self, DesignPoint};
+
+use super::cache::{CacheKey, EvalCache};
+use super::json::{self, Json};
+use super::space::DesignSpace;
+use super::strategy::SweepResult;
+
+pub const SESSION_VERSION: u64 = 1;
+
+/// A loaded (or about-to-be-saved) sweep session.
+#[derive(Clone, Debug)]
+pub struct Session {
+    pub strategy: String,
+    /// the design space the rows were swept from
+    pub space: DesignSpace,
+    pub rows: Vec<Evaluation>,
+}
+
+impl Session {
+    /// Capture a sweep result (all touched rows) and the space it ran
+    /// over.
+    pub fn from_sweep(result: &SweepResult, space: &DesignSpace) -> Session {
+        Session {
+            strategy: result.strategy.to_string(),
+            space: space.clone(),
+            rows: result.evals.clone(),
+        }
+    }
+
+    /// Save atomically: write a sibling temp file, then rename over
+    /// the target, so an interrupted save never truncates an existing
+    /// session.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, self.encode().to_string())?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Session> {
+        let text = std::fs::read_to_string(&path)?;
+        Session::decode(&Json::parse(&text)?)
+    }
+
+    /// Merge another session's rows into this one (later duplicates of
+    /// the same content address are dropped).  Latencies must match —
+    /// rows evaluated under different operator latencies are different
+    /// computations and cannot share a session.
+    pub fn merge(&mut self, other: &Session) -> Result<()> {
+        if self.space.latency != other.space.latency {
+            return Err(Error::Explore(
+                "session merge: operator latencies differ".into(),
+            ));
+        }
+        let mut seen: HashSet<CacheKey> =
+            self.rows.iter().map(|r| self.key_of(r)).collect();
+        for row in &other.rows {
+            if seen.insert(other.key_of(row)) {
+                self.rows.push(row.clone());
+            }
+        }
+        Ok(())
+    }
+
+    fn key_of(&self, e: &Evaluation) -> CacheKey {
+        CacheKey::from_parts(
+            e.workload,
+            &e.design,
+            e.device,
+            e.timing.passes,
+            self.space.latency,
+            e.ddr,
+        )
+    }
+
+    /// Seed an evaluation cache with every row; returns the number of
+    /// rows loaded.  Preloading does not touch the hit/miss counters,
+    /// so a following sweep's hits measure real reuse.
+    pub fn preload(&self, cache: &EvalCache) -> usize {
+        for e in &self.rows {
+            cache.seed(self.key_of(e), e.clone());
+        }
+        self.rows.len()
+    }
+
+    pub fn encode(&self) -> Json {
+        json::obj(vec![
+            ("version", json::uint(SESSION_VERSION)),
+            ("strategy", json::str(&self.strategy)),
+            ("space", encode_space(&self.space)),
+            ("rows", Json::Arr(self.rows.iter().map(encode_row).collect())),
+        ])
+    }
+
+    pub fn decode(v: &Json) -> Result<Session> {
+        let version = v.field("version")?.as_u64()?;
+        if version != SESSION_VERSION {
+            return Err(Error::Explore(format!(
+                "session version {version} unsupported (want {SESSION_VERSION})"
+            )));
+        }
+        let space = decode_space(v.field("space")?)?;
+        let mut rows = Vec::new();
+        for row in v.field("rows")?.as_arr()? {
+            rows.push(decode_row(row)?);
+        }
+        Ok(Session {
+            strategy: v.field("strategy")?.as_str()?.to_string(),
+            space,
+            rows,
+        })
+    }
+}
+
+fn encode_space(s: &DesignSpace) -> Json {
+    json::obj(vec![
+        ("workload", json::str(s.workload)),
+        (
+            "grids",
+            Json::Arr(
+                s.grids
+                    .iter()
+                    .map(|&(w, h)| {
+                        Json::Arr(vec![json::uint(w as u64), json::uint(h as u64)])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("max_n", json::uint(s.max_n as u64)),
+        ("max_m", json::uint(s.max_m as u64)),
+        ("devices", Json::Arr(s.devices.iter().map(|d| json::str(d.key)).collect())),
+        ("ddr", Json::Arr(s.ddr_variants.iter().map(encode_ddr).collect())),
+        ("passes", json::uint(s.passes)),
+        ("latency", encode_latency(s.latency)),
+    ])
+}
+
+fn decode_space(v: &Json) -> Result<DesignSpace> {
+    let workload = workload::get(v.field("workload")?.as_str()?)?.name();
+    let mut grids = Vec::new();
+    for g in v.field("grids")?.as_arr()? {
+        let pair = g.as_arr()?;
+        if pair.len() != 2 {
+            return Err(Error::Explore("session: bad grid entry".into()));
+        }
+        grids.push((pair[0].as_u32()?, pair[1].as_u32()?));
+    }
+    let mut devices = Vec::new();
+    for d in v.field("devices")?.as_arr()? {
+        let key = d.as_str()?;
+        devices.push(device::by_name(key).ok_or_else(|| {
+            Error::Explore(format!("session: unknown device `{key}`"))
+        })?);
+    }
+    let mut ddr_variants = Vec::new();
+    for d in v.field("ddr")?.as_arr()? {
+        ddr_variants.push(decode_ddr(d)?);
+    }
+    Ok(DesignSpace {
+        workload,
+        grids,
+        max_n: v.field("max_n")?.as_u32()?,
+        max_m: v.field("max_m")?.as_u32()?,
+        devices,
+        ddr_variants,
+        passes: v.field("passes")?.as_u64()?,
+        latency: decode_latency(v.field("latency")?)?,
+    })
+}
+
+fn encode_latency(l: OpLatency) -> Json {
+    json::obj(vec![
+        ("add", json::uint(l.add as u64)),
+        ("mul", json::uint(l.mul as u64)),
+        ("div", json::uint(l.div as u64)),
+        ("sqrt", json::uint(l.sqrt as u64)),
+    ])
+}
+
+fn decode_latency(v: &Json) -> Result<OpLatency> {
+    Ok(OpLatency {
+        add: v.field("add")?.as_u32()?,
+        mul: v.field("mul")?.as_u32()?,
+        div: v.field("div")?.as_u32()?,
+        sqrt: v.field("sqrt")?.as_u32()?,
+    })
+}
+
+fn encode_ddr(d: &DdrConfig) -> Json {
+    json::obj(vec![
+        ("peak_gbps", json::num(d.peak_gbps)),
+        ("n_dimms", json::uint(d.n_dimms as u64)),
+        ("burst_bytes", json::uint(d.burst_bytes)),
+        ("turnaround_ns", json::num(d.turnaround_ns)),
+        ("trefi_ns", json::num(d.trefi_ns)),
+        ("trfc_ns", json::num(d.trfc_ns)),
+    ])
+}
+
+fn decode_ddr(v: &Json) -> Result<DdrConfig> {
+    Ok(DdrConfig {
+        peak_gbps: v.field("peak_gbps")?.as_f64()?,
+        n_dimms: v.field("n_dimms")?.as_usize()?,
+        burst_bytes: v.field("burst_bytes")?.as_u64()?,
+        turnaround_ns: v.field("turnaround_ns")?.as_f64()?,
+        trefi_ns: v.field("trefi_ns")?.as_f64()?,
+        trfc_ns: v.field("trfc_ns")?.as_f64()?,
+    })
+}
+
+fn encode_resources(r: &Resources) -> Json {
+    json::obj(vec![
+        ("alms", json::uint(r.alms)),
+        ("regs", json::uint(r.regs)),
+        ("bram_bits", json::uint(r.bram_bits)),
+        ("dsps", json::uint(r.dsps)),
+    ])
+}
+
+fn decode_resources(v: &Json) -> Result<Resources> {
+    Ok(Resources {
+        alms: v.field("alms")?.as_u64()?,
+        regs: v.field("regs")?.as_u64()?,
+        bram_bits: v.field("bram_bits")?.as_u64()?,
+        dsps: v.field("dsps")?.as_u64()?,
+    })
+}
+
+fn encode_row(e: &Evaluation) -> Json {
+    let limit = |o: Option<&'static str>| match o {
+        Some(l) => json::str(l),
+        None => Json::Null,
+    };
+    json::obj(vec![
+        ("workload", json::str(e.workload)),
+        ("device", json::str(e.device)),
+        ("n", json::uint(e.design.n as u64)),
+        ("m", json::uint(e.design.m as u64)),
+        ("w", json::uint(e.design.w as u64)),
+        ("h", json::uint(e.design.h as u64)),
+        ("pe_depth", json::uint(e.pe_depth as u64)),
+        ("passes", json::uint(e.timing.passes)),
+        ("ddr", encode_ddr(&e.ddr)),
+        (
+            "resources",
+            json::obj(vec![
+                ("core", encode_resources(&e.resources.core)),
+                ("total", encode_resources(&e.resources.total)),
+                ("over_capacity", limit(e.resources.over_capacity)),
+                ("fp_ops", json::uint(e.resources.fp_ops as u64)),
+                ("dsp_muls", json::uint(e.resources.dsp_muls as u64)),
+                ("logic_muls", json::uint(e.resources.logic_muls as u64)),
+                ("bal_regs", json::uint(e.resources.balance_stages_regs)),
+                ("bal_bram", json::uint(e.resources.balance_stages_bram)),
+            ]),
+        ),
+        (
+            "timing",
+            json::obj(vec![
+                ("n_c", json::uint(e.timing.n_c)),
+                ("n_s", json::uint(e.timing.n_s)),
+                ("total_cycles", json::uint(e.timing.total_cycles)),
+                ("utilization", json::num(e.timing.utilization)),
+                ("sustained_gflops", json::num(e.timing.sustained_gflops)),
+                ("performance_gflops", json::num(e.timing.performance_gflops)),
+                ("peak_gflops", json::num(e.timing.peak_gflops)),
+                ("read_gbps", json::num(e.timing.read_gbps)),
+                ("write_gbps", json::num(e.timing.write_gbps)),
+                ("demand_gbps", json::num(e.timing.demand_gbps)),
+            ]),
+        ),
+        ("power_w", json::num(e.power_w)),
+        ("perf_per_watt", json::num(e.perf_per_watt)),
+        ("infeasible", limit(e.infeasible)),
+    ])
+}
+
+fn decode_row(v: &Json) -> Result<Evaluation> {
+    let workload = workload::get(v.field("workload")?.as_str()?)?.name();
+    let device_name = v.field("device")?.as_str()?;
+    let dev = device::by_name(device_name).ok_or_else(|| {
+        Error::Explore(format!("session: unknown device `{device_name}`"))
+    })?;
+    let design = DesignPoint::new(
+        v.field("n")?.as_u32()?,
+        v.field("m")?.as_u32()?,
+        v.field("w")?.as_u32()?,
+        v.field("h")?.as_u32()?,
+    );
+    let res = v.field("resources")?;
+    let over = decode_limit(res, "over_capacity")?;
+    let t = v.field("timing")?;
+    let passes = v.field("passes")?.as_u64()?;
+    Ok(Evaluation {
+        workload,
+        device: dev.name,
+        design,
+        ddr: decode_ddr(v.field("ddr")?)?,
+        pe_depth: v.field("pe_depth")?.as_u32()?,
+        resources: ResourceEstimate {
+            core: decode_resources(res.field("core")?)?,
+            total: decode_resources(res.field("total")?)?,
+            over_capacity: over,
+            fp_ops: res.field("fp_ops")?.as_usize()?,
+            dsp_muls: res.field("dsp_muls")?.as_usize()?,
+            logic_muls: res.field("logic_muls")?.as_usize()?,
+            balance_stages_regs: res.field("bal_regs")?.as_u64()?,
+            balance_stages_bram: res.field("bal_bram")?.as_u64()?,
+        },
+        timing: TimingReport {
+            n_c: t.field("n_c")?.as_u64()?,
+            n_s: t.field("n_s")?.as_u64()?,
+            total_cycles: t.field("total_cycles")?.as_u64()?,
+            passes,
+            utilization: t.field("utilization")?.as_f64()?,
+            sustained_gflops: t.field("sustained_gflops")?.as_f64()?,
+            performance_gflops: t.field("performance_gflops")?.as_f64()?,
+            peak_gflops: t.field("peak_gflops")?.as_f64()?,
+            read_gbps: t.field("read_gbps")?.as_f64()?,
+            write_gbps: t.field("write_gbps")?.as_f64()?,
+            demand_gbps: t.field("demand_gbps")?.as_f64()?,
+        },
+        power_w: v.field("power_w")?.as_f64()?,
+        perf_per_watt: v.field("perf_per_watt")?.as_f64()?,
+        infeasible: decode_limit(v, "infeasible")?,
+    })
+}
+
+/// Decode a nullable limiting-resource label strictly: anything other
+/// than `null` or a known [`device::intern_limit`] label is an error
+/// (a lenient fallback would mask corrupted feasibility data).
+fn decode_limit(v: &Json, key: &str) -> Result<Option<&'static str>> {
+    match v.field(key)? {
+        Json::Null => Ok(None),
+        Json::Str(s) => device::intern_limit(s).map(Some).ok_or_else(|| {
+            Error::Explore(format!("session: unknown resource limit `{s}`"))
+        }),
+        other => Err(Error::Explore(format!("session: bad limit field {other:?}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explore::{evaluate, ExploreConfig};
+
+    fn cfg() -> ExploreConfig {
+        ExploreConfig {
+            grid_w: 64,
+            grid_h: 32,
+            max_n: 2,
+            max_m: 2,
+            passes: 2,
+            ..Default::default()
+        }
+    }
+
+    fn space() -> DesignSpace {
+        DesignSpace::from_explore(&cfg())
+    }
+
+    fn rows() -> Vec<Evaluation> {
+        vec![
+            evaluate(&DesignPoint::new(1, 1, 64, 32), &cfg()).unwrap(),
+            evaluate(&DesignPoint::new(1, 2, 64, 32), &cfg()).unwrap(),
+        ]
+    }
+
+    #[test]
+    fn encode_decode_roundtrips_bit_exactly() {
+        let rows = rows();
+        let s = Session {
+            strategy: "exhaustive".to_string(),
+            space: space(),
+            rows: rows.clone(),
+        };
+        let back = Session::decode(&Json::parse(&s.encode().to_string()).unwrap()).unwrap();
+        assert_eq!(back.strategy, "exhaustive");
+        assert_eq!(back.space.workload, "lbm");
+        assert_eq!(back.space.grids, vec![(64, 32)]);
+        assert_eq!(back.space.max_n, 2);
+        assert_eq!(back.space.max_m, 2);
+        assert_eq!(back.space.passes, 2);
+        assert_eq!(back.space.devices.len(), 1);
+        assert_eq!(back.space.devices[0].key, "stratix-v");
+        assert_eq!(back.space.latency, OpLatency::default());
+        assert_eq!(back.rows.len(), rows.len());
+        for (a, b) in rows.iter().zip(&back.rows) {
+            assert_eq!(a.design, b.design);
+            assert_eq!(a.workload, b.workload);
+            assert_eq!(a.device, b.device);
+            assert_eq!(a.pe_depth, b.pe_depth);
+            assert_eq!(a.resources.core, b.resources.core);
+            assert_eq!(a.resources.total, b.resources.total);
+            assert_eq!(a.timing.n_c, b.timing.n_c);
+            assert_eq!(a.timing.passes, b.timing.passes);
+            assert_eq!(a.power_w.to_bits(), b.power_w.to_bits());
+            assert_eq!(a.perf_per_watt.to_bits(), b.perf_per_watt.to_bits());
+            assert_eq!(a.infeasible, b.infeasible);
+        }
+    }
+
+    #[test]
+    fn preload_then_lookup_hits() {
+        let rows = rows();
+        let s = Session {
+            strategy: "exhaustive".to_string(),
+            space: space(),
+            rows,
+        };
+        let cache = EvalCache::new();
+        assert_eq!(s.preload(&cache), 2);
+        assert_eq!(cache.stats().misses, 0, "preload must not count misses");
+        let key = s.key_of(&s.rows[0]);
+        assert!(cache.lookup(&key).is_some());
+    }
+
+    #[test]
+    fn merge_dedupes_and_checks_latency() {
+        let rows = rows();
+        let mut a = Session {
+            strategy: "exhaustive".to_string(),
+            space: space(),
+            rows: vec![rows[0].clone()],
+        };
+        let b = Session {
+            strategy: "bounded-prune".to_string(),
+            space: space(),
+            rows: rows.clone(),
+        };
+        a.merge(&b).unwrap();
+        assert_eq!(a.rows.len(), 2, "duplicate row must not be added twice");
+
+        let c = Session {
+            strategy: "exhaustive".to_string(),
+            space: DesignSpace {
+                latency: OpLatency { add: 9, ..OpLatency::default() },
+                ..space()
+            },
+            rows: vec![],
+        };
+        assert!(a.merge(&c).is_err());
+    }
+
+    #[test]
+    fn unknown_device_or_workload_is_an_error() {
+        let rows = rows();
+        let s = Session {
+            strategy: "x".to_string(),
+            space: space(),
+            rows: vec![rows[0].clone()],
+        };
+        let mut text = s.encode().to_string();
+        text = text.replace("Stratix V 5SGXEA7", "Vaporware 9000");
+        assert!(Session::decode(&Json::parse(&text).unwrap()).is_err());
+    }
+}

@@ -1,0 +1,214 @@
+//! The multi-axis design space.
+//!
+//! The paper sweeps (n, m) on one grid, one device, one memory
+//! system.  [`DesignSpace`] generalizes the candidate set to the
+//! cross product of
+//!
+//! * (n, m) — spatial × temporal parallelism (as in `explore`),
+//! * grid sizes,
+//! * devices (the [`crate::resource::device`] catalog), and
+//! * DDR configurations (DIMM count / generation variants),
+//!
+//! which is what makes pruning and caching worth having: a full sweep
+//! over even a modest multi-device space is hundreds of points.
+
+use crate::dfg::OpLatency;
+use crate::explore::{self, ExploreConfig};
+use crate::resource::{Device, STRATIX_V_5SGXEA7};
+use crate::sim::DdrConfig;
+use crate::workload::DesignPoint;
+
+/// One fully-specified candidate: a design point plus the evaluation
+/// context (workload, grid, device, DDR) it is judged under.
+#[derive(Clone, Copy, Debug)]
+pub struct Candidate {
+    pub cfg: ExploreConfig,
+    pub design: DesignPoint,
+}
+
+/// The candidate axes of one sweep.
+#[derive(Clone, Debug)]
+pub struct DesignSpace {
+    /// registered workload name (see `workload::names()`)
+    pub workload: &'static str,
+    /// grid sizes (w, h) to sweep
+    pub grids: Vec<(u32, u32)>,
+    /// candidate spatial widths: powers of two up to this, dividing w
+    pub max_n: u32,
+    /// candidate cascade lengths: 1..=max_m
+    pub max_m: u32,
+    /// target parts
+    pub devices: Vec<&'static Device>,
+    /// memory-system variants
+    pub ddr_variants: Vec<DdrConfig>,
+    /// timing-simulation passes per design
+    pub passes: u64,
+    pub latency: OpLatency,
+}
+
+impl Default for DesignSpace {
+    fn default() -> Self {
+        DesignSpace {
+            workload: "lbm",
+            grids: vec![(720, 300)],
+            max_n: 4,
+            max_m: 4,
+            devices: vec![&STRATIX_V_5SGXEA7],
+            ddr_variants: vec![DdrConfig::default()],
+            passes: 3,
+            latency: OpLatency::default(),
+        }
+    }
+}
+
+impl DesignSpace {
+    /// The single-grid, single-device space equivalent to one
+    /// `ExploreConfig` (what `explore::explore` sweeps).
+    pub fn from_explore(cfg: &ExploreConfig) -> DesignSpace {
+        DesignSpace {
+            workload: cfg.workload,
+            grids: vec![(cfg.grid_w, cfg.grid_h)],
+            max_n: cfg.max_n,
+            max_m: cfg.max_m,
+            devices: vec![cfg.device],
+            ddr_variants: vec![cfg.ddr],
+            passes: cfg.passes,
+            latency: cfg.latency,
+        }
+    }
+
+    /// The `ExploreConfig` of one (grid, device, ddr) slice.
+    pub fn slice_cfg(
+        &self,
+        grid: (u32, u32),
+        device: &'static Device,
+        ddr: DdrConfig,
+    ) -> ExploreConfig {
+        ExploreConfig {
+            workload: self.workload,
+            grid_w: grid.0,
+            grid_h: grid.1,
+            max_n: self.max_n,
+            max_m: self.max_m,
+            passes: self.passes,
+            latency: self.latency,
+            ddr,
+            device,
+            keep_infeasible: true,
+        }
+    }
+
+    /// All (grid, device, ddr) slices, in axis order.
+    pub fn slices(&self) -> Vec<ExploreConfig> {
+        let mut out = Vec::new();
+        for &grid in &self.grids {
+            for &device in &self.devices {
+                for &ddr in &self.ddr_variants {
+                    out.push(self.slice_cfg(grid, device, ddr));
+                }
+            }
+        }
+        out
+    }
+
+    /// Every candidate in the space: the (n, m) lattice of each slice.
+    pub fn candidates(&self) -> Vec<Candidate> {
+        let mut out = Vec::new();
+        for cfg in self.slices() {
+            for design in explore::candidates(&cfg) {
+                out.push(Candidate { cfg, design });
+            }
+        }
+        out
+    }
+
+    /// Candidate count without materializing the candidate vector.
+    pub fn len(&self) -> usize {
+        let lattice: usize = self
+            .grids
+            .iter()
+            .map(|&(w, _)| explore::valid_ns(self.max_n, w).len() * self.max_m as usize)
+            .sum();
+        lattice * self.devices.len() * self.ddr_variants.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Named DDR variants for the CLI / session layer.
+///
+/// * `default` — the DE5-NET's two DDR3-1600 controllers (paper);
+/// * `single`  — one controller (halves duplex capacity);
+/// * `quad`    — four controllers (an HBM-ish bandwidth probe);
+/// * `ddr4`    — two DDR4-2400 controllers (higher peak, slightly
+///   costlier turnaround).
+pub fn ddr_by_name(name: &str) -> Option<DdrConfig> {
+    let base = DdrConfig::default();
+    match name {
+        "default" | "ddr3" => Some(base),
+        "single" => Some(DdrConfig { n_dimms: 1, ..base }),
+        "quad" => Some(DdrConfig { n_dimms: 4, ..base }),
+        "ddr4" => Some(DdrConfig { peak_gbps: 19.2, turnaround_ns: 25.0, ..base }),
+        _ => None,
+    }
+}
+
+/// The names `ddr_by_name` accepts, for CLI help and errors.
+pub const DDR_VARIANT_NAMES: [&str; 4] = ["default", "single", "quad", "ddr4"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::resource::ARRIA_10_GX1150;
+
+    #[test]
+    fn from_explore_matches_explore_candidates() {
+        let cfg = ExploreConfig {
+            grid_w: 64,
+            grid_h: 32,
+            max_n: 4,
+            max_m: 2,
+            ..Default::default()
+        };
+        let space = DesignSpace::from_explore(&cfg);
+        let cands = space.candidates();
+        let flat = explore::candidates(&cfg);
+        assert_eq!(cands.len(), flat.len());
+        assert_eq!(space.len(), flat.len());
+        for (c, d) in cands.iter().zip(&flat) {
+            assert_eq!(c.design, *d);
+            assert_eq!(c.cfg.device.name, cfg.device.name);
+        }
+    }
+
+    #[test]
+    fn cross_product_scales_with_axes() {
+        let space = DesignSpace {
+            grids: vec![(64, 32), (128, 64)],
+            devices: vec![&STRATIX_V_5SGXEA7, &ARRIA_10_GX1150],
+            ddr_variants: vec![
+                ddr_by_name("default").unwrap(),
+                ddr_by_name("single").unwrap(),
+            ],
+            max_n: 2,
+            max_m: 2,
+            ..Default::default()
+        };
+        // 2 grids x 2 devices x 2 ddr x (2 n-values x 2 m-values)
+        assert_eq!(space.candidates().len(), 2 * 2 * 2 * 4);
+        assert!(!space.is_empty());
+    }
+
+    #[test]
+    fn ddr_variants_resolve() {
+        assert_eq!(ddr_by_name("single").unwrap().n_dimms, 1);
+        assert_eq!(ddr_by_name("quad").unwrap().n_dimms, 4);
+        assert!(ddr_by_name("ddr4").unwrap().peak_gbps > 12.8);
+        assert!(ddr_by_name("hbm3").is_none());
+        for name in DDR_VARIANT_NAMES {
+            assert!(ddr_by_name(name).is_some(), "{name}");
+        }
+    }
+}

@@ -1,0 +1,448 @@
+//! Pluggable search strategies.
+//!
+//! Three ways to walk a [`DesignSpace`], all funneling evaluations
+//! through [`crate::coordinator::evaluate_batch`] and a shared
+//! [`EvalCache`]:
+//!
+//! * [`Exhaustive`] — every candidate (the paper's manual sweep,
+//!   automated; exact by construction);
+//! * [`BoundedPrune`] — branch-and-bound: skips points whose *monotone
+//!   resource lower bound* already exceeds the device (DSP census and
+//!   convex per-cascade extrapolation), cuts cascades that sit above a
+//!   point already observed infeasible, and — optionally — cuts
+//!   cascades whose measured utilization has collapsed below a
+//!   threshold.  With the utilization cut disabled (the default), the
+//!   pruned points are provably infeasible, so the feasible set — and
+//!   therefore the Pareto frontier and the perf/W winner — is
+//!   identical to [`Exhaustive`]'s, at strictly fewer evaluations
+//!   whenever the space contains infeasible cascades;
+//! * [`HillClimb`] — a seeded greedy walk with restarts for spaces too
+//!   large to enumerate; evaluates only the visited neighborhoods.
+
+use std::collections::HashSet;
+
+use crate::coordinator::{evaluate_batch, BatchJob};
+use crate::error::Result;
+use crate::explore::{self, sort_by_perf_per_watt, valid_ns, Evaluation};
+use crate::resource::soc_peripherals;
+use crate::util::rng::XorShift64;
+use crate::workload::DesignPoint;
+
+use super::cache::{CacheKey, EvalCache};
+use super::space::DesignSpace;
+
+/// Shared context of one sweep: the cache and the worker-pool width.
+pub struct SweepContext<'a> {
+    pub cache: &'a EvalCache,
+    pub workers: usize,
+}
+
+/// Outcome of one strategy run over a space.
+#[derive(Clone, Debug)]
+pub struct SweepResult {
+    pub strategy: &'static str,
+    /// all rows this strategy touched (feasible first, perf/W order)
+    pub evals: Vec<Evaluation>,
+    /// real `evaluate` computations performed (cache misses)
+    pub evaluated: usize,
+    /// evaluations answered from the cache
+    pub cache_hits: u64,
+    /// candidates skipped without evaluation (pruned)
+    pub skipped: usize,
+    /// total candidates in the space
+    pub candidates: usize,
+}
+
+impl SweepResult {
+    /// Best feasible design by perf/W.
+    pub fn best(&self) -> Option<&Evaluation> {
+        self.evals.iter().find(|e| e.infeasible.is_none())
+    }
+
+    /// Pareto frontier (performance vs power) over the touched rows.
+    pub fn pareto(&self) -> Vec<&Evaluation> {
+        explore::pareto(&self.evals)
+    }
+}
+
+/// A search strategy over a design space.
+pub trait SearchStrategy {
+    fn name(&self) -> &'static str;
+    fn run(&self, space: &DesignSpace, ctx: &SweepContext) -> Result<SweepResult>;
+}
+
+/// Resolve a strategy by CLI name.
+pub fn strategy_by_name(name: &str) -> Option<Box<dyn SearchStrategy>> {
+    match name {
+        "exhaustive" => Some(Box::new(Exhaustive)),
+        "prune" | "bounded-prune" => Some(Box::new(BoundedPrune::default())),
+        "hill" | "hill-climb" | "hillclimb" => Some(Box::new(HillClimb::default())),
+        _ => None,
+    }
+}
+
+fn finish(
+    strategy: &'static str,
+    mut evals: Vec<Evaluation>,
+    ctx: &SweepContext,
+    before: super::cache::CacheStats,
+    skipped: usize,
+    candidates: usize,
+) -> SweepResult {
+    sort_by_perf_per_watt(&mut evals);
+    let after = ctx.cache.stats();
+    SweepResult {
+        strategy,
+        evals,
+        evaluated: (after.misses - before.misses) as usize,
+        cache_hits: after.hits - before.hits,
+        skipped,
+        candidates,
+    }
+}
+
+/// Evaluate every candidate.
+pub struct Exhaustive;
+
+impl SearchStrategy for Exhaustive {
+    fn name(&self) -> &'static str {
+        "exhaustive"
+    }
+
+    fn run(&self, space: &DesignSpace, ctx: &SweepContext) -> Result<SweepResult> {
+        let before = ctx.cache.stats();
+        let cands = space.candidates();
+        let jobs: Vec<BatchJob> = cands.iter().map(|c| (c.cfg, c.design)).collect();
+        let (evals, _) = evaluate_batch(&jobs, ctx.workers, Some(ctx.cache))?;
+        Ok(finish(self.name(), evals, ctx, before, 0, jobs.len()))
+    }
+}
+
+/// Branch-and-bound over each (grid, device, ddr) slice.
+#[derive(Clone, Copy, Debug)]
+pub struct BoundedPrune {
+    /// Cut cascades (m > smallest evaluated) for spatial widths whose
+    /// measured utilization has collapsed below this threshold.  This
+    /// cut is a (paper-§III-C-motivated) heuristic: bandwidth-starved
+    /// widths rarely win perf/W, but deeper cascades at those widths
+    /// are not *provably* dominated — so 0.0 (disabled) keeps the
+    /// strategy frontier-exact, and is the default.
+    pub min_utilization: f64,
+}
+
+impl Default for BoundedPrune {
+    fn default() -> Self {
+        BoundedPrune { min_utilization: 0.0 }
+    }
+}
+
+/// Per-spatial-width (column) pruning state inside one slice.
+struct Column {
+    n: u32,
+    /// a point of this column was evaluated (or bounded) infeasible —
+    /// resources are monotone in m, so everything deeper is too
+    dead: bool,
+    /// utilization collapsed below the configured threshold
+    low_util: bool,
+    /// evaluated (m, total resources incl. SoC) rows, m ascending
+    totals: Vec<(u32, [f64; 4])>,
+}
+
+fn totals_of(e: &Evaluation) -> [f64; 4] {
+    [
+        e.resources.total.alms as f64,
+        e.resources.total.regs as f64,
+        e.resources.total.bram_bits as f64,
+        e.resources.total.dsps as f64,
+    ]
+}
+
+/// Convex lower bound on the resource totals of (n, m) extrapolated
+/// from the column's two deepest evaluated cascades; a small slack
+/// absorbs u64 rounding so the bound stays conservative.
+///
+/// Only ALMs and DSPs are bounded this way: along the cascade axis
+/// ALMs are a linear per-PE term plus a fitting-pressure term
+/// quadratic in that linear quantity (convex), and DSPs are exactly
+/// linear — so forward-difference extrapolation is a true lower
+/// bound.  Register/BRAM totals can step non-convexly when balancing
+/// delays cross the shift-register threshold, so they are never
+/// extrapolated (deep-cascade BRAM blowups are still caught by the
+/// observed-infeasible dominance rule).
+fn extrapolate(col: &Column, m: u32) -> Option<[f64; 4]> {
+    let k = col.totals.len();
+    if k < 2 {
+        return None;
+    }
+    let (m1, r1) = col.totals[k - 2];
+    let (m2, r2) = col.totals[k - 1];
+    if m2 <= m1 || m <= m2 {
+        return None;
+    }
+    let steps = (m - m2) as f64 / (m2 - m1) as f64;
+    let mut out = [f64::NEG_INFINITY; 4];
+    for i in [0, 3] {
+        out[i] = r2[i] + steps * (r2[i] - r1[i]) - 4.0;
+    }
+    Some(out)
+}
+
+impl SearchStrategy for BoundedPrune {
+    fn name(&self) -> &'static str {
+        "bounded-prune"
+    }
+
+    fn run(&self, space: &DesignSpace, ctx: &SweepContext) -> Result<SweepResult> {
+        let before = ctx.cache.stats();
+        let mut evals: Vec<Evaluation> = Vec::new();
+        let mut skipped = 0usize;
+        let mut candidates = 0usize;
+        let soc_dsps = soc_peripherals().dsps as f64;
+
+        for cfg in space.slices() {
+            let ns = valid_ns(cfg.max_n, cfg.grid_w);
+            candidates += ns.len() * cfg.max_m as usize;
+
+            let mut cols: Vec<Column> = ns
+                .iter()
+                .map(|&n| Column { n, dead: false, low_util: false, totals: Vec::new() })
+                .collect();
+            // DSP cost of one pipeline (exact: DSPs replicate per
+            // pipeline and per PE, with no shared or per-design DSPs),
+            // learned from the first evaluated point
+            let mut dsps_per_pipe: Option<f64> = None;
+            let cap = [
+                cfg.device.alms as f64,
+                cfg.device.regs as f64,
+                cfg.device.bram_bits as f64,
+                cfg.device.dsps as f64,
+            ];
+
+            for m in 1..=cfg.max_m {
+                let mut wave: Vec<BatchJob> = Vec::new();
+                let mut wave_cols: Vec<usize> = Vec::new();
+                for (ci, col) in cols.iter_mut().enumerate() {
+                    if col.dead || (col.low_util && m > 1) {
+                        skipped += 1;
+                        continue;
+                    }
+                    // monotone DSP-census lower bound
+                    if let Some(pp) = dsps_per_pipe {
+                        if pp * (col.n * m) as f64 + soc_dsps > cap[3] {
+                            col.dead = true;
+                            skipped += 1;
+                            continue;
+                        }
+                    }
+                    // convex extrapolation along the cascade
+                    if let Some(bound) = extrapolate(col, m) {
+                        if bound.iter().zip(&cap).any(|(b, c)| b > c) {
+                            col.dead = true;
+                            skipped += 1;
+                            continue;
+                        }
+                    }
+                    wave.push((cfg, DesignPoint::new(col.n, m, cfg.grid_w, cfg.grid_h)));
+                    wave_cols.push(ci);
+                }
+                if wave.is_empty() {
+                    continue;
+                }
+                let (wave_evals, _) = evaluate_batch(&wave, ctx.workers, Some(ctx.cache))?;
+                for (e, &ci) in wave_evals.iter().zip(&wave_cols) {
+                    let col = &mut cols[ci];
+                    let nm = (e.design.n * e.design.m) as f64;
+                    let pp = e.resources.core.dsps as f64 / nm;
+                    dsps_per_pipe =
+                        Some(dsps_per_pipe.map_or(pp, |prev: f64| prev.min(pp)));
+                    col.totals.push((m, totals_of(e)));
+                    if e.infeasible.is_some() {
+                        col.dead = true;
+                    }
+                    if self.min_utilization > 0.0
+                        && e.timing.utilization < self.min_utilization
+                    {
+                        col.low_util = true;
+                    }
+                }
+                evals.extend(wave_evals);
+            }
+        }
+        Ok(finish(self.name(), evals, ctx, before, skipped, candidates))
+    }
+}
+
+/// Seeded greedy walk with restarts, for spaces too large to
+/// enumerate.  Each step evaluates the neighborhood of the current
+/// point (n halved/doubled, m ± 1, adjacent device / DDR / grid) in
+/// one parallel batch and moves to the best feasible neighbor by
+/// perf/W; restarts begin from random coordinates.
+#[derive(Clone, Copy, Debug)]
+pub struct HillClimb {
+    pub seed: u64,
+    pub restarts: usize,
+    /// hard cap on walk length per restart (safety on weird surfaces)
+    pub max_steps: usize,
+}
+
+impl Default for HillClimb {
+    fn default() -> Self {
+        HillClimb { seed: 0x5eed, restarts: 4, max_steps: 64 }
+    }
+}
+
+/// A lattice coordinate in the space (indices into the axes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct Coord {
+    grid: usize,
+    device: usize,
+    ddr: usize,
+    /// index into the valid n-list of this grid
+    n_idx: usize,
+    m: u32,
+}
+
+fn coord_job(space: &DesignSpace, c: Coord) -> BatchJob {
+    let grid = space.grids[c.grid];
+    let cfg = space.slice_cfg(grid, space.devices[c.device], space.ddr_variants[c.ddr]);
+    let n = valid_ns(space.max_n, grid.0)[c.n_idx];
+    (cfg, DesignPoint::new(n, c.m, grid.0, grid.1))
+}
+
+fn score(e: &Evaluation) -> f64 {
+    if e.infeasible.is_some() || e.perf_per_watt.is_nan() {
+        f64::NEG_INFINITY
+    } else {
+        e.perf_per_watt
+    }
+}
+
+impl HillClimb {
+    fn neighbors(&self, space: &DesignSpace, c: Coord) -> Vec<Coord> {
+        let mut out = Vec::new();
+        let ns = valid_ns(space.max_n, space.grids[c.grid].0);
+        if c.n_idx > 0 {
+            out.push(Coord { n_idx: c.n_idx - 1, ..c });
+        }
+        if c.n_idx + 1 < ns.len() {
+            out.push(Coord { n_idx: c.n_idx + 1, ..c });
+        }
+        if c.m > 1 {
+            out.push(Coord { m: c.m - 1, ..c });
+        }
+        if c.m < space.max_m {
+            out.push(Coord { m: c.m + 1, ..c });
+        }
+        if c.device > 0 {
+            out.push(Coord { device: c.device - 1, ..c });
+        }
+        if c.device + 1 < space.devices.len() {
+            out.push(Coord { device: c.device + 1, ..c });
+        }
+        if c.ddr > 0 {
+            out.push(Coord { ddr: c.ddr - 1, ..c });
+        }
+        if c.ddr + 1 < space.ddr_variants.len() {
+            out.push(Coord { ddr: c.ddr + 1, ..c });
+        }
+        // grid moves can invalidate n_idx (different divisor lists):
+        // clamp into the neighbor grid's n-list
+        for g in [c.grid.wrapping_sub(1), c.grid + 1] {
+            if g < space.grids.len() && g != c.grid {
+                let gn = valid_ns(space.max_n, space.grids[g].0);
+                if !gn.is_empty() {
+                    out.push(Coord { grid: g, n_idx: c.n_idx.min(gn.len() - 1), ..c });
+                }
+            }
+        }
+        out
+    }
+}
+
+impl SearchStrategy for HillClimb {
+    fn name(&self) -> &'static str {
+        "hill-climb"
+    }
+
+    fn run(&self, space: &DesignSpace, ctx: &SweepContext) -> Result<SweepResult> {
+        let before = ctx.cache.stats();
+        // an empty axis means an empty space: return the empty sweep
+        // rather than indexing into a zero-length axis below
+        if space.grids.is_empty()
+            || space.devices.is_empty()
+            || space.ddr_variants.is_empty()
+            || space.max_m == 0
+        {
+            return Ok(finish(self.name(), Vec::new(), ctx, before, 0, 0));
+        }
+        let total = space.len();
+        let mut rng = XorShift64::new(self.seed);
+        let mut visited: HashSet<CacheKey> = HashSet::new();
+        let mut evals: Vec<Evaluation> = Vec::new();
+
+        let touch = |batch: &[BatchJob],
+                         visited: &mut HashSet<CacheKey>,
+                         evals: &mut Vec<Evaluation>|
+         -> Result<Vec<Evaluation>> {
+            let (out, _) = evaluate_batch(batch, ctx.workers, Some(ctx.cache))?;
+            // record first-visits (keyed like the cache)
+            for ((cfg, design), e) in batch.iter().zip(&out) {
+                let key = CacheKey::new(design, cfg);
+                if visited.insert(key) {
+                    evals.push(e.clone());
+                }
+            }
+            Ok(out)
+        };
+
+        for _ in 0..self.restarts.max(1) {
+            // random start
+            let grid = rng.below(space.grids.len() as u64) as usize;
+            let ns = valid_ns(space.max_n, space.grids[grid].0);
+            if ns.is_empty() {
+                continue;
+            }
+            let mut cur = Coord {
+                grid,
+                device: rng.below(space.devices.len() as u64) as usize,
+                ddr: rng.below(space.ddr_variants.len() as u64) as usize,
+                n_idx: rng.below(ns.len() as u64) as usize,
+                m: 1 + rng.below(space.max_m as u64) as u32,
+            };
+            let start_job = coord_job(space, cur);
+            let mut cur_score = score(&touch(&[start_job], &mut visited, &mut evals)?[0]);
+
+            for _ in 0..self.max_steps {
+                let neigh = self.neighbors(space, cur);
+                if neigh.is_empty() {
+                    break;
+                }
+                let jobs: Vec<BatchJob> =
+                    neigh.iter().map(|&c| coord_job(space, c)).collect();
+                let out = touch(&jobs, &mut visited, &mut evals)?;
+                let Some((best_i, best_score)) = out
+                    .iter()
+                    .enumerate()
+                    .map(|(i, e)| (i, score(e)))
+                    .max_by(|a, b| a.1.total_cmp(&b.1))
+                else {
+                    break;
+                };
+                if best_score > cur_score {
+                    cur = neigh[best_i];
+                    cur_score = best_score;
+                } else {
+                    break;
+                }
+            }
+        }
+        Ok(finish(
+            self.name(),
+            evals,
+            ctx,
+            before,
+            total.saturating_sub(visited.len()),
+            total,
+        ))
+    }
+}

@@ -11,13 +11,20 @@
 //! kernel in the [`crate::workload`] registry (LBM, Jacobi, FDTD, 3×3
 //! convolution, ...), and everything the evaluation needs — SPD
 //! generation, stream words per cell, the FLOP census — comes through
-//! the [`StencilKernel`] trait.
+//! the [`StencilKernel`] trait.  It is also device-generic:
+//! `ExploreConfig::device` selects a part from the
+//! [`crate::resource::device`] catalog.
+//!
+//! This module owns the *evaluation* of one design point.  The search
+//! over many points lives in [`crate::dse`]: [`explore`] is now a thin
+//! wrapper over the exhaustive strategy on a single-device space.
 
 use crate::dfg::OpLatency;
 use crate::error::Result;
 use crate::power;
 use crate::resource::{
-    estimate_hierarchical, CostTable, DesignMeta, ResourceEstimate, STRATIX_V_5SGXEA7,
+    estimate_hierarchical, CostTable, DesignMeta, Device, ResourceEstimate,
+    STRATIX_V_5SGXEA7,
 };
 use crate::sim::{run_timing, DdrConfig, TimingDesign, TimingReport};
 use crate::workload::{self, DesignPoint, StencilKernel};
@@ -27,7 +34,11 @@ use crate::workload::{self, DesignPoint, StencilKernel};
 pub struct Evaluation {
     /// workload registry name this row was evaluated for
     pub workload: &'static str,
+    /// device the row was checked against (catalog name)
+    pub device: &'static str,
     pub design: DesignPoint,
+    /// memory system the timing simulation ran against
+    pub ddr: DdrConfig,
     pub pe_depth: u32,
     pub resources: ResourceEstimate,
     pub timing: TimingReport,
@@ -52,6 +63,8 @@ pub struct ExploreConfig {
     pub passes: u64,
     pub latency: OpLatency,
     pub ddr: DdrConfig,
+    /// target part (defaults to the paper's Stratix V)
+    pub device: &'static Device,
     /// include design points that exceed the device (marked infeasible)
     pub keep_infeasible: bool,
 }
@@ -67,6 +80,7 @@ impl Default for ExploreConfig {
             passes: 3,
             latency: OpLatency::default(),
             ddr: DdrConfig::default(),
+            device: &STRATIX_V_5SGXEA7,
             keep_infeasible: false,
         }
     }
@@ -76,16 +90,28 @@ impl Default for ExploreConfig {
 /// m from 1 to max_m.
 pub fn candidates(cfg: &ExploreConfig) -> Vec<DesignPoint> {
     let mut out = Vec::new();
+    for n in valid_ns(cfg.max_n, cfg.grid_w) {
+        for m in 1..=cfg.max_m {
+            out.push(DesignPoint::new(n, m, cfg.grid_w, cfg.grid_h));
+        }
+    }
+    out
+}
+
+/// Valid spatial widths of the candidate lattice: powers of two up to
+/// `max_n` that divide the grid width.  The single source of the
+/// lattice rule — [`candidates`] and every [`crate::dse`] strategy
+/// build on it, so they always agree on the candidate set.
+pub fn valid_ns(max_n: u32, grid_w: u32) -> Vec<u32> {
+    let mut ns = Vec::new();
     let mut n = 1;
-    while n <= cfg.max_n {
-        if cfg.grid_w % n == 0 {
-            for m in 1..=cfg.max_m {
-                out.push(DesignPoint::new(n, m, cfg.grid_w, cfg.grid_h));
-            }
+    while n <= max_n {
+        if grid_w % n == 0 {
+            ns.push(n);
         }
         n *= 2;
     }
-    out
+    ns
 }
 
 /// Evaluate a single design point for the configured workload.
@@ -107,7 +133,7 @@ pub fn evaluate_with(
         cfg.latency,
         &meta,
         &CostTable::default(),
-        &STRATIX_V_5SGXEA7,
+        cfg.device,
     )?;
 
     let timing_design = TimingDesign {
@@ -125,7 +151,9 @@ pub fn evaluate_with(
 
     Ok(Evaluation {
         workload: wl.name(),
+        device: cfg.device.name,
         design: *design,
+        ddr: cfg.ddr,
         pe_depth: generated.pe_depth,
         resources: resources.clone(),
         timing,
@@ -135,19 +163,21 @@ pub fn evaluate_with(
     })
 }
 
-/// Evaluate all candidates sequentially (see `coordinator` for the
-/// multi-threaded version).  Feasible results are sorted by
+/// Evaluate all candidates (see `coordinator` for the multi-threaded
+/// batch primitive).  Feasible results are sorted by
 /// performance-per-watt, best first.
+///
+/// This is a thin wrapper over [`crate::dse::Exhaustive`] on the
+/// single-grid, single-device space described by `cfg`.
 pub fn explore(cfg: &ExploreConfig) -> Result<Vec<Evaluation>> {
-    let wl = workload::get(cfg.workload)?;
-    let mut evals = Vec::new();
-    for design in candidates(cfg) {
-        let e = evaluate_with(wl, &design, cfg)?;
-        if e.infeasible.is_none() || cfg.keep_infeasible {
-            evals.push(e);
-        }
-    }
-    sort_by_perf_per_watt(&mut evals);
+    use crate::dse::{DesignSpace, Exhaustive, SearchStrategy, SweepContext};
+
+    let space = DesignSpace::from_explore(cfg);
+    let cache = crate::dse::EvalCache::new();
+    let ctx = SweepContext { cache: &cache, workers: 1 };
+    let result = Exhaustive.run(&space, &ctx)?;
+    let mut evals = result.evals;
+    evals.retain(|e| e.infeasible.is_none() || cfg.keep_infeasible);
     Ok(evals)
 }
 
@@ -170,20 +200,42 @@ pub fn sort_by_perf_per_watt(evals: &mut [Evaluation]) {
     });
 }
 
-/// Pareto frontier over (performance, -power): designs not dominated
-/// by any other feasible design.
+/// Pareto frontier over (performance, -power): feasible designs not
+/// dominated by any other feasible design.
+///
+/// Domination is weak with a strictness condition — `o` dominates `e`
+/// when `o` is at least as good on both axes and strictly better on
+/// one.  Designs with *identical* (performance, power) are deduplicated
+/// (only the first occurrence survives), so two copies of the same
+/// metrics cannot both claim a frontier slot.  Rows with a non-finite
+/// performance or power (a degenerate power prediction) are excluded:
+/// NaN compares false on every axis, so such a row could neither be
+/// dominated nor dominate.
 pub fn pareto(evals: &[Evaluation]) -> Vec<&Evaluation> {
-    let feasible: Vec<&Evaluation> =
-        evals.iter().filter(|e| e.infeasible.is_none()).collect();
-    feasible
+    let feasible: Vec<&Evaluation> = evals
         .iter()
         .filter(|e| {
-            !feasible.iter().any(|o| {
-                o.timing.performance_gflops > e.timing.performance_gflops
-                    && o.power_w <= e.power_w
-            })
+            e.infeasible.is_none()
+                && e.timing.performance_gflops.is_finite()
+                && e.power_w.is_finite()
         })
-        .copied()
+        .collect();
+    feasible
+        .iter()
+        .enumerate()
+        .filter(|(i, e)| {
+            let (perf, pw) = (e.timing.performance_gflops, e.power_w);
+            let dominated = feasible.iter().any(|o| {
+                o.timing.performance_gflops >= perf
+                    && o.power_w <= pw
+                    && (o.timing.performance_gflops > perf || o.power_w < pw)
+            });
+            let tie_earlier = feasible[..*i]
+                .iter()
+                .any(|o| o.timing.performance_gflops == perf && o.power_w == pw);
+            !dominated && !tie_earlier
+        })
+        .map(|(_, e)| *e)
         .collect()
 }
 
@@ -218,6 +270,7 @@ mod tests {
         let d = DesignPoint::new(1, 1, 64, 32);
         let e = evaluate(&d, &cfg).unwrap();
         assert_eq!(e.workload, "lbm");
+        assert_eq!(e.device, "Stratix V 5SGXEA7");
         assert!(e.infeasible.is_none());
         assert!(e.power_w > 20.0 && e.power_w < 60.0);
         assert!(e.timing.utilization > 0.9); // n=1 never BW-bound
@@ -246,9 +299,7 @@ mod tests {
         assert!(!p.is_empty());
         // the best perf/W design should not be dominated
         let best = &evals[0];
-        assert!(p
-            .iter()
-            .any(|e| e.design == best.design));
+        assert!(p.iter().any(|e| e.design == best.design));
     }
 
     #[test]
@@ -302,5 +353,46 @@ mod tests {
         let p = pareto(&evals);
         assert_eq!(p.len(), 1);
         assert_eq!(p[0].design, evals[0].design);
+    }
+
+    #[test]
+    fn pareto_dedupes_identical_metric_ties() {
+        // regression: two designs with identical (performance, power)
+        // both used to survive the domination check
+        let cfg = small_cfg();
+        let base = evaluate(&DesignPoint::new(1, 1, 64, 32), &cfg).unwrap();
+        let mut twin = base.clone();
+        twin.design = DesignPoint::new(1, 2, 64, 32); // different label, same metrics
+        let evals = vec![base, twin];
+        let p = pareto(&evals);
+        assert_eq!(p.len(), 1, "identical-metric tie must collapse to one point");
+        assert_eq!(p[0].design, evals[0].design, "first occurrence wins");
+    }
+
+    #[test]
+    fn pareto_weak_domination_removes_equal_perf_higher_power() {
+        let cfg = small_cfg();
+        let base = evaluate(&DesignPoint::new(1, 1, 64, 32), &cfg).unwrap();
+        let mut worse = base.clone();
+        worse.design = DesignPoint::new(2, 1, 64, 32);
+        worse.power_w = base.power_w + 5.0; // same perf, strictly more power
+        let evals = vec![base, worse];
+        let p = pareto(&evals);
+        assert_eq!(p.len(), 1);
+        assert_eq!(p[0].design, evals[0].design);
+    }
+
+    #[test]
+    fn evaluate_against_bigger_device_lifts_infeasibility() {
+        use crate::resource::ARRIA_10_GX1150;
+        // 6 LBM pipelines need 288 DSPs (and ~200k ALMs): over on the
+        // Stratix V, fine on the Arria 10 part
+        let d = DesignPoint::new(2, 3, 64, 32);
+        let stratix = evaluate(&d, &small_cfg()).unwrap();
+        assert!(stratix.infeasible.is_some());
+        let cfg = ExploreConfig { device: &ARRIA_10_GX1150, ..small_cfg() };
+        let arria = evaluate(&d, &cfg).unwrap();
+        assert_eq!(arria.device, "Arria 10 GX1150");
+        assert!(arria.infeasible.is_none(), "{:?}", arria.infeasible);
     }
 }

@@ -16,7 +16,7 @@ pub mod reference;
 pub mod spd_gen;
 pub mod workload;
 
-pub use spd_gen::LbmDesign;
+pub use spd_gen::{LbmCoreNames, LbmDesign};
 
 /// D2Q9 direction vectors (ex[i], ey[i]) — identical to ref.py.
 pub const EX: [i32; 9] = [0, 1, 0, -1, 0, 1, -1, -1, 1];

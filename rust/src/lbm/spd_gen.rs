@@ -28,25 +28,24 @@ use crate::workload::DesignPoint;
 /// benches and examples.
 pub use crate::workload::DesignPoint as LbmDesign;
 
-/// LBM-specific naming of the paper's generated cores (kept as
-/// inherent methods so `design.top_name()` in the Table III/IV benches
-/// and examples keeps reading naturally).
-impl DesignPoint {
-    /// The paper's six evaluated configurations on the 720x300 grid.
-    pub fn paper_designs() -> Vec<DesignPoint> {
-        [(1, 1), (1, 2), (1, 4), (2, 1), (2, 2), (4, 1)]
-            .iter()
-            .map(|&(n, m)| DesignPoint::new(n, m, 720, 300))
-            .collect()
-    }
-
+/// LBM-specific naming of the paper's generated cores, as an
+/// lbm-local extension trait: the shared [`DesignPoint`] stays
+/// workload-neutral, and call sites that want `design.top_name()`
+/// (the paper benches, the Verilog-export example) import this trait.
+pub trait LbmCoreNames {
     /// LBM cascade-top core name, e.g. `LBM_x1_m4_w720`.
-    pub fn top_name(&self) -> String {
+    fn top_name(&self) -> String;
+
+    /// LBM PE core name, e.g. `PEx1_w720`.
+    fn pe_name(&self) -> String;
+}
+
+impl LbmCoreNames for DesignPoint {
+    fn top_name(&self) -> String {
         format!("LBM_x{}_m{}_w{}", self.n, self.m, self.w)
     }
 
-    /// LBM PE core name, e.g. `PEx1_w720`.
-    pub fn pe_name(&self) -> String {
+    fn pe_name(&self) -> String {
         format!("PEx{}_w{}", self.n, self.w)
     }
 }

@@ -8,7 +8,7 @@
 use std::collections::HashMap;
 
 use super::reference::{self, LbmState};
-use super::spd_gen::{generate, generate_with, LbmDesign, LbmGenerated};
+use super::spd_gen::{generate, generate_with, LbmCoreNames, LbmDesign, LbmGenerated};
 use super::{FLOPS_PER_CELL, FLUID, U_LID};
 use crate::dfg::{self, Compiled, OpLatency};
 use crate::error::{Error, Result};

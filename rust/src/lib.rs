@@ -17,8 +17,13 @@
 //! * [`resource`] — Stratix V resource estimation (Table III);
 //! * [`power`] — calibrated board-power model (Table III);
 //! * [`verilog`] — Verilog-HDL emission backend;
-//! * [`explore`] — the (n, m) design-space explorer (§II-B), generic
-//!   over registered workloads;
+//! * [`explore`] — single-point evaluation + the (n, m) candidate
+//!   lattice (§II-B), generic over registered workloads and devices;
+//! * [`dse`] — the DSE engine: multi-device [`dse::DesignSpace`],
+//!   pluggable [`dse::SearchStrategy`] implementations (exhaustive /
+//!   branch-and-bound pruning / hill climbing), the content-addressed
+//!   [`dse::EvalCache`], and JSON [`dse::Session`] files for
+//!   resumable, mergeable sweeps;
 //! * [`workload`] — the stencil-workload subsystem: the
 //!   `StencilKernel` trait, the reusable stencil-to-SPD generator,
 //!   the workload registry, and the `jacobi` / `wave` /
@@ -50,6 +55,7 @@
 pub mod cli;
 pub mod coordinator;
 pub mod dfg;
+pub mod dse;
 pub mod error;
 pub mod explore;
 pub mod expr;

@@ -1,7 +1,9 @@
 //! Table rendering: regenerates the paper's Table III / Table IV rows
-//! from evaluations.  Rows are labeled with the workload they were
-//! evaluated for (the explorer is workload-generic).
+//! from evaluations, and renders DSE sweep output — per-device tables
+//! and per-strategy comparisons.  Rows are labeled with the workload
+//! they were evaluated for (the explorer is workload-generic).
 
+use crate::dse::SweepResult;
 use crate::explore::Evaluation;
 use crate::power::PAPER_TABLE3;
 use crate::resource::soc_peripherals;
@@ -97,6 +99,125 @@ pub fn table3_vs_paper(evals: &[Evaluation]) -> String {
     s
 }
 
+/// Render a multi-device sweep table: one block per device (in row
+/// order of first appearance), rows like `table3` plus grid and DDR
+/// context.
+pub fn dse_table(evals: &[Evaluation]) -> String {
+    let mut s = String::new();
+    for dev in distinct_devices(evals) {
+        s.push_str(&format!("== {dev} ==\n"));
+        s.push_str(&format!(
+            "{:<22} {:>9} {:>6} {:>8} {:>9} {:>12} {:>5} {:>8} {:>9} {:>7} {:>9}\n",
+            "workload (n,m)",
+            "grid",
+            "DIMMs",
+            "ALMs",
+            "Regs",
+            "BRAM[bits]",
+            "DSPs",
+            "Util(u)",
+            "GFlop/s",
+            "P[W]",
+            "GF/sW"
+        ));
+        for e in evals.iter().filter(|e| e.device == dev) {
+            let d = e.design;
+            let label = format!(
+                "{} ({}, {}){}",
+                e.workload,
+                d.n,
+                d.m,
+                if e.infeasible.is_some() { " !fit" } else { "" }
+            );
+            s.push_str(&format!(
+                "{:<22} {:>9} {:>6} {:>8} {:>9} {:>12} {:>5} {:>8.3} {:>9.1} {:>7.1} {:>9.3}\n",
+                label,
+                format!("{}x{}", d.w, d.h),
+                e.ddr.n_dimms,
+                commas(e.resources.core.alms),
+                commas(e.resources.core.regs),
+                commas(e.resources.core.bram_bits),
+                e.resources.core.dsps,
+                e.timing.utilization,
+                e.timing.performance_gflops,
+                e.power_w,
+                e.perf_per_watt,
+            ));
+        }
+    }
+    s
+}
+
+/// Devices in row order of first appearance (sweep tables group by
+/// device in this order).
+fn distinct_devices(evals: &[Evaluation]) -> Vec<&'static str> {
+    let mut devices: Vec<&'static str> = Vec::new();
+    for e in evals {
+        if !devices.contains(&e.device) {
+            devices.push(e.device);
+        }
+    }
+    devices
+}
+
+/// One summary line per strategy: coverage, pruning, cache behavior,
+/// and the winner — the `dse compare` output.
+pub fn strategy_comparison(results: &[&SweepResult]) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{:<14} {:>10} {:>10} {:>9} {:>11} {:>20} {:>9}\n",
+        "strategy", "candidates", "evaluated", "skipped", "cache hits", "best (n,m)@device", "GF/sW"
+    ));
+    for r in results {
+        let (best_label, best_ppw) = match r.best() {
+            Some(b) => {
+                let key = crate::resource::device::by_name(b.device)
+                    .map(|d| d.key)
+                    .unwrap_or(b.device);
+                (
+                    format!("({}, {})@{}", b.design.n, b.design.m, key),
+                    format!("{:.3}", b.perf_per_watt),
+                )
+            }
+            None => ("-".to_string(), "-".to_string()),
+        };
+        s.push_str(&format!(
+            "{:<14} {:>10} {:>10} {:>9} {:>11} {:>20} {:>9}\n",
+            r.strategy, r.candidates, r.evaluated, r.skipped, r.cache_hits, best_label, best_ppw,
+        ));
+    }
+    s
+}
+
+/// Sweep summary: best design per device plus frontier and cache
+/// counters.
+pub fn sweep_summary(r: &SweepResult) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "strategy {}: {} candidates, {} evaluated, {} skipped, {} cache hits\n",
+        r.strategy, r.candidates, r.evaluated, r.skipped, r.cache_hits
+    ));
+    for dev in distinct_devices(&r.evals) {
+        match r.evals.iter().find(|e| e.device == dev && e.infeasible.is_none()) {
+            Some(b) => s.push_str(&format!(
+                "  best on {dev}: {} (n, m) = ({}, {}) on {}x{} at {:.3} GFlop/sW ({:.1} GFlop/s, {:.1} W)\n",
+                b.workload,
+                b.design.n,
+                b.design.m,
+                b.design.w,
+                b.design.h,
+                b.perf_per_watt,
+                b.timing.performance_gflops,
+                b.power_w,
+            )),
+            None => s.push_str(&format!("  best on {dev}: no feasible design\n")),
+        }
+    }
+    let frontier = r.pareto();
+    s.push_str(&format!("  pareto frontier: {} designs\n", frontier.len()));
+    s
+}
+
 /// Render the Table IV analogue (operator census of one pipeline).
 pub fn table4(census: &crate::expr::OpCensus) -> String {
     format!(
@@ -129,5 +250,52 @@ mod tests {
         let t = table3(&[]);
         assert!(t.contains("SoC peripherals"));
         assert!(t.contains("54,997"));
+    }
+
+    #[test]
+    fn dse_table_groups_by_device() {
+        use crate::explore::{evaluate, ExploreConfig};
+        use crate::resource::ARRIA_10_GX1150;
+        use crate::workload::DesignPoint;
+        let cfg = ExploreConfig {
+            grid_w: 64,
+            grid_h: 32,
+            max_n: 2,
+            max_m: 2,
+            passes: 2,
+            ..Default::default()
+        };
+        let d = DesignPoint::new(1, 1, 64, 32);
+        let a = evaluate(&d, &cfg).unwrap();
+        let b = evaluate(&d, &ExploreConfig { device: &ARRIA_10_GX1150, ..cfg }).unwrap();
+        let t = dse_table(&[a, b]);
+        assert!(t.contains("== Stratix V 5SGXEA7 =="));
+        assert!(t.contains("== Arria 10 GX1150 =="));
+        assert!(t.contains("lbm (1, 1)"));
+        assert!(t.contains("64x32"));
+    }
+
+    #[test]
+    fn strategy_comparison_and_summary_render() {
+        use crate::dse::{DesignSpace, EvalCache, Exhaustive, SearchStrategy, SweepContext};
+        use crate::explore::ExploreConfig;
+        let space = DesignSpace::from_explore(&ExploreConfig {
+            grid_w: 64,
+            grid_h: 32,
+            max_n: 1,
+            max_m: 2,
+            passes: 2,
+            ..Default::default()
+        });
+        let cache = EvalCache::new();
+        let r = Exhaustive
+            .run(&space, &SweepContext { cache: &cache, workers: 1 })
+            .unwrap();
+        let cmp = strategy_comparison(&[&r]);
+        assert!(cmp.contains("exhaustive"));
+        assert!(cmp.contains("(1, 2)") || cmp.contains("(1, 1)"));
+        let sum = sweep_summary(&r);
+        assert!(sum.contains("best on Stratix V 5SGXEA7"));
+        assert!(sum.contains("pareto frontier"));
     }
 }

@@ -1,9 +1,15 @@
-//! FPGA device capacities.
+//! FPGA device capacities — the target axis of the design space.
+//!
+//! The paper evaluates one part (the DE5-NET's Stratix V); the DSE
+//! engine explores across a small catalog so sweeps can answer "which
+//! device does this workload want" as well as "which (n, m)".
 
 /// Device capacity (Table III header row).
 #[derive(Clone, Copy, Debug)]
 pub struct Device {
     pub name: &'static str,
+    /// short CLI/JSON key, e.g. `stratix-v`
+    pub key: &'static str,
     pub alms: u64,
     pub regs: u64,
     pub bram_bits: u64,
@@ -13,11 +19,58 @@ pub struct Device {
 /// ALTERA Stratix V 5SGXEA7N2 (Terasic DE5-NET), paper §III-A.
 pub const STRATIX_V_5SGXEA7: Device = Device {
     name: "Stratix V 5SGXEA7",
+    key: "stratix-v",
     alms: 234_720,
     regs: 938_880,
     bram_bits: 52_428_800,
     dsps: 256,
 };
+
+/// Intel Arria 10 GX 1150 — the generation after the paper's board:
+/// ~1.8x the logic and ~6x the (hardened floating-point) DSP count.
+pub const ARRIA_10_GX1150: Device = Device {
+    name: "Arria 10 GX1150",
+    key: "arria-10",
+    alms: 427_200,
+    regs: 1_708_800,
+    bram_bits: 55_562_240,
+    dsps: 1_518,
+};
+
+/// A generic large streaming part: double the Stratix V in every
+/// dimension.  Useful as a "what if the device were not the limit"
+/// probe in sweeps.
+pub const GENERIC_2X: Device = Device {
+    name: "Generic 2x Stratix",
+    key: "generic",
+    alms: 469_440,
+    regs: 1_877_760,
+    bram_bits: 104_857_600,
+    dsps: 512,
+};
+
+/// The device catalog, in sweep order.
+pub fn catalog() -> &'static [&'static Device] {
+    static CATALOG: [&'static Device; 3] =
+        [&STRATIX_V_5SGXEA7, &ARRIA_10_GX1150, &GENERIC_2X];
+    &CATALOG
+}
+
+/// Look a device up by short key or full name (exact match).
+pub fn by_name(name: &str) -> Option<&'static Device> {
+    catalog()
+        .iter()
+        .copied()
+        .find(|d| d.key == name || d.name == name)
+}
+
+/// Intern a limiting-resource label (as produced by [`Device::check`])
+/// back to its `&'static str` form, e.g. when deserializing a session.
+pub fn intern_limit(label: &str) -> Option<&'static str> {
+    ["ALMs", "registers", "BRAM bits", "DSPs"]
+        .into_iter()
+        .find(|&l| l == label)
+}
 
 impl Device {
     /// Check a total against capacity; returns the limiting resource
@@ -56,5 +109,30 @@ mod tests {
         assert_eq!(d.check(1, 1, 1, 1), None);
         assert_eq!(d.check(d.alms + 1, 0, 0, 0), Some("ALMs"));
         assert_eq!(d.check(0, 0, 0, 257), Some("DSPs"));
+    }
+
+    #[test]
+    fn catalog_lookup_by_key_and_name() {
+        assert_eq!(catalog().len(), 3);
+        assert_eq!(by_name("stratix-v").unwrap().name, "Stratix V 5SGXEA7");
+        assert_eq!(by_name("Arria 10 GX1150").unwrap().key, "arria-10");
+        assert_eq!(by_name("generic").unwrap().dsps, 512);
+        assert!(by_name("asic").is_none());
+    }
+
+    #[test]
+    fn bigger_parts_fit_what_stratix_cannot() {
+        // 300 DSPs: over on the Stratix V, fine on the other two parts
+        assert_eq!(STRATIX_V_5SGXEA7.check(0, 0, 0, 300), Some("DSPs"));
+        assert_eq!(ARRIA_10_GX1150.check(0, 0, 0, 300), None);
+        assert_eq!(GENERIC_2X.check(0, 0, 0, 300), None);
+    }
+
+    #[test]
+    fn limit_labels_intern_roundtrip() {
+        for label in ["ALMs", "registers", "BRAM bits", "DSPs"] {
+            assert_eq!(intern_limit(label), Some(label));
+        }
+        assert_eq!(intern_limit("LUTs"), None);
     }
 }

@@ -14,7 +14,9 @@ pub mod device;
 pub mod estimate;
 
 pub use cost::CostTable;
-pub use device::{Device, STRATIX_V_5SGXEA7};
+pub use device::{
+    Device, ARRIA_10_GX1150, GENERIC_2X, STRATIX_V_5SGXEA7,
+};
 pub use estimate::{
     estimate, estimate_hierarchical, soc_peripherals, DesignMeta, ResourceEstimate,
     Resources,

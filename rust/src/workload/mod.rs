@@ -64,6 +64,14 @@ impl DesignPoint {
     pub fn cells(&self) -> u64 {
         self.w as u64 * self.h as u64
     }
+
+    /// The paper's six evaluated configurations on the 720x300 grid.
+    pub fn paper_designs() -> Vec<DesignPoint> {
+        [(1, 1), (1, 2), (1, 4), (2, 1), (2, 2), (4, 1)]
+            .iter()
+            .map(|&(n, m)| DesignPoint::new(n, m, 720, 300))
+            .collect()
+    }
 }
 
 /// Channel-major grid state in raster order (`channels[c][y*w + x]`),

@@ -1,0 +1,287 @@
+//! Integration tests for the DSE engine: strategy equivalence,
+//! cache-counter semantics, session resume, and multi-device sweeps.
+
+use spdx::dse::{
+    BoundedPrune, DesignSpace, EvalCache, Exhaustive, HillClimb, SearchStrategy,
+    Session, SweepContext, SweepResult,
+};
+use spdx::explore::ExploreConfig;
+use spdx::resource::{Device, ARRIA_10_GX1150, STRATIX_V_5SGXEA7};
+use spdx::workload;
+
+fn small_space(workload: &'static str) -> DesignSpace {
+    DesignSpace {
+        workload,
+        grids: vec![(32, 16)],
+        max_n: 2,
+        max_m: 4,
+        devices: vec![&STRATIX_V_5SGXEA7],
+        ddr_variants: vec![Default::default()],
+        passes: 2,
+        latency: Default::default(),
+    }
+}
+
+fn run(strategy: &dyn SearchStrategy, space: &DesignSpace) -> SweepResult {
+    let cache = EvalCache::new();
+    let ctx = SweepContext { cache: &cache, workers: 2 };
+    strategy.run(space, &ctx).unwrap()
+}
+
+/// Designs on the Pareto frontier, as a sorted, comparable set.
+fn frontier_set(r: &SweepResult) -> Vec<(u32, u32)> {
+    let mut v: Vec<(u32, u32)> =
+        r.pareto().iter().map(|e| (e.design.n, e.design.m)).collect();
+    v.sort();
+    v
+}
+
+/// A part whose ALM capacity sits just under the given total, with
+/// every other resource unconstrained — making deep cascades provably
+/// infeasible while keeping (1, 1) comfortably inside.
+fn alm_capped_device(alm_cap: u64) -> &'static Device {
+    Box::leak(Box::new(Device {
+        name: "test-tiny",
+        key: "test-tiny",
+        alms: alm_cap,
+        regs: u64::MAX,
+        bram_bits: u64::MAX,
+        dsps: u64::MAX,
+    }))
+}
+
+/// The satellite property test: for every registered workload,
+/// `BoundedPrune` returns the same Pareto frontier (and the same
+/// perf/W winner) as `Exhaustive`, while performing strictly fewer
+/// `evaluate` computations.
+///
+/// The space is made prunable by construction: an ALM-capped device is
+/// derived from the workload's own (1, 3) resource total, so cascades
+/// of depth >= 3 are infeasible for *every* kernel — pruning territory
+/// that exists regardless of the kernel's DSP/ALM mix.
+#[test]
+fn bounded_prune_matches_exhaustive_for_every_workload() {
+    for name in workload::names() {
+        // 1. survey the space on the reference part to pick a capacity
+        let survey = run(&Exhaustive, &small_space(name));
+        assert_eq!(survey.candidates, 8, "{name}: 2 widths x 4 cascade lengths");
+        let at = |n: u32, m: u32| {
+            survey
+                .evals
+                .iter()
+                .find(|e| e.design.n == n && e.design.m == m)
+                .unwrap_or_else(|| panic!("{name}: missing ({n}, {m})"))
+        };
+        // fitting pressure is normalized by the device's ALM count, so
+        // on the smaller capped part every design only grows — (1, 3)
+        // and everything deeper is infeasible with certainty
+        let cap = at(1, 3).resources.total.alms - 1;
+        assert!(at(1, 1).resources.total.alms < cap, "{name}: (1,1) must fit");
+        let tiny = alm_capped_device(cap);
+        let space = DesignSpace { devices: vec![tiny], ..small_space(name) };
+
+        // 2. both strategies on the capped part, separate caches
+        let ex = run(&Exhaustive, &space);
+        let pr = run(&BoundedPrune::default(), &space);
+
+        assert_eq!(ex.evaluated, 8, "{name}: exhaustive evaluates everything");
+        assert!(
+            pr.evaluated < ex.evaluated,
+            "{name}: prune must evaluate strictly fewer points \
+             ({} vs {})",
+            pr.evaluated,
+            ex.evaluated
+        );
+        assert!(pr.skipped >= 1, "{name}: something must be pruned");
+        assert_eq!(
+            pr.evaluated + pr.skipped,
+            pr.candidates,
+            "{name}: every candidate is either evaluated or skipped"
+        );
+
+        // 3. identical conclusions
+        let (ex_best, pr_best) = (
+            ex.best().unwrap_or_else(|| panic!("{name}: no feasible best")),
+            pr.best().unwrap_or_else(|| panic!("{name}: no feasible best")),
+        );
+        assert_eq!(
+            ex_best.design, pr_best.design,
+            "{name}: perf/W winner must match"
+        );
+        assert_eq!(
+            ex_best.perf_per_watt.to_bits(),
+            pr_best.perf_per_watt.to_bits(),
+            "{name}: winner metrics must be identical"
+        );
+        assert_eq!(
+            frontier_set(&ex),
+            frontier_set(&pr),
+            "{name}: Pareto frontiers must match"
+        );
+        // everything pruning removed was genuinely infeasible
+        let feasible_ex =
+            ex.evals.iter().filter(|e| e.infeasible.is_none()).count();
+        let feasible_pr =
+            pr.evals.iter().filter(|e| e.infeasible.is_none()).count();
+        assert_eq!(feasible_ex, feasible_pr, "{name}: feasible sets must match");
+    }
+}
+
+/// The acceptance-criterion cache test: a repeated sweep through a
+/// shared `EvalCache` reports hits and recomputes nothing.
+#[test]
+fn repeated_sweep_hits_cache_and_recomputes_nothing() {
+    let space = small_space("lbm");
+    let cache = EvalCache::new();
+    let ctx = SweepContext { cache: &cache, workers: 2 };
+
+    let cold = Exhaustive.run(&space, &ctx).unwrap();
+    let s1 = cache.stats();
+    assert_eq!(cold.evaluated, 8);
+    assert_eq!(cold.cache_hits, 0);
+    assert_eq!((s1.misses, s1.hits, s1.entries), (8, 0, 8));
+
+    let warm = Exhaustive.run(&space, &ctx).unwrap();
+    let s2 = cache.stats();
+    assert_eq!(warm.evaluated, 0, "warm sweep must recompute nothing");
+    assert_eq!(warm.cache_hits, 8, "warm sweep must be answered by the cache");
+    assert_eq!(s2.misses, s1.misses, "miss counter must not move");
+    assert_eq!(s2.entries, 8);
+
+    // bit-identical rows in both sweeps
+    assert_eq!(cold.evals.len(), warm.evals.len());
+    for (a, b) in cold.evals.iter().zip(&warm.evals) {
+        assert_eq!(a.design, b.design);
+        assert_eq!(a.perf_per_watt.to_bits(), b.perf_per_watt.to_bits());
+        assert_eq!(a.power_w.to_bits(), b.power_w.to_bits());
+        assert_eq!(a.resources.core, b.resources.core);
+    }
+}
+
+/// The cache is shared *across* strategies: a prune sweep after an
+/// exhaustive sweep is a pure cache walk.
+#[test]
+fn cache_is_shared_across_strategies() {
+    let space = small_space("jacobi");
+    let cache = EvalCache::new();
+    let ctx = SweepContext { cache: &cache, workers: 2 };
+    let ex = Exhaustive.run(&space, &ctx).unwrap();
+    assert!(ex.evaluated > 0);
+    let pr = BoundedPrune::default().run(&space, &ctx).unwrap();
+    assert_eq!(pr.evaluated, 0, "prune after exhaustive recomputes nothing");
+    assert!(pr.cache_hits > 0);
+}
+
+/// Session files round-trip a sweep: save, load, preload, resume —
+/// the resumed sweep is answered entirely from the session.
+#[test]
+fn session_resume_recomputes_nothing() {
+    let space = small_space("wave");
+    let cache = EvalCache::new();
+    let ctx = SweepContext { cache: &cache, workers: 2 };
+    let first = Exhaustive.run(&space, &ctx).unwrap();
+    assert_eq!(first.evaluated, 8);
+
+    let path = std::env::temp_dir().join(format!(
+        "spdx_dse_session_test_{}.json",
+        std::process::id()
+    ));
+    Session::from_sweep(&first, &space).save(&path).unwrap();
+
+    let loaded = Session::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded.rows.len(), 8);
+    assert_eq!(loaded.strategy, "exhaustive");
+    // the session records the space it swept (resume re-sweeps it)
+    assert_eq!(loaded.space.workload, "wave");
+    assert_eq!(loaded.space.grids, vec![(32, 16)]);
+    assert_eq!(loaded.space.max_m, 4);
+
+    let cache2 = EvalCache::new();
+    assert_eq!(loaded.preload(&cache2), 8);
+    let ctx2 = SweepContext { cache: &cache2, workers: 2 };
+    let resumed = Exhaustive.run(&space, &ctx2).unwrap();
+    assert_eq!(resumed.evaluated, 0, "resume must recompute nothing");
+    assert_eq!(resumed.cache_hits, 8);
+    for (a, b) in first.evals.iter().zip(&resumed.evals) {
+        assert_eq!(a.design, b.design);
+        assert_eq!(a.perf_per_watt.to_bits(), b.perf_per_watt.to_bits());
+        assert_eq!(a.timing.utilization.to_bits(), b.timing.utilization.to_bits());
+    }
+}
+
+/// On a single-column space the perf/W surface is unimodal along the
+/// cascade axis, so a greedy walk must end at the exhaustive winner.
+#[test]
+fn hill_climb_finds_the_winner_on_a_cascade_column() {
+    let space = DesignSpace { max_n: 1, ..small_space("lbm") };
+    let ex = run(&Exhaustive, &space);
+    for seed in [1u64, 42, 9000] {
+        let hc = run(&HillClimb { seed, restarts: 1, max_steps: 16 }, &space);
+        let (eb, hb) = (ex.best().unwrap(), hc.best().unwrap());
+        assert_eq!(eb.design, hb.design, "seed {seed}");
+        assert!(hc.evals.len() <= hc.candidates);
+        assert_eq!(hc.evals.len() + hc.skipped, hc.candidates, "seed {seed}");
+    }
+}
+
+/// Multi-device sweep: the same design space judged on two parts —
+/// the bigger part keeps designs the Stratix V rejects.
+#[test]
+fn multi_device_space_widens_the_feasible_set() {
+    let space = DesignSpace {
+        workload: "lbm",
+        grids: vec![(64, 32)],
+        max_n: 2,
+        max_m: 3,
+        devices: vec![&STRATIX_V_5SGXEA7, &ARRIA_10_GX1150],
+        ddr_variants: vec![Default::default()],
+        passes: 2,
+        latency: Default::default(),
+    };
+    let r = run(&Exhaustive, &space);
+    assert_eq!(r.candidates, 12, "6 lattice points x 2 devices");
+    let feasible_on = |dev: &str| {
+        r.evals
+            .iter()
+            .filter(|e| e.device == dev && e.infeasible.is_none())
+            .count()
+    };
+    let stratix = feasible_on("Stratix V 5SGXEA7");
+    let arria = feasible_on("Arria 10 GX1150");
+    // (2, 3) = six pipelines: over the Stratix V (288 DSPs, ~250k
+    // ALMs), inside the Arria 10
+    assert!(arria > stratix, "arria {arria} vs stratix {stratix}");
+    assert_eq!(arria, 6, "every lattice point fits the Arria 10");
+
+    // per-device winners exist and are reported per device
+    for dev in ["Stratix V 5SGXEA7", "Arria 10 GX1150"] {
+        assert!(
+            r.evals.iter().any(|e| e.device == dev && e.infeasible.is_none()),
+            "{dev}: no feasible design"
+        );
+    }
+}
+
+/// `explore::explore` must behave exactly like the exhaustive strategy
+/// on the equivalent single-device space (it is now a wrapper).
+#[test]
+fn explore_is_a_thin_wrapper_over_exhaustive() {
+    let cfg = ExploreConfig {
+        workload: "blur",
+        grid_w: 32,
+        grid_h: 16,
+        max_n: 2,
+        max_m: 2,
+        passes: 2,
+        keep_infeasible: true,
+        ..Default::default()
+    };
+    let via_explore = spdx::explore::explore(&cfg).unwrap();
+    let via_dse = run(&Exhaustive, &DesignSpace::from_explore(&cfg));
+    assert_eq!(via_explore.len(), via_dse.evals.len());
+    for (a, b) in via_explore.iter().zip(&via_dse.evals) {
+        assert_eq!(a.design, b.design);
+        assert_eq!(a.perf_per_watt.to_bits(), b.perf_per_watt.to_bits());
+    }
+}
