@@ -23,9 +23,13 @@ fn main() {
         ..Default::default()
     };
 
-    section("sequential exploration (16 candidates, 720x300)");
-    let s_seq = bench("explore() sequential", 0, 3, || {
-        let evals = explore(&cfg).unwrap();
+    // explore() itself now runs on the full worker pool; for the
+    // sequential-vs-parallel comparison, pin the coordinator to one
+    // worker explicitly.
+    section("sequential exploration (16 candidates, 720x300, 1 worker)");
+    let coord_seq = Coordinator::new(cfg).with_workers(1);
+    let s_seq = bench("coordinator, 1 worker", 0, 3, || {
+        let (evals, _) = coord_seq.run().unwrap();
         assert!(!evals.is_empty());
     });
 
@@ -68,6 +72,13 @@ fn main() {
         s_cold.median / s_warm.median,
         s_cold.median * 1e3,
         s_warm.median * 1e3
+    );
+    // the BENCH_dse trajectory numbers (also emitted by
+    // `dse sweep --bench`): evaluations per wall second
+    println!(
+        "  -> throughput: cold {:.0} evals/sec, warm {:.0} evals/sec (16 candidates)",
+        16.0 / s_cold.median,
+        16.0 / s_warm.median
     );
 
     section("strategy comparison: pruning vs exhaustive evaluation counts");

@@ -14,6 +14,7 @@ use std::collections::HashMap;
 
 use crate::coordinator::Coordinator;
 use crate::dfg;
+use crate::dse::json as dse_json;
 use crate::dse::{
     ddr_by_name, strategy_by_name, BoundedPrune, DesignSpace, EvalCache, Exhaustive,
     HillClimb, SearchStrategy, Session, SweepContext, DDR_VARIANT_NAMES,
@@ -117,7 +118,11 @@ COMMANDS:
               [--grids WxH[,WxH...]] [--devices KEY[,KEY...]|all]
               [--ddr NAME[,NAME...]] [--max-n N] [--max-m M] [--passes P]
               [--min-util X] [--seed S] [--restarts R] [--workers K]
-              [--session FILE]           multi-device sweep (cached, resumable)
+              [--session FILE] [--bench [FILE]]
+                                           multi-device sweep (cached, resumable);
+                                           --bench re-sweeps warm and writes
+                                           cold/warm evals/sec to FILE
+                                           (default BENCH_dse.json)
   dse resume  --session FILE [space/strategy flags]
                                            reload a session, finish the sweep
   dse compare [space flags]                run all strategies, compare coverage
@@ -422,13 +427,61 @@ fn cmd_dse_sweep(args: &Args) -> Result<i32> {
     let dt = t0.elapsed().as_secs_f64();
     println!("{}", report::dse_table(&result.evals));
     print!("{}", report::sweep_summary(&result));
-    println!("  wall time {dt:.2}s on {} workers", ctx.workers);
+    let cold_rate = throughput(result.evals.len(), dt);
+    println!(
+        "  wall time {dt:.2}s on {} workers ({cold_rate:.0} evals/sec)",
+        ctx.workers
+    );
+    if let Some(path) = args.flag("bench") {
+        let path = if path == "true" { "BENCH_dse.json" } else { path };
+        // warm re-sweep through the same cache: pure-reuse throughput,
+        // the second number of the perf trajectory
+        let t1 = std::time::Instant::now();
+        let warm = strategy.run(&space, &ctx)?;
+        let dt_warm = t1.elapsed().as_secs_f64();
+        let warm_rate = throughput(warm.evals.len(), dt_warm);
+        println!(
+            "  warm re-sweep {dt_warm:.3}s ({warm_rate:.0} evals/sec, {} cache hits)",
+            warm.cache_hits
+        );
+        let bench = dse_json::obj(vec![
+            ("version", dse_json::uint(1)),
+            ("workload", dse_json::str(space.workload)),
+            ("strategy", dse_json::str(result.strategy)),
+            ("candidates", dse_json::uint(result.candidates as u64)),
+            ("workers", dse_json::uint(ctx.workers as u64)),
+            (
+                "cold",
+                dse_json::obj(vec![
+                    ("seconds", dse_json::num(dt)),
+                    ("evaluated", dse_json::uint(result.evaluated as u64)),
+                    ("evals_per_sec", dse_json::num(cold_rate)),
+                ]),
+            ),
+            (
+                "warm",
+                dse_json::obj(vec![
+                    ("seconds", dse_json::num(dt_warm)),
+                    ("cache_hits", dse_json::uint(warm.cache_hits)),
+                    ("evals_per_sec", dse_json::num(warm_rate)),
+                ]),
+            ),
+            ("speedup", dse_json::num(dt / dt_warm.max(1e-9))),
+        ]);
+        std::fs::write(path, bench.to_string())?;
+        println!("  bench written to {path}");
+    }
     if let Some(path) = args.flag("session") {
         let session = Session::from_sweep(&result, &space);
         session.save(path)?;
         println!("  session saved to {path} ({} rows)", session.rows.len());
     }
     Ok(0)
+}
+
+/// Sweep throughput in evaluations per wall second.
+fn throughput(evals: usize, seconds: f64) -> f64 {
+    evals as f64 / seconds.max(1e-9)
 }
 
 fn cmd_dse_resume(args: &Args) -> Result<i32> {
@@ -721,6 +774,39 @@ mod tests {
         ])
         .unwrap();
         assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn dse_sweep_bench_emits_cold_and_warm_throughput() {
+        let path = std::env::temp_dir()
+            .join(format!("spdx_bench_test_{}.json", std::process::id()));
+        let code = run(vec![
+            "dse".into(),
+            "sweep".into(),
+            "--grids".into(),
+            "64x32".into(),
+            "--max-n".into(),
+            "2".into(),
+            "--max-m".into(),
+            "2".into(),
+            "--passes".into(),
+            "2".into(),
+            "--bench".into(),
+            path.to_string_lossy().into_owned(),
+        ])
+        .unwrap();
+        assert_eq!(code, 0);
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let b = dse_json::Json::parse(&text).unwrap();
+        assert_eq!(b.field("version").unwrap().as_u64().unwrap(), 1);
+        assert_eq!(b.field("candidates").unwrap().as_u64().unwrap(), 4);
+        let cold = b.field("cold").unwrap();
+        let warm = b.field("warm").unwrap();
+        assert!(cold.field("evals_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        assert!(warm.field("evals_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(warm.field("cache_hits").unwrap().as_u64().unwrap(), 4);
+        assert!(b.field("speedup").unwrap().as_f64().unwrap() > 0.0);
     }
 
     #[test]

@@ -34,19 +34,30 @@ pub use metrics::RunMetrics;
 /// (workload, grid, device, DDR) it should be evaluated under.
 pub type BatchJob = (ExploreConfig, DesignPoint);
 
+/// Tag an evaluation error with the job it belongs to, so a dead point
+/// in a 10k-point sweep is findable from the error message alone.
+fn with_job_context(err: Error, cfg: &ExploreConfig, design: &DesignPoint) -> Error {
+    Error::Explore(format!(
+        "evaluating workload `{}` at (n={}, m={}) on grid {}x{}, device {}: {err}",
+        cfg.workload, design.n, design.m, design.w, design.h, cfg.device.name
+    ))
+}
+
 /// Evaluate a batch of jobs on a worker pool, optionally through a
-/// shared [`EvalCache`].  Results come back in job order.  If any job
+/// shared [`EvalCache`].  Results come back in job order (as `Arc`s —
+/// cache hits share the stored row instead of cloning it).  If any job
 /// fails, the batch still runs to completion (workers drain the queue)
-/// and one of the errors is returned instead of results.
+/// and one of the errors — wrapped with its failing workload and
+/// design point — is returned instead of results.
 pub fn evaluate_batch(
     jobs: &[BatchJob],
     workers: usize,
     cache: Option<&EvalCache>,
-) -> Result<(Vec<Evaluation>, RunMetrics)> {
+) -> Result<(Vec<Arc<Evaluation>>, RunMetrics)> {
     let n_jobs = jobs.len();
     let mut metrics = RunMetrics::new(n_jobs);
     let next = AtomicUsize::new(0);
-    let (tx, rx) = mpsc::channel::<(usize, Result<Evaluation>, f64)>();
+    let (tx, rx) = mpsc::channel::<(usize, Result<Arc<Evaluation>>, f64)>();
 
     thread::scope(|scope| {
         for _ in 0..workers.max(1).min(n_jobs.max(1)) {
@@ -58,8 +69,9 @@ pub fn evaluate_batch(
                 let t0 = std::time::Instant::now();
                 let result = match cache {
                     Some(c) => c.evaluate(design, cfg),
-                    None => evaluate(design, cfg),
-                };
+                    None => evaluate(design, cfg).map(Arc::new),
+                }
+                .map_err(|err| with_job_context(err, cfg, design));
                 let dt = t0.elapsed().as_secs_f64();
                 if tx.send((i, result, dt)).is_err() {
                     break;
@@ -69,7 +81,7 @@ pub fn evaluate_batch(
         drop(tx);
     });
 
-    let mut slots: Vec<Option<Evaluation>> = vec![None; n_jobs];
+    let mut slots: Vec<Option<Arc<Evaluation>>> = vec![None; n_jobs];
     let mut first_err: Option<Error> = None;
     for (index, result, dt) in rx {
         match result {
@@ -122,7 +134,7 @@ impl Coordinator {
     /// Run the exploration: evaluate every candidate in parallel,
     /// return feasible evaluations sorted by perf/W (best first) plus
     /// run metrics.
-    pub fn run(&self) -> Result<(Vec<Evaluation>, RunMetrics)> {
+    pub fn run(&self) -> Result<(Vec<Arc<Evaluation>>, RunMetrics)> {
         let jobs: Vec<BatchJob> = candidates(&self.cfg)
             .into_iter()
             .map(|design| (self.cfg, design))
@@ -193,6 +205,21 @@ mod tests {
             assert_eq!(a.design, b.design);
             assert_eq!(a.perf_per_watt.to_bits(), b.perf_per_watt.to_bits());
         }
+    }
+
+    #[test]
+    fn batch_error_names_the_failing_job() {
+        // a dead point in a big sweep must be findable from the error
+        let cfg = small_cfg();
+        let jobs: Vec<BatchJob> = vec![
+            (cfg, DesignPoint::new(1, 1, 64, 32)),
+            (cfg, DesignPoint::new(3, 1, 64, 32)), // 3 does not divide 64
+        ];
+        let err = evaluate_batch(&jobs, 2, None).unwrap_err().to_string();
+        assert!(err.contains("workload `lbm`"), "{err}");
+        assert!(err.contains("(n=3, m=1)"), "{err}");
+        assert!(err.contains("64x32"), "{err}");
+        assert!(err.contains("Stratix V"), "{err}");
     }
 
     #[test]

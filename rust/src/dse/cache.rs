@@ -9,8 +9,9 @@
 //! misses so tests and reports can assert reuse.
 
 use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::dfg::OpLatency;
 use crate::error::Result;
@@ -97,9 +98,16 @@ pub struct CacheStats {
     pub entries: usize,
 }
 
-/// Thread-safe in-memory evaluation cache.
+/// Shard count (power of two).  Sharding by key hash spreads the
+/// worker pool's lookups/inserts over independent mutexes, so a wide
+/// pool no longer serializes on one global lock.
+const SHARDS: usize = 16;
+
+/// Thread-safe in-memory evaluation cache: N-way sharded map with
+/// atomic hit/miss counters.  Rows are stored behind `Arc`, so a hit
+/// hands back a pointer instead of cloning the full evaluation.
 pub struct EvalCache {
-    map: Mutex<HashMap<CacheKey, Evaluation>>,
+    shards: [Mutex<HashMap<CacheKey, Arc<Evaluation>>>; SHARDS],
     hits: AtomicU64,
     misses: AtomicU64,
 }
@@ -113,15 +121,21 @@ impl Default for EvalCache {
 impl EvalCache {
     pub fn new() -> Self {
         EvalCache {
-            map: Mutex::new(HashMap::new()),
+            shards: std::array::from_fn(|_| Mutex::new(HashMap::new())),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
         }
     }
 
+    fn shard(&self, key: &CacheKey) -> &Mutex<HashMap<CacheKey, Arc<Evaluation>>> {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[(h.finish() as usize) & (SHARDS - 1)]
+    }
+
     /// Look a key up, counting the hit or miss.
-    pub fn lookup(&self, key: &CacheKey) -> Option<Evaluation> {
-        let found = self.map.lock().unwrap().get(key).cloned();
+    pub fn lookup(&self, key: &CacheKey) -> Option<Arc<Evaluation>> {
+        let found = self.shard(key).lock().unwrap().get(key).cloned();
         match &found {
             Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
             None => self.misses.fetch_add(1, Ordering::Relaxed),
@@ -130,18 +144,22 @@ impl EvalCache {
     }
 
     /// Insert without touching the counters (used by session preload).
-    pub fn seed(&self, key: CacheKey, eval: Evaluation) {
-        self.map.lock().unwrap().insert(key, eval);
+    pub fn seed(&self, key: CacheKey, eval: Arc<Evaluation>) {
+        self.shard(&key).lock().unwrap().insert(key, eval);
     }
 
     /// Get-or-compute: the cached row if present, otherwise a real
     /// `explore::evaluate` whose result is stored for next time.
-    pub fn evaluate(&self, design: &DesignPoint, cfg: &ExploreConfig) -> Result<Evaluation> {
+    pub fn evaluate(
+        &self,
+        design: &DesignPoint,
+        cfg: &ExploreConfig,
+    ) -> Result<Arc<Evaluation>> {
         let key = CacheKey::new(design, cfg);
         if let Some(hit) = self.lookup(&key) {
             return Ok(hit);
         }
-        let e = evaluate(design, cfg)?;
+        let e = Arc::new(evaluate(design, cfg)?);
         self.seed(key, e.clone());
         Ok(e)
     }
@@ -150,12 +168,12 @@ impl EvalCache {
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
-            entries: self.map.lock().unwrap().len(),
+            entries: self.len(),
         }
     }
 
     pub fn len(&self) -> usize {
-        self.map.lock().unwrap().len()
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -217,6 +235,8 @@ mod tests {
         let second = cache.evaluate(&d, &c).unwrap();
         let s2 = cache.stats();
         assert_eq!((s2.hits, s2.misses, s2.entries), (1, 1, 1));
+        // a hit is the *same* row, not a clone
+        assert!(Arc::ptr_eq(&first, &second));
         assert_eq!(first.perf_per_watt.to_bits(), second.perf_per_watt.to_bits());
         assert_eq!(first.resources.core, second.resources.core);
     }
@@ -227,9 +247,35 @@ mod tests {
         let c = cfg();
         let d = DesignPoint::new(1, 1, 64, 32);
         let e = crate::explore::evaluate(&d, &c).unwrap();
-        cache.seed(CacheKey::new(&d, &c), e);
+        cache.seed(CacheKey::new(&d, &c), Arc::new(e));
         assert_eq!(cache.stats(), CacheStats { hits: 0, misses: 0, entries: 1 });
         assert!(cache.lookup(&CacheKey::new(&d, &c)).is_some());
         assert_eq!(cache.stats().hits, 1);
+    }
+
+    #[test]
+    fn entries_spread_across_shards() {
+        // many distinct keys: the per-shard maps share the load, and
+        // len()/stats() still see every entry
+        let cache = EvalCache::new();
+        let c = cfg();
+        let template = crate::explore::evaluate(&DesignPoint::new(1, 1, 64, 32), &c)
+            .map(Arc::new)
+            .unwrap();
+        let mut distinct = 0;
+        for n in [1u32, 2] {
+            for m in 1..=32 {
+                let d = DesignPoint::new(n, m, 64, 32);
+                cache.seed(CacheKey::new(&d, &c), template.clone());
+                distinct += 1;
+            }
+        }
+        assert_eq!(cache.len(), distinct);
+        let populated = cache
+            .shards
+            .iter()
+            .filter(|s| !s.lock().unwrap().is_empty())
+            .count();
+        assert!(populated > 1, "all {distinct} keys landed in one shard");
     }
 }

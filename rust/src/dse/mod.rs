@@ -20,8 +20,10 @@
 //! * **result reuse** ([`EvalCache`], [`Session`]) — evaluations are
 //!   pure functions of their content address (workload, design point,
 //!   device, DDR, latency, passes), so they are cached in memory
-//!   across strategies within a process, and serialized to JSON
-//!   session files across processes (`dse sweep --session`,
+//!   across strategies within a process (a key-hash-sharded map
+//!   handing out `Arc`ed rows, so the worker pool neither serializes
+//!   on one lock nor clones evaluations on hits), and serialized to
+//!   JSON session files across processes (`dse sweep --session`,
 //!   `dse resume`).
 //!
 //! All strategies evaluate through

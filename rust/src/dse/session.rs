@@ -66,7 +66,7 @@ impl Session {
         Session {
             strategy: result.strategy.to_string(),
             space: space.clone(),
-            rows: result.evals.clone(),
+            rows: result.evals.iter().map(|e| (**e).clone()).collect(),
         }
     }
 
@@ -122,7 +122,7 @@ impl Session {
     /// so a following sweep's hits measure real reuse.
     pub fn preload(&self, cache: &EvalCache) -> usize {
         for e in &self.rows {
-            cache.seed(self.key_of(e), e.clone());
+            cache.seed(self.key_of(e), std::sync::Arc::new(e.clone()));
         }
         self.rows.len()
     }

@@ -20,6 +20,7 @@
 //!   large to enumerate; evaluates only the visited neighborhoods.
 
 use std::collections::HashSet;
+use std::sync::Arc;
 
 use crate::coordinator::{evaluate_batch, BatchJob};
 use crate::error::Result;
@@ -41,8 +42,9 @@ pub struct SweepContext<'a> {
 #[derive(Clone, Debug)]
 pub struct SweepResult {
     pub strategy: &'static str,
-    /// all rows this strategy touched (feasible first, perf/W order)
-    pub evals: Vec<Evaluation>,
+    /// all rows this strategy touched (feasible first, perf/W order);
+    /// `Arc`s shared with the cache, not clones
+    pub evals: Vec<Arc<Evaluation>>,
     /// real `evaluate` computations performed (cache misses)
     pub evaluated: usize,
     /// evaluations answered from the cache
@@ -56,7 +58,7 @@ pub struct SweepResult {
 impl SweepResult {
     /// Best feasible design by perf/W.
     pub fn best(&self) -> Option<&Evaluation> {
-        self.evals.iter().find(|e| e.infeasible.is_none())
+        self.evals.iter().map(|e| &**e).find(|e| e.infeasible.is_none())
     }
 
     /// Pareto frontier (performance vs power) over the touched rows.
@@ -83,7 +85,7 @@ pub fn strategy_by_name(name: &str) -> Option<Box<dyn SearchStrategy>> {
 
 fn finish(
     strategy: &'static str,
-    mut evals: Vec<Evaluation>,
+    mut evals: Vec<Arc<Evaluation>>,
     ctx: &SweepContext,
     before: super::cache::CacheStats,
     skipped: usize,
@@ -194,7 +196,7 @@ impl SearchStrategy for BoundedPrune {
 
     fn run(&self, space: &DesignSpace, ctx: &SweepContext) -> Result<SweepResult> {
         let before = ctx.cache.stats();
-        let mut evals: Vec<Evaluation> = Vec::new();
+        let mut evals: Vec<Arc<Evaluation>> = Vec::new();
         let mut skipped = 0usize;
         let mut candidates = 0usize;
         let soc_dsps = soc_peripherals().dsps as f64;
@@ -378,12 +380,12 @@ impl SearchStrategy for HillClimb {
         let total = space.len();
         let mut rng = XorShift64::new(self.seed);
         let mut visited: HashSet<CacheKey> = HashSet::new();
-        let mut evals: Vec<Evaluation> = Vec::new();
+        let mut evals: Vec<Arc<Evaluation>> = Vec::new();
 
         let touch = |batch: &[BatchJob],
                          visited: &mut HashSet<CacheKey>,
-                         evals: &mut Vec<Evaluation>|
-         -> Result<Vec<Evaluation>> {
+                         evals: &mut Vec<Arc<Evaluation>>|
+         -> Result<Vec<Arc<Evaluation>>> {
             let (out, _) = evaluate_batch(batch, ctx.workers, Some(ctx.cache))?;
             // record first-visits (keyed like the cache)
             for ((cfg, design), e) in batch.iter().zip(&out) {

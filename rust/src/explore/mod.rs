@@ -18,12 +18,22 @@
 //! This module owns the *evaluation* of one design point.  The search
 //! over many points lives in [`crate::dse`]: [`explore`] is now a thin
 //! wrapper over the exhaustive strategy on a single-device space.
+//!
+//! Evaluation takes the compile-once fast path
+//! ([`crate::workload::compiled`]): the kernel cores are compiled once
+//! per (workload, latency), the PE wrapper once per (n, grid width),
+//! and each design point then costs a resource-tape replay plus the
+//! (steady-state fast-forwarded) timing simulation — no SPD parsing,
+//! graph building or scheduling per point.
+
+use std::borrow::Borrow;
+use std::thread;
 
 use crate::dfg::OpLatency;
 use crate::error::Result;
 use crate::power;
 use crate::resource::{
-    estimate_hierarchical, CostTable, DesignMeta, Device, ResourceEstimate,
+    estimate_replay, CostTable, DesignMeta, Device, ResourceEstimate,
     STRATIX_V_5SGXEA7,
 };
 use crate::sim::{run_timing, DdrConfig, TimingDesign, TimingReport};
@@ -119,27 +129,27 @@ pub fn evaluate(design: &DesignPoint, cfg: &ExploreConfig) -> Result<Evaluation>
     evaluate_with(workload::get(cfg.workload)?, design, cfg)
 }
 
-/// Evaluate a single design point for an explicit workload.
+/// Evaluate a single design point for an explicit workload, through
+/// the compile-once fast path: memoized kernel/PE compilation, m-fold
+/// resource-tape replay, steady-state-fast-forwarded timing.  The
+/// result is bit-identical to generating and walking the full cascade
+/// (property-tested in `workload::compiled` and `sim::timing`).
 pub fn evaluate_with(
-    wl: &dyn StencilKernel,
+    wl: &'static dyn StencilKernel,
     design: &DesignPoint,
     cfg: &ExploreConfig,
 ) -> Result<Evaluation> {
-    let generated = wl.generate(design, cfg.latency)?;
+    workload::validate_design(design)?;
+    let compiled = workload::compiled(wl, cfg.latency)?;
+    let pe = compiled.pe(design.n, design.w)?;
     let meta = DesignMeta { lanes: design.n, pes: design.m };
-    let resources = estimate_hierarchical(
-        &generated.top,
-        &generated.registry,
-        cfg.latency,
-        &meta,
-        &CostTable::default(),
-        cfg.device,
-    )?;
+    let resources =
+        estimate_replay(&pe.tape, &meta, &CostTable::default(), cfg.device);
 
     let timing_design = TimingDesign {
         lanes: design.n as usize,
         words_per_cell: wl.words_per_cell(),
-        depth: generated.pe_depth * design.m,
+        depth: pe.pe_depth * design.m,
         cells: design.cells(),
         steps_per_pass: design.m,
         flops_per_cell_step: wl.flops_per_cell(),
@@ -148,18 +158,19 @@ pub fn evaluate_with(
 
     let power_w = power::model().predict(resources.core.regs, resources.core.bram_bits);
     let perf_per_watt = timing.performance_gflops / power_w;
+    let infeasible = resources.over_capacity;
 
     Ok(Evaluation {
         workload: wl.name(),
         device: cfg.device.name,
         design: *design,
         ddr: cfg.ddr,
-        pe_depth: generated.pe_depth,
-        resources: resources.clone(),
+        pe_depth: pe.pe_depth,
+        resources,
         timing,
         power_w,
         perf_per_watt,
-        infeasible: resources.over_capacity,
+        infeasible,
     })
 }
 
@@ -168,23 +179,29 @@ pub fn evaluate_with(
 /// performance-per-watt, best first.
 ///
 /// This is a thin wrapper over [`crate::dse::Exhaustive`] on the
-/// single-grid, single-device space described by `cfg`.
+/// single-grid, single-device space described by `cfg`, run on the
+/// machine's full worker pool (like `Coordinator::new`); results do
+/// not depend on the worker count.
 pub fn explore(cfg: &ExploreConfig) -> Result<Vec<Evaluation>> {
     use crate::dse::{DesignSpace, Exhaustive, SearchStrategy, SweepContext};
 
     let space = DesignSpace::from_explore(cfg);
     let cache = crate::dse::EvalCache::new();
-    let ctx = SweepContext { cache: &cache, workers: 1 };
+    let workers = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let ctx = SweepContext { cache: &cache, workers };
     let result = Exhaustive.run(&space, &ctx)?;
-    let mut evals = result.evals;
+    let mut evals: Vec<Evaluation> =
+        result.evals.iter().map(|e| (**e).clone()).collect();
     evals.retain(|e| e.infeasible.is_none() || cfg.keep_infeasible);
     Ok(evals)
 }
 
 /// Sort feasible-first, by perf/W descending.  Total order: a NaN
 /// perf/W (e.g. from a degenerate power prediction) ranks last within
-/// its feasibility class instead of panicking mid-sort.
-pub fn sort_by_perf_per_watt(evals: &mut [Evaluation]) {
+/// its feasibility class instead of panicking mid-sort.  Accepts both
+/// owned rows and `Arc`ed rows (what the sweep machinery passes
+/// around).
+pub fn sort_by_perf_per_watt<E: Borrow<Evaluation>>(evals: &mut [E]) {
     fn key(e: &Evaluation) -> f64 {
         if e.perf_per_watt.is_nan() {
             f64::NEG_INFINITY
@@ -193,6 +210,7 @@ pub fn sort_by_perf_per_watt(evals: &mut [Evaluation]) {
         }
     }
     evals.sort_by(|a, b| {
+        let (a, b) = (a.borrow(), b.borrow());
         a.infeasible
             .is_some()
             .cmp(&b.infeasible.is_some())
@@ -211,9 +229,10 @@ pub fn sort_by_perf_per_watt(evals: &mut [Evaluation]) {
 /// performance or power (a degenerate power prediction) are excluded:
 /// NaN compares false on every axis, so such a row could neither be
 /// dominated nor dominate.
-pub fn pareto(evals: &[Evaluation]) -> Vec<&Evaluation> {
+pub fn pareto<E: Borrow<Evaluation>>(evals: &[E]) -> Vec<&Evaluation> {
     let feasible: Vec<&Evaluation> = evals
         .iter()
+        .map(Borrow::borrow)
         .filter(|e| {
             e.infeasible.is_none()
                 && e.timing.performance_gflops.is_finite()
@@ -307,6 +326,46 @@ mod tests {
         let cfg = ExploreConfig { workload: "no_such_kernel", ..small_cfg() };
         let err = explore(&cfg).unwrap_err().to_string();
         assert!(err.contains("unknown workload"), "{err}");
+    }
+
+    #[test]
+    fn explore_result_is_independent_of_worker_count() {
+        // explore() now sizes its pool from available_parallelism; the
+        // rows must be bit-identical to a single-worker sweep
+        use crate::dse::{DesignSpace, EvalCache, Exhaustive, SearchStrategy, SweepContext};
+        let cfg = ExploreConfig { keep_infeasible: true, ..small_cfg() };
+        let parallel = explore(&cfg).unwrap();
+        let cache = EvalCache::new();
+        let single = Exhaustive
+            .run(
+                &DesignSpace::from_explore(&cfg),
+                &SweepContext { cache: &cache, workers: 1 },
+            )
+            .unwrap();
+        assert_eq!(parallel.len(), single.evals.len());
+        for (a, b) in parallel.iter().zip(&single.evals) {
+            assert_eq!(a.design, b.design);
+            assert_eq!(a.perf_per_watt.to_bits(), b.perf_per_watt.to_bits());
+            assert_eq!(a.timing.n_c, b.timing.n_c);
+            assert_eq!(a.resources.core, b.resources.core);
+        }
+    }
+
+    #[test]
+    fn fast_path_evaluation_matches_full_generate_depths() {
+        // the evaluation fast path must report the same PE depth the
+        // full generator computes (resources are covered by the
+        // workload::compiled contract test)
+        let cfg = small_cfg();
+        for (n, m) in [(1u32, 1u32), (2, 2)] {
+            let d = DesignPoint::new(n, m, 64, 32);
+            let e = evaluate(&d, &cfg).unwrap();
+            let g = workload::get(cfg.workload)
+                .unwrap()
+                .generate(&d, cfg.latency)
+                .unwrap();
+            assert_eq!(e.pe_depth, g.pe_depth, "({n},{m})");
+        }
     }
 
     #[test]

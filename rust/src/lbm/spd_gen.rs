@@ -12,16 +12,21 @@
 //! The formulas are the golden formulation (identical operator order to
 //! `ref.py` / `reference.rs`), hitting the paper's Table IV census
 //! exactly: 70 Adder + 60 Multiplier + 1 Divider per pipeline.
+//!
+//! Only the two kernel cores carry formulas and are emitted as SPD
+//! text (parsed once per latency table via [`compile_kernels`]); the
+//! PE and cascade wrappers are built directly as `spd::ast` cores —
+//! no source-text round trip on the per-design path.
 
 use std::fmt::Write as _;
 use std::sync::Arc;
 
 use super::{EX, EY, OPP, W, W6_5, W6_6};
-use crate::dfg::{self, OpLatency};
+use crate::dfg::OpLatency;
 use crate::error::Result;
-use crate::spd::{Registry, SpdCore};
-use crate::workload::stencil_gen::{self, CascadeSpec};
-use crate::workload::DesignPoint;
+use crate::spd::{Drct, Interface, Registry, SpdCore};
+use crate::workload::stencil_gen::{self, hdl, CascadeSpec};
+use crate::workload::{self, DesignPoint, KernelSet};
 
 /// A point in the paper's design space — now the workload-neutral
 /// [`DesignPoint`]; the old name is kept as an alias for the paper
@@ -67,30 +72,33 @@ pub fn generate(design: &LbmDesign) -> Result<LbmGenerated> {
     generate_with(design, OpLatency::default())
 }
 
-pub fn generate_with(design: &LbmDesign, lat: OpLatency) -> Result<LbmGenerated> {
-    let mut registry = Registry::with_library();
-
-    let calc_src = gen_calc();
-    let calc = registry.register_source(&calc_src)?;
-    let calc_depth = depth_of(&calc, &registry, lat)?;
-
-    let bndry_src = gen_bndry();
-    let bndry = registry.register_source(&bndry_src)?;
-    let bndry_depth = depth_of(&bndry, &registry, lat)?;
-
-    let pe_src = gen_pe(design, calc_depth, bndry_depth);
-    let pe = registry.register_source(&pe_src)?;
-    let pe_depth = depth_of(&pe, &registry, lat)?;
-
-    let top_src = gen_cascade(design, pe_depth);
-    let top = registry.register_source(&top_src)?;
-
-    Ok(LbmGenerated { registry, top, calc_src, bndry_src, pe_src, top_src, pe_depth })
+/// Compile the two LBM kernel cores once for a latency table.
+pub fn compile_kernels(lat: OpLatency) -> Result<KernelSet> {
+    let mut kernels = KernelSet::new(lat);
+    kernels.register_kernel(&gen_calc())?;
+    kernels.register_kernel(&gen_bndry())?;
+    Ok(kernels)
 }
 
-fn depth_of(core: &Arc<SpdCore>, registry: &Registry, lat: OpLatency) -> Result<u32> {
-    let compiled = dfg::compile_with(core, registry, lat)?;
-    Ok(compiled.depth())
+pub fn generate_with(design: &LbmDesign, lat: OpLatency) -> Result<LbmGenerated> {
+    let kernels = compile_kernels(lat)?;
+    let g = workload::instantiate(&super::workload::LbmWorkload, design, &kernels)?;
+    let mut by_name: std::collections::HashMap<String, String> =
+        g.sources.into_iter().collect();
+    let mut take = |name: &str| {
+        by_name
+            .remove(name)
+            .unwrap_or_else(|| panic!("missing generated source `{name}`"))
+    };
+    Ok(LbmGenerated {
+        calc_src: take("uLBM_calc"),
+        bndry_src: take("uLBM_bndry"),
+        pe_src: take(&design.pe_name()),
+        top_src: take(&design.top_name()),
+        registry: g.registry,
+        top: g.top,
+        pe_depth: g.pe_depth,
+    })
 }
 
 /// Collision core: the uLBM_calc of Fig. 7 (golden formulation).
@@ -228,19 +236,12 @@ pub fn gen_bndry() -> String {
 }
 
 /// PE core: n collision/boundary pipelines around shared Trans2D
-/// buffers (Fig. 2b; Figs. 6–9).
-pub fn gen_pe(design: &LbmDesign, calc_depth: u32, bndry_depth: u32) -> String {
+/// buffers (Fig. 2b; Figs. 6–9), built directly as an AST.
+pub fn pe_ast(design: &LbmDesign, calc_depth: u32, bndry_depth: u32) -> SpdCore {
     let (n, w) = (design.n, design.w);
     let trans_delay = w / n + 2;
-    let mut s = String::new();
-    let _ = writeln!(
-        s,
-        "Name {};  # LBM PE: {n} pipeline(s), grid width {w}", design.pe_name()
-    );
-    let _ = writeln!(
-        s,
-        "# stage depths: calc {calc_depth}, translation {trans_delay}, boundary {bndry_depth}"
-    );
+    let mut core = SpdCore { name: design.pe_name(), ..SpdCore::default() };
+
     // main stream in: per lane f0..f8 + attr, then frame markers
     let mut in_ports = Vec::new();
     for l in 0..n {
@@ -251,8 +252,11 @@ pub fn gen_pe(design: &LbmDesign, calc_depth: u32, bndry_depth: u32) -> String {
     }
     in_ports.push("sop".into());
     in_ports.push("eop".into());
-    let _ = writeln!(s, "Main_In {{Mi::{}}};", in_ports.join(","));
-    let _ = writeln!(s, "Append_Reg {{Mr::one_tau,uwx,uwy}};");
+    core.main_in.push(Interface { name: "Mi".into(), ports: in_ports });
+    core.append_reg.push(Interface {
+        name: "Mr".into(),
+        ports: vec!["one_tau".into(), "uwx".into(), "uwy".into()],
+    });
     let mut out_ports = Vec::new();
     for l in 0..n {
         for i in 0..9 {
@@ -262,18 +266,15 @@ pub fn gen_pe(design: &LbmDesign, calc_depth: u32, bndry_depth: u32) -> String {
     }
     out_ports.push("sop_o".into());
     out_ports.push("eop_o".into());
-    let _ = writeln!(s, "Main_Out {{Mo::{}}};", out_ports.join(","));
+    core.main_out.push(Interface { name: "Mo".into(), ports: out_ports });
 
     // collision per lane
     for l in 0..n {
-        let ins: Vec<String> = (0..9).map(|i| format!("f{i}_{l}")).collect();
-        let outs: Vec<String> = (0..9).map(|i| format!("fs{i}_{l}")).collect();
-        let _ = writeln!(
-            s,
-            "HDL CALC{l}, {calc_depth}, ({},rho_{l}) = uLBM_calc({},one_tau);",
-            outs.join(","),
-            ins.join(",")
-        );
+        let mut ins: Vec<String> = (0..9).map(|i| format!("f{i}_{l}")).collect();
+        ins.push("one_tau".into());
+        let mut outs: Vec<String> = (0..9).map(|i| format!("fs{i}_{l}")).collect();
+        outs.push(format!("rho_{l}"));
+        core.hdl.push(hdl(format!("CALC{l}"), calc_depth, outs, "uLBM_calc", ins, vec![]));
     }
     // translation: one shared Trans2D per moving channel (i = 1..8),
     // each with TWO taps — the lattice shift (ex, ey) feeding the
@@ -287,14 +288,8 @@ pub fn gen_pe(design: &LbmDesign, calc_depth: u32, bndry_depth: u32) -> String {
         let ins: Vec<String> = (0..n).map(|l| format!("fs{i}_{l}")).collect();
         let mut outs: Vec<String> = (0..n).map(|l| format!("fp{i}_{l}")).collect();
         outs.extend((0..n).map(|l| format!("fc{i}_{l}")));
-        let _ = writeln!(
-            s,
-            "HDL TR{i}, {trans_delay}, ({}) = Trans2D({}), {w}, {n}, {}, {}, 0, 0;",
-            outs.join(","),
-            ins.join(","),
-            EX[i],
-            EY[i]
-        );
+        let params = vec![w as f64, n as f64, EX[i] as f64, EY[i] as f64, 0.0, 0.0];
+        core.hdl.push(hdl(format!("TR{i}"), trans_delay, outs, "Trans2D", ins, params));
     }
     // attribute translation: 8 direction taps + the center tap on one
     // shared buffer.
@@ -309,16 +304,14 @@ pub fn gen_pe(design: &LbmDesign, calc_depth: u32, bndry_depth: u32) -> String {
         for l in 0..n {
             outs.push(format!("ac_{l}"));
         }
-        let mut taps: Vec<String> =
-            (1..9).map(|i| format!("{}, {}", EX[i], EY[i])).collect();
-        taps.push("0, 0".into());
-        let _ = writeln!(
-            s,
-            "HDL TRA, {trans_delay}, ({}) = Trans2D({}), {w}, {n}, {};",
-            outs.join(","),
-            ins.join(","),
-            taps.join(", ")
-        );
+        let mut params = vec![w as f64, n as f64];
+        for i in 1..9 {
+            params.push(EX[i] as f64);
+            params.push(EY[i] as f64);
+        }
+        params.push(0.0);
+        params.push(0.0);
+        core.hdl.push(hdl("TRA".into(), trans_delay, outs, "Trans2D", ins, params));
     }
     // boundary per lane
     for l in 0..n {
@@ -339,21 +332,24 @@ pub fn gen_pe(design: &LbmDesign, calc_depth: u32, bndry_depth: u32) -> String {
         ins.push("uwx".into());
         ins.push("uwy".into());
         let outs: Vec<String> = (0..9).map(|i| format!("o{i}_{l}")).collect();
-        let _ = writeln!(
-            s,
-            "HDL BND{l}, {bndry_depth}, ({}) = uLBM_bndry({});",
-            outs.join(","),
-            ins.join(",")
-        );
-        let _ = writeln!(s, "DRCT (ao_{l}) = (ac_{l});");
+        core.hdl.push(hdl(format!("BND{l}"), bndry_depth, outs, "uLBM_bndry", ins, vec![]));
+        core.drct.push(Drct {
+            dsts: vec![format!("ao_{l}")],
+            srcs: vec![format!("ac_{l}")],
+            line: 0,
+        });
     }
-    let _ = writeln!(s, "DRCT (sop_o, eop_o) = (Mi::sop, Mi::eop);");
-    s
+    core.drct.push(Drct {
+        dsts: vec!["sop_o".into(), "eop_o".into()],
+        srcs: vec!["Mi::sop".into(), "Mi::eop".into()],
+        line: 0,
+    });
+    core
 }
 
 /// Cascade top: m PEs chained (Fig. 2c; Figs. 10–12), emitted through
 /// the workload-generic cascade generator.
-pub fn gen_cascade(design: &LbmDesign, pe_depth: u32) -> String {
+pub fn cascade_ast(design: &LbmDesign, pe_depth: u32) -> SpdCore {
     let mut channels: Vec<(String, String, String)> = (0..9)
         .map(|i| (format!("f{i}"), format!("if{i}"), format!("of{i}")))
         .collect();

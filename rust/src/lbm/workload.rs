@@ -8,12 +8,13 @@
 use std::collections::HashMap;
 
 use super::reference::{self, LbmState};
-use super::spd_gen::{generate, generate_with, LbmCoreNames, LbmDesign, LbmGenerated};
+use super::spd_gen::{self, generate, LbmDesign, LbmGenerated};
 use super::{FLOPS_PER_CELL, FLUID, U_LID};
 use crate::dfg::{self, Compiled, OpLatency};
 use crate::error::{Error, Result};
 use crate::sim::{self, DataflowInput};
-use crate::workload::{DesignPoint, GeneratedDesign, GridState, StencilKernel};
+use crate::spd::SpdCore;
+use crate::workload::{DesignPoint, GridState, KernelSet, StencilKernel};
 
 /// Default relaxation rate (1/tau) used by the workload-registry
 /// scenario and the CLI defaults.
@@ -40,19 +41,20 @@ impl StencilKernel for LbmWorkload {
         FLOPS_PER_CELL
     }
 
-    fn generate(&self, design: &DesignPoint, lat: OpLatency) -> Result<GeneratedDesign> {
-        let g = generate_with(design, lat)?;
-        Ok(GeneratedDesign {
-            pe_depth: g.pe_depth,
-            sources: vec![
-                ("uLBM_calc".to_string(), g.calc_src),
-                ("uLBM_bndry".to_string(), g.bndry_src),
-                (design.pe_name(), g.pe_src),
-                (design.top_name(), g.top_src),
-            ],
-            top: g.top,
-            registry: g.registry,
-        })
+    fn compile_kernels(&self, lat: OpLatency) -> Result<KernelSet> {
+        spd_gen::compile_kernels(lat)
+    }
+
+    fn pe_ast(&self, design: &DesignPoint, kernels: &KernelSet) -> Result<SpdCore> {
+        Ok(spd_gen::pe_ast(
+            design,
+            kernels.depth("uLBM_calc")?,
+            kernels.depth("uLBM_bndry")?,
+        ))
+    }
+
+    fn cascade_ast(&self, design: &DesignPoint, pe_depth: u32) -> SpdCore {
+        spd_gen::cascade_ast(design, pe_depth)
     }
 
     fn init_state(&self, h: usize, w: usize) -> GridState {

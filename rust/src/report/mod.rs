@@ -3,14 +3,17 @@
 //! and per-strategy comparisons.  Rows are labeled with the workload
 //! they were evaluated for (the explorer is workload-generic).
 
+use std::borrow::Borrow;
+
 use crate::dse::SweepResult;
 use crate::explore::Evaluation;
 use crate::power::PAPER_TABLE3;
 use crate::resource::soc_peripherals;
 use crate::util::commas;
 
-/// Render the Table III analogue for a set of evaluations.
-pub fn table3(evals: &[Evaluation]) -> String {
+/// Render the Table III analogue for a set of evaluations (owned or
+/// `Arc`ed rows).
+pub fn table3<E: Borrow<Evaluation>>(evals: &[E]) -> String {
     let mut s = String::new();
     s.push_str(&format!(
         "{:<26} {:>8} {:>9} {:>12} {:>5} {:>6} {:>8} {:>9} {:>7} {:>9}\n",
@@ -40,6 +43,7 @@ pub fn table3(evals: &[Evaluation]) -> String {
         "-"
     ));
     for e in evals {
+        let e: &Evaluation = e.borrow();
         let d = e.design;
         let label = format!(
             "{} (n,m)=({}, {}){}",
@@ -66,7 +70,7 @@ pub fn table3(evals: &[Evaluation]) -> String {
 }
 
 /// Side-by-side comparison against the paper's measured Table III.
-pub fn table3_vs_paper(evals: &[Evaluation]) -> String {
+pub fn table3_vs_paper<E: Borrow<Evaluation>>(evals: &[E]) -> String {
     let mut s = String::new();
     s.push_str(&format!(
         "{:<10} | {:>9} {:>9} {:>6} | {:>9} {:>9} {:>6} | {:>7} {:>7} {:>6}\n",
@@ -74,6 +78,7 @@ pub fn table3_vs_paper(evals: &[Evaluation]) -> String {
         "GF:ppr", "d%"
     ));
     for e in evals {
+        let e: &Evaluation = e.borrow();
         let Some(p) = PAPER_TABLE3
             .iter()
             .find(|p| p.n == e.design.n && p.m == e.design.m)
@@ -102,7 +107,7 @@ pub fn table3_vs_paper(evals: &[Evaluation]) -> String {
 /// Render a multi-device sweep table: one block per device (in row
 /// order of first appearance), rows like `table3` plus grid and DDR
 /// context.
-pub fn dse_table(evals: &[Evaluation]) -> String {
+pub fn dse_table<E: Borrow<Evaluation>>(evals: &[E]) -> String {
     let mut s = String::new();
     for dev in distinct_devices(evals) {
         s.push_str(&format!("== {dev} ==\n"));
@@ -120,7 +125,7 @@ pub fn dse_table(evals: &[Evaluation]) -> String {
             "P[W]",
             "GF/sW"
         ));
-        for e in evals.iter().filter(|e| e.device == dev) {
+        for e in evals.iter().map(Borrow::borrow).filter(|e| e.device == dev) {
             let d = e.design;
             let label = format!(
                 "{} ({}, {}){}",
@@ -150,9 +155,10 @@ pub fn dse_table(evals: &[Evaluation]) -> String {
 
 /// Devices in row order of first appearance (sweep tables group by
 /// device in this order).
-fn distinct_devices(evals: &[Evaluation]) -> Vec<&'static str> {
+fn distinct_devices<E: Borrow<Evaluation>>(evals: &[E]) -> Vec<&'static str> {
     let mut devices: Vec<&'static str> = Vec::new();
     for e in evals {
+        let e: &Evaluation = e.borrow();
         if !devices.contains(&e.device) {
             devices.push(e.device);
         }
@@ -247,7 +253,7 @@ mod tests {
 
     #[test]
     fn table3_renders_soc_row() {
-        let t = table3(&[]);
+        let t = table3::<Evaluation>(&[]);
         assert!(t.contains("SoC peripherals"));
         assert!(t.contains("54,997"));
     }

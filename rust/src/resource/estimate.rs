@@ -220,7 +220,41 @@ pub fn estimate_hierarchical(
 ) -> crate::error::Result<ResourceEstimate> {
     let mut acc = Acc::default();
     walk_core(core, registry, latency, cost, &mut acc)?;
+    Ok(finish_hierarchical(&acc, meta, cost, device))
+}
 
+/// Estimate a cascade of `meta.pes` identical PEs from the PE's
+/// recorded [`ResourceTape`] — the compile-once/evaluate-many fast
+/// path.
+///
+/// A cascade top contributes nothing of its own (its inter-PE edges
+/// and output ports balance to zero delay, its inputs are free), so
+/// replaying the PE tape `m` times performs *the same sequence of
+/// accumulator operations* as [`estimate_hierarchical`] walking the
+/// full generated top — the result is bit-identical, without building
+/// or scheduling a single graph per design point.
+pub fn estimate_replay(
+    tape: &ResourceTape,
+    meta: &DesignMeta,
+    cost: &CostTable,
+    device: &Device,
+) -> ResourceEstimate {
+    let mut acc = Acc::default();
+    for _ in 0..meta.pes {
+        tape.replay(&mut acc);
+    }
+    finish_hierarchical(&acc, meta, cost, device)
+}
+
+/// Shared overhead tail of the hierarchical estimate (PE framing,
+/// inter-PE FIFOs, per-design DMA, fitting pressure, SoC, capacity
+/// check).
+fn finish_hierarchical(
+    acc: &Acc,
+    meta: &DesignMeta,
+    cost: &CostTable,
+    device: &Device,
+) -> ResourceEstimate {
     let mut alm = acc.alm;
     let mut regs = acc.regs + acc.bal_regs_stages as f64 * cost.bal_regs_per_stage;
     let mut bram = acc.bram + (acc.bal_bram_stages * 32) as f64;
@@ -243,7 +277,7 @@ pub fn estimate_hierarchical(
     let total = core_res.add(&soc_peripherals());
     let over_capacity =
         device.check(total.alms, total.regs, total.bram_bits, total.dsps);
-    Ok(ResourceEstimate {
+    ResourceEstimate {
         core: core_res,
         total,
         over_capacity,
@@ -252,7 +286,22 @@ pub fn estimate_hierarchical(
         logic_muls: acc.logic_muls,
         balance_stages_regs: acc.bal_regs_stages,
         balance_stages_bram: acc.bal_bram_stages,
-    })
+    }
+}
+
+/// Where per-element contributions go: a plain accumulator
+/// ([`Acc`]) for one-shot estimates, or a [`ResourceTape`] that
+/// records them for later replay.
+trait ResourceSink {
+    fn alm(&mut self, x: f64);
+    fn regs(&mut self, x: f64);
+    fn bram(&mut self, x: f64);
+    fn dsps(&mut self, n: u64);
+    fn fp_op(&mut self);
+    fn dsp_mul(&mut self);
+    fn logic_mul(&mut self);
+    fn bal_regs(&mut self, stages: u64);
+    fn bal_bram(&mut self, stages: u64);
 }
 
 #[derive(Default)]
@@ -268,12 +317,123 @@ struct Acc {
     bal_bram_stages: u64,
 }
 
-fn walk_core(
+impl ResourceSink for Acc {
+    fn alm(&mut self, x: f64) {
+        self.alm += x;
+    }
+    fn regs(&mut self, x: f64) {
+        self.regs += x;
+    }
+    fn bram(&mut self, x: f64) {
+        self.bram += x;
+    }
+    fn dsps(&mut self, n: u64) {
+        self.dsps += n;
+    }
+    fn fp_op(&mut self) {
+        self.fp_ops += 1;
+    }
+    fn dsp_mul(&mut self) {
+        self.dsp_muls += 1;
+    }
+    fn logic_mul(&mut self) {
+        self.logic_muls += 1;
+    }
+    fn bal_regs(&mut self, stages: u64) {
+        self.bal_regs_stages += stages;
+    }
+    fn bal_bram(&mut self, stages: u64) {
+        self.bal_bram_stages += stages;
+    }
+}
+
+/// Recorded per-element contributions of one core (typically a PE),
+/// replayable into an [`Acc`] any number of times.  Float addends keep
+/// their original order, so a replay performs the identical f64
+/// addition sequence the direct walk would — exactness down to the
+/// last bit, which the strategy-equivalence tests rely on.
+#[derive(Clone, Debug, Default)]
+pub struct ResourceTape {
+    alm: Vec<f64>,
+    regs: Vec<f64>,
+    bram: Vec<f64>,
+    dsps: u64,
+    fp_ops: usize,
+    dsp_muls: usize,
+    logic_muls: usize,
+    bal_regs_stages: u64,
+    bal_bram_stages: u64,
+}
+
+impl ResourceTape {
+    fn replay(&self, acc: &mut Acc) {
+        for &x in &self.alm {
+            acc.alm += x;
+        }
+        for &x in &self.regs {
+            acc.regs += x;
+        }
+        for &x in &self.bram {
+            acc.bram += x;
+        }
+        acc.dsps += self.dsps;
+        acc.fp_ops += self.fp_ops;
+        acc.dsp_muls += self.dsp_muls;
+        acc.logic_muls += self.logic_muls;
+        acc.bal_regs_stages += self.bal_regs_stages;
+        acc.bal_bram_stages += self.bal_bram_stages;
+    }
+}
+
+impl ResourceSink for ResourceTape {
+    fn alm(&mut self, x: f64) {
+        self.alm.push(x);
+    }
+    fn regs(&mut self, x: f64) {
+        self.regs.push(x);
+    }
+    fn bram(&mut self, x: f64) {
+        self.bram.push(x);
+    }
+    fn dsps(&mut self, n: u64) {
+        self.dsps += n;
+    }
+    fn fp_op(&mut self) {
+        self.fp_ops += 1;
+    }
+    fn dsp_mul(&mut self) {
+        self.dsp_muls += 1;
+    }
+    fn logic_mul(&mut self) {
+        self.logic_muls += 1;
+    }
+    fn bal_regs(&mut self, stages: u64) {
+        self.bal_regs_stages += stages;
+    }
+    fn bal_bram(&mut self, stages: u64) {
+        self.bal_bram_stages += stages;
+    }
+}
+
+/// Record the full hierarchical walk of `core` (local elements, local
+/// balancing, recursed sub-cores) as a replayable tape.
+pub fn tape_core(
     core: &crate::spd::SpdCore,
     registry: &crate::spd::Registry,
     latency: crate::dfg::OpLatency,
     cost: &CostTable,
-    acc: &mut Acc,
+) -> crate::error::Result<ResourceTape> {
+    let mut tape = ResourceTape::default();
+    walk_core(core, registry, latency, cost, &mut tape)?;
+    Ok(tape)
+}
+
+fn walk_core<S: ResourceSink>(
+    core: &crate::spd::SpdCore,
+    registry: &crate::spd::Registry,
+    latency: crate::dfg::OpLatency,
+    cost: &CostTable,
+    acc: &mut S,
 ) -> crate::error::Result<()> {
     let g = crate::dfg::build(core, registry)?;
     let sched = crate::dfg::schedule_with(&g, latency)?;
@@ -297,23 +457,23 @@ fn walk_core(
                 continue;
             }
             if d >= cost.shift_reg_threshold as u64 {
-                acc.bal_bram_stages += d;
+                acc.bal_bram(d);
             } else {
-                acc.bal_regs_stages += d;
+                acc.bal_regs(d);
             }
         }
     }
     Ok(())
 }
 
-fn tally_node(g: &Graph, id: usize, cost: &CostTable, acc: &mut Acc) {
+fn tally_node<S: ResourceSink>(g: &Graph, id: usize, cost: &CostTable, acc: &mut S) {
     match &g.nodes[id].kind {
         NodeKind::Op(op) => {
-            acc.fp_ops += 1;
+            acc.fp_op();
             match op {
                 BinOp::Add | BinOp::Sub => {
-                    acc.alm += cost.add_alm;
-                    acc.regs += cost.add_regs;
+                    acc.alm(cost.add_alm);
+                    acc.regs(cost.add_regs);
                 }
                 BinOp::Mul => {
                     let simple = g.inputs[id].iter().flatten().any(|e| {
@@ -323,46 +483,40 @@ fn tally_node(g: &Graph, id: usize, cost: &CostTable, acc: &mut Acc) {
                         )
                     });
                     if simple {
-                        acc.logic_muls += 1;
-                        acc.alm += cost.mul_logic_alm;
-                        acc.regs += cost.mul_logic_regs;
+                        acc.logic_mul();
+                        acc.alm(cost.mul_logic_alm);
+                        acc.regs(cost.mul_logic_regs);
                     } else {
-                        acc.dsp_muls += 1;
-                        acc.alm += cost.mul_dsp_alm;
-                        acc.regs += cost.mul_dsp_regs;
-                        acc.dsps += 1;
+                        acc.dsp_mul();
+                        acc.alm(cost.mul_dsp_alm);
+                        acc.regs(cost.mul_dsp_regs);
+                        acc.dsps(1);
                     }
                 }
                 BinOp::Div => {
-                    acc.alm += cost.div_alm;
-                    acc.regs += cost.div_regs;
-                    acc.dsps += cost.div_dsps;
+                    acc.alm(cost.div_alm);
+                    acc.regs(cost.div_regs);
+                    acc.dsps(cost.div_dsps);
                 }
             }
         }
         NodeKind::Sqrt => {
-            acc.fp_ops += 1;
-            acc.alm += cost.sqrt_alm;
-            acc.regs += cost.sqrt_regs;
+            acc.fp_op();
+            acc.alm(cost.sqrt_alm);
+            acc.regs(cost.sqrt_regs);
         }
         NodeKind::Lib(k) => match k {
-            LibKind::SyncMux | LibKind::Eliminator => acc.alm += cost.mux_alm,
-            LibKind::CompEq { .. } | LibKind::CompLt => acc.alm += cost.cmp_alm,
+            LibKind::SyncMux | LibKind::Eliminator => acc.alm(cost.mux_alm),
+            LibKind::CompEq { .. } | LibKind::CompLt => acc.alm(cost.cmp_alm),
             LibKind::Delay { cycles } => {
-                bucket_delay(*cycles as u64, cost, &mut acc.regs, &mut acc.bram)
+                bucket_delay_sink(*cycles as u64, cost, acc)
             }
-            LibKind::StreamFwd { ahead, base } => bucket_delay(
-                (*base - *ahead) as u64,
-                cost,
-                &mut acc.regs,
-                &mut acc.bram,
-            ),
-            LibKind::StreamBwd { back, base } => bucket_delay(
-                (*back + *base) as u64,
-                cost,
-                &mut acc.regs,
-                &mut acc.bram,
-            ),
+            LibKind::StreamFwd { ahead, base } => {
+                bucket_delay_sink((*base - *ahead) as u64, cost, acc)
+            }
+            LibKind::StreamBwd { back, base } => {
+                bucket_delay_sink((*back + *base) as u64, cost, acc)
+            }
             LibKind::Trans2D { w, n, taps } => {
                 let deepest = taps
                     .iter()
@@ -370,12 +524,22 @@ fn tally_node(g: &Graph, id: usize, cost: &CostTable, acc: &mut Acc) {
                     .max()
                     .unwrap_or(0) as u64
                     + *n as u64;
-                acc.bram += (deepest * 32) as f64;
-                acc.alm +=
-                    90.0 + cost.lane_mux_alm * (*n as f64 - 1.0) * taps.len() as f64;
+                acc.bram((deepest * 32) as f64);
+                acc.alm(90.0 + cost.lane_mux_alm * (*n as f64 - 1.0) * taps.len() as f64);
             }
         },
         _ => {}
+    }
+}
+
+fn bucket_delay_sink<S: ResourceSink>(cycles: u64, cost: &CostTable, acc: &mut S) {
+    if cycles == 0 {
+        return;
+    }
+    if cycles >= cost.shift_reg_threshold as u64 {
+        acc.bram((cycles * 32) as f64);
+    } else {
+        acc.regs(cycles as f64 * cost.bal_regs_per_stage);
     }
 }
 

@@ -18,6 +18,6 @@ pub use device::{
     Device, ARRIA_10_GX1150, GENERIC_2X, STRATIX_V_5SGXEA7,
 };
 pub use estimate::{
-    estimate, estimate_hierarchical, soc_peripherals, DesignMeta, ResourceEstimate,
-    Resources,
+    estimate, estimate_hierarchical, estimate_replay, soc_peripherals, tape_core,
+    DesignMeta, ResourceEstimate, ResourceTape, Resources,
 };

@@ -21,6 +21,36 @@
 //! which we model as `turnaround_ns = 21.7` (about 17 DRAM bus cycles
 //! at 800 MHz — a plausible tRTW + bank-management figure for DDR3-1600).
 //! Refresh (tREFI/tRFC) is modeled too; input FIFOs absorb it.
+//!
+//! # Time representation
+//!
+//! All controller bookkeeping runs on an integer clock in *deci-cycles*
+//! (1/10 of a core cycle, [`DC_PER_CYCLE`]); the nanosecond parameters
+//! of [`DdrConfig`] are quantized once at construction.  On the default
+//! configuration the quantization is exact (burst 40 ns = 72 dc,
+//! turnaround 21.7 ns = 39 dc, tREFI 7800 ns = 1404 cycles), so the
+//! calibrated capacity is preserved to <0.1%.  Integer time is what
+//! makes the timing fast-forward (`sim::timing`) sound: the system's
+//! *relative* state ([`MemPhase`]) is exactly periodic in steady
+//! operation, and shifting every absolute timestamp by a whole number
+//! of periods reproduces the future evolution bit-for-bit — something
+//! float timestamps cannot guarantee (their rounding depends on the
+//! absolute magnitude).
+
+/// Integer deci-cycles per core cycle (the memory model's clock
+/// resolution).
+pub const DC_PER_CYCLE: u64 = 10;
+
+/// Quantize a nanosecond interval to deci-cycles:
+/// `x ns = x * f_core / 1000 cycles = x * f_core / 100 dc`.
+fn dc_from_ns(ns: f64) -> u64 {
+    let dc = ns * crate::CORE_FREQ_MHZ / 100.0;
+    if dc <= 0.0 {
+        0
+    } else {
+        dc.round() as u64
+    }
+}
 
 /// Configuration of the external memory system.
 #[derive(Clone, Copy, Debug)]
@@ -72,9 +102,30 @@ enum Dir {
 /// One DDR3 controller: busy-until bookkeeping over burst requests.
 #[derive(Clone, Debug)]
 struct Dimm {
-    busy_until_ns: f64,
+    busy_until_dc: u64,
     last_dir: Option<Dir>,
-    next_refresh_ns: f64,
+    next_refresh_dc: u64,
+}
+
+/// Largest DIMM count the fast-forward snapshot covers (systems with
+/// more controllers simply run the cycle-stepped oracle).
+pub const MAX_FF_DIMMS: usize = 8;
+
+/// Time-shifted (relative) state of the memory system at one instant.
+///
+/// Two equal `MemPhase`s taken at different absolute times prove that
+/// the system evolves identically from both points (all decisions in
+/// [`DdrSystem::advance`] depend only on time *differences* and byte
+/// counters captured here), which is the foundation of the timing
+/// fast-forward in `sim::timing`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct MemPhase {
+    n: usize,
+    busy_rel: [i64; MAX_FF_DIMMS],
+    refresh_rel: [i64; MAX_FF_DIMMS],
+    last_dir: [u8; MAX_FF_DIMMS],
+    in_fifo: u64,
+    out_fifo: u64,
 }
 
 /// The memory system: burst-level service of a read stream (filling the
@@ -82,9 +133,16 @@ struct Dimm {
 #[derive(Clone, Debug)]
 pub struct DdrSystem {
     pub cfg: DdrConfig,
+    /// quantized config intervals (deci-cycles)
+    burst_dc: u64,
+    turnaround_dc: u64,
+    trefi_dc: u64,
+    trfc_dc: u64,
+    /// idle window inside which a new burst back-dates to the end of
+    /// the previous one (work conservation against the caller's
+    /// one-cycle polling cadence); ~6 ns
+    idle_anchor_dc: u64,
     dimms: Vec<Dimm>,
-    rr_read: usize,
-    rr_write: usize,
     /// bytes granted to the input FIFO, not yet consumed by the core
     pub in_fifo_bytes: u64,
     /// bytes produced by the core, not yet written to memory
@@ -100,17 +158,21 @@ pub struct DdrSystem {
 
 impl DdrSystem {
     pub fn new(cfg: DdrConfig) -> Self {
+        let trefi_dc = dc_from_ns(cfg.trefi_ns).max(1);
         DdrSystem {
+            burst_dc: dc_from_ns(cfg.burst_bytes as f64 / cfg.peak_gbps).max(1),
+            turnaround_dc: dc_from_ns(cfg.turnaround_ns),
+            trefi_dc,
+            trfc_dc: dc_from_ns(cfg.trfc_ns),
+            idle_anchor_dc: dc_from_ns(6.0),
             dimms: (0..cfg.n_dimms)
                 .map(|_| Dimm {
-                    busy_until_ns: 0.0,
+                    busy_until_dc: 0,
                     last_dir: None,
-                    next_refresh_ns: cfg.trefi_ns,
+                    next_refresh_dc: trefi_dc,
                 })
                 .collect(),
             cfg,
-            rr_read: 0,
-            rr_write: 1,
             in_fifo_bytes: 0,
             out_fifo_bytes: 0,
             in_fifo_cap: 16 * 1024,
@@ -127,14 +189,14 @@ impl DdrSystem {
         self.read_remaining = bytes;
     }
 
-    /// Advance the memory system to time `now_ns`, issuing as many
-    /// bursts as fit.  Called once per core cycle.
+    /// Advance the memory system to time `now_dc` (deci-cycles),
+    /// issuing as many bursts as fit.  Called once per core cycle.
     ///
     /// Both streams are striped over all DIMMs; when a controller has
     /// both a read and a write pending it serves them alternately (the
     /// address interleave forces the R/W mix through every controller,
     /// so the turnaround cost cannot be avoided by segregation).
-    pub fn advance(&mut self, now_ns: f64) {
+    pub fn advance(&mut self, now_dc: u64) {
         let burst = self.cfg.burst_bytes;
         let n = self.dimms.len();
         for d in 0..n {
@@ -154,7 +216,7 @@ impl DdrSystem {
                         }
                     }
                 };
-                if !self.try_issue(d, dir, now_ns) {
+                if !self.try_issue(d, dir, now_dc) {
                     break;
                 }
                 match dir {
@@ -163,46 +225,45 @@ impl DdrSystem {
                         self.read_remaining -= got;
                         self.in_fifo_bytes += got;
                         self.total_read += got;
-                        self.rr_read = (self.rr_read + 1) % n;
                     }
                     Dir::Write => {
                         self.out_fifo_bytes -= burst;
                         self.total_written += burst;
-                        self.rr_write = (self.rr_write + 1) % n;
                     }
                 }
             }
         }
     }
 
-    /// Issue a burst on DIMM `d` if it is free at `now_ns`.
+    /// Issue a burst on DIMM `d` if it is free at `now_dc`.
     ///
     /// Work-conserving: under continuous demand, bursts start
     /// back-to-back at the controller's `busy_until` time instead of
     /// being quantized to the caller's polling cadence (one core
-    /// cycle); an idle controller starts at `now_ns`.
-    fn try_issue(&mut self, d: usize, dir: Dir, now_ns: f64) -> bool {
-        let burst_ns = self.cfg.burst_bytes as f64 / self.cfg.peak_gbps;
+    /// cycle); a controller idle longer than the anchor window starts
+    /// at `now_dc`.
+    fn try_issue(&mut self, d: usize, dir: Dir, now_dc: u64) -> bool {
+        let turnaround_dc = self.turnaround_dc;
         let dimm = &mut self.dimms[d];
         // refresh first if due
-        if now_ns >= dimm.next_refresh_ns {
-            dimm.busy_until_ns = dimm.busy_until_ns.max(dimm.next_refresh_ns)
-                + self.cfg.trfc_ns;
-            dimm.next_refresh_ns += self.cfg.trefi_ns;
+        if now_dc >= dimm.next_refresh_dc {
+            dimm.busy_until_dc =
+                dimm.busy_until_dc.max(dimm.next_refresh_dc) + self.trfc_dc;
+            dimm.next_refresh_dc += self.trefi_dc;
         }
-        if dimm.busy_until_ns > now_ns {
+        if dimm.busy_until_dc > now_dc {
             return false;
         }
-        let start = if now_ns - dimm.busy_until_ns < 6.0 {
-            dimm.busy_until_ns.max(0.0)
+        let start = if now_dc - dimm.busy_until_dc < self.idle_anchor_dc {
+            dimm.busy_until_dc
         } else {
-            now_ns
+            now_dc
         };
         let turnaround = match dimm.last_dir {
-            Some(prev) if prev != dir => self.cfg.turnaround_ns,
-            _ => 0.0,
+            Some(prev) if prev != dir => turnaround_dc,
+            _ => 0,
         };
-        dimm.busy_until_ns = start + turnaround + burst_ns;
+        dimm.busy_until_dc = start + turnaround + self.burst_dc;
         dimm.last_dir = Some(dir);
         true
     }
@@ -226,6 +287,48 @@ impl DdrSystem {
             false
         }
     }
+
+    /// The relative state at `now_dc`, or `None` when the system has
+    /// too many DIMMs for the fixed-size snapshot.
+    pub fn phase(&self, now_dc: u64) -> Option<MemPhase> {
+        if self.dimms.len() > MAX_FF_DIMMS {
+            return None;
+        }
+        let mut p = MemPhase {
+            n: self.dimms.len(),
+            busy_rel: [0; MAX_FF_DIMMS],
+            refresh_rel: [0; MAX_FF_DIMMS],
+            last_dir: [0; MAX_FF_DIMMS],
+            in_fifo: self.in_fifo_bytes,
+            out_fifo: self.out_fifo_bytes,
+        };
+        for (i, d) in self.dimms.iter().enumerate() {
+            p.busy_rel[i] = d.busy_until_dc as i64 - now_dc as i64;
+            p.refresh_rel[i] = d.next_refresh_dc as i64 - now_dc as i64;
+            p.last_dir[i] = match d.last_dir {
+                None => 0,
+                Some(Dir::Read) => 1,
+                Some(Dir::Write) => 2,
+            };
+        }
+        Some(p)
+    }
+
+    /// Teleport the system `delta_dc` into the future along a known
+    /// steady orbit: every absolute timestamp shifts by `delta_dc`
+    /// (preserving the relative [`MemPhase`]) while the byte counters
+    /// absorb the traffic the skipped interval would have carried.
+    /// FIFO levels are unchanged by construction (whole periods move
+    /// as many bytes in as out).
+    pub fn fast_forward(&mut self, delta_dc: u64, read_bytes: u64, written_bytes: u64) {
+        for d in &mut self.dimms {
+            d.busy_until_dc += delta_dc;
+            d.next_refresh_dc += delta_dc;
+        }
+        self.read_remaining -= read_bytes;
+        self.total_read += read_bytes;
+        self.total_written += written_bytes;
+    }
 }
 
 #[cfg(test)]
@@ -241,17 +344,26 @@ mod tests {
     }
 
     #[test]
+    fn default_config_quantizes_exactly() {
+        // the calibrated DE5-NET numbers land on integer deci-cycles
+        let m = DdrSystem::new(DdrConfig::default());
+        assert_eq!(m.burst_dc, 72); // 40 ns
+        assert_eq!(m.turnaround_dc, 39); // 21.7 ns -> 3.9 cycles
+        assert_eq!(m.trefi_dc, 14040); // 7800 ns = 1404 cycles
+        assert_eq!(m.trfc_dc, 468); // 260 ns = 46.8 cycles
+    }
+
+    #[test]
     fn single_direction_hits_near_peak() {
         // read-only traffic: no turnaround, ~12.8 GB/s * 2 DIMMs
         let mut m = DdrSystem::new(DdrConfig::default());
         m.in_fifo_cap = u64::MAX;
         m.arm_pass(u64::MAX / 2);
-        let sim_ns = 100_000.0;
-        let mut t = 0.0;
-        while t < sim_ns {
-            m.advance(t);
-            t += 5.5556; // 180 MHz core cycle
+        let cycles = 18_000u64;
+        for c in 0..cycles {
+            m.advance(c * DC_PER_CYCLE);
         }
+        let sim_ns = cycles as f64 * 1000.0 / crate::CORE_FREQ_MHZ;
         let gbps = m.total_read as f64 / sim_ns;
         assert!(gbps > 0.9 * 25.6, "read-only {gbps} GB/s");
     }
@@ -263,15 +375,14 @@ mod tests {
         m.in_fifo_cap = 1 << 20;
         m.out_fifo_cap = 1 << 20;
         m.arm_pass(u64::MAX / 2);
-        let mut t = 0.0;
-        let sim_ns = 1_000_000.0;
-        while t < sim_ns {
+        let cycles = 180_000u64;
+        for c in 0..cycles {
             // keep the write FIFO loaded and the read FIFO drained
             m.out_fifo_bytes = m.out_fifo_cap / 2;
             m.in_fifo_bytes = 0;
-            m.advance(t);
-            t += 5.5556;
+            m.advance(c * DC_PER_CYCLE);
         }
+        let sim_ns = cycles as f64 * 1000.0 / crate::CORE_FREQ_MHZ;
         let read_gbps = m.total_read as f64 / sim_ns;
         let write_gbps = m.total_written as f64 / sim_ns;
         assert!((read_gbps - 8.0).abs() < 0.5, "read {read_gbps}");
@@ -282,7 +393,7 @@ mod tests {
     fn fifo_limits_respected() {
         let mut m = DdrSystem::new(DdrConfig::default());
         m.arm_pass(1 << 20);
-        m.advance(1e6);
+        m.advance(1_000_000 * DC_PER_CYCLE);
         assert!(m.in_fifo_bytes <= m.in_fifo_cap);
         assert!(!m.consume_input(m.in_fifo_cap + 1));
         assert!(m.consume_input(512));
@@ -293,11 +404,56 @@ mod tests {
         let mut m = DdrSystem::new(DdrConfig::default());
         m.in_fifo_cap = u64::MAX;
         m.arm_pass(1000);
-        let mut t = 0.0;
-        for _ in 0..10_000 {
-            m.advance(t);
-            t += 5.5556;
+        for c in 0..10_000u64 {
+            m.advance(c * DC_PER_CYCLE);
         }
         assert_eq!(m.total_read, 1000);
+    }
+
+    #[test]
+    fn phase_is_time_shift_invariant() {
+        // the same traffic pattern started later yields the same
+        // relative phase — the invariant fast_forward relies on
+        let run = |offset_cycles: u64| -> (MemPhase, u64, u64) {
+            let mut m = DdrSystem::new(DdrConfig::default());
+            // push the refresh horizon out (relative to each run's own
+            // start) so no refresh falls inside the window
+            m.trefi_dc = 1 << 40;
+            for d in &mut m.dimms {
+                d.next_refresh_dc = (offset_cycles + 1_000_000) * DC_PER_CYCLE;
+            }
+            m.arm_pass(1 << 30);
+            for c in 0..2_000u64 {
+                m.advance((offset_cycles + c) * DC_PER_CYCLE);
+                m.consume_input(40);
+                m.produce_output(40);
+            }
+            let now = (offset_cycles + 2_000) * DC_PER_CYCLE;
+            (m.phase(now).unwrap(), m.total_read, m.total_written)
+        };
+        let (p0, r0, w0) = run(0);
+        let (p1, r1, w1) = run(12_345);
+        assert_eq!(p0, p1);
+        assert_eq!(r0, r1);
+        assert_eq!(w0, w1);
+    }
+
+    #[test]
+    fn fast_forward_preserves_phase() {
+        let mut m = DdrSystem::new(DdrConfig::default());
+        m.arm_pass(1 << 30);
+        for c in 0..5_000u64 {
+            m.advance(c * DC_PER_CYCLE);
+            m.consume_input(m.in_fifo_bytes.min(40));
+            m.produce_output(40);
+        }
+        let now = 5_000 * DC_PER_CYCLE;
+        let before = m.phase(now).unwrap();
+        let (r, w) = (m.total_read, m.total_written);
+        m.fast_forward(7 * 14_040, 3 * 512, 5 * 512);
+        let after = m.phase(now + 7 * 14_040).unwrap();
+        assert_eq!(before, after);
+        assert_eq!(m.total_read, r + 3 * 512);
+        assert_eq!(m.total_written, w + 5 * 512);
     }
 }

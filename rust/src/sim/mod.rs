@@ -18,5 +18,8 @@ pub mod timing;
 
 pub use dataflow::{run as run_dataflow, DataflowInput};
 pub use engine::Engine;
-pub use memory::{DdrConfig, DdrSystem};
-pub use timing::{run as run_timing, TimingDesign, TimingReport, DMA_REARM_CYCLES};
+pub use memory::{DdrConfig, DdrSystem, MemPhase};
+pub use timing::{
+    run as run_timing, run_oracle as run_timing_oracle, run_with_stats,
+    FastForwardStats, TimingDesign, TimingReport, DMA_REARM_CYCLES,
+};

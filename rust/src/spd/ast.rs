@@ -142,6 +142,61 @@ pub fn qualifier(name: &str) -> Option<&str> {
     name.rfind("::").map(|i| &name[..i])
 }
 
+/// Render a core back to parseable SPD source.
+///
+/// The stencil generators build [`SpdCore`]s directly (no source-text
+/// round trip on the evaluation fast path); this printer produces the
+/// human-readable `.spd` view of such a core on demand — e.g. for
+/// `GeneratedDesign::sources` — and is round-trip tested against the
+/// parser.
+pub fn to_source(core: &SpdCore) -> String {
+    use std::fmt::Write as _;
+
+    let mut s = String::new();
+    let _ = writeln!(s, "Name {};", core.name);
+    let iface = |s: &mut String, stmt: &str, list: &[Interface]| {
+        for i in list {
+            let _ = writeln!(s, "{stmt} {{{}::{}}};", i.name, i.ports.join(","));
+        }
+    };
+    iface(&mut s, "Main_In", &core.main_in);
+    iface(&mut s, "Append_Reg", &core.append_reg);
+    iface(&mut s, "Brch_In", &core.brch_in);
+    iface(&mut s, "Main_Out", &core.main_out);
+    iface(&mut s, "Brch_Out", &core.brch_out);
+    for (name, value) in &core.params {
+        let _ = writeln!(s, "Param {name} = {value:?};");
+    }
+    for e in &core.equ {
+        let _ = writeln!(s, "EQU {}, {} = {};", e.name, e.output, e.raw);
+    }
+    for h in &core.hdl {
+        let _ = write!(s, "HDL {}, {}, ({})", h.name, h.delay, h.outs.join(","));
+        if !h.bouts.is_empty() {
+            let _ = write!(s, "({})", h.bouts.join(","));
+        }
+        let _ = write!(s, " = {}({})", h.module, h.ins.join(","));
+        if !h.bins.is_empty() {
+            let _ = write!(s, "({})", h.bins.join(","));
+        }
+        for p in &h.params {
+            match p {
+                HdlParam::Num(v) => {
+                    let _ = write!(s, ", {v:?}");
+                }
+                HdlParam::Ident(name) => {
+                    let _ = write!(s, ", {name}");
+                }
+            }
+        }
+        let _ = writeln!(s, ";");
+    }
+    for d in &core.drct {
+        let _ = writeln!(s, "DRCT ({}) = ({});", d.dsts.join(","), d.srcs.join(","));
+    }
+    s
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

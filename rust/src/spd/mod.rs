@@ -8,6 +8,9 @@ pub mod ast;
 pub mod parser;
 pub mod registry;
 
-pub use ast::{qualifier, unqualified, Drct, EquNode, HdlNode, HdlParam, Interface, SpdCore};
+pub use ast::{
+    qualifier, to_source, unqualified, Drct, EquNode, HdlNode, HdlParam, Interface,
+    SpdCore,
+};
 pub use parser::parse_core;
 pub use registry::{ModuleDef, Registry};

@@ -1,0 +1,187 @@
+//! Compile-once / evaluate-many: the process-wide memo behind the
+//! evaluation fast path.
+//!
+//! A design-point evaluation needs exactly three compiled facts about
+//! the hardware: the PE's modular pipeline depth (timing), the PE's
+//! resource contributions (estimation), and the kernel registry they
+//! were computed against.  All three are pure functions of
+//! (workload, operator latencies, n, grid width) — *not* of the
+//! cascade length m, the grid height, the device or the memory system
+//! — so a sweep over thousands of (n, m) × grid × device × DDR points
+//! recompiles nothing after the handful of distinct (n, w) PE shapes
+//! has been seen once:
+//!
+//! * [`compiled`] memoizes [`CompiledKernel`] per (workload, latency):
+//!   one SPD parse + DFG build + schedule of the per-cell kernel
+//!   cores, ever;
+//! * [`CompiledKernel::pe`] memoizes [`CompiledPe`] per (n, w): the
+//!   directly-built PE AST is scheduled for its depth and walked once
+//!   into a replayable [`ResourceTape`];
+//! * `explore::evaluate` then costs a point as tape replay (m×) plus
+//!   the timing simulation — no parser, no graph, no schedule.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::dfg::{self, OpLatency};
+use crate::error::Result;
+use crate::resource::{tape_core, CostTable, ResourceTape};
+
+use super::{validate_design, DesignPoint, KernelSet, StencilKernel};
+
+/// Per-(n, grid-width) compiled artifacts of one workload.
+pub struct CompiledPe {
+    pub n: u32,
+    pub w: u32,
+    /// modular pipeline depth of one PE (the m-cascade is `m` times
+    /// deeper)
+    pub pe_depth: u32,
+    /// replayable resource contributions of one PE (see
+    /// [`crate::resource::estimate_replay`])
+    pub tape: ResourceTape,
+}
+
+/// A workload's kernel cores compiled once per latency table, plus the
+/// memoized per-(n, w) PE wrappers.
+pub struct CompiledKernel {
+    pub workload: &'static str,
+    pub latency: OpLatency,
+    pub kernels: KernelSet,
+    wl: &'static dyn StencilKernel,
+    pes: Mutex<HashMap<(u32, u32), Arc<CompiledPe>>>,
+}
+
+impl CompiledKernel {
+    fn new(wl: &'static dyn StencilKernel, latency: OpLatency) -> Result<CompiledKernel> {
+        Ok(CompiledKernel {
+            workload: wl.name(),
+            latency,
+            kernels: wl.compile_kernels(latency)?,
+            wl,
+            pes: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// The compiled PE wrapper for spatial width `n` on grid width `w`
+    /// (memoized; concurrent first requests may both build, the first
+    /// insert wins — the artifacts are pure so both are identical).
+    pub fn pe(&self, n: u32, w: u32) -> Result<Arc<CompiledPe>> {
+        if let Some(pe) = self.pes.lock().unwrap().get(&(n, w)) {
+            return Ok(pe.clone());
+        }
+        // build outside the lock: PE compilation is the expensive part
+        // and distinct (n, w) keys should not serialize on it
+        let probe = DesignPoint::new(n, 1, w, 1);
+        validate_design(&probe)?;
+        let pe_core = self.wl.pe_ast(&probe, &self.kernels)?;
+        super::check_declared_delays(&pe_core, |m| self.kernels.depth(m).ok())?;
+        let mut registry = self.kernels.registry.clone();
+        let pe = registry.register(pe_core)?;
+        let g = dfg::build(&pe, &registry)?;
+        let pe_depth = dfg::schedule_with(&g, self.latency)?.depth;
+        let tape = tape_core(&pe, &registry, self.latency, &CostTable::default())?;
+        let built = Arc::new(CompiledPe { n, w, pe_depth, tape });
+        Ok(self.pes.lock().unwrap().entry((n, w)).or_insert(built).clone())
+    }
+
+    /// Number of distinct (n, w) PE shapes compiled so far.
+    pub fn pe_count(&self) -> usize {
+        self.pes.lock().unwrap().len()
+    }
+}
+
+type Key = (&'static str, (u32, u32, u32, u32));
+
+fn lat_key(l: OpLatency) -> (u32, u32, u32, u32) {
+    (l.add, l.mul, l.div, l.sqrt)
+}
+
+/// The process-wide compile-once cache.  Kernel cores and PE wrappers
+/// are pure functions of their key, so every sweep, strategy and
+/// worker thread in the process shares one copy.
+pub fn compiled(
+    wl: &'static dyn StencilKernel,
+    latency: OpLatency,
+) -> Result<Arc<CompiledKernel>> {
+    static CACHE: OnceLock<Mutex<HashMap<Key, Arc<CompiledKernel>>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    let key = (wl.name(), lat_key(latency));
+    if let Some(ck) = cache.lock().unwrap().get(&key) {
+        return Ok(ck.clone());
+    }
+    let built = Arc::new(CompiledKernel::new(wl, latency)?);
+    Ok(cache.lock().unwrap().entry(key).or_insert(built).clone())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::resource::{
+        estimate_hierarchical, estimate_replay, DesignMeta, STRATIX_V_5SGXEA7,
+    };
+    use crate::workload;
+
+    #[test]
+    fn compiled_is_memoized_per_workload_and_latency() {
+        let lat = OpLatency::default();
+        let a = compiled(workload::get("jacobi").unwrap(), lat).unwrap();
+        let b = compiled(workload::get("jacobi").unwrap(), lat).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "same key must share one compile");
+        let other = compiled(
+            workload::get("jacobi").unwrap(),
+            OpLatency { add: 9, ..lat },
+        )
+        .unwrap();
+        assert!(!Arc::ptr_eq(&a, &other), "latency is part of the key");
+        let pe1 = a.pe(1, 32).unwrap();
+        let pe1_again = a.pe(1, 32).unwrap();
+        assert!(Arc::ptr_eq(&pe1, &pe1_again), "(n, w) PEs are memoized");
+    }
+
+    #[test]
+    fn pe_rejects_invalid_widths() {
+        let ck = compiled(workload::get("jacobi").unwrap(), OpLatency::default())
+            .unwrap();
+        assert!(ck.pe(3, 32).is_err(), "3 does not divide 32");
+        assert!(ck.pe(0, 32).is_err());
+    }
+
+    /// The compile-once contract itself: for every workload and a grid
+    /// of (n, m) shapes, `m * pe_depth` and the m-fold tape replay are
+    /// bit-identical to generating the full cascade and walking it
+    /// hierarchically (the pre-fast-path evaluation).
+    #[test]
+    fn replayed_pe_matches_full_hierarchical_walk() {
+        let lat = OpLatency::default();
+        let cost = CostTable::default();
+        for wl in workload::all() {
+            let ck = compiled(*wl, lat).unwrap();
+            for (n, m) in [(1u32, 1u32), (1, 3), (2, 1), (2, 2), (4, 2)] {
+                let d = DesignPoint::new(n, m, 32, 16);
+                let g = wl.generate(&d, lat).unwrap();
+                let pe = ck.pe(n, 32).unwrap();
+                assert_eq!(pe.pe_depth, g.pe_depth, "{} ({n},{m}) depth", wl.name());
+
+                let meta = DesignMeta { lanes: n, pes: m };
+                let full = estimate_hierarchical(
+                    &g.top,
+                    &g.registry,
+                    lat,
+                    &meta,
+                    &cost,
+                    &STRATIX_V_5SGXEA7,
+                )
+                .unwrap();
+                let fast = estimate_replay(&pe.tape, &meta, &cost, &STRATIX_V_5SGXEA7);
+                assert_eq!(fast.core, full.core, "{} ({n},{m}) core", wl.name());
+                assert_eq!(fast.total, full.total, "{} ({n},{m}) total", wl.name());
+                assert_eq!(fast.over_capacity, full.over_capacity);
+                assert_eq!(fast.fp_ops, full.fp_ops);
+                assert_eq!(fast.dsp_muls, full.dsp_muls);
+                assert_eq!(fast.logic_muls, full.logic_muls);
+                assert_eq!(fast.balance_stages_regs, full.balance_stages_regs);
+                assert_eq!(fast.balance_stages_bram, full.balance_stages_bram);
+            }
+        }
+    }
+}

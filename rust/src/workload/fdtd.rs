@@ -20,9 +20,12 @@
 use std::fmt::Write as _;
 
 use super::stencil_gen::{self, ChannelSpec, StencilSpec};
-use super::{DesignPoint, GeneratedDesign, GridState, StencilKernel, BOUNDARY};
+use super::{
+    DesignPoint, GeneratedDesign, GridState, KernelSet, StencilKernel, BOUNDARY,
+};
 use crate::dfg::OpLatency;
 use crate::error::Result;
+use crate::spd::SpdCore;
 
 /// Default Courant factor register value.
 pub const DEFAULT_C2: f32 = 0.25;
@@ -87,8 +90,16 @@ impl StencilKernel for Fdtd2d {
         9
     }
 
-    fn generate(&self, design: &DesignPoint, lat: OpLatency) -> Result<GeneratedDesign> {
-        generate(design, lat)
+    fn compile_kernels(&self, lat: OpLatency) -> Result<KernelSet> {
+        stencil_gen::compile_spec_kernels(&gen_kernel(), lat)
+    }
+
+    fn pe_ast(&self, design: &DesignPoint, kernels: &KernelSet) -> Result<SpdCore> {
+        Ok(stencil_gen::pe_ast(&SPEC, design, kernels.depth(SPEC.kernel_name)?))
+    }
+
+    fn cascade_ast(&self, design: &DesignPoint, pe_depth: u32) -> SpdCore {
+        stencil_gen::cascade_ast(&SPEC, design, pe_depth)
     }
 
     fn regs(&self) -> std::collections::HashMap<String, f32> {

@@ -12,9 +12,12 @@
 use std::fmt::Write as _;
 
 use super::stencil_gen::{self, ChannelSpec, StencilSpec};
-use super::{DesignPoint, GeneratedDesign, GridState, StencilKernel, BOUNDARY};
+use super::{
+    DesignPoint, GeneratedDesign, GridState, KernelSet, StencilKernel, BOUNDARY,
+};
 use crate::dfg::OpLatency;
 use crate::error::Result;
+use crate::spd::SpdCore;
 
 /// Tap order consumed by the kernel: center, up, down, left, right.
 /// Tap (ex, ey) delivers cell (y - ey, x - ex).
@@ -67,8 +70,16 @@ impl StencilKernel for Jacobi2d {
         4
     }
 
-    fn generate(&self, design: &DesignPoint, lat: OpLatency) -> Result<GeneratedDesign> {
-        generate(design, lat)
+    fn compile_kernels(&self, lat: OpLatency) -> Result<KernelSet> {
+        stencil_gen::compile_spec_kernels(&gen_kernel(), lat)
+    }
+
+    fn pe_ast(&self, design: &DesignPoint, kernels: &KernelSet) -> Result<SpdCore> {
+        Ok(stencil_gen::pe_ast(&SPEC, design, kernels.depth(SPEC.kernel_name)?))
+    }
+
+    fn cascade_ast(&self, design: &DesignPoint, pe_depth: u32) -> SpdCore {
+        stencil_gen::cascade_ast(&SPEC, design, pe_depth)
     }
 
     fn init_state(&self, h: usize, w: usize) -> GridState {

@@ -23,7 +23,32 @@
 //! * the registry ([`all`]/[`get`]/[`names`]) through which `explore`,
 //!   the coordinator and the CLI resolve `--workload NAME`; LBM is
 //!   registered here like any other workload.
+//!
+//! # The compile-once contract
+//!
+//! Generation is split into three stages with strictly decreasing
+//! cost, so a design-space sweep pays each stage as rarely as
+//! possible:
+//!
+//! 1. **kernel cores** ([`StencilKernel::compile_kernels`]) — the SPD
+//!    parse, DFG build and modular schedule of the per-cell cores;
+//!    depends only on (workload, operator latencies).  Memoized
+//!    process-wide by [`compiled`].
+//! 2. **PE wrapper** ([`StencilKernel::pe_ast`]) — n kernel pipelines
+//!    around the shared Trans2D buffers; depends additionally on
+//!    (n, grid width).  Built directly as a [`crate::spd::SpdCore`]
+//!    AST (no source-text round trip), its modular depth and a
+//!    replayable resource tape are memoized per (n, w) inside
+//!    [`compiled::CompiledKernel`].
+//! 3. **cascade top** ([`StencilKernel::cascade_ast`]) — m chained
+//!    PEs.  The evaluation fast path never builds it at all: the
+//!    cascade's depth is `m * pe_depth` and its resources are the PE
+//!    tape replayed m times ([`crate::resource::estimate_replay`]),
+//!    both exact by construction.  Only the simulation/Verilog paths
+//!    ([`StencilKernel::generate`], [`WorkloadRunner`]) materialize
+//!    it.
 
+pub mod compiled;
 pub mod fdtd;
 pub mod jacobi;
 pub mod smooth;
@@ -35,7 +60,9 @@ use std::sync::Arc;
 use crate::dfg::{self, Compiled, OpLatency};
 use crate::error::{Error, Result};
 use crate::sim::{self, DataflowInput};
-use crate::spd::{Registry, SpdCore};
+use crate::spd::{self, Registry, SpdCore};
+
+pub use compiled::{compiled, CompiledKernel, CompiledPe};
 
 /// Attribute word of cells the kernel computes.
 pub const INTERIOR: f32 = 0.0;
@@ -155,6 +182,137 @@ pub struct GeneratedDesign {
     pub sources: Vec<(String, String)>,
 }
 
+/// A workload's per-cell kernel cores, compiled once per
+/// operator-latency table — stage 1 of the compile-once contract (see
+/// the module docs).  Holds the populated registry the PE/cascade
+/// wrappers are instantiated against, and the modular depth of each
+/// kernel core (the statically declared delay of its HDL instances).
+pub struct KernelSet {
+    /// library modules + kernel cores, cheaply cloneable (`Arc`
+    /// contents) into each instantiated design
+    pub registry: Registry,
+    pub latency: OpLatency,
+    /// (core name, SPD source) in registration order
+    pub sources: Vec<(String, String)>,
+    depths: HashMap<String, u32>,
+}
+
+impl KernelSet {
+    /// Start from the library registry.
+    pub fn new(latency: OpLatency) -> KernelSet {
+        KernelSet {
+            registry: Registry::with_library(),
+            latency,
+            sources: Vec::new(),
+            depths: HashMap::new(),
+        }
+    }
+
+    /// Parse, register and schedule one kernel core; its modular depth
+    /// becomes available through [`KernelSet::depth`].
+    pub fn register_kernel(&mut self, src: &str) -> Result<Arc<SpdCore>> {
+        let core = self.registry.register_source(src)?;
+        let g = dfg::build(&core, &self.registry)?;
+        let depth = dfg::schedule_with(&g, self.latency)?.depth;
+        self.depths.insert(core.name.clone(), depth);
+        self.sources.push((core.name.clone(), src.to_string()));
+        Ok(core)
+    }
+
+    /// Modular pipeline depth of a registered kernel core.
+    pub fn depth(&self, name: &str) -> Result<u32> {
+        self.depths.get(name).copied().ok_or_else(|| {
+            Error::Explore(format!("kernel core `{name}` not compiled"))
+        })
+    }
+}
+
+/// Reject design points the lane-sharing hardware cannot be built for.
+pub fn validate_design(design: &DesignPoint) -> Result<()> {
+    if design.n == 0 || design.m == 0 || design.w == 0 || design.h == 0 {
+        return Err(Error::Explore(format!(
+            "bad design point (n={}, m={}, grid {}x{})",
+            design.n, design.m, design.w, design.h
+        )));
+    }
+    if design.w % design.n != 0 {
+        return Err(Error::Explore(format!(
+            "spatial width n={} must divide grid width {} (Trans2D lane sharing)",
+            design.n, design.w
+        )));
+    }
+    Ok(())
+}
+
+/// Instantiate the PE and cascade wrappers of one design point around
+/// an already-compiled kernel set (stages 2+3 of the compile-once
+/// contract, without memoization — [`compiled`] adds that).
+pub fn instantiate<W: StencilKernel + ?Sized>(
+    wl: &W,
+    design: &DesignPoint,
+    kernels: &KernelSet,
+) -> Result<GeneratedDesign> {
+    validate_design(design)?;
+    let pe_core = wl.pe_ast(design, kernels)?;
+    instantiate_parts(kernels, pe_core, |pe_depth| wl.cascade_ast(design, pe_depth))
+}
+
+/// Verify that every `HDL` instance of a core whose module has a known
+/// modular depth declares exactly that depth.  This is the declared-
+/// delay check the old string path got from full elaboration — kept on
+/// the AST path so a wrapper builder passing a stale depth fails at
+/// generate time instead of silently mis-scheduling.
+fn check_declared_delays(
+    core: &SpdCore,
+    depth_of: impl Fn(&str) -> Option<u32>,
+) -> Result<()> {
+    for h in &core.hdl {
+        if let Some(want) = depth_of(&h.module) {
+            if h.delay != want {
+                return Err(Error::Explore(format!(
+                    "core `{}`: HDL `{}` declares delay {} but `{}` schedules to {want}",
+                    core.name, h.name, h.delay, h.module
+                )));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Register a PE AST, compute its modular depth, and wrap it in the
+/// cascade produced by `cascade` — the workload-agnostic tail of
+/// [`instantiate`], also used by `stencil_gen::generate_stencil`.
+/// Declared HDL delays are verified against the compiled kernel
+/// depths (and the cascade's against the computed PE depth).
+pub fn instantiate_parts(
+    kernels: &KernelSet,
+    pe_core: SpdCore,
+    cascade: impl FnOnce(u32) -> SpdCore,
+) -> Result<GeneratedDesign> {
+    check_declared_delays(&pe_core, |m| kernels.depths.get(m).copied())?;
+    let mut registry = kernels.registry.clone();
+    let pe_src = spd::to_source(&pe_core);
+    let pe_name = pe_core.name.clone();
+    let pe = registry.register(pe_core)?;
+    let g = dfg::build(&pe, &registry)?;
+    let pe_depth = dfg::schedule_with(&g, kernels.latency)?.depth;
+    let top_core = cascade(pe_depth);
+    check_declared_delays(&top_core, |m| {
+        if m == pe_name {
+            Some(pe_depth)
+        } else {
+            kernels.depths.get(m).copied()
+        }
+    })?;
+    let top_src = spd::to_source(&top_core);
+    let top_name = top_core.name.clone();
+    let top = registry.register(top_core)?;
+    let mut sources = kernels.sources.clone();
+    sources.push((pe_name, pe_src));
+    sources.push((top_name, top_src));
+    Ok(GeneratedDesign { registry, top, pe_depth, sources })
+}
+
 /// What the (n, m) explorer needs from a kernel.
 ///
 /// Implementations are registered in [`all`] and looked up by name via
@@ -179,8 +337,24 @@ pub trait StencilKernel: Send + Sync {
     /// FP operators per cell per time step (the Table IV census).
     fn flops_per_cell(&self) -> u64;
 
-    /// Generate and register all SPD sources for a design point.
-    fn generate(&self, design: &DesignPoint, lat: OpLatency) -> Result<GeneratedDesign>;
+    /// Compile the per-cell kernel core(s) once for a latency table.
+    fn compile_kernels(&self, lat: OpLatency) -> Result<KernelSet>;
+
+    /// Build the PE wrapper AST (n point-kernel pipelines around the
+    /// shared Trans2D buffers) for a design point.  Only `design.n`
+    /// and `design.w` may shape the result — [`compiled`] memoizes per
+    /// (n, w).
+    fn pe_ast(&self, design: &DesignPoint, kernels: &KernelSet) -> Result<SpdCore>;
+
+    /// Build the cascade-top AST (m chained PEs of depth `pe_depth`).
+    fn cascade_ast(&self, design: &DesignPoint, pe_depth: u32) -> SpdCore;
+
+    /// Generate and register all SPD cores for a design point
+    /// (kernels + PE + cascade; the full structure the simulators and
+    /// the Verilog backend need).
+    fn generate(&self, design: &DesignPoint, lat: OpLatency) -> Result<GeneratedDesign> {
+        instantiate(self, design, &self.compile_kernels(lat)?)
+    }
 
     /// The workload's canonical scenario on an h × w grid.
     fn init_state(&self, h: usize, w: usize) -> GridState;

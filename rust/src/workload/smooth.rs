@@ -13,9 +13,12 @@
 use std::fmt::Write as _;
 
 use super::stencil_gen::{self, ChannelSpec, StencilSpec};
-use super::{DesignPoint, GeneratedDesign, GridState, StencilKernel, BOUNDARY};
+use super::{
+    DesignPoint, GeneratedDesign, GridState, KernelSet, StencilKernel, BOUNDARY,
+};
 use crate::dfg::OpLatency;
 use crate::error::Result;
+use crate::spd::SpdCore;
 
 /// Neighborhood order k = 0..9 over (dy, dx) row-major; the Trans2D
 /// tap reading cell (y + dy, x + dx) is (-dx, -dy).
@@ -92,8 +95,16 @@ impl StencilKernel for Smooth3x3 {
         17
     }
 
-    fn generate(&self, design: &DesignPoint, lat: OpLatency) -> Result<GeneratedDesign> {
-        generate(design, lat)
+    fn compile_kernels(&self, lat: OpLatency) -> Result<KernelSet> {
+        stencil_gen::compile_spec_kernels(&gen_kernel(), lat)
+    }
+
+    fn pe_ast(&self, design: &DesignPoint, kernels: &KernelSet) -> Result<SpdCore> {
+        Ok(stencil_gen::pe_ast(&SPEC, design, kernels.depth(SPEC.kernel_name)?))
+    }
+
+    fn cascade_ast(&self, design: &DesignPoint, pe_depth: u32) -> SpdCore {
+        stencil_gen::cascade_ast(&SPEC, design, pe_depth)
     }
 
     fn init_state(&self, h: usize, w: usize) -> GridState {

@@ -4,7 +4,7 @@
 //! translated neighborhood can be wrapped into the paper's hardware
 //! shapes:
 //!
-//! * [`gen_pe`] — a processing element: shared Trans2D line buffers
+//! * [`pe_ast`] — a processing element: shared Trans2D line buffers
 //!   per streamed channel (one buffer serves all n lanes, Fig. 2b),
 //!   feeding n point-kernel pipelines, with the attribute word and the
 //!   sop/eop frame markers routed through;
@@ -13,14 +13,17 @@
 //!   generated through this same function);
 //! * [`generate_stencil`] — the kernel-core → PE → cascade pipeline
 //!   with depth verification, producing a [`GeneratedDesign`].
+//!
+//! The wrappers are built directly as [`SpdCore`] ASTs — only the
+//! per-cell kernel core (the part with actual formulas) goes through
+//! the SPD parser, and only once per (workload, latency) thanks to
+//! [`super::KernelSet`] / [`super::compiled`].  `spd::to_source`
+//! renders the ASTs back to `.spd` text for `GeneratedDesign::sources`.
 
-use std::fmt::Write as _;
-use std::sync::Arc;
-
-use super::{DesignPoint, GeneratedDesign};
-use crate::dfg::{self, OpLatency};
-use crate::error::{Error, Result};
-use crate::spd::{Registry, SpdCore};
+use super::{DesignPoint, GeneratedDesign, KernelSet};
+use crate::dfg::OpLatency;
+use crate::error::Result;
+use crate::spd::{Drct, HdlNode, HdlParam, Interface, SpdCore};
 
 /// One streamed value channel of a stencil kernel.
 pub struct ChannelSpec {
@@ -65,6 +68,13 @@ fn bypassed(ch: &ChannelSpec) -> bool {
     ch.taps.len() == 1 && ch.taps[0] == (0, 0)
 }
 
+/// Compile a spec's kernel core once for a latency table.
+pub fn compile_spec_kernels(kernel_src: &str, lat: OpLatency) -> Result<KernelSet> {
+    let mut kernels = KernelSet::new(lat);
+    kernels.register_kernel(kernel_src)?;
+    Ok(kernels)
+}
+
 /// Generate the full core stack (kernel → PE → cascade) for a design
 /// point, registering everything into a fresh library registry.
 pub fn generate_stencil(
@@ -73,63 +83,41 @@ pub fn generate_stencil(
     design: &DesignPoint,
     lat: OpLatency,
 ) -> Result<GeneratedDesign> {
-    if design.n == 0 || design.m == 0 || design.w == 0 || design.h == 0 {
-        return Err(Error::Explore(format!(
-            "bad design point (n={}, m={}, grid {}x{})",
-            design.n, design.m, design.w, design.h
-        )));
-    }
-    if design.w % design.n != 0 {
-        return Err(Error::Explore(format!(
-            "spatial width n={} must divide grid width {} (Trans2D lane sharing)",
-            design.n, design.w
-        )));
-    }
-    let mut registry = Registry::with_library();
-
-    let kern = registry.register_source(&kernel_src)?;
-    let kern_depth = depth_of(&kern, &registry, lat)?;
-
-    let pe_src = gen_pe(spec, design, kern_depth);
-    let pe = registry.register_source(&pe_src)?;
-    let pe_depth = depth_of(&pe, &registry, lat)?;
-
-    let top_src = gen_cascade(&cascade_spec(spec, design, pe_depth));
-    let top = registry.register_source(&top_src)?;
-
-    Ok(GeneratedDesign {
-        registry,
-        top,
-        pe_depth,
-        sources: vec![
-            (spec.kernel_name.to_string(), kernel_src),
-            (spec.pe_name(design), pe_src),
-            (spec.top_name(design), top_src),
-        ],
+    super::validate_design(design)?;
+    let kernels = compile_spec_kernels(&kernel_src, lat)?;
+    let kern_depth = kernels.depth(spec.kernel_name)?;
+    super::instantiate_parts(&kernels, pe_ast(spec, design, kern_depth), |pe_depth| {
+        cascade_ast(spec, design, pe_depth)
     })
 }
 
-/// Modular pipeline depth of a registered core.
-pub fn depth_of(core: &Arc<SpdCore>, registry: &Registry, lat: OpLatency) -> Result<u32> {
-    let compiled = dfg::compile_with(core, registry, lat)?;
-    Ok(compiled.depth())
+/// An `HDL` node with main ports only.
+pub fn hdl(
+    name: String,
+    delay: u32,
+    outs: Vec<String>,
+    module: &str,
+    ins: Vec<String>,
+    params: Vec<f64>,
+) -> HdlNode {
+    HdlNode {
+        name,
+        delay,
+        outs,
+        bouts: Vec::new(),
+        module: module.to_string(),
+        ins,
+        bins: Vec::new(),
+        params: params.into_iter().map(HdlParam::Num).collect(),
+        line: 0,
+    }
 }
 
-/// PE core: n kernel pipelines around shared Trans2D buffers.
-pub fn gen_pe(spec: &StencilSpec, design: &DesignPoint, kern_depth: u32) -> String {
+/// PE core AST: n kernel pipelines around shared Trans2D buffers.
+pub fn pe_ast(spec: &StencilSpec, design: &DesignPoint, kern_depth: u32) -> SpdCore {
     let (n, w) = (design.n, design.w);
     let trans_delay = w / n + 2;
-    let mut s = String::new();
-    let _ = writeln!(
-        s,
-        "Name {};  # {} PE: {n} pipeline(s), grid width {w}",
-        spec.pe_name(design),
-        spec.name
-    );
-    let _ = writeln!(
-        s,
-        "# stage depths: translation {trans_delay}, kernel {kern_depth}"
-    );
+    let mut core = SpdCore { name: spec.pe_name(design), ..SpdCore::default() };
 
     let mut in_ports = Vec::new();
     for l in 0..n {
@@ -140,9 +128,12 @@ pub fn gen_pe(spec: &StencilSpec, design: &DesignPoint, kern_depth: u32) -> Stri
     }
     in_ports.push("sop".into());
     in_ports.push("eop".into());
-    let _ = writeln!(s, "Main_In {{Mi::{}}};", in_ports.join(","));
+    core.main_in.push(Interface { name: "Mi".into(), ports: in_ports });
     if !spec.regs.is_empty() {
-        let _ = writeln!(s, "Append_Reg {{Mr::{}}};", spec.regs.join(","));
+        core.append_reg.push(Interface {
+            name: "Mr".into(),
+            ports: spec.regs.iter().map(|r| r.to_string()).collect(),
+        });
     }
     let mut out_ports = Vec::new();
     for l in 0..n {
@@ -153,7 +144,7 @@ pub fn gen_pe(spec: &StencilSpec, design: &DesignPoint, kern_depth: u32) -> Stri
     }
     out_ports.push("sop_o".into());
     out_ports.push("eop_o".into());
-    let _ = writeln!(s, "Main_Out {{Mo::{}}};", out_ports.join(","));
+    core.main_out.push(Interface { name: "Mo".into(), ports: out_ports });
 
     // one shared translation buffer per tapped channel (the n lanes
     // share each buffer, Fig. 2b); outputs are tap-major, lane-minor
@@ -168,16 +159,19 @@ pub fn gen_pe(spec: &StencilSpec, design: &DesignPoint, kern_depth: u32) -> Stri
                 outs.push(format!("{}t{k}_{l}", ch.name));
             }
         }
-        let taps: Vec<String> =
-            ch.taps.iter().map(|&(ex, ey)| format!("{ex}, {ey}")).collect();
-        let _ = writeln!(
-            s,
-            "HDL TR{}, {trans_delay}, ({}) = Trans2D({}), {w}, {n}, {};",
-            ch.name.to_uppercase(),
-            outs.join(","),
-            ins.join(","),
-            taps.join(", ")
-        );
+        let mut params = vec![w as f64, n as f64];
+        for &(ex, ey) in ch.taps {
+            params.push(ex as f64);
+            params.push(ey as f64);
+        }
+        core.hdl.push(hdl(
+            format!("TR{}", ch.name.to_uppercase()),
+            trans_delay,
+            outs,
+            "Trans2D",
+            ins,
+            params,
+        ));
     }
 
     // kernel pipeline per lane
@@ -199,17 +193,26 @@ pub fn gen_pe(spec: &StencilSpec, design: &DesignPoint, kern_depth: u32) -> Stri
             .iter()
             .map(|ch| format!("o{}_{l}", ch.name))
             .collect();
-        let _ = writeln!(
-            s,
-            "HDL KERN{l}, {kern_depth}, ({}) = {}({});",
-            outs.join(","),
+        core.hdl.push(hdl(
+            format!("KERN{l}"),
+            kern_depth,
+            outs,
             spec.kernel_name,
-            ins.join(",")
-        );
-        let _ = writeln!(s, "DRCT (ao_{l}) = (Mi::a_{l});");
+            ins,
+            Vec::new(),
+        ));
+        core.drct.push(Drct {
+            dsts: vec![format!("ao_{l}")],
+            srcs: vec![format!("Mi::a_{l}")],
+            line: 0,
+        });
     }
-    let _ = writeln!(s, "DRCT (sop_o, eop_o) = (Mi::sop, Mi::eop);");
-    s
+    core.drct.push(Drct {
+        dsts: vec!["sop_o".into(), "eop_o".into()],
+        srcs: vec!["Mi::sop".into(), "Mi::eop".into()],
+        line: 0,
+    });
+    core
 }
 
 /// Port-name plan for a cascade top core.
@@ -249,16 +252,17 @@ fn cascade_spec(spec: &StencilSpec, design: &DesignPoint, pe_depth: u32) -> Casc
     }
 }
 
-/// Cascade top: m PEs chained (Fig. 2c).  Workload-agnostic — the LBM
-/// cascade is generated through this same function.
-pub fn gen_cascade(spec: &CascadeSpec) -> String {
+/// Cascade top for a [`StencilSpec`] design point.
+pub fn cascade_ast(spec: &StencilSpec, design: &DesignPoint, pe_depth: u32) -> SpdCore {
+    gen_cascade(&cascade_spec(spec, design, pe_depth))
+}
+
+/// Cascade top AST: m PEs chained (Fig. 2c).  Workload-agnostic — the
+/// LBM cascade is generated through this same function.
+pub fn gen_cascade(spec: &CascadeSpec) -> SpdCore {
     let (n, m, pe_depth) = (spec.n, spec.m, spec.pe_depth);
-    let mut s = String::new();
-    let _ = writeln!(
-        s,
-        "Name {};  # {m} cascaded PE(s) x {n} pipeline(s)",
-        spec.top_name
-    );
+    let mut core = SpdCore { name: spec.top_name.clone(), ..SpdCore::default() };
+
     let mut in_ports = Vec::new();
     for l in 0..n {
         for (_, top_in, _) in &spec.channels {
@@ -267,9 +271,9 @@ pub fn gen_cascade(spec: &CascadeSpec) -> String {
     }
     in_ports.push("sop".into());
     in_ports.push("eop".into());
-    let _ = writeln!(s, "Main_In {{Mi::{}}};", in_ports.join(","));
+    core.main_in.push(Interface { name: "Mi".into(), ports: in_ports });
     if !spec.regs.is_empty() {
-        let _ = writeln!(s, "Append_Reg {{Mr::{}}};", spec.regs.join(","));
+        core.append_reg.push(Interface { name: "Mr".into(), ports: spec.regs.clone() });
     }
     let mut out_ports = Vec::new();
     for l in 0..n {
@@ -279,7 +283,7 @@ pub fn gen_cascade(spec: &CascadeSpec) -> String {
     }
     out_ports.push("sop_o".into());
     out_ports.push("eop_o".into());
-    let _ = writeln!(s, "Main_Out {{Mo::{}}};", out_ports.join(","));
+    core.main_out.push(Interface { name: "Mo".into(), ports: out_ports });
 
     // stage k consumes stage k-1's signals
     let sig = |k: u32, ci: usize, l: u32| {
@@ -315,14 +319,14 @@ pub fn gen_cascade(spec: &CascadeSpec) -> String {
         }
         outs.push(format!("sop_s{}", k + 1));
         outs.push(format!("eop_s{}", k + 1));
-        let _ = writeln!(
-            s,
-            "HDL PE{}, {pe_depth}, ({}) = {}({});",
-            k + 1,
-            outs.join(","),
-            spec.pe_name,
-            ins.join(",")
-        );
+        core.hdl.push(hdl(
+            format!("PE{}", k + 1),
+            pe_depth,
+            outs,
+            &spec.pe_name,
+            ins,
+            Vec::new(),
+        ));
     }
     // route the last stage to the main outputs
     let mut dsts = Vec::new();
@@ -337,13 +341,15 @@ pub fn gen_cascade(spec: &CascadeSpec) -> String {
     srcs.push(format!("sop_s{m}"));
     dsts.push("eop_o".into());
     srcs.push(format!("eop_s{m}"));
-    let _ = writeln!(s, "DRCT ({}) = ({});", dsts.join(","), srcs.join(","));
-    s
+    core.drct.push(Drct { dsts, srcs, line: 0 });
+    core
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dfg;
+    use crate::spd::{parse_core, to_source};
     use crate::workload::jacobi;
 
     #[test]
@@ -376,5 +382,31 @@ mod tests {
         let d1 = jacobi::generate(&DesignPoint::new(1, 1, 32, 8), lat).unwrap();
         let d4 = jacobi::generate(&DesignPoint::new(4, 1, 32, 8), lat).unwrap();
         assert!(d1.pe_depth > d4.pe_depth);
+    }
+
+    #[test]
+    fn printed_ast_reparses_to_the_same_graph() {
+        // the AST is the source of truth; its printed .spd form must
+        // parse back into an equivalent core
+        let d = DesignPoint::new(2, 2, 16, 8);
+        let g = jacobi::generate(&d, OpLatency::default()).unwrap();
+        for (name, src) in &g.sources {
+            let reparsed = parse_core(src).unwrap();
+            assert_eq!(&reparsed.name, name);
+        }
+        // rebuild the whole stack from printed sources only
+        let mut registry = crate::spd::Registry::with_library();
+        let mut top = None;
+        for (_, src) in &g.sources {
+            top = Some(registry.register_source(src).unwrap());
+        }
+        let c = dfg::compile(&top.unwrap(), &registry).unwrap();
+        let direct = dfg::compile(&g.top, &g.registry).unwrap();
+        assert_eq!(c.depth(), direct.depth());
+        assert_eq!(c.graph.census(), direct.graph.census());
+        assert_eq!(c.graph.len(), direct.graph.len());
+        // and the printer is stable under a round trip
+        let pe_src = &g.sources[1].1;
+        assert_eq!(&to_source(&parse_core(pe_src).unwrap()), pe_src);
     }
 }
