@@ -26,7 +26,7 @@ fn main() -> spdx::Result<()> {
     };
     let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let cache = EvalCache::new();
-    let ctx = SweepContext { cache: &cache, workers };
+    let ctx = SweepContext::new(&cache, workers);
 
     println!(
         "space: {} candidates ((n, m) up to {}x{}, {} devices)\n",
@@ -125,8 +125,8 @@ fn main() -> spdx::Result<()> {
     let loaded = Session::load(&path)?;
     let cache2 = EvalCache::new();
     loaded.preload(&cache2);
-    let resumed =
-        Exhaustive.run(&space, &SweepContext { cache: &cache2, workers })?;
+    let ctx2 = SweepContext::new(&cache2, workers);
+    let resumed = Exhaustive.run(&space, &ctx2)?;
     println!(
         "\nsession: {} rows saved to {}; resumed sweep: {} recomputed, {} from session",
         loaded.rows.len(),

@@ -50,20 +50,16 @@ fn main() {
     let s_cold = bench("exhaustive sweep, cold cache", 0, 3, || {
         // a fresh cache every iteration: every point recomputed
         let cache = EvalCache::new();
-        let r = Exhaustive
-            .run(&space, &SweepContext { cache: &cache, workers })
-            .unwrap();
+        let ctx = SweepContext::new(&cache, workers);
+        let r = Exhaustive.run(&space, &ctx).unwrap();
         assert_eq!(r.cache_hits, 0);
         assert!(r.evaluated > 0);
     });
     let warm_cache = EvalCache::new();
-    Exhaustive
-        .run(&space, &SweepContext { cache: &warm_cache, workers })
-        .unwrap();
+    let warm_ctx = SweepContext::new(&warm_cache, workers);
+    Exhaustive.run(&space, &warm_ctx).unwrap();
     let s_warm = bench("exhaustive sweep, warm cache", 0, 3, || {
-        let r = Exhaustive
-            .run(&space, &SweepContext { cache: &warm_cache, workers })
-            .unwrap();
+        let r = Exhaustive.run(&space, &warm_ctx).unwrap();
         assert_eq!(r.evaluated, 0, "warm sweep must recompute nothing");
         assert!(r.cache_hits > 0);
     });
@@ -84,9 +80,8 @@ fn main() {
     section("strategy comparison: pruning vs exhaustive evaluation counts");
     {
         let cache = EvalCache::new();
-        let pr = BoundedPrune::default()
-            .run(&space, &SweepContext { cache: &cache, workers })
-            .unwrap();
+        let ctx = SweepContext::new(&cache, workers);
+        let pr = BoundedPrune::default().run(&space, &ctx).unwrap();
         println!(
             "  bounded-prune: {} of {} candidates evaluated, {} pruned \
              (same frontier as exhaustive)",

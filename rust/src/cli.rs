@@ -16,8 +16,9 @@ use crate::coordinator::Coordinator;
 use crate::dfg;
 use crate::dse::json as dse_json;
 use crate::dse::{
-    ddr_by_name, strategy_by_name, BoundedPrune, DesignSpace, EvalCache, Exhaustive,
-    HillClimb, SearchStrategy, Session, SweepContext, DDR_VARIANT_NAMES,
+    ddr_by_name, space_fingerprint, strategy_by_name, BoundedPrune, DesignSpace,
+    EvalCache, Exhaustive, HillClimb, Journal, JournalWriter, SearchStrategy,
+    Session, SweepContext, DDR_VARIANT_NAMES,
 };
 use crate::error::{Error, Result};
 use crate::explore::{evaluate, ExploreConfig};
@@ -118,13 +119,17 @@ COMMANDS:
               [--grids WxH[,WxH...]] [--devices KEY[,KEY...]|all]
               [--ddr NAME[,NAME...]] [--max-n N] [--max-m M] [--passes P]
               [--min-util X] [--seed S] [--restarts R] [--workers K]
-              [--session FILE] [--bench [FILE]]
+              [--session FILE] [--journal FILE] [--bench [FILE]]
                                            multi-device sweep (cached, resumable);
+                                           --journal appends every row to an
+                                           fsync'd crash-safe log as it completes;
                                            --bench re-sweeps warm and writes
                                            cold/warm evals/sec to FILE
                                            (default BENCH_dse.json)
-  dse resume  --session FILE [space/strategy flags]
-                                           reload a session, finish the sweep
+  dse resume  --session FILE | --journal FILE  [space/strategy flags]
+                                           reload a session — or recover a
+                                           (possibly torn) journal — and finish
+                                           the sweep without recomputing its rows
   dse compare [space flags]                run all strategies, compare coverage
   dse devices                              list the device catalog
   simulate [--workload NAME] --n N --m M [--grid WxH] [--steps S]
@@ -349,6 +354,25 @@ fn dse_space_from(args: &Args, base: &DesignSpace) -> Result<DesignSpace> {
 /// Resolve `--strategy` (aliases via `dse::strategy_by_name`) and
 /// apply the strategy-specific CLI knobs.
 fn dse_strategy(args: &Args, name: &str) -> Result<Box<dyn SearchStrategy>> {
+    let empty = dse_json::obj(vec![]);
+    Ok(dse_strategy_with_params(args, name, &empty)?.0)
+}
+
+/// A recorded strategy parameter, falling back to the CLI default when
+/// the journal header has none.
+fn param_default(params: &dse_json::Json, key: &str, fallback: f64) -> f64 {
+    params.get(key).and_then(|v| v.as_f64().ok()).unwrap_or(fallback)
+}
+
+/// Like [`dse_strategy`], but the knob defaults come from a journal
+/// header's recorded `params` (flags still override), and the resolved
+/// knobs are returned as the `params` object to record — so a resumed
+/// journal reruns the *same* search, not a default-configured one.
+fn dse_strategy_with_params(
+    args: &Args,
+    name: &str,
+    recorded: &dse_json::Json,
+) -> Result<(Box<dyn SearchStrategy>, dse_json::Json)> {
     let canonical = strategy_by_name(name)
         .ok_or_else(|| {
             Error::Explore(format!(
@@ -357,15 +381,31 @@ fn dse_strategy(args: &Args, name: &str) -> Result<Box<dyn SearchStrategy>> {
         })?
         .name();
     Ok(match canonical {
-        "exhaustive" => Box::new(Exhaustive),
-        "bounded-prune" => Box::new(BoundedPrune {
-            min_utilization: args.get("min-util", 0.0)?,
-        }),
-        _ => Box::new(HillClimb {
-            seed: args.get("seed", 0x5eed_u64)?,
-            restarts: args.get("restarts", 4)?,
-            max_steps: args.get("max-steps", 64)?,
-        }),
+        "exhaustive" => (Box::new(Exhaustive), dse_json::obj(vec![])),
+        "bounded-prune" => {
+            let util_default = param_default(recorded, "min-util", 0.0);
+            let min_util: f64 = args.get("min-util", util_default)?;
+            (
+                Box::new(BoundedPrune { min_utilization: min_util }),
+                dse_json::obj(vec![("min-util", dse_json::num(min_util))]),
+            )
+        }
+        _ => {
+            let seed_default = param_default(recorded, "seed", 0x5eed as f64) as u64;
+            let seed: u64 = args.get("seed", seed_default)?;
+            let restarts_default = param_default(recorded, "restarts", 4.0) as usize;
+            let restarts: usize = args.get("restarts", restarts_default)?;
+            let steps_default = param_default(recorded, "max-steps", 64.0) as usize;
+            let max_steps: usize = args.get("max-steps", steps_default)?;
+            (
+                Box::new(HillClimb { seed, restarts, max_steps }),
+                dse_json::obj(vec![
+                    ("seed", dse_json::uint(seed)),
+                    ("restarts", dse_json::uint(restarts as u64)),
+                    ("max-steps", dse_json::uint(max_steps as u64)),
+                ]),
+            )
+        }
     })
 }
 
@@ -408,11 +448,55 @@ fn cmd_dse_devices() -> Result<i32> {
     Ok(0)
 }
 
+/// Resolve a flag that must carry a FILE argument, rejecting the bare
+/// form (the flag parser turns a valueless flag into `"true"`, which
+/// would otherwise become a file literally named `true`).
+fn file_flag<'a>(args: &'a Args, name: &str) -> Result<Option<&'a str>> {
+    match args.flag(name) {
+        Some("true") => {
+            Err(Error::Explore(format!("--{name} needs a FILE argument")))
+        }
+        other => Ok(other),
+    }
+}
+
 fn cmd_dse_sweep(args: &Args) -> Result<i32> {
     let space = dse_space(args)?;
-    let strategy = dse_strategy(args, args.flag("strategy").unwrap_or("exhaustive"))?;
+    let empty = dse_json::obj(vec![]);
+    let (strategy, params) = dse_strategy_with_params(
+        args,
+        args.flag("strategy").unwrap_or("exhaustive"),
+        &empty,
+    )?;
     let cache = EvalCache::new();
-    let ctx = SweepContext { cache: &cache, workers: dse_workers(args)? };
+    let journal = match file_flag(args, "journal")? {
+        Some(path) => {
+            // refuse to truncate an interrupted journal: the natural
+            // "re-run the same command" retry must not destroy the
+            // rows the crash-safety feature exists to preserve
+            if let Ok(prior) = Journal::recover(path) {
+                if !prior.complete() {
+                    return Err(Error::Explore(format!(
+                        "--journal {path}: an in-progress journal with {} rows \
+                         already exists; continue it with `dse resume --journal \
+                         {path}` (or delete the file to start over)",
+                        prior.rows.len()
+                    )));
+                }
+            }
+            Some(JournalWriter::create_with_params(
+                path,
+                strategy.name(),
+                &params,
+                &space,
+            )?)
+        }
+        None => None,
+    };
+    let mut ctx = SweepContext::new(&cache, dse_workers(args)?);
+    if let Some(writer) = &journal {
+        ctx = ctx.with_sink(writer);
+    }
     println!(
         "sweeping {} candidates ({} workload, {} grids x {} devices x {} ddr) with `{}` ...",
         space.len(),
@@ -471,7 +555,15 @@ fn cmd_dse_sweep(args: &Args) -> Result<i32> {
         std::fs::write(path, bench.to_string())?;
         println!("  bench written to {path}");
     }
-    if let Some(path) = args.flag("session") {
+    if let Some(writer) = &journal {
+        writer.finalize(&result)?;
+        println!(
+            "  journal finalized: {} rows in {}",
+            writer.rows_written(),
+            file_flag(args, "journal")?.unwrap_or_default()
+        );
+    }
+    if let Some(path) = file_flag(args, "session")? {
         let session = Session::from_sweep(&result, &space);
         session.save(path)?;
         println!("  session saved to {path} ({} rows)", session.rows.len());
@@ -485,9 +577,16 @@ fn throughput(evals: usize, seconds: f64) -> f64 {
 }
 
 fn cmd_dse_resume(args: &Args) -> Result<i32> {
-    let path = args
-        .flag("session")
-        .ok_or_else(|| Error::Explore("dse resume: --session FILE required".into()))?;
+    match (file_flag(args, "journal")?, file_flag(args, "session")?) {
+        (Some(journal), _) => resume_journal(args, journal),
+        (None, Some(session)) => resume_session(args, session),
+        (None, None) => Err(Error::Explore(
+            "dse resume: --session FILE or --journal FILE required".into(),
+        )),
+    }
+}
+
+fn resume_session(args: &Args, path: &str) -> Result<i32> {
     let prior = Session::load(path)?;
     // the session records its space: flags only override axes they name
     let space = dse_space_from(args, &prior.space)?;
@@ -498,7 +597,7 @@ fn cmd_dse_resume(args: &Args) -> Result<i32> {
     let strategy = dse_strategy(args, &strategy_name)?;
     let cache = EvalCache::new();
     let loaded = prior.preload(&cache);
-    let ctx = SweepContext { cache: &cache, workers: dse_workers(args)? };
+    let ctx = SweepContext::new(&cache, dse_workers(args)?);
     println!(
         "resuming from {path}: {loaded} rows preloaded, sweeping {} candidates with `{}` ...",
         space.len(),
@@ -520,6 +619,69 @@ fn cmd_dse_resume(args: &Args) -> Result<i32> {
     Ok(0)
 }
 
+/// Resume from a (possibly torn) journal: recover the intact prefix,
+/// seed the cache so journaled rows are never recomputed, re-sweep
+/// with the *recorded* strategy and parameters (flags override), and
+/// finalize the journal.  When the flags changed the space, the
+/// strategy, or its parameters, the journal is rewritten under an
+/// updated header (carrying the recovered rows over); otherwise the
+/// torn tail is truncated and the sweep appends in place.
+fn resume_journal(args: &Args, path: &str) -> Result<i32> {
+    let prior = Journal::recover(path)?;
+    let space = dse_space_from(args, &prior.space)?;
+    let strategy_name = args
+        .flag("strategy")
+        .map(str::to_string)
+        .unwrap_or_else(|| prior.strategy.clone());
+    let (strategy, params) =
+        dse_strategy_with_params(args, &strategy_name, &prior.params)?;
+    let cache = EvalCache::new();
+    let loaded = Session::from_journal(&prior).preload(&cache);
+    let unchanged = space_fingerprint(&space) == prior.fingerprint
+        && strategy.name() == prior.strategy
+        && params == prior.params;
+    let writer = if unchanged {
+        JournalWriter::resume(path, &prior)?
+    } else {
+        // the flags changed the sweep (space, strategy or knobs):
+        // rewrite the journal under the new header via a sibling temp
+        // file + rename, so a crash mid-rewrite cannot lose the
+        // recovered rows (the original journal survives intact until
+        // the new one is durable) and a later resume reruns *this*
+        // sweep, not the stale recorded one
+        let tmp = format!("{path}.tmp");
+        let writer =
+            JournalWriter::create_with_params(&tmp, strategy.name(), &params, &space)?;
+        for row in &prior.rows {
+            writer.append(row)?;
+        }
+        writer.sync()?;
+        std::fs::rename(&tmp, path)?;
+        writer
+    };
+    let ctx = SweepContext::new(&cache, dse_workers(args)?).with_sink(&writer);
+    println!(
+        "resuming journal {path}: {loaded} rows recovered ({}), sweeping {} \
+         candidates with `{}` ...",
+        if prior.complete() { "finalized" } else { "in progress" },
+        space.len(),
+        strategy.name()
+    );
+    let result = strategy.run(&space, &ctx)?;
+    writer.finalize(&result)?;
+    println!("{}", report::dse_table(&result.evals));
+    print!("{}", report::sweep_summary(&result));
+    println!(
+        "  reuse: {} answered from the journal, {} recomputed",
+        result.cache_hits, result.evaluated
+    );
+    println!(
+        "  journal finalized: {} rows ({path})",
+        writer.rows_written()
+    );
+    Ok(0)
+}
+
 fn cmd_dse_compare(args: &Args) -> Result<i32> {
     let space = dse_space(args)?;
     let workers = dse_workers(args)?;
@@ -528,7 +690,7 @@ fn cmd_dse_compare(args: &Args) -> Result<i32> {
         let strategy = dse_strategy(args, name)?;
         // fresh cache per strategy so the evaluation counts compare
         let cache = EvalCache::new();
-        let ctx = SweepContext { cache: &cache, workers };
+        let ctx = SweepContext::new(&cache, workers);
         results.push(strategy.run(&space, &ctx)?);
     }
     let refs: Vec<&crate::dse::SweepResult> = results.iter().collect();
@@ -807,6 +969,133 @@ mod tests {
         assert!(warm.field("evals_per_sec").unwrap().as_f64().unwrap() > 0.0);
         assert_eq!(warm.field("cache_hits").unwrap().as_u64().unwrap(), 4);
         assert!(b.field("speedup").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn dse_sweep_journal_writes_and_resume_recovers() {
+        let path = std::env::temp_dir()
+            .join(format!("spdx_cli_journal_{}.jnl", std::process::id()));
+        let p = path.to_string_lossy().into_owned();
+        let code = run(vec![
+            "dse".into(),
+            "sweep".into(),
+            "--grids".into(),
+            "64x32".into(),
+            "--max-n".into(),
+            "2".into(),
+            "--max-m".into(),
+            "2".into(),
+            "--passes".into(),
+            "2".into(),
+            "--journal".into(),
+            p.clone(),
+        ])
+        .unwrap();
+        assert_eq!(code, 0);
+        let j = Journal::recover(&path).unwrap();
+        assert_eq!(j.rows.len(), 4);
+        assert!(j.complete(), "a finished sweep must finalize its journal");
+        // resuming a finalized journal recomputes nothing and leaves
+        // it finalized
+        let code =
+            run(vec!["dse".into(), "resume".into(), "--journal".into(), p]).unwrap();
+        assert_eq!(code, 0);
+        let j = Journal::recover(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(j.rows.len(), 4);
+        assert!(j.complete());
+    }
+
+    #[test]
+    fn dse_resume_requires_a_source() {
+        let err = cmd_dse_resume(&Args::parse(&[])).unwrap_err().to_string();
+        assert!(err.contains("--session FILE or --journal FILE"), "{err}");
+    }
+
+    #[test]
+    fn bare_file_flags_are_rejected() {
+        let a = Args::parse(&["--journal".into()]);
+        let err = file_flag(&a, "journal").unwrap_err().to_string();
+        assert!(err.contains("--journal needs a FILE"), "{err}");
+        let b = Args::parse(&["--session".into()]);
+        let err = file_flag(&b, "session").unwrap_err().to_string();
+        assert!(err.contains("--session needs a FILE"), "{err}");
+        assert!(file_flag(&b, "journal").unwrap().is_none());
+    }
+
+    #[test]
+    fn sweep_refuses_to_truncate_an_in_progress_journal() {
+        let path = std::env::temp_dir()
+            .join(format!("spdx_cli_inprogress_{}.jnl", std::process::id()));
+        let p = path.to_string_lossy().into_owned();
+        let sweep = || {
+            run(vec![
+                "dse".into(),
+                "sweep".into(),
+                "--grids".into(),
+                "64x32".into(),
+                "--max-n".into(),
+                "2".into(),
+                "--max-m".into(),
+                "2".into(),
+                "--passes".into(),
+                "2".into(),
+                "--journal".into(),
+                p.clone(),
+            ])
+        };
+        assert_eq!(sweep().unwrap(), 0);
+        // a finalized journal may be overwritten by a fresh sweep
+        assert_eq!(sweep().unwrap(), 0);
+        // tear off the finalize record: the journal is in progress
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 20]).unwrap();
+        let err = sweep().unwrap_err().to_string();
+        std::fs::remove_file(&path).ok();
+        assert!(err.contains("in-progress journal"), "{err}");
+        assert!(err.contains("dse resume"), "{err}");
+    }
+
+    #[test]
+    fn journal_header_records_hill_climb_params() {
+        let path = std::env::temp_dir()
+            .join(format!("spdx_cli_params_{}.jnl", std::process::id()));
+        let p = path.to_string_lossy().into_owned();
+        let code = run(vec![
+            "dse".into(),
+            "sweep".into(),
+            "--grids".into(),
+            "64x32".into(),
+            "--max-n".into(),
+            "2".into(),
+            "--max-m".into(),
+            "2".into(),
+            "--passes".into(),
+            "2".into(),
+            "--strategy".into(),
+            "hill".into(),
+            "--seed".into(),
+            "9".into(),
+            "--restarts".into(),
+            "1".into(),
+            "--max-steps".into(),
+            "4".into(),
+            "--journal".into(),
+            p,
+        ])
+        .unwrap();
+        assert_eq!(code, 0);
+        let j = Journal::recover(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(j.strategy, "hill-climb");
+        assert_eq!(j.params.field("seed").unwrap().as_u64().unwrap(), 9);
+        assert_eq!(j.params.field("restarts").unwrap().as_u64().unwrap(), 1);
+        assert_eq!(j.params.field("max-steps").unwrap().as_u64().unwrap(), 4);
+        // a bare resume reconstructs the same search from the header
+        let (s, params) =
+            dse_strategy_with_params(&Args::parse(&[]), &j.strategy, &j.params).unwrap();
+        assert_eq!(s.name(), "hill-climb");
+        assert_eq!(params, j.params);
     }
 
     #[test]

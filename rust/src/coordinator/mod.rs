@@ -23,7 +23,7 @@ use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread;
 
-use crate::dse::EvalCache;
+use crate::dse::{EvalCache, RowSink};
 use crate::error::{Error, Result};
 use crate::explore::{candidates, evaluate, sort_by_perf_per_watt, Evaluation, ExploreConfig};
 use crate::workload::DesignPoint;
@@ -54,10 +54,28 @@ pub fn evaluate_batch(
     workers: usize,
     cache: Option<&EvalCache>,
 ) -> Result<(Vec<Arc<Evaluation>>, RunMetrics)> {
+    evaluate_batch_observed(jobs, workers, cache, None)
+}
+
+/// [`evaluate_batch`] with a streaming observer: every completed row
+/// is pushed to `sink` *while the batch is still running* (the
+/// collector drains the worker channel concurrently with evaluation),
+/// in completion order.  This is what makes sweeps crash-safe: a
+/// journaling sink has persisted every finished evaluation before the
+/// batch — let alone the strategy — returns.  A sink error is
+/// reported like a failed job (the batch still drains).
+pub fn evaluate_batch_observed(
+    jobs: &[BatchJob],
+    workers: usize,
+    cache: Option<&EvalCache>,
+    sink: Option<&dyn RowSink>,
+) -> Result<(Vec<Arc<Evaluation>>, RunMetrics)> {
     let n_jobs = jobs.len();
     let mut metrics = RunMetrics::new(n_jobs);
     let next = AtomicUsize::new(0);
     let (tx, rx) = mpsc::channel::<(usize, Result<Arc<Evaluation>>, f64)>();
+    let mut slots: Vec<Option<Arc<Evaluation>>> = vec![None; n_jobs];
+    let mut first_err: Option<Error> = None;
 
     thread::scope(|scope| {
         for _ in 0..workers.max(1).min(n_jobs.max(1)) {
@@ -79,24 +97,30 @@ pub fn evaluate_batch(
             });
         }
         drop(tx);
-    });
-
-    let mut slots: Vec<Option<Arc<Evaluation>>> = vec![None; n_jobs];
-    let mut first_err: Option<Error> = None;
-    for (index, result, dt) in rx {
-        match result {
-            Ok(e) => {
-                metrics.record(index, dt, e.infeasible.is_none());
-                slots[index] = Some(e);
-            }
-            Err(err) => {
-                metrics.record(index, dt, false);
-                if first_err.is_none() {
-                    first_err = Some(err);
+        // drain inside the scope: rows reach the sink as workers
+        // finish them, not after the whole batch completes
+        for (index, result, dt) in rx {
+            match result {
+                Ok(e) => {
+                    metrics.record(index, dt, e.infeasible.is_none());
+                    if let Some(sink) = sink {
+                        if let Err(err) = sink.row(&e) {
+                            if first_err.is_none() {
+                                first_err = Some(err);
+                            }
+                        }
+                    }
+                    slots[index] = Some(e);
+                }
+                Err(err) => {
+                    metrics.record(index, dt, false);
+                    if first_err.is_none() {
+                        first_err = Some(err);
+                    }
                 }
             }
         }
-    }
+    });
     if let Some(err) = first_err {
         return Err(err);
     }

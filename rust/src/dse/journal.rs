@@ -1,0 +1,714 @@
+//! Crash-safe streaming sweep journal: an append-only row log.
+//!
+//! A [`Session`](super::Session) serializes a *whole* sweep atomically,
+//! so a long run that dies loses every evaluated row.  The journal is
+//! the incremental alternative: one self-delimiting JSON record per
+//! line, appended (and fsync'd in batches) *as evaluations complete*,
+//! so a crashed sweep keeps everything it paid for.
+//!
+//! Record stream (`version` 1, newline-delimited JSON objects):
+//!
+//! ```text
+//! {"record":"header","version":1,"strategy":"hill-climb",
+//!  "params":{"seed":9,"restarts":4,"max-steps":64},
+//!  "fingerprint":"9f2c...","space":{...}}          // once, first
+//! {"record":"row","data":{...}}                    // one per evaluation
+//! {"record":"finalize","rows":12,"evaluated":12,
+//!  "cache_hits":0,"skipped":0,"candidates":12}     // on completion
+//! ```
+//!
+//! * the **header** carries the swept [`DesignSpace`], the strategy
+//!   *and its parameters* (so a resume reruns the same search, not a
+//!   default-configured one), and a fingerprint of the space (a
+//!   stable hash over its canonical encoding — workload, grids,
+//!   devices, DDR, latencies, passes), so resume and merge can refuse
+//!   rows from a different space;
+//! * **row** records reuse the session row encoding
+//!   (shortest-roundtrip floats: metrics survive bit-exactly);
+//! * the **finalize** record marks a completed sweep and archives the
+//!   run counters.  Rows appended after a finalize (a resumed journal)
+//!   put the journal back in the in-progress state until the next
+//!   finalize.
+//!
+//! **Recovery** ([`Journal::recover`]) replays the intact prefix.  A
+//! compact JSON object has no valid strict prefix, so a record torn by
+//! a crash (or by batched fsync losing its tail) cannot masquerade as
+//! data: a malformed final line *without its newline terminator* is
+//! the torn tail and is dropped — the journal is exactly the records
+//! before it.  A malformed record anywhere else (including a
+//! newline-terminated final line, which a torn write can never
+//! produce) is real corruption and recovery refuses it.
+//! [`JournalWriter::resume`] truncates the torn tail and appends from
+//! there, so an interrupted sweep continues on the same file.
+//!
+//! The writer is a [`RowSink`]: hand it to a
+//! [`SweepContext`](super::SweepContext) and every strategy streams its
+//! completed rows through [`crate::coordinator::evaluate_batch`] into
+//! the log.  Rows are deduplicated by content address, so re-touched
+//! points (hill-climb walks, warm re-sweeps) are journaled once.
+
+use std::collections::HashSet;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+use crate::explore::Evaluation;
+
+use super::cache::CacheKey;
+use super::json::{self, Json};
+use super::session::{decode_row, decode_space, encode_row, encode_space, row_key};
+use super::space::DesignSpace;
+use super::strategy::SweepResult;
+
+pub const JOURNAL_VERSION: u64 = 1;
+
+/// Rows between fsyncs (a crash loses at most this many rows).
+const DEFAULT_SYNC_EVERY: usize = 32;
+
+/// Observer receiving every completed evaluation of a sweep, in
+/// completion order.  An error aborts the sweep (a journal that cannot
+/// be written is not providing crash safety).
+pub trait RowSink {
+    fn row(&self, eval: &Evaluation) -> Result<()>;
+}
+
+/// Stable fingerprint of a design space: FNV-1a over its canonical
+/// session encoding.  Two spaces fingerprint equally iff they encode
+/// identically (same workload, grids, lattice bounds, devices, DDR
+/// variants, passes and operator latencies), and the value survives an
+/// encode/decode cycle.
+pub fn space_fingerprint(space: &DesignSpace) -> String {
+    let text = encode_space(space).to_string();
+    let mut hash: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in text.bytes() {
+        hash ^= b as u64;
+        hash = hash.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    format!("{hash:016x}")
+}
+
+/// Counters archived by a finalize record.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FinalizeRecord {
+    /// distinct rows in the journal at finalize time
+    pub rows: u64,
+    /// real computations the finishing run performed
+    pub evaluated: u64,
+    /// evaluations the finishing run answered from the cache
+    pub cache_hits: u64,
+    /// candidates the finishing run pruned without evaluation
+    pub skipped: u64,
+    /// candidates in the swept space
+    pub candidates: u64,
+}
+
+/// A recovered journal: the intact prefix of an append-only row log.
+#[derive(Clone, Debug)]
+pub struct Journal {
+    pub strategy: String,
+    /// strategy parameters as recorded by the writer (a JSON object;
+    /// empty when the strategy has none) — resume reconstructs the
+    /// same search from these instead of falling back to defaults
+    pub params: Json,
+    pub space: DesignSpace,
+    /// the header's space fingerprint (verified against `space`)
+    pub fingerprint: String,
+    /// intact rows, in append order
+    pub rows: Vec<Evaluation>,
+    /// `Some` iff the journal ends in a finalize record (a completed
+    /// sweep); rows appended after a finalize clear it
+    pub finalized: Option<FinalizeRecord>,
+    /// byte length of the intact prefix ([`JournalWriter::resume`]
+    /// truncates the file to this before appending)
+    pub intact_bytes: u64,
+}
+
+enum Record {
+    Header(Header),
+    Row(Evaluation),
+    Finalize(FinalizeRecord),
+}
+
+struct Header {
+    strategy: String,
+    params: Json,
+    space: DesignSpace,
+    fingerprint: String,
+}
+
+fn decode_record(v: &Json) -> Result<Record> {
+    match v.field("record")?.as_str()? {
+        "header" => {
+            let version = v.field("version")?.as_u64()?;
+            if version != JOURNAL_VERSION {
+                return Err(Error::Explore(format!(
+                    "journal version {version} unsupported (want {JOURNAL_VERSION})"
+                )));
+            }
+            Ok(Record::Header(Header {
+                strategy: v.field("strategy")?.as_str()?.to_string(),
+                params: v.field("params")?.clone(),
+                space: decode_space(v.field("space")?)?,
+                fingerprint: v.field("fingerprint")?.as_str()?.to_string(),
+            }))
+        }
+        "row" => Ok(Record::Row(decode_row(v.field("data")?)?)),
+        "finalize" => Ok(Record::Finalize(FinalizeRecord {
+            rows: v.field("rows")?.as_u64()?,
+            evaluated: v.field("evaluated")?.as_u64()?,
+            cache_hits: v.field("cache_hits")?.as_u64()?,
+            skipped: v.field("skipped")?.as_u64()?,
+            candidates: v.field("candidates")?.as_u64()?,
+        })),
+        other => Err(Error::Explore(format!("journal: unknown record `{other}`"))),
+    }
+}
+
+impl Journal {
+    /// Replay the intact prefix of a journal file.
+    ///
+    /// Tolerates exactly the damage a crash can cause — a torn or
+    /// missing *tail* record — and nothing else: a record that fails
+    /// to parse with further records after it is corruption, and an
+    /// error.  A journal whose header never made it to disk has no
+    /// usable content and is an error too.
+    pub fn recover(path: impl AsRef<Path>) -> Result<Journal> {
+        let path = path.as_ref();
+        let bytes = std::fs::read(path)?;
+        let mut header: Option<Header> = None;
+        let mut rows = Vec::new();
+        let mut finalized = None;
+        let mut pos = 0usize;
+        let mut intact = 0usize;
+        while pos < bytes.len() {
+            let newline = bytes[pos..].iter().position(|&b| b == b'\n');
+            let (content_end, next) = match newline {
+                Some(i) => (pos + i, pos + i + 1),
+                None => (bytes.len(), bytes.len()),
+            };
+            // the torn-tail exemption applies only to an unterminated
+            // final line: records contain no raw newline, so a torn
+            // write can never persist one — a malformed line *with*
+            // its terminator is corruption, however late in the file
+            let is_torn_tail = next >= bytes.len() && newline.is_none();
+            let record = std::str::from_utf8(&bytes[pos..content_end])
+                .map_err(|_| Error::Explore("journal: non-utf8 record".into()))
+                .and_then(Json::parse)
+                .and_then(|v| decode_record(&v));
+            match record {
+                Ok(Record::Header(h)) => {
+                    if header.is_some() {
+                        return Err(Error::Explore(format!(
+                            "journal {}: duplicate header record",
+                            path.display()
+                        )));
+                    }
+                    if h.fingerprint != space_fingerprint(&h.space) {
+                        return Err(Error::Explore(format!(
+                            "journal {}: header fingerprint does not match its \
+                             own space (corrupt or hand-edited header)",
+                            path.display()
+                        )));
+                    }
+                    header = Some(h);
+                }
+                Ok(Record::Row(e)) => {
+                    if header.is_none() {
+                        return Err(Error::Explore(format!(
+                            "journal {}: row record before the header",
+                            path.display()
+                        )));
+                    }
+                    rows.push(e);
+                    finalized = None;
+                }
+                Ok(Record::Finalize(f)) => {
+                    if header.is_none() {
+                        return Err(Error::Explore(format!(
+                            "journal {}: finalize record before the header",
+                            path.display()
+                        )));
+                    }
+                    finalized = Some(f);
+                }
+                Err(e) => {
+                    if is_torn_tail {
+                        // the torn tail a crash leaves behind: drop it,
+                        // the journal is the intact prefix
+                        break;
+                    }
+                    return Err(Error::Explore(format!(
+                        "journal {}: corrupt record at byte {pos}: {e}",
+                        path.display()
+                    )));
+                }
+            }
+            intact = next;
+            pos = next;
+        }
+        let header = header.ok_or_else(|| {
+            Error::Explore(format!(
+                "journal {}: no intact header record (empty or truncated \
+                 before the first fsync)",
+                path.display()
+            ))
+        })?;
+        Ok(Journal {
+            strategy: header.strategy,
+            params: header.params,
+            space: header.space,
+            fingerprint: header.fingerprint,
+            rows,
+            finalized,
+            intact_bytes: intact as u64,
+        })
+    }
+
+    /// `true` iff the journal ends with a finalize record (the sweep
+    /// that wrote it ran to completion).
+    pub fn complete(&self) -> bool {
+        self.finalized.is_some()
+    }
+
+    fn key_of(&self, e: &Evaluation) -> CacheKey {
+        row_key(e, self.space.latency)
+    }
+}
+
+struct Inner {
+    file: std::fs::File,
+    /// content addresses already journaled (rows are logged once)
+    seen: HashSet<CacheKey>,
+    rows: u64,
+    /// rows appended since the last fsync
+    pending: usize,
+    sync_every: usize,
+}
+
+/// Append-only journal writer.  Interior-mutable (`&self` append) so
+/// it can serve as the [`RowSink`] of a sweep; the batch collector
+/// calls it from one thread, but sharing it is safe.
+pub struct JournalWriter {
+    inner: Mutex<Inner>,
+    latency: crate::dfg::OpLatency,
+}
+
+impl JournalWriter {
+    /// Start a fresh journal with no recorded strategy parameters
+    /// (shorthand for [`JournalWriter::create_with_params`] with an
+    /// empty object).
+    pub fn create(
+        path: impl AsRef<Path>,
+        strategy: &str,
+        space: &DesignSpace,
+    ) -> Result<JournalWriter> {
+        JournalWriter::create_with_params(path, strategy, &Json::Obj(Vec::new()), space)
+    }
+
+    /// Start a fresh journal: truncate `path`, write the header record
+    /// (strategy name + parameters, space + fingerprint) and fsync it,
+    /// so a recovered journal always knows exactly which sweep it was.
+    pub fn create_with_params(
+        path: impl AsRef<Path>,
+        strategy: &str,
+        params: &Json,
+        space: &DesignSpace,
+    ) -> Result<JournalWriter> {
+        let mut file = std::fs::File::create(path)?;
+        let header = json::obj(vec![
+            ("record", json::str("header")),
+            ("version", json::uint(JOURNAL_VERSION)),
+            ("strategy", json::str(strategy)),
+            ("params", params.clone()),
+            ("fingerprint", json::str(&space_fingerprint(space))),
+            ("space", encode_space(space)),
+        ]);
+        write_record(&mut file, &header)?;
+        file.sync_data()?;
+        Ok(JournalWriter {
+            latency: space.latency,
+            inner: Mutex::new(Inner {
+                file,
+                seen: HashSet::new(),
+                rows: 0,
+                pending: 0,
+                sync_every: DEFAULT_SYNC_EVERY,
+            }),
+        })
+    }
+
+    /// Continue a recovered journal on the same file: truncate the
+    /// torn tail (everything past `recovered.intact_bytes`), seed the
+    /// dedupe set with the recovered rows, and append from there.
+    pub fn resume(path: impl AsRef<Path>, recovered: &Journal) -> Result<JournalWriter> {
+        let mut file = std::fs::OpenOptions::new().read(true).write(true).open(path)?;
+        file.set_len(recovered.intact_bytes)?;
+        // a crash can eat exactly the newline of an otherwise-complete
+        // tail record; restore the separator so the next append starts
+        // its own line instead of corrupting the last intact record
+        if recovered.intact_bytes > 0 {
+            file.seek(SeekFrom::End(-1))?;
+            let mut last = [0u8; 1];
+            file.read_exact(&mut last)?;
+            if last[0] != b'\n' {
+                file.write_all(b"\n")?;
+            }
+        }
+        file.seek(SeekFrom::End(0))?;
+        let mut seen = HashSet::new();
+        for row in &recovered.rows {
+            seen.insert(recovered.key_of(row));
+        }
+        Ok(JournalWriter {
+            latency: recovered.space.latency,
+            inner: Mutex::new(Inner {
+                file,
+                rows: recovered.rows.len() as u64,
+                seen,
+                pending: 0,
+                sync_every: DEFAULT_SYNC_EVERY,
+            }),
+        })
+    }
+
+    /// Override the fsync batch size (1 = every row hits disk before
+    /// the append returns).
+    pub fn with_sync_every(self, every: usize) -> JournalWriter {
+        self.inner.lock().unwrap().sync_every = every.max(1);
+        self
+    }
+
+    /// Append one evaluated row (deduplicated by content address);
+    /// fsyncs every `sync_every` appended rows.
+    pub fn append(&self, eval: &Evaluation) -> Result<()> {
+        let key = row_key(eval, self.latency);
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.seen.insert(key) {
+            return Ok(());
+        }
+        let data = encode_row(eval);
+        let record = json::obj(vec![("record", json::str("row")), ("data", data)]);
+        write_record(&mut inner.file, &record)?;
+        inner.rows += 1;
+        inner.pending += 1;
+        if inner.pending >= inner.sync_every {
+            inner.file.sync_data()?;
+            inner.pending = 0;
+        }
+        Ok(())
+    }
+
+    /// Force an fsync of everything appended so far.
+    pub fn sync(&self) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.file.sync_data()?;
+        inner.pending = 0;
+        Ok(())
+    }
+
+    /// Write the finalize record (run counters) and fsync everything.
+    pub fn finalize(&self, result: &SweepResult) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        let record = json::obj(vec![
+            ("record", json::str("finalize")),
+            ("rows", json::uint(inner.rows)),
+            ("evaluated", json::uint(result.evaluated as u64)),
+            ("cache_hits", json::uint(result.cache_hits)),
+            ("skipped", json::uint(result.skipped as u64)),
+            ("candidates", json::uint(result.candidates as u64)),
+        ]);
+        write_record(&mut inner.file, &record)?;
+        inner.file.sync_data()?;
+        inner.pending = 0;
+        Ok(())
+    }
+
+    /// Distinct rows written to (or recovered into) this journal.
+    pub fn rows_written(&self) -> u64 {
+        self.inner.lock().unwrap().rows
+    }
+}
+
+impl RowSink for JournalWriter {
+    fn row(&self, eval: &Evaluation) -> Result<()> {
+        self.append(eval)
+    }
+}
+
+fn write_record(file: &mut std::fs::File, record: &Json) -> Result<()> {
+    let mut line = record.to_string();
+    line.push('\n');
+    file.write_all(line.as_bytes())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explore::{evaluate, ExploreConfig};
+    use crate::workload::DesignPoint;
+
+    fn cfg() -> ExploreConfig {
+        ExploreConfig {
+            grid_w: 64,
+            grid_h: 32,
+            max_n: 2,
+            max_m: 2,
+            passes: 2,
+            ..Default::default()
+        }
+    }
+
+    fn space() -> DesignSpace {
+        DesignSpace::from_explore(&cfg())
+    }
+
+    fn rows() -> Vec<Evaluation> {
+        vec![
+            evaluate(&DesignPoint::new(1, 1, 64, 32), &cfg()).unwrap(),
+            evaluate(&DesignPoint::new(1, 2, 64, 32), &cfg()).unwrap(),
+        ]
+    }
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir()
+            .join(format!("spdx_journal_{tag}_{}.jnl", std::process::id()))
+    }
+
+    fn dummy_result(evaluated: usize) -> SweepResult {
+        SweepResult {
+            strategy: "exhaustive",
+            evals: Vec::new(),
+            evaluated,
+            cache_hits: 0,
+            skipped: 0,
+            candidates: evaluated,
+        }
+    }
+
+    #[test]
+    fn write_recover_roundtrips_rows_bit_exactly() {
+        let path = tmp("roundtrip");
+        let rows = rows();
+        let w = JournalWriter::create(&path, "exhaustive", &space()).unwrap();
+        for r in &rows {
+            w.append(r).unwrap();
+        }
+        w.finalize(&dummy_result(2)).unwrap();
+        assert_eq!(w.rows_written(), 2);
+
+        let j = Journal::recover(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(j.strategy, "exhaustive");
+        assert_eq!(j.fingerprint, space_fingerprint(&space()));
+        assert_eq!(j.space.grids, vec![(64, 32)]);
+        assert!(j.complete());
+        assert_eq!(j.finalized.unwrap().rows, 2);
+        assert_eq!(j.rows.len(), 2);
+        for (a, b) in rows.iter().zip(&j.rows) {
+            assert_eq!(a.design, b.design);
+            assert_eq!(a.perf_per_watt.to_bits(), b.perf_per_watt.to_bits());
+            assert_eq!(a.power_w.to_bits(), b.power_w.to_bits());
+            assert_eq!(a.resources.total, b.resources.total);
+        }
+    }
+
+    #[test]
+    fn header_records_strategy_params() {
+        let path = tmp("params");
+        let params = json::obj(vec![
+            ("seed", json::num(9.0)),
+            ("restarts", json::num(2.0)),
+        ]);
+        let space = space();
+        let w = JournalWriter::create_with_params(&path, "hill-climb", &params, &space);
+        drop(w.unwrap());
+        let j = Journal::recover(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(j.strategy, "hill-climb");
+        assert_eq!(j.params, params);
+        assert_eq!(j.params.field("seed").unwrap().as_u64().unwrap(), 9);
+    }
+
+    #[test]
+    fn duplicate_rows_are_journaled_once() {
+        let path = tmp("dedupe");
+        let rows = rows();
+        let w = JournalWriter::create(&path, "hill-climb", &space()).unwrap();
+        for _ in 0..3 {
+            w.append(&rows[0]).unwrap();
+        }
+        w.append(&rows[1]).unwrap();
+        assert_eq!(w.rows_written(), 2);
+        drop(w);
+        let j = Journal::recover(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(j.rows.len(), 2);
+        assert!(!j.complete(), "no finalize record yet");
+    }
+
+    #[test]
+    fn rows_after_finalize_reopen_the_journal() {
+        let path = tmp("reopen");
+        let rows = rows();
+        let w = JournalWriter::create(&path, "exhaustive", &space()).unwrap();
+        w.append(&rows[0]).unwrap();
+        w.finalize(&dummy_result(1)).unwrap();
+        w.append(&rows[1]).unwrap();
+        drop(w);
+        let j = Journal::recover(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(j.rows.len(), 2);
+        assert!(!j.complete(), "a row after finalize means in-progress");
+    }
+
+    #[test]
+    fn fingerprint_separates_spaces_and_survives_decoding() {
+        let a = space();
+        assert_eq!(space_fingerprint(&a), space_fingerprint(&a.clone()));
+        let b = DesignSpace { max_m: 3, ..space() };
+        assert_ne!(space_fingerprint(&a), space_fingerprint(&b));
+        let c = DesignSpace { passes: 9, ..space() };
+        assert_ne!(space_fingerprint(&a), space_fingerprint(&c));
+
+        // encode -> decode -> fingerprint is stable (recover relies on it)
+        let text = encode_space(&a).to_string();
+        let back = decode_space(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(space_fingerprint(&a), space_fingerprint(&back));
+    }
+
+    #[test]
+    fn corrupt_mid_file_record_is_an_error() {
+        let path = tmp("corrupt");
+        let rows = rows();
+        let w = JournalWriter::create(&path, "exhaustive", &space()).unwrap();
+        for r in &rows {
+            w.append(r).unwrap();
+        }
+        w.finalize(&dummy_result(2)).unwrap();
+        drop(w);
+        let mut bytes = std::fs::read(&path).unwrap();
+        // break the first row record (not the tail): flip its colon
+        let first_row = bytes
+            .windows(15)
+            .position(|win| win == b"{\"record\":\"row\"")
+            .unwrap();
+        bytes[first_row + 9] = b';';
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Journal::recover(&path).unwrap_err().to_string();
+        std::fs::remove_file(&path).ok();
+        assert!(err.contains("corrupt record"), "{err}");
+    }
+
+    #[test]
+    fn recover_requires_a_header() {
+        let path = tmp("headerless");
+        std::fs::write(&path, "").unwrap();
+        assert!(Journal::recover(&path).is_err(), "empty file");
+        let finalize_first = concat!(
+            "{\"record\":\"finalize\",\"rows\":0,\"evaluated\":0,",
+            "\"cache_hits\":0,\"skipped\":0,\"candidates\":0}\nx"
+        );
+        std::fs::write(&path, finalize_first).unwrap();
+        let err = Journal::recover(&path).unwrap_err().to_string();
+        std::fs::remove_file(&path).ok();
+        assert!(err.contains("before the header"), "{err}");
+    }
+
+    #[test]
+    fn unsupported_version_is_refused() {
+        let path = tmp("version");
+        let w = JournalWriter::create(&path, "exhaustive", &space()).unwrap();
+        drop(w);
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, text.replace("\"version\":1", "\"version\":9")).unwrap();
+        // the bad header is newline-terminated, so it is corruption
+        // (not a torn tail) and recovery refuses the journal
+        assert!(Journal::recover(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn newline_terminated_malformed_tail_is_corruption_not_a_tear() {
+        // a torn write can never persist the newline terminator, so a
+        // malformed final line *with* one must be refused, not dropped
+        let path = tmp("badtail");
+        let rows = rows();
+        let w = JournalWriter::create(&path, "exhaustive", &space()).unwrap();
+        w.append(&rows[0]).unwrap();
+        drop(w);
+        let mut bytes = std::fs::read(&path).unwrap();
+        // corrupt one byte inside the last record, keeping its newline
+        let n = bytes.len();
+        bytes[n - 10] = b'\x07';
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Journal::recover(&path).unwrap_err().to_string();
+        std::fs::remove_file(&path).ok();
+        assert!(err.contains("corrupt record"), "{err}");
+    }
+
+    #[test]
+    fn resume_after_losing_only_the_tail_newline_stays_parseable() {
+        // regression: a cut exactly at a record's content end keeps the
+        // record but loses its newline — resume must restore the
+        // separator, or the next append corrupts the last intact line
+        let path = tmp("newline");
+        let rows = rows();
+        let w = JournalWriter::create(&path, "exhaustive", &space()).unwrap();
+        w.append(&rows[0]).unwrap();
+        drop(w);
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(*bytes.last().unwrap(), b'\n');
+        std::fs::write(&path, &bytes[..bytes.len() - 1]).unwrap();
+
+        let partial = Journal::recover(&path).unwrap();
+        assert_eq!(partial.rows.len(), 1, "newline-less tail row is intact");
+        assert_eq!(partial.intact_bytes as usize, bytes.len() - 1);
+
+        let w = JournalWriter::resume(&path, &partial).unwrap();
+        w.append(&rows[1]).unwrap();
+        w.finalize(&dummy_result(2)).unwrap();
+        drop(w);
+        let j = Journal::recover(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(j.rows.len(), 2);
+        assert!(j.complete());
+    }
+
+    #[test]
+    fn resume_truncates_the_torn_tail_and_appends() {
+        let path = tmp("resume");
+        let rows = rows();
+        let w = JournalWriter::create(&path, "exhaustive", &space()).unwrap();
+        for r in &rows {
+            w.append(r).unwrap();
+        }
+        drop(w);
+        // tear the tail: cut into the middle of the last row record
+        let bytes = std::fs::read(&path).unwrap();
+        let cut = bytes.len() - 40;
+        std::fs::write(&path, &bytes[..cut]).unwrap();
+
+        let partial = Journal::recover(&path).unwrap();
+        assert_eq!(partial.rows.len(), 1, "torn tail row must be dropped");
+        assert!(partial.intact_bytes < cut as u64);
+
+        let w = JournalWriter::resume(&path, &partial).unwrap();
+        assert_eq!(w.rows_written(), 1);
+        w.append(&rows[0]).unwrap(); // already journaled: deduped
+        assert_eq!(w.rows_written(), 1);
+        w.append(&rows[1]).unwrap(); // the row the tear destroyed
+        w.finalize(&dummy_result(2)).unwrap();
+        drop(w);
+
+        let j = Journal::recover(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(j.rows.len(), 2);
+        assert!(j.complete());
+        for (a, b) in rows.iter().zip(&j.rows) {
+            assert_eq!(a.design, b.design);
+            assert_eq!(a.perf_per_watt.to_bits(), b.perf_per_watt.to_bits());
+        }
+    }
+}

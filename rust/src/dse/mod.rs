@@ -24,22 +24,33 @@
 //!   handing out `Arc`ed rows, so the worker pool neither serializes
 //!   on one lock nor clones evaluations on hits), and serialized to
 //!   JSON session files across processes (`dse sweep --session`,
-//!   `dse resume`).
+//!   `dse resume`);
+//! * **crash safety** ([`journal`]) — an append-only row log
+//!   ([`JournalWriter`] as the sweep's [`RowSink`]) persists every
+//!   evaluation as it completes, fsync'd in batches; recovery
+//!   ([`Journal::recover`]) tolerates the torn tail record a crash
+//!   leaves and `dse resume --journal` reseeds the cache from the
+//!   intact prefix, so an interrupted sweep loses (almost) nothing.
 //!
 //! All strategies evaluate through
 //! [`crate::coordinator::evaluate_batch`], so every sweep — pruned or
-//! not — uses the same worker pool and the same cache.
+//! not — uses the same worker pool, the same cache, and the same
+//! streaming journal hook.
 //!
 //! `explore::explore` (the seed API) is a thin wrapper over
 //! [`Exhaustive`] on a single-device space.
 
 pub mod cache;
+pub mod journal;
 pub mod json;
 pub mod session;
 pub mod space;
 pub mod strategy;
 
 pub use cache::{CacheKey, CacheStats, EvalCache};
+pub use journal::{
+    space_fingerprint, FinalizeRecord, Journal, JournalWriter, RowSink,
+};
 pub use session::Session;
 pub use space::{ddr_by_name, Candidate, DesignSpace, DDR_VARIANT_NAMES};
 pub use strategy::{
@@ -66,7 +77,7 @@ mod tests {
     #[test]
     fn exhaustive_covers_the_space() {
         let cache = EvalCache::new();
-        let ctx = SweepContext { cache: &cache, workers: 2 };
+        let ctx = SweepContext::new(&cache, 2);
         let r = Exhaustive.run(&small_space(), &ctx).unwrap();
         assert_eq!(r.candidates, 4);
         assert_eq!(r.evals.len(), 4);
@@ -96,7 +107,7 @@ mod tests {
     fn bounded_prune_on_all_feasible_space_matches_exhaustive() {
         // nothing to prune here: identical rows, zero skips
         let cache = EvalCache::new();
-        let ctx = SweepContext { cache: &cache, workers: 2 };
+        let ctx = SweepContext::new(&cache, 2);
         let ex = Exhaustive.run(&small_space(), &ctx).unwrap();
         let pr = BoundedPrune::default().run(&small_space(), &ctx).unwrap();
         assert_eq!(pr.evals.len(), ex.evals.len());
@@ -115,7 +126,7 @@ mod tests {
         // regression: an empty axis used to panic HillClimb's random
         // start instead of yielding an empty sweep
         let cache = EvalCache::new();
-        let ctx = SweepContext { cache: &cache, workers: 1 };
+        let ctx = SweepContext::new(&cache, 1);
         let space = DesignSpace { devices: vec![], ..small_space() };
         for strategy in [
             Box::new(Exhaustive) as Box<dyn SearchStrategy>,
@@ -132,7 +143,7 @@ mod tests {
     #[test]
     fn hill_climb_touches_a_subset_and_finds_a_feasible_best() {
         let cache = EvalCache::new();
-        let ctx = SweepContext { cache: &cache, workers: 2 };
+        let ctx = SweepContext::new(&cache, 2);
         let hc = HillClimb { seed: 7, restarts: 2, max_steps: 16 };
         let r = hc.run(&small_space(), &ctx).unwrap();
         assert!(!r.evals.is_empty());

@@ -44,6 +44,7 @@ use crate::sim::{DdrConfig, TimingReport};
 use crate::workload::{self, DesignPoint};
 
 use super::cache::{CacheKey, EvalCache};
+use super::journal::{space_fingerprint, Journal};
 use super::json::{self, Json};
 use super::space::DesignSpace;
 use super::strategy::SweepResult;
@@ -70,6 +71,18 @@ impl Session {
         }
     }
 
+    /// Ingest a recovered [`Journal`] (finalized or in-progress): the
+    /// journal's intact rows become session rows, so `preload` seeds a
+    /// cache from a crashed sweep's partial results exactly like it
+    /// does from a saved session.
+    pub fn from_journal(journal: &Journal) -> Session {
+        Session {
+            strategy: journal.strategy.clone(),
+            space: journal.space.clone(),
+            rows: journal.rows.clone(),
+        }
+    }
+
     /// Save atomically: write a sibling temp file, then rename over
     /// the target, so an interrupted save never truncates an existing
     /// session.
@@ -87,14 +100,25 @@ impl Session {
     }
 
     /// Merge another session's rows into this one (later duplicates of
-    /// the same content address are dropped).  Latencies must match —
-    /// rows evaluated under different operator latencies are different
-    /// computations and cannot share a session.
+    /// the same content address are dropped).  The sessions must cover
+    /// the *same* design space — compared by
+    /// [`space_fingerprint`] — because rows from different spaces (or
+    /// different operator latencies, which the fingerprint includes)
+    /// are different sweeps and silently unioning them would fabricate
+    /// a sweep nobody ran.
     pub fn merge(&mut self, other: &Session) -> Result<()> {
         if self.space.latency != other.space.latency {
             return Err(Error::Explore(
                 "session merge: operator latencies differ".into(),
             ));
+        }
+        let own = space_fingerprint(&self.space);
+        let theirs = space_fingerprint(&other.space);
+        if own != theirs {
+            return Err(Error::Explore(format!(
+                "session merge: space fingerprints differ ({own} vs {theirs}); \
+                 refusing to union sweeps of different spaces"
+            )));
         }
         let mut seen: HashSet<CacheKey> =
             self.rows.iter().map(|r| self.key_of(r)).collect();
@@ -107,14 +131,7 @@ impl Session {
     }
 
     fn key_of(&self, e: &Evaluation) -> CacheKey {
-        CacheKey::from_parts(
-            e.workload,
-            &e.design,
-            e.device,
-            e.timing.passes,
-            self.space.latency,
-            e.ddr,
-        )
+        row_key(e, self.space.latency)
     }
 
     /// Seed an evaluation cache with every row; returns the number of
@@ -156,7 +173,15 @@ impl Session {
     }
 }
 
-fn encode_space(s: &DesignSpace) -> Json {
+/// The cache key of a serialized row: its full content address under
+/// the given operator latencies.  The single definition shared by
+/// session preload/merge and the journal's dedupe set, so the three
+/// layers can never disagree on row identity.
+pub(crate) fn row_key(e: &Evaluation, latency: OpLatency) -> CacheKey {
+    CacheKey::from_parts(e.workload, &e.design, e.device, e.timing.passes, latency, e.ddr)
+}
+
+pub(crate) fn encode_space(s: &DesignSpace) -> Json {
     json::obj(vec![
         ("workload", json::str(s.workload)),
         (
@@ -179,7 +204,7 @@ fn encode_space(s: &DesignSpace) -> Json {
     ])
 }
 
-fn decode_space(v: &Json) -> Result<DesignSpace> {
+pub(crate) fn decode_space(v: &Json) -> Result<DesignSpace> {
     let workload = workload::get(v.field("workload")?.as_str()?)?.name();
     let mut grids = Vec::new();
     for g in v.field("grids")?.as_arr()? {
@@ -270,7 +295,7 @@ fn decode_resources(v: &Json) -> Result<Resources> {
     })
 }
 
-fn encode_row(e: &Evaluation) -> Json {
+pub(crate) fn encode_row(e: &Evaluation) -> Json {
     let limit = |o: Option<&'static str>| match o {
         Some(l) => json::str(l),
         None => Json::Null,
@@ -319,7 +344,7 @@ fn encode_row(e: &Evaluation) -> Json {
     ])
 }
 
-fn decode_row(v: &Json) -> Result<Evaluation> {
+pub(crate) fn decode_row(v: &Json) -> Result<Evaluation> {
     let workload = workload::get(v.field("workload")?.as_str()?)?.name();
     let device_name = v.field("device")?.as_str()?;
     let dev = device::by_name(device_name).ok_or_else(|| {

@@ -18,11 +18,17 @@
 //!   whenever the space contains infeasible cascades;
 //! * [`HillClimb`] — a seeded greedy walk with restarts for spaces too
 //!   large to enumerate; evaluates only the visited neighborhoods.
+//!
+//! Every strategy streams its completed rows to the
+//! [`SweepContext::sink`] observer (when one is set) *while the sweep
+//! runs, via the batch collector* — that is what lets a crash-safe
+//! journal persist a long sweep incrementally instead of only at the
+//! end (see [`super::journal`]).
 
 use std::collections::HashSet;
 use std::sync::Arc;
 
-use crate::coordinator::{evaluate_batch, BatchJob};
+use crate::coordinator::{evaluate_batch_observed, BatchJob};
 use crate::error::Result;
 use crate::explore::{self, sort_by_perf_per_watt, valid_ns, Evaluation};
 use crate::resource::soc_peripherals;
@@ -30,12 +36,29 @@ use crate::util::rng::XorShift64;
 use crate::workload::DesignPoint;
 
 use super::cache::{CacheKey, EvalCache};
+use super::journal::RowSink;
 use super::space::DesignSpace;
 
-/// Shared context of one sweep: the cache and the worker-pool width.
+/// Shared context of one sweep: the cache, the worker-pool width, and
+/// an optional streaming row observer (the crash-safe journal).
 pub struct SweepContext<'a> {
     pub cache: &'a EvalCache,
     pub workers: usize,
+    /// every completed evaluation is pushed here as it finishes —
+    /// before the strategy returns, so an interrupted sweep keeps its
+    /// rows (see [`super::journal`])
+    pub sink: Option<&'a dyn RowSink>,
+}
+
+impl<'a> SweepContext<'a> {
+    pub fn new(cache: &'a EvalCache, workers: usize) -> SweepContext<'a> {
+        SweepContext { cache, workers, sink: None }
+    }
+
+    /// Stream every completed row to `sink` (a journal writer).
+    pub fn with_sink(self, sink: &'a dyn RowSink) -> SweepContext<'a> {
+        SweepContext { sink: Some(sink), ..self }
+    }
 }
 
 /// Outcome of one strategy run over a space.
@@ -115,7 +138,8 @@ impl SearchStrategy for Exhaustive {
         let before = ctx.cache.stats();
         let cands = space.candidates();
         let jobs: Vec<BatchJob> = cands.iter().map(|c| (c.cfg, c.design)).collect();
-        let (evals, _) = evaluate_batch(&jobs, ctx.workers, Some(ctx.cache))?;
+        let (evals, _) =
+            evaluate_batch_observed(&jobs, ctx.workers, Some(ctx.cache), ctx.sink)?;
         Ok(finish(self.name(), evals, ctx, before, 0, jobs.len()))
     }
 }
@@ -250,7 +274,12 @@ impl SearchStrategy for BoundedPrune {
                 if wave.is_empty() {
                     continue;
                 }
-                let (wave_evals, _) = evaluate_batch(&wave, ctx.workers, Some(ctx.cache))?;
+                let (wave_evals, _) = evaluate_batch_observed(
+                    &wave,
+                    ctx.workers,
+                    Some(ctx.cache),
+                    ctx.sink,
+                )?;
                 for (e, &ci) in wave_evals.iter().zip(&wave_cols) {
                     let col = &mut cols[ci];
                     let nm = (e.design.n * e.design.m) as f64;
@@ -386,7 +415,8 @@ impl SearchStrategy for HillClimb {
                          visited: &mut HashSet<CacheKey>,
                          evals: &mut Vec<Arc<Evaluation>>|
          -> Result<Vec<Arc<Evaluation>>> {
-            let (out, _) = evaluate_batch(batch, ctx.workers, Some(ctx.cache))?;
+            let (out, _) =
+                evaluate_batch_observed(batch, ctx.workers, Some(ctx.cache), ctx.sink)?;
             // record first-visits (keyed like the cache)
             for ((cfg, design), e) in batch.iter().zip(&out) {
                 let key = CacheKey::new(design, cfg);

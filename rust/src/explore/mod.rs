@@ -188,7 +188,7 @@ pub fn explore(cfg: &ExploreConfig) -> Result<Vec<Evaluation>> {
     let space = DesignSpace::from_explore(cfg);
     let cache = crate::dse::EvalCache::new();
     let workers = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    let ctx = SweepContext { cache: &cache, workers };
+    let ctx = SweepContext::new(&cache, workers);
     let result = Exhaustive.run(&space, &ctx)?;
     let mut evals: Vec<Evaluation> =
         result.evals.iter().map(|e| (**e).clone()).collect();
@@ -336,12 +336,8 @@ mod tests {
         let cfg = ExploreConfig { keep_infeasible: true, ..small_cfg() };
         let parallel = explore(&cfg).unwrap();
         let cache = EvalCache::new();
-        let single = Exhaustive
-            .run(
-                &DesignSpace::from_explore(&cfg),
-                &SweepContext { cache: &cache, workers: 1 },
-            )
-            .unwrap();
+        let ctx = SweepContext::new(&cache, 1);
+        let single = Exhaustive.run(&DesignSpace::from_explore(&cfg), &ctx).unwrap();
         assert_eq!(parallel.len(), single.evals.len());
         for (a, b) in parallel.iter().zip(&single.evals) {
             assert_eq!(a.design, b.design);

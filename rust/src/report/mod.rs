@@ -294,9 +294,8 @@ mod tests {
             ..Default::default()
         });
         let cache = EvalCache::new();
-        let r = Exhaustive
-            .run(&space, &SweepContext { cache: &cache, workers: 1 })
-            .unwrap();
+        let ctx = SweepContext::new(&cache, 1);
+        let r = Exhaustive.run(&space, &ctx).unwrap();
         let cmp = strategy_comparison(&[&r]);
         assert!(cmp.contains("exhaustive"));
         assert!(cmp.contains("(1, 2)") || cmp.contains("(1, 1)"));

@@ -1,0 +1,349 @@
+//! Crash-injection harness for the append-only sweep journal.
+//!
+//! The journal's crash model is byte truncation: an append-only log
+//! interrupted at any moment is a prefix of the uninterrupted log (plus
+//! at most one torn tail record), so killing a sweep is simulated
+//! exactly by cutting its journal at a byte boundary.  The harness
+//! proves the two properties the journal exists for:
+//!
+//! 1. **recovery is exact** — for *every* truncation point of the
+//!    file, `Journal::recover` returns precisely the rows whose
+//!    records are intact in the prefix, bit-identically, and nothing
+//!    else (`recovery_at_every_byte_boundary_is_the_intact_prefix`);
+//! 2. **resume loses nothing** — a sweep interrupted mid-record and
+//!    resumed from its journal produces a `SweepResult` (rows, best,
+//!    Pareto frontier, counters) bit-identical to a sweep that never
+//!    crashed, for every strategy and every registered workload
+//!    (`interrupted_then_resumed_matches_uninterrupted`).
+//!
+//! Plus the `Session::merge` edge cases around journals: finalized ×
+//! in-progress, duplicate coordinates, and mismatched space
+//! fingerprints.
+
+use std::path::{Path, PathBuf};
+
+use spdx::dse::json::Json;
+use spdx::dse::{
+    BoundedPrune, DesignSpace, EvalCache, Exhaustive, HillClimb, Journal,
+    JournalWriter, SearchStrategy, Session, SweepContext, SweepResult,
+};
+use spdx::resource::STRATIX_V_5SGXEA7;
+use spdx::workload;
+
+fn small_space(workload: &'static str) -> DesignSpace {
+    DesignSpace {
+        workload,
+        grids: vec![(32, 16)],
+        max_n: 2,
+        max_m: 4,
+        devices: vec![&STRATIX_V_5SGXEA7],
+        ddr_variants: vec![Default::default()],
+        passes: 2,
+        latency: Default::default(),
+    }
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("spdx_crash_{tag}_{}.jnl", std::process::id()))
+}
+
+/// Run a strategy with a journal sink on a fresh cache, finalizing the
+/// journal like `dse sweep --journal` does.  `sync_every(1)` so every
+/// row is on disk the moment it completes.
+fn sweep_with_journal(
+    strategy: &dyn SearchStrategy,
+    space: &DesignSpace,
+    path: &Path,
+) -> SweepResult {
+    let cache = EvalCache::new();
+    let writer = JournalWriter::create(path, strategy.name(), space).unwrap().with_sync_every(1);
+    let ctx = SweepContext::new(&cache, 2).with_sink(&writer);
+    let result = strategy.run(space, &ctx).unwrap();
+    writer.finalize(&result).unwrap();
+    result
+}
+
+/// One record of a journal file: (start, content_end, kind).  The
+/// record's bytes are `start..content_end`, the newline terminator sits
+/// at `content_end`.
+fn record_spans(bytes: &[u8]) -> Vec<(usize, usize, String)> {
+    let mut spans = Vec::new();
+    let mut start = 0;
+    for (i, b) in bytes.iter().enumerate() {
+        if *b == b'\n' {
+            let line = std::str::from_utf8(&bytes[start..i]).unwrap();
+            let v = Json::parse(line).unwrap();
+            let kind = v.field("record").unwrap().as_str().unwrap().to_string();
+            spans.push((start, i, kind));
+            start = i + 1;
+        }
+    }
+    assert_eq!(start, bytes.len(), "journal must end with a newline");
+    spans
+}
+
+fn assert_rows_bit_identical(
+    a: &spdx::explore::Evaluation,
+    b: &spdx::explore::Evaluation,
+    tag: &str,
+) {
+    assert_eq!(a.workload, b.workload, "{tag}");
+    assert_eq!(a.device, b.device, "{tag}");
+    assert_eq!(a.design, b.design, "{tag}");
+    assert_eq!(a.pe_depth, b.pe_depth, "{tag}");
+    assert_eq!(a.resources.core, b.resources.core, "{tag}");
+    assert_eq!(a.resources.total, b.resources.total, "{tag}");
+    assert_eq!(a.timing.n_c, b.timing.n_c, "{tag}");
+    assert_eq!(a.timing.total_cycles, b.timing.total_cycles, "{tag}");
+    assert_eq!(a.timing.utilization.to_bits(), b.timing.utilization.to_bits(), "{tag}");
+    assert_eq!(a.power_w.to_bits(), b.power_w.to_bits(), "{tag}");
+    assert_eq!(a.perf_per_watt.to_bits(), b.perf_per_watt.to_bits(), "{tag}");
+    assert_eq!(a.infeasible, b.infeasible, "{tag}");
+}
+
+/// The crash-injection property test: truncate a finalized journal at
+/// **every** byte boundary and check recovery returns exactly the rows
+/// whose records are fully inside the prefix — the intact prefix of
+/// the uninterrupted run, bit-identically — and errors before the
+/// header is intact.
+#[test]
+fn recovery_at_every_byte_boundary_is_the_intact_prefix() {
+    let space = small_space("lbm");
+    let path = tmp("boundary_full");
+    let result = sweep_with_journal(&Exhaustive, &space, &path);
+    assert_eq!(result.evals.len(), 8);
+
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let spans = record_spans(&bytes);
+    assert_eq!(spans.first().unwrap().2, "header");
+    assert_eq!(spans.last().unwrap().2, "finalize");
+    assert_eq!(spans.iter().filter(|s| s.2 == "row").count(), 8);
+    let header_end = spans[0].1;
+    let finalize_end = spans.last().unwrap().1;
+
+    let full = {
+        let cut_path = tmp("boundary_ref");
+        std::fs::write(&cut_path, &bytes).unwrap();
+        let j = Journal::recover(&cut_path).unwrap();
+        std::fs::remove_file(&cut_path).ok();
+        j
+    };
+    assert_eq!(full.rows.len(), 8);
+    assert!(full.complete());
+
+    let cut_path = tmp("boundary_cut");
+    for t in 0..=bytes.len() {
+        std::fs::write(&cut_path, &bytes[..t]).unwrap();
+        let recovered = Journal::recover(&cut_path);
+        if t < header_end {
+            assert!(recovered.is_err(), "cut at {t}: recovery must refuse a headerless log");
+            continue;
+        }
+        let j = recovered.unwrap_or_else(|e| panic!("cut at {t}: {e}"));
+        let want_rows = spans
+            .iter()
+            .filter(|(_, end, kind)| kind == "row" && *end <= t)
+            .count();
+        assert_eq!(j.rows.len(), want_rows, "cut at {t}");
+        for (i, (a, b)) in j.rows.iter().zip(&full.rows).enumerate() {
+            assert_rows_bit_identical(a, b, &format!("cut at {t}, row {i}"));
+        }
+        assert_eq!(
+            j.complete(),
+            finalize_end <= t,
+            "cut at {t}: finalize record intact iff fully on disk"
+        );
+        assert!(j.intact_bytes as usize <= t, "cut at {t}");
+    }
+    std::fs::remove_file(&cut_path).ok();
+}
+
+fn strategies() -> Vec<Box<dyn SearchStrategy>> {
+    vec![
+        Box::new(Exhaustive),
+        Box::new(BoundedPrune::default()),
+        Box::new(HillClimb { seed: 7, restarts: 2, max_steps: 16 }),
+    ]
+}
+
+fn assert_results_identical(a: &SweepResult, b: &SweepResult, tag: &str) {
+    assert_eq!(a.candidates, b.candidates, "{tag}: candidates");
+    assert_eq!(a.skipped, b.skipped, "{tag}: skipped");
+    assert_eq!(
+        a.evaluated + a.cache_hits as usize,
+        b.evaluated + b.cache_hits as usize,
+        "{tag}: total evaluation touches"
+    );
+    assert_eq!(a.evals.len(), b.evals.len(), "{tag}: row count");
+    for (i, (x, y)) in a.evals.iter().zip(&b.evals).enumerate() {
+        assert_rows_bit_identical(x, y, &format!("{tag}, row {i}"));
+    }
+    let best = |r: &SweepResult| {
+        r.best().map(|e| (e.design, e.perf_per_watt.to_bits()))
+    };
+    assert_eq!(best(a), best(b), "{tag}: best");
+    let frontier = |r: &SweepResult| {
+        let mut v: Vec<(u32, u32, &str)> = r
+            .pareto()
+            .iter()
+            .map(|e| (e.design.n, e.design.m, e.device))
+            .collect();
+        v.sort();
+        v
+    };
+    assert_eq!(frontier(a), frontier(b), "{tag}: pareto frontier");
+}
+
+/// Keyed row set of a journal (journal row order is completion order,
+/// which is scheduling-dependent — compare as sets).
+fn row_keys(j: &Journal) -> Vec<(String, u32, u32, u64)> {
+    let mut keys: Vec<(String, u32, u32, u64)> = Vec::new();
+    for e in &j.rows {
+        keys.push((
+            format!("{}/{}", e.workload, e.device),
+            e.design.n,
+            e.design.m,
+            e.perf_per_watt.to_bits(),
+        ));
+    }
+    keys.sort();
+    keys
+}
+
+/// The acceptance-criterion test: for every strategy and every
+/// registered workload, a sweep interrupted mid-record (journal cut in
+/// the middle of a row) and resumed from the recovered journal yields
+/// a `SweepResult` bit-identical to the uninterrupted sweep, and the
+/// resumed journal converges to the same row set, finalized.
+#[test]
+fn interrupted_then_resumed_matches_uninterrupted() {
+    for name in workload::names() {
+        let space = small_space(name);
+        for strategy in strategies() {
+            let tag = format!("{name}/{}", strategy.name());
+            let path = tmp(&format!("resume_{name}_{}", strategy.name()));
+            let uninterrupted = sweep_with_journal(&*strategy, &space, &path);
+            let bytes = std::fs::read(&path).unwrap();
+            let spans = record_spans(&bytes);
+            let full = Journal::recover(&path).unwrap();
+            assert!(full.complete(), "{tag}");
+            assert!(!full.rows.is_empty(), "{tag}: journal must have rows");
+
+            // crash: cut into the middle of a row record so recovery
+            // must both drop a torn tail and keep the intact prefix
+            let rows: Vec<&(usize, usize, String)> =
+                spans.iter().filter(|s| s.2 == "row").collect();
+            let mid = rows[rows.len() / 2];
+            let cut = (mid.0 + mid.1) / 2;
+            std::fs::write(&path, &bytes[..cut]).unwrap();
+
+            let partial = Journal::recover(&path).unwrap_or_else(|e| panic!("{tag}: {e}"));
+            assert!(partial.rows.len() < full.rows.len(), "{tag}");
+            assert!(!partial.complete(), "{tag}");
+            assert_eq!(partial.fingerprint, full.fingerprint, "{tag}");
+
+            // resume: seed a fresh cache from the journaled rows, run
+            // the same strategy, appending to the recovered journal
+            let cache = EvalCache::new();
+            let seeded = Session::from_journal(&partial).preload(&cache);
+            assert_eq!(seeded, partial.rows.len(), "{tag}");
+            let writer = JournalWriter::resume(&path, &partial).unwrap().with_sync_every(1);
+            let ctx = SweepContext::new(&cache, 2).with_sink(&writer);
+            let resumed = strategy.run(&space, &ctx).unwrap();
+            writer.finalize(&resumed).unwrap();
+
+            // journaled rows were answered from the cache, not redone
+            assert!(
+                resumed.cache_hits >= seeded as u64,
+                "{tag}: every recovered row must be reused"
+            );
+            let touches = uninterrupted.evaluated + uninterrupted.cache_hits as usize;
+            assert!(
+                resumed.evaluated <= touches - seeded,
+                "{tag}: resume recomputed a journaled row"
+            );
+            assert_results_identical(&uninterrupted, &resumed, &tag);
+
+            // the journal converged: same row set as the full run,
+            // finalized again
+            let final_journal = Journal::recover(&path).unwrap();
+            std::fs::remove_file(&path).ok();
+            assert!(final_journal.complete(), "{tag}");
+            assert_eq!(row_keys(&final_journal), row_keys(&full), "{tag}");
+        }
+    }
+}
+
+/// Satellite: `Session::merge` edge cases around journals.
+#[test]
+fn merge_of_finalized_and_in_progress_journals_dedupes() {
+    let space = small_space("jacobi");
+    let path = tmp("merge_full");
+    sweep_with_journal(&Exhaustive, &space, &path);
+    let bytes = std::fs::read(&path).unwrap();
+    let full = Journal::recover(&path).unwrap();
+    assert!(full.complete());
+
+    // an in-progress copy: keep the header and the first few rows
+    let spans = record_spans(&bytes);
+    let rows: Vec<&(usize, usize, String)> = spans.iter().filter(|s| s.2 == "row").collect();
+    let cut = rows[2].1 + 1; // three intact rows, no finalize
+    let partial_path = tmp("merge_partial");
+    std::fs::write(&partial_path, &bytes[..cut]).unwrap();
+    let partial = Journal::recover(&partial_path).unwrap();
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(&partial_path).ok();
+    assert_eq!(partial.rows.len(), 3);
+    assert!(!partial.complete());
+
+    // finalized <- in-progress: duplicate coords across sessions must
+    // not be unioned twice
+    let mut merged = Session::from_journal(&full);
+    merged.merge(&Session::from_journal(&partial)).unwrap();
+    assert_eq!(merged.rows.len(), full.rows.len());
+
+    // in-progress <- finalized: the partial session completes
+    let mut grown = Session::from_journal(&partial);
+    grown.merge(&Session::from_journal(&full)).unwrap();
+    assert_eq!(grown.rows.len(), full.rows.len());
+    let keyed = |rows: &[spdx::explore::Evaluation]| {
+        let mut v: Vec<(u32, u32)> = rows.iter().map(|e| (e.design.n, e.design.m)).collect();
+        v.sort();
+        v
+    };
+    assert_eq!(keyed(&grown.rows), keyed(&full.rows));
+}
+
+/// Satellite: merging sessions over different spaces must error, not
+/// silently union rows of sweeps nobody ran.
+#[test]
+fn merge_refuses_mismatched_space_fingerprints() {
+    let base = small_space("lbm");
+    let mut a = Session {
+        strategy: "exhaustive".to_string(),
+        space: base.clone(),
+        rows: vec![],
+    };
+    for other in [
+        DesignSpace { grids: vec![(64, 32)], ..base.clone() },
+        DesignSpace { max_m: 3, ..base.clone() },
+        DesignSpace { passes: 9, ..base.clone() },
+        small_space("jacobi"),
+    ] {
+        let b = Session {
+            strategy: "exhaustive".to_string(),
+            space: other,
+            rows: vec![],
+        };
+        let err = a.merge(&b).unwrap_err().to_string();
+        assert!(err.contains("fingerprints differ"), "{err}");
+    }
+    // the identical space still merges
+    let b = Session {
+        strategy: "bounded-prune".to_string(),
+        space: base,
+        rows: vec![],
+    };
+    a.merge(&b).unwrap();
+}

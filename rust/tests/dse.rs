@@ -2,8 +2,8 @@
 //! cache-counter semantics, session resume, and multi-device sweeps.
 
 use spdx::dse::{
-    BoundedPrune, DesignSpace, EvalCache, Exhaustive, HillClimb, SearchStrategy,
-    Session, SweepContext, SweepResult,
+    space_fingerprint, BoundedPrune, DesignSpace, EvalCache, Exhaustive, HillClimb,
+    Journal, JournalWriter, SearchStrategy, Session, SweepContext, SweepResult,
 };
 use spdx::explore::ExploreConfig;
 use spdx::resource::{Device, ARRIA_10_GX1150, STRATIX_V_5SGXEA7};
@@ -24,7 +24,7 @@ fn small_space(workload: &'static str) -> DesignSpace {
 
 fn run(strategy: &dyn SearchStrategy, space: &DesignSpace) -> SweepResult {
     let cache = EvalCache::new();
-    let ctx = SweepContext { cache: &cache, workers: 2 };
+    let ctx = SweepContext::new(&cache, 2);
     strategy.run(space, &ctx).unwrap()
 }
 
@@ -133,7 +133,7 @@ fn bounded_prune_matches_exhaustive_for_every_workload() {
 fn repeated_sweep_hits_cache_and_recomputes_nothing() {
     let space = small_space("lbm");
     let cache = EvalCache::new();
-    let ctx = SweepContext { cache: &cache, workers: 2 };
+    let ctx = SweepContext::new(&cache, 2);
 
     let cold = Exhaustive.run(&space, &ctx).unwrap();
     let s1 = cache.stats();
@@ -164,7 +164,7 @@ fn repeated_sweep_hits_cache_and_recomputes_nothing() {
 fn cache_is_shared_across_strategies() {
     let space = small_space("jacobi");
     let cache = EvalCache::new();
-    let ctx = SweepContext { cache: &cache, workers: 2 };
+    let ctx = SweepContext::new(&cache, 2);
     let ex = Exhaustive.run(&space, &ctx).unwrap();
     assert!(ex.evaluated > 0);
     let pr = BoundedPrune::default().run(&space, &ctx).unwrap();
@@ -178,7 +178,7 @@ fn cache_is_shared_across_strategies() {
 fn session_resume_recomputes_nothing() {
     let space = small_space("wave");
     let cache = EvalCache::new();
-    let ctx = SweepContext { cache: &cache, workers: 2 };
+    let ctx = SweepContext::new(&cache, 2);
     let first = Exhaustive.run(&space, &ctx).unwrap();
     assert_eq!(first.evaluated, 8);
 
@@ -199,7 +199,7 @@ fn session_resume_recomputes_nothing() {
 
     let cache2 = EvalCache::new();
     assert_eq!(loaded.preload(&cache2), 8);
-    let ctx2 = SweepContext { cache: &cache2, workers: 2 };
+    let ctx2 = SweepContext::new(&cache2, 2);
     let resumed = Exhaustive.run(&space, &ctx2).unwrap();
     assert_eq!(resumed.evaluated, 0, "resume must recompute nothing");
     assert_eq!(resumed.cache_hits, 8);
@@ -223,6 +223,61 @@ fn hill_climb_finds_the_winner_on_a_cascade_column() {
         assert!(hc.evals.len() <= hc.candidates);
         assert_eq!(hc.evals.len() + hc.skipped, hc.candidates, "seed {seed}");
     }
+}
+
+/// Satellite: `HillClimb` determinism under resume — a restart on a
+/// cache warmed from a previous run's rows must walk the same path and
+/// report the same best point as the cold run, recomputing nothing.
+#[test]
+fn hill_climb_is_deterministic_under_resume() {
+    let space = small_space("lbm");
+    let hc = HillClimb { seed: 42, restarts: 2, max_steps: 16 };
+    let cache = EvalCache::new();
+    let cold = hc.run(&space, &SweepContext::new(&cache, 2)).unwrap();
+    assert!(cold.evaluated > 0);
+    let cold_best = cold.best().expect("a feasible best");
+
+    let cache2 = EvalCache::new();
+    Session::from_sweep(&cold, &space).preload(&cache2);
+    let warm = hc.run(&space, &SweepContext::new(&cache2, 2)).unwrap();
+    assert_eq!(warm.evaluated, 0, "warm restart must recompute nothing");
+    assert!(warm.cache_hits > 0);
+    let warm_best = warm.best().expect("a feasible best");
+    assert_eq!(cold_best.design, warm_best.design);
+    assert_eq!(cold_best.perf_per_watt.to_bits(), warm_best.perf_per_watt.to_bits());
+    assert_eq!(cold.evals.len(), warm.evals.len());
+    assert_eq!(cold.skipped, warm.skipped);
+    for (a, b) in cold.evals.iter().zip(&warm.evals) {
+        assert_eq!(a.design, b.design);
+        assert_eq!(a.perf_per_watt.to_bits(), b.perf_per_watt.to_bits());
+    }
+}
+
+/// Extends the empty-space regression to the journal: a journaled
+/// sweep of an empty space is just a header and a finalize record, and
+/// recovery reproduces the (empty) space faithfully.
+#[test]
+fn empty_space_sweeps_journal_cleanly() {
+    let space = DesignSpace { devices: vec![], ..small_space("lbm") };
+    let path = std::env::temp_dir().join(format!(
+        "spdx_dse_empty_journal_{}.jnl",
+        std::process::id()
+    ));
+    let cache = EvalCache::new();
+    let writer = JournalWriter::create(&path, "hill-climb", &space).unwrap();
+    let r = HillClimb::default()
+        .run(&space, &SweepContext::new(&cache, 1).with_sink(&writer))
+        .unwrap();
+    assert_eq!(r.candidates, 0);
+    writer.finalize(&r).unwrap();
+
+    let j = Journal::recover(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert!(j.complete());
+    assert!(j.rows.is_empty());
+    assert_eq!(j.space.devices.len(), 0);
+    assert_eq!(j.fingerprint, space_fingerprint(&space));
+    assert_eq!(j.finalized.unwrap().candidates, 0);
 }
 
 /// Multi-device sweep: the same design space judged on two parts —
