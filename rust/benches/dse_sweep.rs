@@ -12,6 +12,7 @@ use spdx::dse::{
     BoundedPrune, DesignSpace, EvalCache, Exhaustive, SearchStrategy, SweepContext,
 };
 use spdx::explore::{explore, ExploreConfig};
+use spdx::obs::Obs;
 use spdx::workload;
 
 fn main() {
@@ -76,6 +77,30 @@ fn main() {
         16.0 / s_cold.median,
         16.0 / s_warm.median
     );
+
+    section("observability overhead: metrics registry on the warm sweep");
+    {
+        // warm sweeps are the worst case for telemetry overhead: every
+        // lookup is a cache hit, so the per-row bookkeeping is the
+        // largest fraction of the work
+        let s_bare = bench("warm sweep, no telemetry", 0, 3, || {
+            let r = Exhaustive.run(&space, &warm_ctx).unwrap();
+            assert_eq!(r.evaluated, 0);
+        });
+        let obs = Obs::new();
+        let obs_ctx = SweepContext::new(&warm_cache, workers).with_obs(&obs);
+        let s_obs = bench("warm sweep, metrics registry", 0, 3, || {
+            let r = Exhaustive.run(&space, &obs_ctx).unwrap();
+            assert_eq!(r.evaluated, 0);
+        });
+        println!(
+            "  -> telemetry overhead {:+.1}% on the warm path ({:.2} -> {:.2} ms)",
+            100.0 * (s_obs.median / s_bare.median - 1.0),
+            s_bare.median * 1e3,
+            s_obs.median * 1e3
+        );
+        assert!(obs.metrics.counter("sweep.cache_hits").get() > 0);
+    }
 
     section("strategy comparison: pruning vs exhaustive evaluation counts");
     {

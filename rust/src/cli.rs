@@ -11,6 +11,7 @@
 //!   emit-verilog [--workload NAME] --n N --m M [--grid WxH]
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::coordinator::Coordinator;
 use crate::dfg;
@@ -27,6 +28,7 @@ use crate::lbm::workload::{
     fluid_max_diff, grid_to_state, LbmRunner, DEFAULT_ONE_TAU,
 };
 use crate::lbm::LbmDesign;
+use crate::obs::{Obs, Progress, TraceSink};
 use crate::report;
 use crate::resource::device;
 use crate::runtime::{dense_to_state, state_to_dense, PjrtRuntime};
@@ -119,14 +121,24 @@ COMMANDS:
               [--grids WxH[,WxH...]] [--devices KEY[,KEY...]|all]
               [--ddr NAME[,NAME...]] [--max-n N] [--max-m M] [--passes P]
               [--min-util X] [--seed S] [--restarts R] [--workers K]
-              [--session FILE] [--journal FILE] [--bench [FILE]]
+              [--session FILE] [--journal FILE] [--sync-every N]
+              [--bench [FILE]] [--trace FILE] [--metrics FILE]
+              [--profile] [--progress [SECS]]
                                            multi-device sweep (cached, resumable);
                                            --journal appends every row to an
-                                           fsync'd crash-safe log as it completes;
+                                           fsync'd crash-safe log as it completes
+                                           (--sync-every batches the fsyncs);
                                            --bench re-sweeps warm and writes
-                                           cold/warm evals/sec to FILE
-                                           (default BENCH_dse.json)
-  dse resume  --session FILE | --journal FILE  [space/strategy flags]
+                                           cold/warm evals/sec + a per-phase
+                                           breakdown to FILE (default
+                                           BENCH_dse.json);
+                                           --trace writes Chrome trace_event
+                                           spans (load in Perfetto); --metrics
+                                           dumps the counter registry as JSON;
+                                           --profile prints a per-phase latency
+                                           table; --progress reports live status
+                                           on stderr every SECS (default 2)
+  dse resume  --session FILE | --journal FILE  [space/strategy/telemetry flags]
                                            reload a session — or recover a
                                            (possibly torn) journal — and finish
                                            the sweep without recomputing its rows
@@ -460,6 +472,107 @@ fn file_flag<'a>(args: &'a Args, name: &str) -> Result<Option<&'a str>> {
     }
 }
 
+/// Telemetry sinks selected by the sweep flags.  `obs` stays `None`
+/// when every sink is off, so the default path pays nothing.
+struct SweepObs {
+    obs: Option<Arc<Obs>>,
+    trace_path: Option<String>,
+    metrics_path: Option<String>,
+    profile: bool,
+}
+
+/// Build the observer from `--trace` / `--metrics` / `--profile` /
+/// `--progress` (and `--bench`, whose phase breakdown needs the phase
+/// histograms even with every explicit sink off).
+fn sweep_obs(args: &Args) -> Result<SweepObs> {
+    let trace_path = file_flag(args, "trace")?.map(str::to_string);
+    let metrics_path = file_flag(args, "metrics")?.map(str::to_string);
+    let profile = args.flag("profile").is_some();
+    let progress = match args.flag("progress") {
+        None => None,
+        Some("true") => Some(2.0),
+        Some(v) => Some(v.parse::<f64>().map_err(|_| {
+            Error::Explore(format!("bad value for --progress: `{v}`"))
+        })?),
+    };
+    let bench = args.flag("bench").is_some();
+    if trace_path.is_none()
+        && metrics_path.is_none()
+        && !profile
+        && progress.is_none()
+        && !bench
+    {
+        return Ok(SweepObs {
+            obs: None,
+            trace_path: None,
+            metrics_path: None,
+            profile: false,
+        });
+    }
+    let mut obs = Obs::new();
+    if let Some(path) = &trace_path {
+        obs = obs.with_trace(TraceSink::create(path)?);
+    }
+    if let Some(secs) = progress {
+        obs = obs.with_progress(Progress::new(secs));
+    }
+    Ok(SweepObs {
+        obs: Some(Arc::new(obs)),
+        trace_path,
+        metrics_path,
+        profile,
+    })
+}
+
+/// Flush the telemetry sinks once the sweep is done: mirror the cache
+/// and journal counters into the registry, close the trace, write the
+/// metrics snapshot, print the phase profile.
+fn finish_obs(
+    so: &SweepObs,
+    cache: &EvalCache,
+    journal: Option<&JournalWriter>,
+    workers: usize,
+    candidates: usize,
+) -> Result<()> {
+    let Some(obs) = &so.obs else {
+        return Ok(());
+    };
+    obs.absorb_cache(cache);
+    if let Some(w) = journal {
+        obs.absorb_journal(w);
+    }
+    obs.metrics.gauge("sweep.workers").set(workers as i64);
+    obs.metrics.gauge("sweep.candidates").set(candidates as i64);
+    if let Some(trace) = &obs.trace {
+        trace.finish()?;
+        if let Some(path) = &so.trace_path {
+            println!("  trace written to {path} (chrome://tracing or Perfetto)");
+        }
+    }
+    if let Some(path) = &so.metrics_path {
+        std::fs::write(path, obs.metrics.snapshot().to_string())?;
+        println!("  metrics snapshot written to {path}");
+    }
+    if so.profile {
+        print!("{}", report::phase_profile(&obs.phase_stats()));
+    }
+    Ok(())
+}
+
+/// The `--bench` phase breakdown: one stats object per phase, from the
+/// observer's histograms (empty object when uninstrumented).
+fn bench_phases(so: &SweepObs) -> dse_json::Json {
+    match &so.obs {
+        None => dse_json::obj(vec![]),
+        Some(o) => dse_json::Json::Obj(
+            o.phase_stats()
+                .iter()
+                .map(|(name, st)| (name.to_string(), st.encode()))
+                .collect(),
+        ),
+    }
+}
+
 fn cmd_dse_sweep(args: &Args) -> Result<i32> {
     let space = dse_space(args)?;
     let empty = dse_json::obj(vec![]);
@@ -468,6 +581,8 @@ fn cmd_dse_sweep(args: &Args) -> Result<i32> {
         args.flag("strategy").unwrap_or("exhaustive"),
         &empty,
     )?;
+    let so = sweep_obs(args)?;
+    let sync_every: usize = args.get("sync-every", 0)?;
     let cache = EvalCache::new();
     let journal = match file_flag(args, "journal")? {
         Some(path) => {
@@ -484,18 +599,31 @@ fn cmd_dse_sweep(args: &Args) -> Result<i32> {
                     )));
                 }
             }
-            Some(JournalWriter::create_with_params(
+            let mut writer = JournalWriter::create_with_params(
                 path,
                 strategy.name(),
                 &params,
                 &space,
-            )?)
+            )?;
+            if sync_every > 0 {
+                writer = writer.with_sync_every(sync_every);
+            }
+            if let Some(obs) = &so.obs {
+                writer = writer.with_obs(obs.clone());
+            }
+            Some(writer)
         }
         None => None,
     };
     let mut ctx = SweepContext::new(&cache, dse_workers(args)?);
     if let Some(writer) = &journal {
         ctx = ctx.with_sink(writer);
+    }
+    if let Some(obs) = &so.obs {
+        ctx = ctx.with_obs(obs);
+        if let Some(p) = &obs.progress {
+            p.add_total(space.len() as u64);
+        }
     }
     println!(
         "sweeping {} candidates ({} workload, {} grids x {} devices x {} ddr) with `{}` ...",
@@ -529,7 +657,7 @@ fn cmd_dse_sweep(args: &Args) -> Result<i32> {
             warm.cache_hits
         );
         let bench = dse_json::obj(vec![
-            ("version", dse_json::uint(1)),
+            ("version", dse_json::uint(2)),
             ("workload", dse_json::str(space.workload)),
             ("strategy", dse_json::str(result.strategy)),
             ("candidates", dse_json::uint(result.candidates as u64)),
@@ -551,6 +679,7 @@ fn cmd_dse_sweep(args: &Args) -> Result<i32> {
                 ]),
             ),
             ("speedup", dse_json::num(dt / dt_warm.max(1e-9))),
+            ("phases", bench_phases(&so)),
         ]);
         std::fs::write(path, bench.to_string())?;
         println!("  bench written to {path}");
@@ -564,10 +693,12 @@ fn cmd_dse_sweep(args: &Args) -> Result<i32> {
         );
     }
     if let Some(path) = file_flag(args, "session")? {
-        let session = Session::from_sweep(&result, &space);
+        let session =
+            Session::from_sweep(&result, &space).with_params(params.clone());
         session.save(path)?;
         println!("  session saved to {path} ({} rows)", session.rows.len());
     }
+    finish_obs(&so, &cache, journal.as_ref(), ctx.workers, space.len())?;
     Ok(0)
 }
 
@@ -594,10 +725,20 @@ fn resume_session(args: &Args, path: &str) -> Result<i32> {
         .flag("strategy")
         .map(str::to_string)
         .unwrap_or_else(|| prior.strategy.clone());
-    let strategy = dse_strategy(args, &strategy_name)?;
+    // knob defaults come from the session's recorded params, so a bare
+    // resume replays the same hill-climb / prune search
+    let (strategy, params) =
+        dse_strategy_with_params(args, &strategy_name, &prior.params)?;
+    let so = sweep_obs(args)?;
     let cache = EvalCache::new();
     let loaded = prior.preload(&cache);
-    let ctx = SweepContext::new(&cache, dse_workers(args)?);
+    let mut ctx = SweepContext::new(&cache, dse_workers(args)?);
+    if let Some(obs) = &so.obs {
+        ctx = ctx.with_obs(obs);
+        if let Some(p) = &obs.progress {
+            p.add_total(space.len() as u64);
+        }
+    }
     println!(
         "resuming from {path}: {loaded} rows preloaded, sweeping {} candidates with `{}` ...",
         space.len(),
@@ -612,10 +753,12 @@ fn resume_session(args: &Args, path: &str) -> Result<i32> {
     );
     let mut merged = prior;
     merged.strategy = result.strategy.to_string();
+    merged.params = params;
     merged.space = space.clone();
     merged.merge(&Session::from_sweep(&result, &space))?;
     merged.save(path)?;
     println!("  session now {} rows ({path})", merged.rows.len());
+    finish_obs(&so, &cache, None, ctx.workers, space.len())?;
     Ok(0)
 }
 
@@ -635,12 +778,14 @@ fn resume_journal(args: &Args, path: &str) -> Result<i32> {
         .unwrap_or_else(|| prior.strategy.clone());
     let (strategy, params) =
         dse_strategy_with_params(args, &strategy_name, &prior.params)?;
+    let so = sweep_obs(args)?;
+    let sync_every: usize = args.get("sync-every", 0)?;
     let cache = EvalCache::new();
     let loaded = Session::from_journal(&prior).preload(&cache);
     let unchanged = space_fingerprint(&space) == prior.fingerprint
         && strategy.name() == prior.strategy
         && params == prior.params;
-    let writer = if unchanged {
+    let mut writer = if unchanged {
         JournalWriter::resume(path, &prior)?
     } else {
         // the flags changed the sweep (space, strategy or knobs):
@@ -659,7 +804,19 @@ fn resume_journal(args: &Args, path: &str) -> Result<i32> {
         std::fs::rename(&tmp, path)?;
         writer
     };
-    let ctx = SweepContext::new(&cache, dse_workers(args)?).with_sink(&writer);
+    if sync_every > 0 {
+        writer = writer.with_sync_every(sync_every);
+    }
+    if let Some(obs) = &so.obs {
+        writer = writer.with_obs(obs.clone());
+    }
+    let mut ctx = SweepContext::new(&cache, dse_workers(args)?).with_sink(&writer);
+    if let Some(obs) = &so.obs {
+        ctx = ctx.with_obs(obs);
+        if let Some(p) = &obs.progress {
+            p.add_total(space.len() as u64);
+        }
+    }
     println!(
         "resuming journal {path}: {loaded} rows recovered ({}), sweeping {} \
          candidates with `{}` ...",
@@ -679,6 +836,7 @@ fn resume_journal(args: &Args, path: &str) -> Result<i32> {
         "  journal finalized: {} rows ({path})",
         writer.rows_written()
     );
+    finish_obs(&so, &cache, Some(&writer), ctx.workers, space.len())?;
     Ok(0)
 }
 
@@ -961,7 +1119,7 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         std::fs::remove_file(&path).ok();
         let b = dse_json::Json::parse(&text).unwrap();
-        assert_eq!(b.field("version").unwrap().as_u64().unwrap(), 1);
+        assert_eq!(b.field("version").unwrap().as_u64().unwrap(), 2);
         assert_eq!(b.field("candidates").unwrap().as_u64().unwrap(), 4);
         let cold = b.field("cold").unwrap();
         let warm = b.field("warm").unwrap();
@@ -969,6 +1127,128 @@ mod tests {
         assert!(warm.field("evals_per_sec").unwrap().as_f64().unwrap() > 0.0);
         assert_eq!(warm.field("cache_hits").unwrap().as_u64().unwrap(), 4);
         assert!(b.field("speedup").unwrap().as_f64().unwrap() > 0.0);
+        // v2: the phase breakdown rides along (4 cold evaluations, the
+        // warm cache hits don't touch the phase histograms)
+        let phases = b.field("phases").unwrap();
+        for phase in ["compile", "resource-replay", "timing", "power"] {
+            let st = phases.field(phase).unwrap();
+            assert_eq!(st.field("count").unwrap().as_u64().unwrap(), 4, "{phase}");
+            let p50 = st.field("p50_ns").unwrap().as_u64().unwrap();
+            let p95 = st.field("p95_ns").unwrap().as_u64().unwrap();
+            let max = st.field("max_ns").unwrap().as_u64().unwrap();
+            assert!(p50 <= p95 && p95 <= max, "{phase}: {p50} {p95} {max}");
+        }
+    }
+
+    #[test]
+    fn dse_sweep_telemetry_writes_trace_and_metrics() {
+        let dir = std::env::temp_dir();
+        let pid = std::process::id();
+        let jnl = dir.join(format!("spdx_cli_tele_{pid}.jnl"));
+        let trace = dir.join(format!("spdx_cli_tele_{pid}_trace.json"));
+        let metrics = dir.join(format!("spdx_cli_tele_{pid}_metrics.json"));
+        let code = run(vec![
+            "dse".into(),
+            "sweep".into(),
+            "--grids".into(),
+            "64x32".into(),
+            "--max-n".into(),
+            "2".into(),
+            "--max-m".into(),
+            "2".into(),
+            "--passes".into(),
+            "2".into(),
+            "--journal".into(),
+            jnl.to_string_lossy().into_owned(),
+            "--sync-every".into(),
+            "1".into(),
+            "--trace".into(),
+            trace.to_string_lossy().into_owned(),
+            "--metrics".into(),
+            metrics.to_string_lossy().into_owned(),
+            "--profile".into(),
+        ])
+        .unwrap();
+        assert_eq!(code, 0);
+        let trace_text = std::fs::read_to_string(&trace).unwrap();
+        let metrics_text = std::fs::read_to_string(&metrics).unwrap();
+        std::fs::remove_file(&jnl).ok();
+        std::fs::remove_file(&trace).ok();
+        std::fs::remove_file(&metrics).ok();
+
+        let events = dse_json::Json::parse(&trace_text).unwrap();
+        assert!(events.as_arr().unwrap().len() > 8, "trace has spans");
+        for needle in ["resource-replay", "fsync", "exhaustive"] {
+            assert!(trace_text.contains(needle), "trace mentions {needle}");
+        }
+
+        let m = dse_json::Json::parse(&metrics_text).unwrap();
+        let c = m.field("counters").unwrap();
+        let count = |name: &str| c.field(name).unwrap().as_u64().unwrap();
+        assert_eq!(count("sweep.evaluated"), 4);
+        assert_eq!(count("sweep.rows"), 4);
+        assert_eq!(count("journal.rows"), 4);
+        // sync-every 1: header + 4 rows + finalize
+        assert_eq!(count("journal.fsyncs"), 6);
+        assert_eq!(count("cache.misses"), 4);
+        let h = m.field("histograms").unwrap();
+        let compile = h.field("eval.phase.compile_ns").unwrap();
+        assert_eq!(compile.field("count").unwrap().as_u64().unwrap(), 4);
+        assert!(h.field("journal.fsync_ns").is_ok());
+    }
+
+    #[test]
+    fn bad_progress_interval_is_rejected() {
+        let bad = Args::parse(&["--progress".into(), "fast".into()]);
+        let err = sweep_obs(&bad).err().unwrap().to_string();
+        assert!(err.contains("--progress"), "{err}");
+        let bare = Args::parse(&["--progress".into()]);
+        assert!(sweep_obs(&bare).unwrap().obs.is_some(), "bare flag = default");
+        let off = Args::parse(&[]);
+        assert!(sweep_obs(&off).unwrap().obs.is_none(), "flags off = no obs");
+    }
+
+    #[test]
+    fn resume_session_replays_recorded_strategy_params() {
+        let path = std::env::temp_dir()
+            .join(format!("spdx_cli_sess_params_{}.json", std::process::id()));
+        let p = path.to_string_lossy().into_owned();
+        let code = run(vec![
+            "dse".into(),
+            "sweep".into(),
+            "--grids".into(),
+            "64x32".into(),
+            "--max-n".into(),
+            "2".into(),
+            "--max-m".into(),
+            "2".into(),
+            "--passes".into(),
+            "2".into(),
+            "--strategy".into(),
+            "hill".into(),
+            "--seed".into(),
+            "9".into(),
+            "--restarts".into(),
+            "1".into(),
+            "--max-steps".into(),
+            "4".into(),
+            "--session".into(),
+            p.clone(),
+        ])
+        .unwrap();
+        assert_eq!(code, 0);
+        let s = Session::load(&path).unwrap();
+        assert_eq!(s.strategy, "hill-climb");
+        assert_eq!(s.params.field("seed").unwrap().as_u64().unwrap(), 9);
+        assert_eq!(s.params.field("max-steps").unwrap().as_u64().unwrap(), 4);
+        // a bare resume keeps the recorded knobs instead of defaults
+        let code =
+            run(vec!["dse".into(), "resume".into(), "--session".into(), p]).unwrap();
+        assert_eq!(code, 0);
+        let s = Session::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(s.params.field("seed").unwrap().as_u64().unwrap(), 9);
+        assert_eq!(s.params.field("restarts").unwrap().as_u64().unwrap(), 1);
     }
 
     #[test]
@@ -1021,6 +1301,11 @@ mod tests {
         let err = file_flag(&b, "session").unwrap_err().to_string();
         assert!(err.contains("--session needs a FILE"), "{err}");
         assert!(file_flag(&b, "journal").unwrap().is_none());
+        for flag in ["trace", "metrics"] {
+            let a = Args::parse(&[format!("--{flag}")]);
+            let err = sweep_obs(&a).err().unwrap().to_string();
+            assert!(err.contains(&format!("--{flag} needs a FILE")), "{err}");
+        }
     }
 
     #[test]

@@ -1,5 +1,7 @@
 //! Run metrics for DSE jobs.
 
+use crate::obs::{HistStats, Phase, PhaseHistograms, PhaseTimes};
+
 /// Aggregated metrics of one exploration run.
 #[derive(Clone, Debug)]
 pub struct RunMetrics {
@@ -8,21 +10,45 @@ pub struct RunMetrics {
     pub feasible: usize,
     /// per-job wall seconds, indexed by job id (0.0 = not finished)
     pub job_seconds: Vec<f64>,
+    /// per-phase wall-time histograms (ns), fed from the observer's
+    /// [`PhaseTimes`]; empty when the batch ran uninstrumented (the
+    /// bare path takes no phase timestamps)
+    pub phases: PhaseHistograms,
 }
 
 impl RunMetrics {
     pub fn new(jobs: usize) -> Self {
-        RunMetrics { jobs, completed: 0, feasible: 0, job_seconds: vec![0.0; jobs] }
+        RunMetrics {
+            jobs,
+            completed: 0,
+            feasible: 0,
+            job_seconds: vec![0.0; jobs],
+            phases: PhaseHistograms::default(),
+        }
     }
 
+    /// Record one completed job.  An out-of-range `index` is a caller
+    /// bug: flagged by `debug_assert!` in debug builds, and counted
+    /// but not timed (rather than silently vanishing — or panicking)
+    /// in release.
     pub fn record(&mut self, index: usize, seconds: f64, feasible: bool) {
+        debug_assert!(
+            index < self.job_seconds.len(),
+            "job index {index} out of range ({} jobs)",
+            self.job_seconds.len()
+        );
         self.completed += 1;
         if feasible {
             self.feasible += 1;
         }
-        if index < self.job_seconds.len() {
-            self.job_seconds[index] = seconds;
+        if let Some(slot) = self.job_seconds.get_mut(index) {
+            *slot = seconds;
         }
+    }
+
+    /// Fold one evaluation's per-phase wall times into the histograms.
+    pub fn record_phases(&mut self, times: &PhaseTimes) {
+        self.phases.record(times);
     }
 
     /// Sum of per-job evaluation time (CPU-ish seconds).
@@ -30,12 +56,30 @@ impl RunMetrics {
         self.job_seconds.iter().sum()
     }
 
+    /// The slowest job.  NaN-safe: a NaN duration (impossible from
+    /// `Instant`, possible from synthetic metrics) ranks below every
+    /// real duration instead of panicking the comparator.
     pub fn slowest_job(&self) -> Option<(usize, f64)> {
+        fn key(seconds: f64) -> f64 {
+            if seconds.is_nan() {
+                f64::NEG_INFINITY
+            } else {
+                seconds
+            }
+        }
         self.job_seconds
             .iter()
             .cloned()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .max_by(|a, b| key(a.1).total_cmp(&key(b.1)))
+    }
+
+    /// `(phase name, stats)` rows in [`Phase::ALL`] order.
+    pub fn phase_stats(&self) -> Vec<(&'static str, HistStats)> {
+        Phase::ALL
+            .iter()
+            .map(|&p| (p.name(), self.phases.get(p).stats()))
+            .collect()
     }
 }
 
@@ -52,5 +96,53 @@ mod tests {
         assert_eq!(m.feasible, 1);
         assert_eq!(m.total_seconds(), 3.0);
         assert_eq!(m.slowest_job(), Some((2, 2.0)));
+    }
+
+    #[test]
+    fn out_of_range_index_is_guarded_not_dropped() {
+        // regression: `record` used to silently ignore the index,
+        // leaving `completed` and `job_seconds` inconsistent with no
+        // signal at all
+        if cfg!(debug_assertions) {
+            let hook = std::panic::take_hook();
+            std::panic::set_hook(Box::new(|_| {}));
+            let panicked = std::panic::catch_unwind(|| {
+                let mut m = RunMetrics::new(1);
+                m.record(5, 1.0, true);
+            })
+            .is_err();
+            std::panic::set_hook(hook);
+            assert!(panicked, "debug builds must flag the out-of-range index");
+        } else {
+            let mut m = RunMetrics::new(1);
+            m.record(5, 1.0, true);
+            // release: counted but not timed
+            assert_eq!(m.completed, 1);
+            assert_eq!(m.total_seconds(), 0.0);
+        }
+    }
+
+    #[test]
+    fn slowest_job_survives_nan() {
+        // regression: partial_cmp().unwrap() used to panic on NaN
+        let mut m = RunMetrics::new(3);
+        m.record(0, f64::NAN, true);
+        m.record(1, 2.0, true);
+        assert_eq!(m.slowest_job(), Some((1, 2.0)));
+    }
+
+    #[test]
+    fn phase_histograms_accumulate_per_evaluation() {
+        let mut m = RunMetrics::new(2);
+        let mut t = PhaseTimes::default();
+        t.set(Phase::Compile, 100);
+        t.set(Phase::Timing, 900);
+        m.record_phases(&t);
+        m.record_phases(&t);
+        assert_eq!(m.phases.count(), 2);
+        let stats = m.phase_stats();
+        assert_eq!(stats[0].0, "compile");
+        assert_eq!(stats[0].1.sum, 200);
+        assert_eq!(stats[2].1.max, 900);
     }
 }

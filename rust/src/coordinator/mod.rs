@@ -25,7 +25,10 @@ use std::thread;
 
 use crate::dse::{EvalCache, RowSink};
 use crate::error::{Error, Result};
-use crate::explore::{candidates, evaluate, sort_by_perf_per_watt, Evaluation, ExploreConfig};
+use crate::explore::{
+    candidates, evaluate, evaluate_phased, sort_by_perf_per_watt, Evaluation, ExploreConfig,
+};
+use crate::obs::{Obs, PhaseTimes};
 use crate::workload::DesignPoint;
 
 pub use metrics::RunMetrics;
@@ -54,55 +57,82 @@ pub fn evaluate_batch(
     workers: usize,
     cache: Option<&EvalCache>,
 ) -> Result<(Vec<Arc<Evaluation>>, RunMetrics)> {
-    evaluate_batch_observed(jobs, workers, cache, None)
+    evaluate_batch_observed(jobs, workers, cache, None, None)
 }
 
-/// [`evaluate_batch`] with a streaming observer: every completed row
+/// [`evaluate_batch`] with streaming observers: every completed row
 /// is pushed to `sink` *while the batch is still running* (the
 /// collector drains the worker channel concurrently with evaluation),
 /// in completion order.  This is what makes sweeps crash-safe: a
 /// journaling sink has persisted every finished evaluation before the
 /// batch — let alone the strategy — returns.  A sink error is
 /// reported like a failed job (the batch still drains).
+///
+/// With an [`Obs`], workers additionally emit per-evaluation trace
+/// spans (split into compile / resource-replay / timing / power
+/// phases) on their own tracks, the collector feeds the row counters,
+/// latency histograms and progress line, and per-worker busy/idle
+/// time is accounted.  With `None` the batch takes the exact
+/// pre-telemetry path — no extra timestamps, no atomics.
 pub fn evaluate_batch_observed(
     jobs: &[BatchJob],
     workers: usize,
     cache: Option<&EvalCache>,
     sink: Option<&dyn RowSink>,
+    obs: Option<&Obs>,
 ) -> Result<(Vec<Arc<Evaluation>>, RunMetrics)> {
     let n_jobs = jobs.len();
     let mut metrics = RunMetrics::new(n_jobs);
     let next = AtomicUsize::new(0);
-    let (tx, rx) = mpsc::channel::<(usize, Result<Arc<Evaluation>>, f64)>();
+    type Row = (usize, Result<Arc<Evaluation>>, f64, Option<PhaseTimes>);
+    let (tx, rx) = mpsc::channel::<Row>();
     let mut slots: Vec<Option<Arc<Evaluation>>> = vec![None; n_jobs];
     let mut first_err: Option<Error> = None;
 
     thread::scope(|scope| {
-        for _ in 0..workers.max(1).min(n_jobs.max(1)) {
+        for w in 0..workers.max(1).min(n_jobs.max(1)) {
             let tx = tx.clone();
             let next = &next;
-            scope.spawn(move || loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                let Some((cfg, design)) = jobs.get(i) else { break };
-                let t0 = std::time::Instant::now();
-                let result = match cache {
-                    Some(c) => c.evaluate(design, cfg),
-                    None => evaluate(design, cfg).map(Arc::new),
-                }
-                .map_err(|err| with_job_context(err, cfg, design));
-                let dt = t0.elapsed().as_secs_f64();
-                if tx.send((i, result, dt)).is_err() {
-                    break;
-                }
-            });
+            // named threads so trace tracks read `worker-3`, not an id
+            let builder = thread::Builder::new().name(format!("worker-{w}"));
+            builder
+                .spawn_scoped(scope, move || {
+                    let spawned = std::time::Instant::now();
+                    let mut busy_ns = 0u64;
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        let Some((cfg, design)) = jobs.get(i) else { break };
+                        let t0 = std::time::Instant::now();
+                        let (result, times) = evaluate_job(cfg, design, cache, obs);
+                        let result =
+                            result.map_err(|err| with_job_context(err, cfg, design));
+                        let dt = t0.elapsed();
+                        busy_ns += dt.as_nanos() as u64;
+                        if tx.send((i, result, dt.as_secs_f64(), times)).is_err() {
+                            break;
+                        }
+                    }
+                    if let Some(o) = obs {
+                        o.worker_done(spawned.elapsed().as_nanos() as u64, busy_ns);
+                    }
+                })
+                .expect("spawn DSE worker");
         }
         drop(tx);
         // drain inside the scope: rows reach the sink as workers
         // finish them, not after the whole batch completes
-        for (index, result, dt) in rx {
+        for (index, result, dt, times) in rx {
             match result {
                 Ok(e) => {
                     metrics.record(index, dt, e.infeasible.is_none());
+                    if let Some(o) = obs {
+                        if let Some(t) = &times {
+                            metrics.record_phases(t);
+                        }
+                        o.row_done((dt * 1e9) as u64, times.as_ref(), || {
+                            hit_rate(cache)
+                        });
+                    }
                     if let Some(sink) = sink {
                         if let Err(err) = sink.row(&e) {
                             if first_err.is_none() {
@@ -114,6 +144,9 @@ pub fn evaluate_batch_observed(
                 }
                 Err(err) => {
                     metrics.record(index, dt, false);
+                    if let Some(o) = obs {
+                        o.row_failed();
+                    }
                     if first_err.is_none() {
                         first_err = Some(err);
                     }
@@ -126,6 +159,51 @@ pub fn evaluate_batch_observed(
     }
 
     Ok((slots.into_iter().flatten().collect(), metrics))
+}
+
+/// Evaluate one job, through the cache when present.  With an
+/// observer, the evaluation runs under a per-design trace span on
+/// this worker's track, and the returned [`PhaseTimes`] are `Some`
+/// exactly when a real evaluation ran (`None` = the cache answered).
+fn evaluate_job(
+    cfg: &ExploreConfig,
+    design: &DesignPoint,
+    cache: Option<&EvalCache>,
+    obs: Option<&Obs>,
+) -> (Result<Arc<Evaluation>>, Option<PhaseTimes>) {
+    let Some(o) = obs else {
+        let result = match cache {
+            Some(c) => c.evaluate(design, cfg),
+            None => evaluate(design, cfg).map(Arc::new),
+        };
+        return (result, None);
+    };
+    let name = format!(
+        "eval {} (n={}, m={}) {}x{} @ {}",
+        cfg.workload, design.n, design.m, design.w, design.h, cfg.device.key
+    );
+    o.begin("eval", &name, Vec::new());
+    let out = match cache {
+        Some(c) => c.evaluate_phased(design, cfg, obs),
+        None => evaluate_phased(design, cfg, obs).map(|(e, t)| (Arc::new(e), Some(t))),
+    };
+    o.end("eval", &name);
+    match out {
+        Ok((e, times)) => (Ok(e), times),
+        Err(err) => (Err(err), None),
+    }
+}
+
+/// Global cache hit rate, for the progress line (None without a
+/// cache).  Costs shard locks, so callers invoke it lazily.
+fn hit_rate(cache: Option<&EvalCache>) -> Option<f64> {
+    let stats = cache?.stats();
+    let total = stats.hits + stats.misses;
+    if total == 0 {
+        None
+    } else {
+        Some(stats.hits as f64 / total as f64)
+    }
 }
 
 /// The coordinator.
@@ -244,6 +322,30 @@ mod tests {
         assert!(err.contains("(n=3, m=1)"), "{err}");
         assert!(err.contains("64x32"), "{err}");
         assert!(err.contains("Stratix V"), "{err}");
+    }
+
+    #[test]
+    fn observed_batch_counts_rows_and_phases() {
+        use crate::obs::Obs;
+        let cfg = small_cfg();
+        let jobs: Vec<BatchJob> =
+            candidates(&cfg).into_iter().map(|d| (cfg, d)).collect();
+        let cache = EvalCache::new();
+        let obs = Obs::new();
+        let (evals, metrics) =
+            evaluate_batch_observed(&jobs, 2, Some(&cache), None, Some(&obs)).unwrap();
+        assert_eq!(evals.len(), 4);
+        assert_eq!(obs.metrics.counter("sweep.evaluated").get(), 4);
+        assert_eq!(obs.metrics.counter("sweep.cache_hits").get(), 0);
+        assert_eq!(metrics.phases.count(), 4, "one phase sample per real eval");
+        // warm re-run through the same cache: all rows are hits
+        let (_, warm) =
+            evaluate_batch_observed(&jobs, 2, Some(&cache), None, Some(&obs)).unwrap();
+        assert_eq!(obs.metrics.counter("sweep.cache_hits").get(), 4);
+        assert_eq!(warm.phases.count(), 0, "hits must not pollute phase stats");
+        // two batches x two workers, all lifetimes accounted
+        assert_eq!(obs.metrics.counter("worker.spawned").get(), 4);
+        assert!(obs.metrics.counter("worker.busy_ns").get() > 0);
     }
 
     #[test]

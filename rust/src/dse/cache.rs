@@ -15,9 +15,10 @@ use std::sync::{Arc, Mutex};
 
 use crate::dfg::OpLatency;
 use crate::error::Result;
-use crate::explore::{evaluate, Evaluation, ExploreConfig};
+use crate::explore::{evaluate_with_phased, Evaluation, ExploreConfig};
+use crate::obs::{Obs, PhaseTimes};
 use crate::sim::DdrConfig;
-use crate::workload::DesignPoint;
+use crate::workload::{self, DesignPoint};
 
 /// Full content address of one evaluation.  Float parameters are
 /// compared bit-exactly (`to_bits`), which is the right equality for
@@ -103,13 +104,38 @@ pub struct CacheStats {
 /// pool no longer serializes on one global lock.
 const SHARDS: usize = 16;
 
-/// Thread-safe in-memory evaluation cache: N-way sharded map with
-/// atomic hit/miss counters.  Rows are stored behind `Arc`, so a hit
-/// hands back a pointer instead of cloning the full evaluation.
-pub struct EvalCache {
-    shards: [Mutex<HashMap<CacheKey, Arc<Evaluation>>>; SHARDS],
+/// One cache shard: its slice of the map plus its own hit/miss
+/// counters, so shard-level contention and load stay observable.
+struct Shard {
+    map: Mutex<HashMap<CacheKey, Arc<Evaluation>>>,
     hits: AtomicU64,
     misses: AtomicU64,
+}
+
+impl Shard {
+    fn new() -> Shard {
+        Shard {
+            map: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: self.map.lock().unwrap().len(),
+        }
+    }
+}
+
+/// Thread-safe in-memory evaluation cache: N-way sharded map with
+/// per-shard atomic hit/miss counters.  Rows are stored behind `Arc`,
+/// so a hit hands back a pointer instead of cloning the full
+/// evaluation.
+pub struct EvalCache {
+    shards: [Shard; SHARDS],
 }
 
 impl Default for EvalCache {
@@ -120,32 +146,30 @@ impl Default for EvalCache {
 
 impl EvalCache {
     pub fn new() -> Self {
-        EvalCache {
-            shards: std::array::from_fn(|_| Mutex::new(HashMap::new())),
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
-        }
+        EvalCache { shards: std::array::from_fn(|_| Shard::new()) }
     }
 
-    fn shard(&self, key: &CacheKey) -> &Mutex<HashMap<CacheKey, Arc<Evaluation>>> {
+    fn shard(&self, key: &CacheKey) -> &Shard {
         let mut h = std::collections::hash_map::DefaultHasher::new();
         key.hash(&mut h);
         &self.shards[(h.finish() as usize) & (SHARDS - 1)]
     }
 
-    /// Look a key up, counting the hit or miss.
+    /// Look a key up, counting the hit or miss on the key's shard.
     pub fn lookup(&self, key: &CacheKey) -> Option<Arc<Evaluation>> {
-        let found = self.shard(key).lock().unwrap().get(key).cloned();
+        let shard = self.shard(key);
+        let found = shard.map.lock().unwrap().get(key).cloned();
         match &found {
-            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
-            None => self.misses.fetch_add(1, Ordering::Relaxed),
+            Some(_) => shard.hits.fetch_add(1, Ordering::Relaxed),
+            None => shard.misses.fetch_add(1, Ordering::Relaxed),
         };
         found
     }
 
     /// Insert without touching the counters (used by session preload).
     pub fn seed(&self, key: CacheKey, eval: Arc<Evaluation>) {
-        self.shard(&key).lock().unwrap().insert(key, eval);
+        let shard = self.shard(&key);
+        shard.map.lock().unwrap().insert(key, eval);
     }
 
     /// Get-or-compute: the cached row if present, otherwise a real
@@ -155,25 +179,50 @@ impl EvalCache {
         design: &DesignPoint,
         cfg: &ExploreConfig,
     ) -> Result<Arc<Evaluation>> {
-        let key = CacheKey::new(design, cfg);
-        if let Some(hit) = self.lookup(&key) {
-            return Ok(hit);
-        }
-        let e = Arc::new(evaluate(design, cfg)?);
-        self.seed(key, e.clone());
-        Ok(e)
+        Ok(self.evaluate_phased(design, cfg, None)?.0)
     }
 
-    pub fn stats(&self) -> CacheStats {
-        CacheStats {
-            hits: self.hits.load(Ordering::Relaxed),
-            misses: self.misses.load(Ordering::Relaxed),
-            entries: self.len(),
+    /// [`EvalCache::evaluate`] with per-phase telemetry.  The returned
+    /// [`PhaseTimes`] are `Some` exactly when a real evaluation ran —
+    /// `None` means the cache answered — which is how the batch
+    /// collector discriminates `evaluated` from `cache_hits` rows.
+    pub fn evaluate_phased(
+        &self,
+        design: &DesignPoint,
+        cfg: &ExploreConfig,
+        obs: Option<&Obs>,
+    ) -> Result<(Arc<Evaluation>, Option<PhaseTimes>)> {
+        let key = CacheKey::new(design, cfg);
+        if let Some(hit) = self.lookup(&key) {
+            return Ok((hit, None));
         }
+        let wl = workload::get(cfg.workload)?;
+        let (e, times) = evaluate_with_phased(wl, design, cfg, obs)?;
+        let e = Arc::new(e);
+        self.seed(key, e.clone());
+        Ok((e, Some(times)))
+    }
+
+    /// Totals across all shards.
+    pub fn stats(&self) -> CacheStats {
+        let mut total = CacheStats::default();
+        for s in &self.shards {
+            let s = s.stats();
+            total.hits += s.hits;
+            total.misses += s.misses;
+            total.entries += s.entries;
+        }
+        total
+    }
+
+    /// Per-shard counters, in shard order (the metrics registry's
+    /// `cache.shardNN.*` breakdown).
+    pub fn shard_stats(&self) -> Vec<CacheStats> {
+        self.shards.iter().map(Shard::stats).collect()
     }
 
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+        self.shards.iter().map(|s| s.map.lock().unwrap().len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -274,8 +323,38 @@ mod tests {
         let populated = cache
             .shards
             .iter()
-            .filter(|s| !s.lock().unwrap().is_empty())
+            .filter(|s| !s.map.lock().unwrap().is_empty())
             .count();
         assert!(populated > 1, "all {distinct} keys landed in one shard");
+    }
+
+    #[test]
+    fn shard_stats_sum_to_totals() {
+        let cache = EvalCache::new();
+        let c = cfg();
+        for (n, m) in [(1u32, 1u32), (1, 2), (2, 1)] {
+            let d = DesignPoint::new(n, m, 64, 32);
+            cache.evaluate(&d, &c).unwrap(); // miss
+            cache.evaluate(&d, &c).unwrap(); // hit
+        }
+        let total = cache.stats();
+        assert_eq!((total.hits, total.misses, total.entries), (3, 3, 3));
+        let shards = cache.shard_stats();
+        assert_eq!(shards.len(), 16);
+        assert_eq!(shards.iter().map(|s| s.hits).sum::<u64>(), total.hits);
+        assert_eq!(shards.iter().map(|s| s.misses).sum::<u64>(), total.misses);
+        assert_eq!(shards.iter().map(|s| s.entries).sum::<usize>(), total.entries);
+    }
+
+    #[test]
+    fn evaluate_phased_flags_hits_with_none() {
+        let cache = EvalCache::new();
+        let c = cfg();
+        let d = DesignPoint::new(1, 1, 64, 32);
+        let (first, cold) = cache.evaluate_phased(&d, &c, None).unwrap();
+        assert!(cold.is_some(), "a miss must report phase times");
+        let (second, warm) = cache.evaluate_phased(&d, &c, None).unwrap();
+        assert!(warm.is_none(), "a hit must not");
+        assert!(Arc::ptr_eq(&first, &second));
     }
 }

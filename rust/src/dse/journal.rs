@@ -50,10 +50,11 @@
 use std::collections::HashSet;
 use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::Path;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::error::{Error, Result};
 use crate::explore::Evaluation;
+use crate::obs::Obs;
 
 use super::cache::CacheKey;
 use super::json::{self, Json};
@@ -284,6 +285,8 @@ struct Inner {
     /// rows appended since the last fsync
     pending: usize,
     sync_every: usize,
+    /// fsyncs issued over the journal's lifetime (header sync included)
+    fsyncs: u64,
 }
 
 /// Append-only journal writer.  Interior-mutable (`&self` append) so
@@ -292,6 +295,8 @@ struct Inner {
 pub struct JournalWriter {
     inner: Mutex<Inner>,
     latency: crate::dfg::OpLatency,
+    /// optional telemetry: fsync spans + `journal.fsync_ns` histogram
+    obs: Option<Arc<Obs>>,
 }
 
 impl JournalWriter {
@@ -328,12 +333,14 @@ impl JournalWriter {
         file.sync_data()?;
         Ok(JournalWriter {
             latency: space.latency,
+            obs: None,
             inner: Mutex::new(Inner {
                 file,
                 seen: HashSet::new(),
                 rows: 0,
                 pending: 0,
                 sync_every: DEFAULT_SYNC_EVERY,
+                fsyncs: 1, // the header sync above
             }),
         })
     }
@@ -362,12 +369,14 @@ impl JournalWriter {
         }
         Ok(JournalWriter {
             latency: recovered.space.latency,
+            obs: None,
             inner: Mutex::new(Inner {
                 file,
                 rows: recovered.rows.len() as u64,
                 seen,
                 pending: 0,
                 sync_every: DEFAULT_SYNC_EVERY,
+                fsyncs: 0,
             }),
         })
     }
@@ -377,6 +386,36 @@ impl JournalWriter {
     pub fn with_sync_every(self, every: usize) -> JournalWriter {
         self.inner.lock().unwrap().sync_every = every.max(1);
         self
+    }
+
+    /// Attach a telemetry sink: every fsync gets a trace span and a
+    /// `journal.fsync_ns` histogram sample.
+    pub fn with_obs(mut self, obs: Arc<Obs>) -> JournalWriter {
+        self.obs = Some(obs);
+        self
+    }
+
+    /// Flush pending rows to disk, counting the sync and (when a
+    /// telemetry sink is attached) timing it under a trace span.
+    fn fsync(&self, inner: &mut Inner) -> Result<()> {
+        let res = match &self.obs {
+            None => inner.file.sync_data(),
+            Some(o) => {
+                let span = format!("fsync ({} records pending)", inner.pending);
+                o.begin("journal", &span, Vec::new());
+                let start = std::time::Instant::now();
+                let res = inner.file.sync_data();
+                o.metrics
+                    .histogram("journal.fsync_ns")
+                    .record(start.elapsed().as_nanos() as u64);
+                o.end("journal", &span);
+                res
+            }
+        };
+        res?;
+        inner.fsyncs += 1;
+        inner.pending = 0;
+        Ok(())
     }
 
     /// Append one evaluated row (deduplicated by content address);
@@ -393,8 +432,7 @@ impl JournalWriter {
         inner.rows += 1;
         inner.pending += 1;
         if inner.pending >= inner.sync_every {
-            inner.file.sync_data()?;
-            inner.pending = 0;
+            self.fsync(&mut inner)?;
         }
         Ok(())
     }
@@ -402,9 +440,7 @@ impl JournalWriter {
     /// Force an fsync of everything appended so far.
     pub fn sync(&self) -> Result<()> {
         let mut inner = self.inner.lock().unwrap();
-        inner.file.sync_data()?;
-        inner.pending = 0;
-        Ok(())
+        self.fsync(&mut inner)
     }
 
     /// Write the finalize record (run counters) and fsync everything.
@@ -419,14 +455,19 @@ impl JournalWriter {
             ("candidates", json::uint(result.candidates as u64)),
         ]);
         write_record(&mut inner.file, &record)?;
-        inner.file.sync_data()?;
-        inner.pending = 0;
-        Ok(())
+        inner.pending += 1;
+        self.fsync(&mut inner)
     }
 
     /// Distinct rows written to (or recovered into) this journal.
     pub fn rows_written(&self) -> u64 {
         self.inner.lock().unwrap().rows
+    }
+
+    /// fsyncs issued over this writer's lifetime (the header sync of a
+    /// fresh journal counts; a resumed writer starts at zero).
+    pub fn fsyncs(&self) -> u64 {
+        self.inner.lock().unwrap().fsyncs
     }
 }
 
@@ -674,6 +715,38 @@ mod tests {
         std::fs::remove_file(&path).ok();
         assert_eq!(j.rows.len(), 2);
         assert!(j.complete());
+    }
+
+    #[test]
+    fn fsync_counter_tracks_batch_size() {
+        let path = tmp("fsyncs");
+        let rows = rows();
+        let w = JournalWriter::create(&path, "exhaustive", &space())
+            .unwrap()
+            .with_sync_every(1);
+        assert_eq!(w.fsyncs(), 1, "the header is synced at create");
+        for r in &rows {
+            w.append(r).unwrap();
+        }
+        assert_eq!(w.fsyncs(), 3, "sync-every 1 syncs each row");
+        w.append(&rows[0]).unwrap(); // deduped: no write, no sync
+        assert_eq!(w.fsyncs(), 3);
+        w.finalize(&dummy_result(2)).unwrap();
+        assert_eq!(w.fsyncs(), 4);
+        drop(w);
+
+        // batched: two rows, one shy of the batch, then an explicit sync
+        let w = JournalWriter::create(&path, "exhaustive", &space())
+            .unwrap()
+            .with_sync_every(3);
+        for r in &rows {
+            w.append(r).unwrap();
+        }
+        assert_eq!(w.fsyncs(), 1, "batch not reached: header sync only");
+        w.sync().unwrap();
+        assert_eq!(w.fsyncs(), 2);
+        drop(w);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -35,7 +35,11 @@
 //! All strategies evaluate through
 //! [`crate::coordinator::evaluate_batch`], so every sweep — pruned or
 //! not — uses the same worker pool, the same cache, and the same
-//! streaming journal hook.
+//! streaming journal hook.  The same plumbing carries the optional
+//! telemetry hub ([`crate::obs::Obs`], attached with
+//! [`SweepContext::with_obs`]): per-evaluation phase timings, strategy
+//! skip counters, wave/restart trace spans and journal fsync spans all
+//! ride the batch path, and with no observer attached none of it runs.
 //!
 //! `explore::explore` (the seed API) is a thin wrapper over
 //! [`Exhaustive`] on a single-device space.

@@ -8,12 +8,13 @@
 //! makes a re-run of the same sweep a pure cache walk — `dse resume`
 //! reports the hit count and recomputes nothing.
 //!
-//! Format (`version` 1, one JSON object):
+//! Format (`version` 2, one JSON object):
 //!
 //! ```json
 //! {
-//!   "version": 1,
-//!   "strategy": "exhaustive",
+//!   "version": 2,
+//!   "strategy": "hill-climb",
+//!   "params": { "seed": 9, "restarts": 4, "max-steps": 64 },
 //!   "space": { "workload": "lbm", "grids": [[720, 300]],
 //!              "max_n": 4, "max_m": 4, "devices": ["stratix-v"],
 //!              "ddr": [{...}], "passes": 3,
@@ -28,9 +29,12 @@
 //!
 //! The session records the *design space* it swept, not just the rows,
 //! so `dse resume` re-sweeps the same space by default (CLI flags only
-//! override the recorded axes).  Floats use shortest-roundtrip
-//! formatting, so a save/load cycle reproduces every metric
-//! bit-exactly.
+//! override the recorded axes).  Since version 2 it also records the
+//! strategy *parameters* (the journal header's trick), so resuming a
+//! `hill-climb` or `--min-util` sweep replays the same search instead
+//! of a default-configured one; version-1 files still load, with empty
+//! parameters.  Floats use shortest-roundtrip formatting, so a
+//! save/load cycle reproduces every metric bit-exactly.
 
 use std::collections::HashSet;
 use std::path::Path;
@@ -49,12 +53,17 @@ use super::json::{self, Json};
 use super::space::DesignSpace;
 use super::strategy::SweepResult;
 
-pub const SESSION_VERSION: u64 = 1;
+pub const SESSION_VERSION: u64 = 2;
 
 /// A loaded (or about-to-be-saved) sweep session.
 #[derive(Clone, Debug)]
 pub struct Session {
     pub strategy: String,
+    /// strategy parameters as swept (a JSON object; empty when the
+    /// strategy has none, and for version-1 files which predate the
+    /// field) — `dse resume --session` reruns the same search from
+    /// these
+    pub params: Json,
     /// the design space the rows were swept from
     pub space: DesignSpace,
     pub rows: Vec<Evaluation>,
@@ -62,22 +71,32 @@ pub struct Session {
 
 impl Session {
     /// Capture a sweep result (all touched rows) and the space it ran
-    /// over.
+    /// over.  Parameters start empty; attach them with
+    /// [`Session::with_params`].
     pub fn from_sweep(result: &SweepResult, space: &DesignSpace) -> Session {
         Session {
             strategy: result.strategy.to_string(),
+            params: Json::Obj(Vec::new()),
             space: space.clone(),
             rows: result.evals.iter().map(|e| (**e).clone()).collect(),
         }
     }
 
+    /// Record the strategy parameters the sweep ran with.
+    pub fn with_params(mut self, params: Json) -> Session {
+        self.params = params;
+        self
+    }
+
     /// Ingest a recovered [`Journal`] (finalized or in-progress): the
     /// journal's intact rows become session rows, so `preload` seeds a
     /// cache from a crashed sweep's partial results exactly like it
-    /// does from a saved session.
+    /// does from a saved session.  The journal header's strategy
+    /// parameters carry over.
     pub fn from_journal(journal: &Journal) -> Session {
         Session {
             strategy: journal.strategy.clone(),
+            params: journal.params.clone(),
             space: journal.space.clone(),
             rows: journal.rows.clone(),
         }
@@ -148,6 +167,7 @@ impl Session {
         json::obj(vec![
             ("version", json::uint(SESSION_VERSION)),
             ("strategy", json::str(&self.strategy)),
+            ("params", self.params.clone()),
             ("space", encode_space(&self.space)),
             ("rows", Json::Arr(self.rows.iter().map(encode_row).collect())),
         ])
@@ -155,11 +175,17 @@ impl Session {
 
     pub fn decode(v: &Json) -> Result<Session> {
         let version = v.field("version")?.as_u64()?;
-        if version != SESSION_VERSION {
+        if version == 0 || version > SESSION_VERSION {
             return Err(Error::Explore(format!(
-                "session version {version} unsupported (want {SESSION_VERSION})"
+                "session version {version} unsupported (want <= {SESSION_VERSION})"
             )));
         }
+        // version 1 predates the params field: decode as "no parameters
+        // recorded" so old sessions keep loading
+        let params = match version {
+            1 => Json::Obj(Vec::new()),
+            _ => v.field("params")?.clone(),
+        };
         let space = decode_space(v.field("space")?)?;
         let mut rows = Vec::new();
         for row in v.field("rows")?.as_arr()? {
@@ -167,6 +193,7 @@ impl Session {
         }
         Ok(Session {
             strategy: v.field("strategy")?.as_str()?.to_string(),
+            params,
             space,
             rows,
         })
@@ -440,6 +467,7 @@ mod tests {
         let rows = rows();
         let s = Session {
             strategy: "exhaustive".to_string(),
+            params: Json::Obj(Vec::new()),
             space: space(),
             rows: rows.clone(),
         };
@@ -474,6 +502,7 @@ mod tests {
         let rows = rows();
         let s = Session {
             strategy: "exhaustive".to_string(),
+            params: Json::Obj(Vec::new()),
             space: space(),
             rows,
         };
@@ -489,11 +518,13 @@ mod tests {
         let rows = rows();
         let mut a = Session {
             strategy: "exhaustive".to_string(),
+            params: Json::Obj(Vec::new()),
             space: space(),
             rows: vec![rows[0].clone()],
         };
         let b = Session {
             strategy: "bounded-prune".to_string(),
+            params: Json::Obj(Vec::new()),
             space: space(),
             rows: rows.clone(),
         };
@@ -502,6 +533,7 @@ mod tests {
 
         let c = Session {
             strategy: "exhaustive".to_string(),
+            params: Json::Obj(Vec::new()),
             space: DesignSpace {
                 latency: OpLatency { add: 9, ..OpLatency::default() },
                 ..space()
@@ -516,11 +548,67 @@ mod tests {
         let rows = rows();
         let s = Session {
             strategy: "x".to_string(),
+            params: Json::Obj(Vec::new()),
             space: space(),
             rows: vec![rows[0].clone()],
         };
         let mut text = s.encode().to_string();
         text = text.replace("Stratix V 5SGXEA7", "Vaporware 9000");
         assert!(Session::decode(&Json::parse(&text).unwrap()).is_err());
+    }
+
+    #[test]
+    fn params_roundtrip_and_v1_files_still_load() {
+        let params = json::obj(vec![
+            ("seed", json::num(9.0)),
+            ("restarts", json::num(2.0)),
+        ]);
+        let s = Session {
+            strategy: "hill-climb".to_string(),
+            params: Json::Obj(Vec::new()),
+            space: space(),
+            rows: rows(),
+        }
+        .with_params(params.clone());
+        let text = s.encode().to_string();
+        let back = Session::decode(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.params, params);
+        assert_eq!(back.params.field("seed").unwrap().as_u64().unwrap(), 9);
+
+        // a version-1 file has no params field: decodes to empty params
+        let v1 = text
+            .replace("\"version\":2", "\"version\":1")
+            .replace(&format!("\"params\":{},", params.to_string()), "");
+        let old = Session::decode(&Json::parse(&v1).unwrap()).unwrap();
+        assert_eq!(old.params, Json::Obj(Vec::new()));
+        assert_eq!(old.rows.len(), 2);
+
+        // versions we never wrote stay refused
+        let v9 = text.replace("\"version\":2", "\"version\":9");
+        assert!(Session::decode(&Json::parse(&v9).unwrap()).is_err());
+    }
+
+    #[test]
+    fn from_journal_carries_strategy_params() {
+        use super::super::journal::JournalWriter;
+        let path = std::env::temp_dir().join(format!(
+            "spdx_session_params_{}.jnl",
+            std::process::id()
+        ));
+        let params = json::obj(vec![("min-util", json::num(0.5))]);
+        let w = JournalWriter::create_with_params(
+            &path,
+            "bounded-prune",
+            &params,
+            &space(),
+        )
+        .unwrap();
+        w.append(&rows()[0]).unwrap();
+        drop(w);
+        let j = Journal::recover(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let s = Session::from_journal(&j);
+        assert_eq!(s.params, params);
+        assert_eq!(s.rows.len(), 1);
     }
 }

@@ -31,6 +31,7 @@ use std::sync::Arc;
 use crate::coordinator::{evaluate_batch_observed, BatchJob};
 use crate::error::Result;
 use crate::explore::{self, sort_by_perf_per_watt, valid_ns, Evaluation};
+use crate::obs::Obs;
 use crate::resource::soc_peripherals;
 use crate::util::rng::XorShift64;
 use crate::workload::DesignPoint;
@@ -40,7 +41,7 @@ use super::journal::RowSink;
 use super::space::DesignSpace;
 
 /// Shared context of one sweep: the cache, the worker-pool width, and
-/// an optional streaming row observer (the crash-safe journal).
+/// optional streaming observers (the crash-safe journal, telemetry).
 pub struct SweepContext<'a> {
     pub cache: &'a EvalCache,
     pub workers: usize,
@@ -48,16 +49,26 @@ pub struct SweepContext<'a> {
     /// before the strategy returns, so an interrupted sweep keeps its
     /// rows (see [`super::journal`])
     pub sink: Option<&'a dyn RowSink>,
+    /// sweep telemetry (metrics / trace spans / progress line, see
+    /// [`crate::obs`]); strategies count their pruning decisions and
+    /// wrap their waves in spans, the batch layer does the rest —
+    /// `None` costs nothing
+    pub obs: Option<&'a Obs>,
 }
 
 impl<'a> SweepContext<'a> {
     pub fn new(cache: &'a EvalCache, workers: usize) -> SweepContext<'a> {
-        SweepContext { cache, workers, sink: None }
+        SweepContext { cache, workers, sink: None, obs: None }
     }
 
     /// Stream every completed row to `sink` (a journal writer).
     pub fn with_sink(self, sink: &'a dyn RowSink) -> SweepContext<'a> {
         SweepContext { sink: Some(sink), ..self }
+    }
+
+    /// Record sweep telemetry into `obs`.
+    pub fn with_obs(self, obs: &'a Obs) -> SweepContext<'a> {
+        SweepContext { obs: Some(obs), ..self }
     }
 }
 
@@ -138,8 +149,16 @@ impl SearchStrategy for Exhaustive {
         let before = ctx.cache.stats();
         let cands = space.candidates();
         let jobs: Vec<BatchJob> = cands.iter().map(|c| (c.cfg, c.design)).collect();
-        let (evals, _) =
-            evaluate_batch_observed(&jobs, ctx.workers, Some(ctx.cache), ctx.sink)?;
+        let span = format!("exhaustive ({} jobs)", jobs.len());
+        if let Some(o) = ctx.obs {
+            o.begin("strategy", &span, Vec::new());
+        }
+        let out =
+            evaluate_batch_observed(&jobs, ctx.workers, Some(ctx.cache), ctx.sink, ctx.obs);
+        if let Some(o) = ctx.obs {
+            o.end("strategy", &span);
+        }
+        let (evals, _) = out?;
         Ok(finish(self.name(), evals, ctx, before, 0, jobs.len()))
     }
 }
@@ -250,6 +269,11 @@ impl SearchStrategy for BoundedPrune {
                 for (ci, col) in cols.iter_mut().enumerate() {
                     if col.dead || (col.low_util && m > 1) {
                         skipped += 1;
+                        if let Some(o) = ctx.obs {
+                            let reason =
+                                if col.dead { "dead-column" } else { "low-util" };
+                            o.skip(self.name(), reason, 1);
+                        }
                         continue;
                     }
                     // monotone DSP-census lower bound
@@ -257,6 +281,9 @@ impl SearchStrategy for BoundedPrune {
                         if pp * (col.n * m) as f64 + soc_dsps > cap[3] {
                             col.dead = true;
                             skipped += 1;
+                            if let Some(o) = ctx.obs {
+                                o.skip(self.name(), "dsp-census", 1);
+                            }
                             continue;
                         }
                     }
@@ -265,6 +292,9 @@ impl SearchStrategy for BoundedPrune {
                         if bound.iter().zip(&cap).any(|(b, c)| b > c) {
                             col.dead = true;
                             skipped += 1;
+                            if let Some(o) = ctx.obs {
+                                o.skip(self.name(), "extrapolation", 1);
+                            }
                             continue;
                         }
                     }
@@ -274,12 +304,21 @@ impl SearchStrategy for BoundedPrune {
                 if wave.is_empty() {
                     continue;
                 }
-                let (wave_evals, _) = evaluate_batch_observed(
+                let span = format!("wave m={m} ({} jobs)", wave.len());
+                if let Some(o) = ctx.obs {
+                    o.begin("strategy", &span, Vec::new());
+                }
+                let out = evaluate_batch_observed(
                     &wave,
                     ctx.workers,
                     Some(ctx.cache),
                     ctx.sink,
-                )?;
+                    ctx.obs,
+                );
+                if let Some(o) = ctx.obs {
+                    o.end("strategy", &span);
+                }
+                let (wave_evals, _) = out?;
                 for (e, &ci) in wave_evals.iter().zip(&wave_cols) {
                     let col = &mut cols[ci];
                     let nm = (e.design.n * e.design.m) as f64;
@@ -416,7 +455,7 @@ impl SearchStrategy for HillClimb {
                          evals: &mut Vec<Arc<Evaluation>>|
          -> Result<Vec<Arc<Evaluation>>> {
             let (out, _) =
-                evaluate_batch_observed(batch, ctx.workers, Some(ctx.cache), ctx.sink)?;
+                evaluate_batch_observed(batch, ctx.workers, Some(ctx.cache), ctx.sink, ctx.obs)?;
             // record first-visits (keyed like the cache)
             for ((cfg, design), e) in batch.iter().zip(&out) {
                 let key = CacheKey::new(design, cfg);
@@ -427,54 +466,74 @@ impl SearchStrategy for HillClimb {
             Ok(out)
         };
 
-        for _ in 0..self.restarts.max(1) {
-            // random start
-            let grid = rng.below(space.grids.len() as u64) as usize;
-            let ns = valid_ns(space.max_n, space.grids[grid].0);
-            if ns.is_empty() {
-                continue;
+        for restart in 0..self.restarts.max(1) {
+            let span = format!("restart {restart}");
+            if let Some(o) = ctx.obs {
+                o.metrics.add("strategy.hill-climb.restarts", 1);
+                o.begin("strategy", &span, Vec::new());
             }
-            let mut cur = Coord {
-                grid,
-                device: rng.below(space.devices.len() as u64) as usize,
-                ddr: rng.below(space.ddr_variants.len() as u64) as usize,
-                n_idx: rng.below(ns.len() as u64) as usize,
-                m: 1 + rng.below(space.max_m as u64) as u32,
-            };
-            let start_job = coord_job(space, cur);
-            let mut cur_score = score(&touch(&[start_job], &mut visited, &mut evals)?[0]);
-
-            for _ in 0..self.max_steps {
-                let neigh = self.neighbors(space, cur);
-                if neigh.is_empty() {
-                    break;
+            // immediately-invoked so an evaluation error still closes
+            // the restart span before propagating
+            let walk = (|| -> Result<()> {
+                // random start
+                let grid = rng.below(space.grids.len() as u64) as usize;
+                let ns = valid_ns(space.max_n, space.grids[grid].0);
+                if ns.is_empty() {
+                    return Ok(());
                 }
-                let jobs: Vec<BatchJob> =
-                    neigh.iter().map(|&c| coord_job(space, c)).collect();
-                let out = touch(&jobs, &mut visited, &mut evals)?;
-                let Some((best_i, best_score)) = out
-                    .iter()
-                    .enumerate()
-                    .map(|(i, e)| (i, score(e)))
-                    .max_by(|a, b| a.1.total_cmp(&b.1))
-                else {
-                    break;
+                let mut cur = Coord {
+                    grid,
+                    device: rng.below(space.devices.len() as u64) as usize,
+                    ddr: rng.below(space.ddr_variants.len() as u64) as usize,
+                    n_idx: rng.below(ns.len() as u64) as usize,
+                    m: 1 + rng.below(space.max_m as u64) as u32,
                 };
-                if best_score > cur_score {
-                    cur = neigh[best_i];
-                    cur_score = best_score;
-                } else {
-                    break;
+                let start_job = coord_job(space, cur);
+                let mut cur_score =
+                    score(&touch(&[start_job], &mut visited, &mut evals)?[0]);
+
+                for _ in 0..self.max_steps {
+                    let neigh = self.neighbors(space, cur);
+                    if neigh.is_empty() {
+                        break;
+                    }
+                    if let Some(o) = ctx.obs {
+                        o.metrics.add("strategy.hill-climb.steps", 1);
+                    }
+                    let jobs: Vec<BatchJob> =
+                        neigh.iter().map(|&c| coord_job(space, c)).collect();
+                    let out = touch(&jobs, &mut visited, &mut evals)?;
+                    let Some((best_i, best_score)) = out
+                        .iter()
+                        .enumerate()
+                        .map(|(i, e)| (i, score(e)))
+                        .max_by(|a, b| a.1.total_cmp(&b.1))
+                    else {
+                        break;
+                    };
+                    if best_score > cur_score {
+                        if let Some(o) = ctx.obs {
+                            o.metrics.add("strategy.hill-climb.moves", 1);
+                        }
+                        cur = neigh[best_i];
+                        cur_score = best_score;
+                    } else {
+                        break;
+                    }
                 }
+                Ok(())
+            })();
+            if let Some(o) = ctx.obs {
+                o.end("strategy", &span);
             }
+            walk?;
         }
-        Ok(finish(
-            self.name(),
-            evals,
-            ctx,
-            before,
-            total.saturating_sub(visited.len()),
-            total,
-        ))
+        let skipped = total.saturating_sub(visited.len());
+        if let Some(o) = ctx.obs {
+            // the walk never visited these candidates: count them so
+            // registry totals cover the whole space like SweepResult's
+            o.skip(self.name(), "unvisited", skipped as u64);
+        }
+        Ok(finish(self.name(), evals, ctx, before, skipped, total))
     }
 }

@@ -31,6 +31,7 @@ use std::thread;
 
 use crate::dfg::OpLatency;
 use crate::error::Result;
+use crate::obs::{Obs, Phase, PhaseTimes};
 use crate::power;
 use crate::resource::{
     estimate_replay, CostTable, DesignMeta, Device, ResourceEstimate,
@@ -129,6 +130,16 @@ pub fn evaluate(design: &DesignPoint, cfg: &ExploreConfig) -> Result<Evaluation>
     evaluate_with(workload::get(cfg.workload)?, design, cfg)
 }
 
+/// [`evaluate`] with optional per-phase telemetry (see
+/// [`evaluate_with_phased`]).
+pub fn evaluate_phased(
+    design: &DesignPoint,
+    cfg: &ExploreConfig,
+    obs: Option<&Obs>,
+) -> Result<(Evaluation, PhaseTimes)> {
+    evaluate_with_phased(workload::get(cfg.workload)?, design, cfg, obs)
+}
+
 /// Evaluate a single design point for an explicit workload, through
 /// the compile-once fast path: memoized kernel/PE compilation, m-fold
 /// resource-tape replay, steady-state-fast-forwarded timing.  The
@@ -139,12 +150,30 @@ pub fn evaluate_with(
     design: &DesignPoint,
     cfg: &ExploreConfig,
 ) -> Result<Evaluation> {
+    Ok(evaluate_with_phased(wl, design, cfg, None)?.0)
+}
+
+/// [`evaluate_with`], split into its four phases — compile,
+/// resource-replay, timing, power — for sweep telemetry.  With an
+/// observer each phase runs under a trace span and its wall time lands
+/// in the phase histograms and the returned [`PhaseTimes`]; with
+/// `None` no timestamps are taken at all (the returned times are
+/// all-zero) and the work is exactly [`evaluate_with`].
+pub fn evaluate_with_phased(
+    wl: &'static dyn StencilKernel,
+    design: &DesignPoint,
+    cfg: &ExploreConfig,
+    obs: Option<&Obs>,
+) -> Result<(Evaluation, PhaseTimes)> {
+    let mut times = PhaseTimes::default();
     workload::validate_design(design)?;
-    let compiled = workload::compiled(wl, cfg.latency)?;
-    let pe = compiled.pe(design.n, design.w)?;
+    let pe = phase(obs, &mut times, Phase::Compile, || {
+        workload::compiled(wl, cfg.latency)?.pe(design.n, design.w)
+    })?;
     let meta = DesignMeta { lanes: design.n, pes: design.m };
-    let resources =
-        estimate_replay(&pe.tape, &meta, &CostTable::default(), cfg.device);
+    let resources = phase(obs, &mut times, Phase::Replay, || {
+        estimate_replay(&pe.tape, &meta, &CostTable::default(), cfg.device)
+    });
 
     let timing_design = TimingDesign {
         lanes: design.n as usize,
@@ -154,24 +183,46 @@ pub fn evaluate_with(
         steps_per_pass: design.m,
         flops_per_cell_step: wl.flops_per_cell(),
     };
-    let timing = run_timing(&timing_design, cfg.ddr, cfg.passes);
+    let timing = phase(obs, &mut times, Phase::Timing, || {
+        run_timing(&timing_design, cfg.ddr, cfg.passes)
+    });
 
-    let power_w = power::model().predict(resources.core.regs, resources.core.bram_bits);
-    let perf_per_watt = timing.performance_gflops / power_w;
+    let (power_w, perf_per_watt) = phase(obs, &mut times, Phase::Power, || {
+        let power_w =
+            power::model().predict(resources.core.regs, resources.core.bram_bits);
+        (power_w, timing.performance_gflops / power_w)
+    });
     let infeasible = resources.over_capacity;
 
-    Ok(Evaluation {
-        workload: wl.name(),
-        device: cfg.device.name,
-        design: *design,
-        ddr: cfg.ddr,
-        pe_depth: pe.pe_depth,
-        resources,
-        timing,
-        power_w,
-        perf_per_watt,
-        infeasible,
-    })
+    Ok((
+        Evaluation {
+            workload: wl.name(),
+            device: cfg.device.name,
+            design: *design,
+            ddr: cfg.ddr,
+            pe_depth: pe.pe_depth,
+            resources,
+            timing,
+            power_w,
+            perf_per_watt,
+            infeasible,
+        },
+        times,
+    ))
+}
+
+/// Run one evaluation phase: timed (span + histogram) only when an
+/// observer is present — the `None` arm adds nothing to the call.
+fn phase<T>(
+    obs: Option<&Obs>,
+    times: &mut PhaseTimes,
+    p: Phase,
+    f: impl FnOnce() -> T,
+) -> T {
+    match obs {
+        None => f(),
+        Some(o) => o.phase(p, times, f),
+    }
 }
 
 /// Evaluate all candidates (see `coordinator` for the multi-threaded
@@ -362,6 +413,25 @@ mod tests {
                 .unwrap();
             assert_eq!(e.pe_depth, g.pe_depth, "({n},{m})");
         }
+    }
+
+    #[test]
+    fn phased_evaluation_matches_plain_and_records_times() {
+        use crate::obs::Obs;
+        let cfg = small_cfg();
+        let d = DesignPoint::new(2, 2, 64, 32);
+        let plain = evaluate(&d, &cfg).unwrap();
+        let obs = Obs::new();
+        let (observed, times) = evaluate_phased(&d, &cfg, Some(&obs)).unwrap();
+        assert_eq!(plain.perf_per_watt.to_bits(), observed.perf_per_watt.to_bits());
+        assert_eq!(plain.resources.core, observed.resources.core);
+        assert!(times.total_ns() > 0);
+        for (name, stats) in obs.phase_stats() {
+            assert_eq!(stats.count, 1, "{name}");
+        }
+        // the uninstrumented path takes no timestamps
+        let (_, silent) = evaluate_phased(&d, &cfg, None).unwrap();
+        assert_eq!(silent.total_ns(), 0);
     }
 
     #[test]

@@ -32,7 +32,9 @@
 //!   registered as the `lbm` workload;
 //! * [`runtime`] — PJRT execution of the JAX/Pallas AOT artifacts
 //!   (stubbed unless built with the `pjrt` feature);
-//! * [`coordinator`] — multi-threaded DSE job orchestration.
+//! * [`coordinator`] — multi-threaded DSE job orchestration;
+//! * [`obs`] — sweep telemetry: metrics registry, Chrome-trace span
+//!   sink, per-phase profiling, progress reporting.
 //!
 //! ## Quickstart
 //!
@@ -61,6 +63,7 @@ pub mod explore;
 pub mod expr;
 pub mod lbm;
 pub mod library;
+pub mod obs;
 pub mod power;
 pub mod prop;
 pub mod report;

@@ -1,0 +1,386 @@
+//! Metrics registry: named atomic counters, gauges, and log-bucketed
+//! latency histograms, snapshotable to JSON.
+//!
+//! Hand-rolled (like `dse::json`) because the crate set is offline.
+//! All instruments are lock-free on the hot path: `Counter`/`Gauge`
+//! are single atomics, `Histogram` buckets values by bit length into
+//! a fixed array of atomic counts.  The registry itself uses a mutex
+//! only for name → instrument lookup; hot paths hold an `Arc` to the
+//! instrument and never touch the maps.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::dse::json::{self, Json};
+
+use super::{Phase, PhaseTimes};
+
+/// A monotonically increasing (or externally mirrored) u64 counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter::default()
+    }
+
+    pub fn add(&self, delta: u64) {
+        self.0.fetch_add(delta, Ordering::Relaxed);
+    }
+
+    pub fn incr(&self) {
+        self.add(1);
+    }
+
+    /// Overwrite the value — for mirroring a counter whose canonical
+    /// home is elsewhere (cache shard stats, journal row counts).
+    pub fn set(&self, value: u64) {
+        self.0.store(value, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A signed point-in-time value (worker counts, cache entries).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge::default()
+    }
+
+    pub fn set(&self, value: i64) {
+        self.0.store(value, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, delta: i64) {
+        self.0.fetch_add(delta, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// One bucket per bit length of the recorded value (0, 1, 2-3, 4-7,
+/// ... up to the full u64 range): cheap to record, ~2x resolution on
+/// quantile estimates, which is plenty for latency attribution.
+const BUCKETS: usize = 65;
+
+/// Log-bucketed histogram of u64 samples (nanoseconds by convention).
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+/// Point-in-time histogram summary.  `p50`/`p95` are bucket-midpoint
+/// estimates clamped to the observed `max`; `count`/`sum`/`max` are
+/// exact.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HistStats {
+    pub count: u64,
+    pub sum: u64,
+    pub p50: u64,
+    pub p95: u64,
+    pub max: u64,
+}
+
+impl HistStats {
+    /// JSON encoding used by the metrics snapshot and BENCH v2
+    /// (`_ns` suffixes: every histogram in this crate is a latency).
+    pub fn encode(&self) -> Json {
+        json::obj(vec![
+            ("count", json::uint(self.count)),
+            ("sum_ns", json::uint(self.sum)),
+            ("p50_ns", json::uint(self.p50)),
+            ("p95_ns", json::uint(self.p95)),
+            ("max_ns", json::uint(self.max)),
+        ])
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_of(value: u64) -> usize {
+        (64 - value.leading_zeros()) as usize
+    }
+
+    pub fn record(&self, value: u64) {
+        self.buckets[Self::bucket_of(value)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(value, Ordering::Relaxed);
+        self.max.fetch_max(value, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Upper-quantile estimate: walk the cumulative bucket counts and
+    /// return the midpoint of the bucket containing the q-th sample.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let count = self.count();
+        if count == 0 {
+            return 0;
+        }
+        let target = ((q * count as f64).ceil() as u64).clamp(1, count);
+        let mut seen = 0u64;
+        for (i, bucket) in self.buckets.iter().enumerate() {
+            seen += bucket.load(Ordering::Relaxed);
+            if seen >= target {
+                return bucket_midpoint(i);
+            }
+        }
+        self.max()
+    }
+
+    pub fn stats(&self) -> HistStats {
+        let max = self.max();
+        HistStats {
+            count: self.count(),
+            sum: self.sum(),
+            p50: self.quantile(0.50).min(max),
+            p95: self.quantile(0.95).min(max),
+            max,
+        }
+    }
+}
+
+/// Midpoint of bucket `i` (values of bit length `i`).
+fn bucket_midpoint(i: usize) -> u64 {
+    if i == 0 {
+        return 0;
+    }
+    let lo = 1u64 << (i - 1);
+    let hi = if i >= 64 { u64::MAX } else { (1u64 << i) - 1 };
+    lo + (hi - lo) / 2
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Clone for Histogram {
+    fn clone(&self) -> Histogram {
+        let out = Histogram::new();
+        for (i, bucket) in self.buckets.iter().enumerate() {
+            out.buckets[i].store(bucket.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+        out.count.store(self.count(), Ordering::Relaxed);
+        out.sum.store(self.sum(), Ordering::Relaxed);
+        out.max.store(self.max(), Ordering::Relaxed);
+        out
+    }
+}
+
+impl fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Histogram")
+            .field("count", &self.count())
+            .field("sum", &self.sum())
+            .field("max", &self.max())
+            .finish()
+    }
+}
+
+/// One histogram per evaluation phase, recorded together from a
+/// [`PhaseTimes`] (so all four always hold the same sample count).
+#[derive(Clone, Debug, Default)]
+pub struct PhaseHistograms {
+    hists: [Histogram; Phase::ALL.len()],
+}
+
+impl PhaseHistograms {
+    pub fn record(&self, times: &PhaseTimes) {
+        for p in Phase::ALL {
+            self.hists[p as usize].record(times.get(p));
+        }
+    }
+
+    pub fn get(&self, p: Phase) -> &Histogram {
+        &self.hists[p as usize]
+    }
+
+    /// Samples recorded (identical across phases by construction).
+    pub fn count(&self) -> u64 {
+        self.hists[0].count()
+    }
+
+    /// `(phase name, stats)` rows in [`Phase::ALL`] order.
+    pub fn stats(&self) -> Vec<(&'static str, HistStats)> {
+        Phase::ALL
+            .iter()
+            .map(|&p| (p.name(), self.get(p).stats()))
+            .collect()
+    }
+}
+
+/// Thread-safe name → instrument registry.  Lookup interns the name
+/// on first use; `snapshot()` serializes everything, sorted by name.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        self.counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        self.gauges
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        self.histograms
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    /// `counter(name).add(delta)` in one call (cold paths only: this
+    /// takes the registry lock).
+    pub fn add(&self, name: &str, delta: u64) {
+        self.counter(name).add(delta);
+    }
+
+    /// Serialize every instrument:
+    /// `{"counters": {..}, "gauges": {..}, "histograms": {..}}` with
+    /// histogram values as [`HistStats::encode`] objects.
+    pub fn snapshot(&self) -> Json {
+        let counters = self
+            .counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(name, c)| (name.clone(), json::uint(c.get())))
+            .collect::<Vec<_>>();
+        let gauges = self
+            .gauges
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(name, g)| (name.clone(), json::num(g.get() as f64)))
+            .collect::<Vec<_>>();
+        let histograms = self
+            .histograms
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(name, h)| (name.clone(), h.stats().encode()))
+            .collect::<Vec<_>>();
+        let obj = |fields: Vec<(String, Json)>| {
+            json::obj(fields.iter().map(|(k, v)| (k.as_str(), v.clone())).collect())
+        };
+        json::obj(vec![
+            ("counters", obj(counters)),
+            ("gauges", obj(gauges)),
+            ("histograms", obj(histograms)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_by_bit_length() {
+        let h = Histogram::new();
+        for v in [0, 1, 2, 3, 1000, 1_000_000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 6);
+        assert_eq!(h.sum(), 1_001_006);
+        assert_eq!(h.max(), 1_000_000);
+        let s = h.stats();
+        assert!(s.p50 <= s.p95 && s.p95 <= s.max);
+    }
+
+    #[test]
+    fn histogram_quantiles_land_in_the_right_bucket() {
+        let h = Histogram::new();
+        for _ in 0..99 {
+            h.record(100); // bucket 7: 64..127
+        }
+        h.record(1 << 20);
+        // p50 must come from the 64..127 bucket, p~max from the big one
+        let p50 = h.quantile(0.50);
+        assert!((64..=127).contains(&p50), "p50 = {p50}");
+        assert!(h.quantile(1.0) >= (1 << 19));
+    }
+
+    #[test]
+    fn registry_interns_and_snapshots() {
+        let reg = MetricsRegistry::new();
+        reg.counter("a.count").add(3);
+        reg.counter("a.count").add(2);
+        reg.gauge("b.level").set(-7);
+        reg.histogram("c.lat_ns").record(1500);
+        assert_eq!(reg.counter("a.count").get(), 5);
+        let snap = reg.snapshot();
+        let c = snap.field("counters").unwrap();
+        assert_eq!(c.field("a.count").unwrap().as_u64().unwrap(), 5);
+        let g = snap.field("gauges").unwrap();
+        assert_eq!(g.field("b.level").unwrap().as_f64().unwrap(), -7.0);
+        let h = snap.field("histograms").unwrap().field("c.lat_ns").unwrap();
+        assert_eq!(h.field("count").unwrap().as_u64().unwrap(), 1);
+        assert_eq!(h.field("max_ns").unwrap().as_u64().unwrap(), 1500);
+    }
+
+    #[test]
+    fn phase_histograms_record_every_phase_together() {
+        let ph = PhaseHistograms::default();
+        let mut t = PhaseTimes::default();
+        t.set(Phase::Compile, 10);
+        t.set(Phase::Timing, 30);
+        ph.record(&t);
+        assert_eq!(ph.count(), 1);
+        assert_eq!(ph.get(Phase::Timing).sum(), 30);
+        assert_eq!(ph.get(Phase::Power).sum(), 0);
+        assert_eq!(ph.stats().len(), 4);
+    }
+}

@@ -1,0 +1,336 @@
+//! Sweep telemetry: metrics registry, Chrome-trace span sink, and
+//! progress reporting for the DSE engine.
+//!
+//! The paper's method is *measure to choose*; this module makes the
+//! measuring engine itself measurable.  Everything is dependency-free
+//! (hand-rolled like [`dse::json`](crate::dse::json), the crate set is
+//! offline) and strictly opt-in: the engine threads an `Option<&Obs>`
+//! alongside the existing `RowSink`, and with `None` no timestamps are
+//! taken and no atomics are touched — the uninstrumented sweep path is
+//! byte-for-byte the old code.
+//!
+//! Three sinks hang off one [`Obs`] hub:
+//!
+//! * [`MetricsRegistry`] — named atomic counters / gauges /
+//!   log-bucketed latency histograms, snapshotable to JSON
+//!   (`dse sweep --metrics FILE`);
+//! * [`TraceSink`] — Chrome `trace_event` spans loadable in Perfetto
+//!   (`--trace FILE`): one track per worker thread, per-evaluation
+//!   spans split into compile / resource-replay / timing / power
+//!   phases, strategy-wave spans, journal fsync spans;
+//! * [`Progress`] — a throttled stderr progress line
+//!   (`--progress [SECS]`).
+
+pub mod metrics;
+pub mod progress;
+pub mod trace;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::dse::json::Json;
+
+pub use metrics::{Counter, Gauge, HistStats, Histogram, MetricsRegistry, PhaseHistograms};
+pub use progress::Progress;
+pub use trace::TraceSink;
+
+/// The four phases of one design-point evaluation (the pipeline of
+/// `explore::evaluate`): SPD compile + PE scheduling, resource tape
+/// replay, the DDR timing model, and the power model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Compile = 0,
+    Replay = 1,
+    Timing = 2,
+    Power = 3,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 4] = [Phase::Compile, Phase::Replay, Phase::Timing, Phase::Power];
+
+    /// Span / metric / BENCH key for this phase.
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Compile => "compile",
+            Phase::Replay => "resource-replay",
+            Phase::Timing => "timing",
+            Phase::Power => "power",
+        }
+    }
+}
+
+/// Wall time of one evaluation, split by phase (nanoseconds).
+/// All-zero when the evaluation ran uninstrumented.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PhaseTimes {
+    ns: [u64; Phase::ALL.len()],
+}
+
+impl PhaseTimes {
+    pub fn get(&self, p: Phase) -> u64 {
+        self.ns[p as usize]
+    }
+
+    pub fn set(&mut self, p: Phase, ns: u64) {
+        self.ns[p as usize] = ns;
+    }
+
+    pub fn total_ns(&self) -> u64 {
+        self.ns.iter().sum()
+    }
+}
+
+/// Process-wide track ids: each OS thread gets a small stable id on
+/// first use (trace viewers key tracks on `tid`).
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+thread_local! {
+    static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+}
+
+pub fn current_tid() -> u64 {
+    TID.with(|t| *t)
+}
+
+/// The observability hub threaded through the sweep: always carries a
+/// registry, optionally a trace sink and a progress reporter.  Hot
+/// instruments (row counters, phase histograms) are pre-resolved so
+/// the per-evaluation cost is a handful of relaxed atomic ops.
+pub struct Obs {
+    pub metrics: MetricsRegistry,
+    pub trace: Option<TraceSink>,
+    pub progress: Option<Progress>,
+    evaluated: Arc<Counter>,
+    cache_hits: Arc<Counter>,
+    rows: Arc<Counter>,
+    skipped: Arc<Counter>,
+    errors: Arc<Counter>,
+    eval_ns: Arc<Histogram>,
+    phases: [Arc<Histogram>; Phase::ALL.len()],
+    busy_ns: Arc<Counter>,
+    idle_ns: Arc<Counter>,
+    epoch: Instant,
+}
+
+impl Obs {
+    pub fn new() -> Obs {
+        let metrics = MetricsRegistry::new();
+        let evaluated = metrics.counter("sweep.evaluated");
+        let cache_hits = metrics.counter("sweep.cache_hits");
+        let rows = metrics.counter("sweep.rows");
+        let skipped = metrics.counter("sweep.skipped");
+        let errors = metrics.counter("sweep.errors");
+        let eval_ns = metrics.histogram("eval.total_ns");
+        let phases =
+            Phase::ALL.map(|p| metrics.histogram(&format!("eval.phase.{}_ns", p.name())));
+        let busy_ns = metrics.counter("worker.busy_ns");
+        let idle_ns = metrics.counter("worker.idle_ns");
+        Obs {
+            metrics,
+            trace: None,
+            progress: None,
+            evaluated,
+            cache_hits,
+            rows,
+            skipped,
+            errors,
+            eval_ns,
+            phases,
+            busy_ns,
+            idle_ns,
+            epoch: Instant::now(),
+        }
+    }
+
+    pub fn with_trace(mut self, trace: TraceSink) -> Obs {
+        self.trace = Some(trace);
+        self
+    }
+
+    pub fn with_progress(mut self, progress: Progress) -> Obs {
+        self.progress = Some(progress);
+        self
+    }
+
+    /// Nanoseconds since this hub was created.
+    pub fn elapsed_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Open a span on the calling thread's track (no-op without a
+    /// trace sink).
+    pub fn begin(&self, cat: &str, name: &str, args: Vec<(&str, Json)>) {
+        if let Some(t) = &self.trace {
+            t.begin(cat, name, args);
+        }
+    }
+
+    /// Close the innermost open span of this name on this track.
+    pub fn end(&self, cat: &str, name: &str) {
+        if let Some(t) = &self.trace {
+            t.end(cat, name);
+        }
+    }
+
+    /// Run `f` as evaluation phase `p`: a trace span around it, its
+    /// wall time into the phase histogram and into `times`.
+    pub fn phase<T>(&self, p: Phase, times: &mut PhaseTimes, f: impl FnOnce() -> T) -> T {
+        self.begin("phase", p.name(), Vec::new());
+        let t0 = Instant::now();
+        let out = f();
+        let ns = t0.elapsed().as_nanos() as u64;
+        self.end("phase", p.name());
+        self.phases[p as usize].record(ns);
+        times.set(p, ns);
+        out
+    }
+
+    /// Record one completed batch row.  `phases` is `Some` when a real
+    /// evaluation ran and `None` when the cache answered; `hit_rate`
+    /// feeds the progress line and is only invoked when a line prints.
+    pub fn row_done(
+        &self,
+        wall_ns: u64,
+        phases: Option<&PhaseTimes>,
+        hit_rate: impl FnOnce() -> Option<f64>,
+    ) {
+        self.rows.incr();
+        match phases {
+            Some(_) => {
+                self.evaluated.incr();
+                self.eval_ns.record(wall_ns);
+            }
+            None => self.cache_hits.incr(),
+        }
+        if let Some(p) = &self.progress {
+            p.advance(1, hit_rate);
+        }
+    }
+
+    /// Record a failed batch row (the row is not in the sweep result,
+    /// so it counts toward neither `evaluated` nor `cache_hits`).
+    pub fn row_failed(&self) {
+        self.errors.incr();
+    }
+
+    /// Record `n` candidates a strategy pruned without evaluating,
+    /// with a per-strategy per-reason counter
+    /// (`strategy.<strategy>.skip.<reason>`).
+    pub fn skip(&self, strategy: &str, reason: &str, n: u64) {
+        if n == 0 {
+            return;
+        }
+        self.skipped.add(n);
+        self.metrics.add(&format!("strategy.{strategy}.skip.{reason}"), n);
+        if let Some(p) = &self.progress {
+            p.advance(n, || None);
+        }
+    }
+
+    /// Worker-thread lifetime accounting: `busy_ns` spent inside
+    /// evaluations, the rest of the thread's life counted idle.
+    pub fn worker_done(&self, total_ns: u64, busy_ns: u64) {
+        self.metrics.add("worker.spawned", 1);
+        self.busy_ns.add(busy_ns);
+        self.idle_ns.add(total_ns.saturating_sub(busy_ns));
+    }
+
+    /// Mirror the cache's end-of-run counters into the registry
+    /// (totals plus per-shard hit/miss/entry breakdown).  `set`, not
+    /// `add`: the cache keeps the canonical atomics, the registry
+    /// snapshot just reflects them.
+    pub fn absorb_cache(&self, cache: &crate::dse::EvalCache) {
+        let total = cache.stats();
+        self.metrics.counter("cache.hits").set(total.hits);
+        self.metrics.counter("cache.misses").set(total.misses);
+        self.metrics.gauge("cache.entries").set(total.entries as i64);
+        for (i, s) in cache.shard_stats().iter().enumerate() {
+            self.metrics.counter(&format!("cache.shard{i:02}.hits")).set(s.hits);
+            self.metrics
+                .counter(&format!("cache.shard{i:02}.misses"))
+                .set(s.misses);
+            self.metrics
+                .gauge(&format!("cache.shard{i:02}.entries"))
+                .set(s.entries as i64);
+        }
+    }
+
+    /// Mirror the journal writer's row and fsync counters.
+    pub fn absorb_journal(&self, writer: &crate::dse::JournalWriter) {
+        self.metrics.counter("journal.rows").set(writer.rows_written());
+        self.metrics.counter("journal.fsyncs").set(writer.fsyncs());
+    }
+
+    /// Stats of the whole-evaluation latency histogram (real
+    /// evaluations only; cache hits are not latencies of interest).
+    pub fn eval_stats(&self) -> HistStats {
+        self.eval_ns.stats()
+    }
+
+    /// `(phase name, stats)` rows in [`Phase::ALL`] order — the
+    /// `--profile` table and the BENCH v2 `phases` object.
+    pub fn phase_stats(&self) -> Vec<(&'static str, HistStats)> {
+        Phase::ALL
+            .iter()
+            .map(|&p| (p.name(), self.phases[p as usize].stats()))
+            .collect()
+    }
+}
+
+impl Default for Obs {
+    fn default() -> Obs {
+        Obs::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tids_are_stable_per_thread_and_distinct_across() {
+        let here = current_tid();
+        assert_eq!(here, current_tid());
+        let there = std::thread::spawn(current_tid).join().unwrap();
+        assert_ne!(here, there);
+    }
+
+    #[test]
+    fn row_accounting_discriminates_hits_from_evals() {
+        let obs = Obs::new();
+        let times = PhaseTimes::default();
+        obs.row_done(1000, Some(&times), || None);
+        obs.row_done(50, None, || None);
+        obs.row_done(50, None, || None);
+        assert_eq!(obs.metrics.counter("sweep.rows").get(), 3);
+        assert_eq!(obs.metrics.counter("sweep.evaluated").get(), 1);
+        assert_eq!(obs.metrics.counter("sweep.cache_hits").get(), 2);
+        // only the real evaluation lands in the latency histogram
+        assert_eq!(obs.eval_stats().count, 1);
+        assert_eq!(obs.eval_stats().max, 1000);
+    }
+
+    #[test]
+    fn phase_helper_times_and_returns() {
+        let obs = Obs::new();
+        let mut times = PhaseTimes::default();
+        let out = obs.phase(Phase::Timing, &mut times, || 42);
+        assert_eq!(out, 42);
+        assert_eq!(obs.phase_stats()[2].0, "timing");
+        assert_eq!(obs.phase_stats()[2].1.count, 1);
+        assert_eq!(times.get(Phase::Timing), times.total_ns());
+    }
+
+    #[test]
+    fn skip_records_per_reason_counters() {
+        let obs = Obs::new();
+        obs.skip("bounded-prune", "dead-column", 3);
+        obs.skip("bounded-prune", "low-util", 2);
+        obs.skip("bounded-prune", "dead-column", 0); // no-op
+        assert_eq!(obs.metrics.counter("sweep.skipped").get(), 5);
+        assert_eq!(
+            obs.metrics.counter("strategy.bounded-prune.skip.dead-column").get(),
+            3
+        );
+    }
+}

@@ -1,0 +1,100 @@
+//! Periodic stderr progress line for long sweeps: done/total,
+//! evaluations per second, cache hit rate, ETA.
+//!
+//! Progress goes to stderr so sweep tables on stdout stay pipeable.
+//! The line is throttled to at most one per `every` seconds; the
+//! throttle state sits behind a mutex that only the (single-threaded)
+//! batch collector touches, so contention is nil.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+pub struct Progress {
+    total: AtomicU64,
+    done: AtomicU64,
+    /// minimum seconds between lines
+    every: f64,
+    state: Mutex<ProgressState>,
+}
+
+struct ProgressState {
+    started: Instant,
+    last: Option<Instant>,
+}
+
+impl Progress {
+    pub fn new(every_secs: f64) -> Progress {
+        Progress {
+            total: AtomicU64::new(0),
+            done: AtomicU64::new(0),
+            every: every_secs.max(0.0),
+            state: Mutex::new(ProgressState { started: Instant::now(), last: None }),
+        }
+    }
+
+    /// Announce work (candidate points) before the sweep starts.
+    pub fn add_total(&self, n: u64) {
+        self.total.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn done(&self) -> u64 {
+        self.done.load(Ordering::Relaxed)
+    }
+
+    /// Count `n` candidates as handled (evaluated, cache-answered, or
+    /// pruned) and print a line if one is due.  `hit_rate` is only
+    /// invoked when printing, so its cost (cache shard locks) is paid
+    /// at most once per `every` seconds.
+    pub fn advance(&self, n: u64, hit_rate: impl FnOnce() -> Option<f64>) {
+        let done = self.done.fetch_add(n, Ordering::Relaxed) + n;
+        let mut state = self.state.lock().unwrap();
+        let due = match state.last {
+            None => true,
+            Some(t) => t.elapsed().as_secs_f64() >= self.every,
+        };
+        if !due {
+            return;
+        }
+        state.last = Some(Instant::now());
+        let total = self.total.load(Ordering::Relaxed).max(done);
+        let elapsed = state.started.elapsed().as_secs_f64().max(1e-9);
+        let rate = done as f64 / elapsed;
+        let eta = if rate > 0.0 { (total - done) as f64 / rate } else { 0.0 };
+        let pct = 100.0 * done as f64 / total.max(1) as f64;
+        let cache = match hit_rate() {
+            Some(r) => format!(", cache {:.0}% hit", 100.0 * r),
+            None => String::new(),
+        };
+        let _ = writeln!(
+            std::io::stderr(),
+            "sweep: {done}/{total} ({pct:.0}%), {rate:.0} evals/sec{cache}, ETA {eta:.1}s"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn advance_counts_and_respects_totals() {
+        let p = Progress::new(3600.0);
+        p.add_total(10);
+        p.advance(1, || Some(0.5)); // first line prints immediately
+        p.advance(4, || None); // throttled: hit_rate never invoked
+        assert_eq!(p.done(), 5);
+    }
+
+    #[test]
+    fn total_saturates_to_done() {
+        // more rows than announced (hill revisits): no underflow
+        let p = Progress::new(0.0);
+        p.add_total(2);
+        for _ in 0..5 {
+            p.advance(1, || None);
+        }
+        assert_eq!(p.done(), 5);
+    }
+}

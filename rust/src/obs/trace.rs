@@ -1,0 +1,187 @@
+//! Structured span tracing in Chrome `trace_event` JSON array format,
+//! loadable in Perfetto (<https://ui.perfetto.dev>) or
+//! `chrome://tracing`.
+//!
+//! Events are written eagerly at span boundaries (`B` at begin, `E`
+//! at end) so each thread's track is chronologically ordered and the
+//! viewer reconstructs nesting for free.  One event per line, so the
+//! file is greppable and each line (minus its trailing comma) is a
+//! complete JSON object.  Mid-sweep write errors are swallowed —
+//! tracing must never fail the sweep — but `finish()` reports flush
+//! errors.
+
+use std::collections::HashSet;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::dse::json::{self, Json};
+use crate::error::Result;
+
+pub struct TraceSink {
+    epoch: Instant,
+    pid: u64,
+    inner: Mutex<TraceInner>,
+}
+
+struct TraceInner {
+    out: BufWriter<File>,
+    /// events written so far (the first gets no leading comma)
+    events: u64,
+    /// tids that already have a `thread_name` metadata event
+    named: HashSet<u64>,
+    finished: bool,
+}
+
+impl TraceSink {
+    /// Create (truncate) the trace file and write the array opener.
+    pub fn create(path: impl AsRef<Path>) -> Result<TraceSink> {
+        let mut out = BufWriter::new(File::create(path)?);
+        out.write_all(b"[\n")?;
+        Ok(TraceSink {
+            epoch: Instant::now(),
+            pid: std::process::id() as u64,
+            inner: Mutex::new(TraceInner {
+                out,
+                events: 0,
+                named: HashSet::new(),
+                finished: false,
+            }),
+        })
+    }
+
+    /// Begin a span on the calling thread's track.
+    pub fn begin(&self, cat: &str, name: &str, args: Vec<(&str, Json)>) {
+        self.event("B", cat, name, args);
+    }
+
+    /// End the innermost open span of this `name` on the calling
+    /// thread's track.
+    pub fn end(&self, cat: &str, name: &str) {
+        self.event("E", cat, name, Vec::new());
+    }
+
+    fn event(&self, ph: &str, cat: &str, name: &str, args: Vec<(&str, Json)>) {
+        let tid = super::current_tid();
+        let ts = self.epoch.elapsed().as_nanos() as f64 / 1000.0;
+        let mut inner = self.inner.lock().unwrap();
+        if inner.finished {
+            return;
+        }
+        if inner.named.insert(tid) {
+            let label = std::thread::current()
+                .name()
+                .map(str::to_string)
+                .unwrap_or_else(|| format!("thread-{tid}"));
+            let meta = json::obj(vec![
+                ("name", json::str("thread_name")),
+                ("ph", json::str("M")),
+                ("pid", json::uint(self.pid)),
+                ("tid", json::uint(tid)),
+                ("ts", json::num(0.0)),
+                ("args", json::obj(vec![("name", json::str(&label))])),
+            ]);
+            write_event(&mut inner, &meta);
+        }
+        let mut fields = vec![
+            ("name", json::str(name)),
+            ("cat", json::str(cat)),
+            ("ph", json::str(ph)),
+            ("pid", json::uint(self.pid)),
+            ("tid", json::uint(tid)),
+            ("ts", json::num(ts)),
+        ];
+        if !args.is_empty() {
+            fields.push(("args", json::obj(args)));
+        }
+        let event = json::obj(fields);
+        write_event(&mut inner, &event);
+    }
+
+    /// Close the JSON array and flush.  Events after this are dropped
+    /// (a sink can only finish once).
+    pub fn finish(&self) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.finished {
+            inner.finished = true;
+            inner.out.write_all(b"\n]\n")?;
+            inner.out.flush()?;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for TraceSink {
+    fn drop(&mut self) {
+        // best-effort close so an early-error sweep still leaves a
+        // loadable trace (Perfetto also tolerates a missing `]`)
+        let _ = self.finish();
+    }
+}
+
+fn write_event(inner: &mut TraceInner, event: &Json) {
+    let sep = if inner.events == 0 { "" } else { ",\n" };
+    let line = format!("{sep}{}", event.to_string());
+    let _ = inner.out.write_all(line.as_bytes());
+    inner.events += 1;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_file_is_a_json_array_of_events() {
+        let path = std::env::temp_dir()
+            .join(format!("spdx_trace_unit_{}.json", std::process::id()));
+        let sink = TraceSink::create(&path).unwrap();
+        sink.begin("test", "outer", vec![("k", json::uint(1))]);
+        sink.begin("test", "inner", Vec::new());
+        sink.end("test", "inner");
+        sink.end("test", "outer");
+        sink.finish().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let parsed = Json::parse(&text).unwrap();
+        let events = match &parsed {
+            Json::Arr(events) => events,
+            other => panic!("expected array, got {other:?}"),
+        };
+        // thread_name metadata + 4 span events
+        assert_eq!(events.len(), 5);
+        assert_eq!(events[0].field("ph").unwrap().as_str().unwrap(), "M");
+        let b = &events[1];
+        assert_eq!(b.field("ph").unwrap().as_str().unwrap(), "B");
+        assert_eq!(b.field("name").unwrap().as_str().unwrap(), "outer");
+        assert_eq!(b.field("pid").unwrap().as_u64().unwrap(), std::process::id() as u64);
+        assert!(b.field("ts").unwrap().as_f64().unwrap() >= 0.0);
+        assert_eq!(
+            b.field("args").unwrap().field("k").unwrap().as_u64().unwrap(),
+            1
+        );
+        // same track throughout, and spans nest
+        let tid = b.field("tid").unwrap().as_u64().unwrap();
+        assert!(events[1..]
+            .iter()
+            .all(|e| e.field("tid").unwrap().as_u64().unwrap() == tid));
+        assert_eq!(events[4].field("name").unwrap().as_str().unwrap(), "outer");
+        assert_eq!(events[4].field("ph").unwrap().as_str().unwrap(), "E");
+    }
+
+    #[test]
+    fn finish_is_idempotent_and_drops_late_events() {
+        let path = std::env::temp_dir().join(format!("spdx_trace_fin_{}.json", std::process::id()));
+        let sink = TraceSink::create(&path).unwrap();
+        sink.begin("test", "a", Vec::new());
+        sink.end("test", "a");
+        sink.finish().unwrap();
+        sink.begin("test", "late", Vec::new());
+        sink.finish().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert!(!text.contains("late"));
+        assert!(Json::parse(&text).is_ok());
+    }
+}

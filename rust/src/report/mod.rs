@@ -7,6 +7,7 @@ use std::borrow::Borrow;
 
 use crate::dse::SweepResult;
 use crate::explore::Evaluation;
+use crate::obs::HistStats;
 use crate::power::PAPER_TABLE3;
 use crate::resource::soc_peripherals;
 use crate::util::commas;
@@ -224,6 +225,36 @@ pub fn sweep_summary(r: &SweepResult) -> String {
     s
 }
 
+/// The `--profile` table: per-phase latency percentiles of one sweep's
+/// evaluations, plus each phase's share of the total phase time.
+pub fn phase_profile(phases: &[(&'static str, HistStats)]) -> String {
+    let mut s = String::new();
+    s.push_str("per-phase evaluation profile:\n");
+    s.push_str(&format!(
+        "{:<16} {:>7} {:>10} {:>10} {:>10} {:>10} {:>7}\n",
+        "phase", "count", "total[ms]", "p50[us]", "p95[us]", "max[us]", "share"
+    ));
+    let grand: u64 = phases.iter().map(|(_, st)| st.sum).sum();
+    for (name, st) in phases {
+        let share = if grand == 0 {
+            0.0
+        } else {
+            100.0 * st.sum as f64 / grand as f64
+        };
+        s.push_str(&format!(
+            "{:<16} {:>7} {:>10.2} {:>10.1} {:>10.1} {:>10.1} {:>6.1}%\n",
+            name,
+            st.count,
+            st.sum as f64 / 1e6,
+            st.p50 as f64 / 1e3,
+            st.p95 as f64 / 1e3,
+            st.max as f64 / 1e3,
+            share,
+        ));
+    }
+    s
+}
+
 /// Render the Table IV analogue (operator census of one pipeline).
 pub fn table4(census: &crate::expr::OpCensus) -> String {
     format!(
@@ -279,6 +310,21 @@ mod tests {
         assert!(t.contains("== Arria 10 GX1150 =="));
         assert!(t.contains("lbm (1, 1)"));
         assert!(t.contains("64x32"));
+    }
+
+    #[test]
+    fn phase_profile_renders_shares() {
+        let rows = vec![
+            ("compile", HistStats { count: 4, sum: 3000, p50: 700, p95: 900, max: 1000 }),
+            ("timing", HistStats { count: 4, sum: 1000, p50: 200, p95: 300, max: 400 }),
+        ];
+        let t = phase_profile(&rows);
+        assert!(t.contains("compile"));
+        assert!(t.contains("75.0%"), "{t}");
+        assert!(t.contains("25.0%"), "{t}");
+        // empty histograms render without dividing by zero
+        let empty = phase_profile(&[("compile", HistStats::default())]);
+        assert!(empty.contains("0.0%"), "{empty}");
     }
 
     #[test]

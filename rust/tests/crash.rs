@@ -322,6 +322,7 @@ fn merge_refuses_mismatched_space_fingerprints() {
     let base = small_space("lbm");
     let mut a = Session {
         strategy: "exhaustive".to_string(),
+        params: Json::Obj(Vec::new()),
         space: base.clone(),
         rows: vec![],
     };
@@ -333,6 +334,7 @@ fn merge_refuses_mismatched_space_fingerprints() {
     ] {
         let b = Session {
             strategy: "exhaustive".to_string(),
+            params: Json::Obj(Vec::new()),
             space: other,
             rows: vec![],
         };
@@ -342,6 +344,7 @@ fn merge_refuses_mismatched_space_fingerprints() {
     // the identical space still merges
     let b = Session {
         strategy: "bounded-prune".to_string(),
+        params: Json::Obj(Vec::new()),
         space: base,
         rows: vec![],
     };

@@ -1,0 +1,193 @@
+//! Integration tests for the sweep telemetry subsystem: the metrics
+//! registry must reconcile exactly with the sweep's own counters (no
+//! double counting, no dropped rows), the trace file must be
+//! well-formed Chrome `trace_event` JSON, and instrumentation must
+//! never change sweep results.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use spdx::dse::json::Json;
+use spdx::dse::{
+    BoundedPrune, DesignSpace, EvalCache, Exhaustive, HillClimb, JournalWriter,
+    SearchStrategy, SweepContext,
+};
+use spdx::explore::ExploreConfig;
+use spdx::obs::{Obs, TraceSink};
+
+fn small_space() -> DesignSpace {
+    DesignSpace::from_explore(&ExploreConfig {
+        grid_w: 64,
+        grid_h: 32,
+        max_n: 2,
+        max_m: 2,
+        passes: 2,
+        ..Default::default()
+    })
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("spdx_obs_{tag}_{}.tmp", std::process::id()))
+}
+
+fn strategies() -> Vec<Box<dyn SearchStrategy>> {
+    vec![
+        Box::new(Exhaustive),
+        Box::new(BoundedPrune::default()),
+        Box::new(HillClimb { seed: 7, restarts: 2, max_steps: 8 }),
+    ]
+}
+
+/// The registry's totals must equal the `SweepResult` counters and the
+/// journal's row count exactly, for every strategy — the telemetry is
+/// a view of the sweep, not an estimate of it.
+#[test]
+fn metrics_reconcile_with_sweep_result_for_all_strategies() {
+    let space = small_space();
+    for strategy in strategies() {
+        let name = strategy.name();
+        let path = tmp(&format!("reconcile_{name}"));
+        let obs = Arc::new(Obs::new());
+        let cache = EvalCache::new();
+        let writer = JournalWriter::create(&path, name, &space)
+            .unwrap()
+            .with_sync_every(1)
+            .with_obs(obs.clone());
+        let ctx = SweepContext::new(&cache, 2).with_sink(&writer).with_obs(&obs);
+        let r = strategy.run(&space, &ctx).unwrap();
+        writer.finalize(&r).unwrap();
+
+        let count = |metric: &str| obs.metrics.counter(metric).get();
+        assert_eq!(count("sweep.evaluated"), r.evaluated as u64, "{name}");
+        assert_eq!(count("sweep.cache_hits"), r.cache_hits, "{name}");
+        assert_eq!(count("sweep.skipped"), r.skipped as u64, "{name}");
+        assert_eq!(
+            count("sweep.rows"),
+            r.evaluated as u64 + r.cache_hits,
+            "{name}: every completed row is counted exactly once"
+        );
+        assert_eq!(count("sweep.errors"), 0, "{name}");
+
+        // the journal deduplicates, so its rows are the distinct
+        // evaluations — exactly the result's eval list
+        assert_eq!(writer.rows_written(), r.evals.len() as u64, "{name}");
+        assert!(writer.fsyncs() >= 1 + r.evals.len() as u64, "{name}");
+
+        // cache: every real evaluation was a miss, and the per-shard
+        // counters sum to the totals
+        let total = cache.stats();
+        assert_eq!(total.misses, r.evaluated as u64, "{name}");
+        let shards = cache.shard_stats();
+        assert_eq!(shards.iter().map(|s| s.hits).sum::<u64>(), total.hits);
+        assert_eq!(shards.iter().map(|s| s.misses).sum::<u64>(), total.misses);
+        assert_eq!(shards.iter().map(|s| s.entries).sum::<usize>(), total.entries);
+
+        // latency histograms: one sample per real evaluation in the
+        // total and in each phase (cache hits must not pollute them)
+        assert_eq!(obs.eval_stats().count, r.evaluated as u64, "{name}");
+        for (phase, st) in obs.phase_stats() {
+            assert_eq!(st.count, r.evaluated as u64, "{name}/{phase}");
+            assert!(st.p50 <= st.p95 && st.p95 <= st.max, "{name}/{phase}");
+        }
+
+        // per-strategy coverage identity over the whole space
+        match name {
+            "exhaustive" | "bounded-prune" => {
+                assert_eq!(r.evaluated + r.skipped, r.candidates, "{name}");
+                assert_eq!(r.cache_hits, 0, "{name}: fresh cache");
+            }
+            _ => assert_eq!(r.evals.len() + r.skipped, r.candidates, "{name}"),
+        }
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+/// The trace must parse as one JSON array, every event line must be a
+/// complete object with pid/tid/ts, and every `B` must have a matching
+/// `E` on the same track, in order.
+#[test]
+fn trace_file_is_well_formed_chrome_json() {
+    let space = small_space();
+    let trace_path = tmp("trace");
+    let jnl_path = tmp("trace_jnl");
+    let obs =
+        Arc::new(Obs::new().with_trace(TraceSink::create(&trace_path).unwrap()));
+    let cache = EvalCache::new();
+    let writer = JournalWriter::create(&jnl_path, "bounded-prune", &space)
+        .unwrap()
+        .with_sync_every(1)
+        .with_obs(obs.clone());
+    let ctx = SweepContext::new(&cache, 2).with_sink(&writer).with_obs(&obs);
+    let r = BoundedPrune::default().run(&space, &ctx).unwrap();
+    writer.finalize(&r).unwrap();
+    obs.trace.as_ref().unwrap().finish().unwrap();
+    let text = std::fs::read_to_string(&trace_path).unwrap();
+    std::fs::remove_file(&trace_path).ok();
+    std::fs::remove_file(&jnl_path).ok();
+
+    // the whole file is one JSON array
+    let whole = Json::parse(&text).unwrap();
+    let events = whole.as_arr().unwrap();
+    assert!(events.len() >= 2 + 4 * r.evaluated, "one span per phase at least");
+
+    // every line (minus its separator comma) is a complete event, and
+    // B/E events nest properly per track in file order
+    let mut stacks: HashMap<u64, Vec<String>> = HashMap::new();
+    for line in text.lines() {
+        let bare = line.trim().trim_end_matches(',');
+        if bare == "[" || bare == "]" || bare.is_empty() {
+            continue;
+        }
+        let e = Json::parse(bare).unwrap();
+        let ph = e.field("ph").unwrap().as_str().unwrap().to_string();
+        let tid = e.field("tid").unwrap().as_u64().unwrap();
+        let name = e.field("name").unwrap().as_str().unwrap().to_string();
+        assert!(e.field("pid").unwrap().as_u64().unwrap() > 0);
+        assert!(e.field("ts").unwrap().as_f64().unwrap() >= 0.0);
+        match ph.as_str() {
+            "B" => stacks.entry(tid).or_default().push(name),
+            "E" => {
+                let open = stacks.entry(tid).or_default().pop();
+                assert_eq!(open.as_deref(), Some(name.as_str()), "unbalanced E");
+            }
+            "M" => assert_eq!(name, "thread_name"),
+            other => panic!("unexpected event phase `{other}`"),
+        }
+    }
+    for (tid, stack) in &stacks {
+        assert!(stack.is_empty(), "track {tid} has unclosed spans: {stack:?}");
+    }
+
+    // the expected spans are all present
+    for needle in ["compile", "resource-replay", "timing", "power", "wave m=1", "fsync"] {
+        assert!(text.contains(needle), "trace is missing `{needle}` spans");
+    }
+}
+
+/// Instrumentation must be observation only: the same sweep with and
+/// without an observer returns bit-identical evaluations and counters.
+#[test]
+fn observed_sweep_results_match_unobserved() {
+    let space = small_space();
+    for strategy in strategies() {
+        let bare_cache = EvalCache::new();
+        let bare_ctx = SweepContext::new(&bare_cache, 2);
+        let bare = strategy.run(&space, &bare_ctx).unwrap();
+
+        let obs = Obs::new();
+        let obs_cache = EvalCache::new();
+        let obs_ctx = SweepContext::new(&obs_cache, 2).with_obs(&obs);
+        let seen = strategy.run(&space, &obs_ctx).unwrap();
+
+        assert_eq!(bare.evaluated, seen.evaluated, "{}", strategy.name());
+        assert_eq!(bare.cache_hits, seen.cache_hits, "{}", strategy.name());
+        assert_eq!(bare.skipped, seen.skipped, "{}", strategy.name());
+        assert_eq!(bare.evals.len(), seen.evals.len(), "{}", strategy.name());
+        for (a, b) in bare.evals.iter().zip(&seen.evals) {
+            assert_eq!(a.design, b.design);
+            assert_eq!(a.perf_per_watt.to_bits(), b.perf_per_watt.to_bits());
+            assert_eq!(a.power_w.to_bits(), b.power_w.to_bits());
+        }
+    }
+}
