@@ -11,7 +11,9 @@
 //!   emit-verilog [--workload NAME] --n N --m M [--grid WxH]
 
 use std::collections::HashMap;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::coordinator::Coordinator;
 use crate::dfg;
@@ -28,7 +30,9 @@ use crate::lbm::workload::{
     fluid_max_diff, grid_to_state, LbmRunner, DEFAULT_ONE_TAU,
 };
 use crate::lbm::LbmDesign;
-use crate::obs::{Obs, Progress, TraceSink};
+use crate::obs::{
+    EventLog, Obs, ObsServer, Progress, SnapshotWriter, TraceSink, Watchdog,
+};
 use crate::report;
 use crate::resource::device;
 use crate::runtime::{dense_to_state, state_to_dense, PjrtRuntime};
@@ -122,22 +126,39 @@ COMMANDS:
               [--ddr NAME[,NAME...]] [--max-n N] [--max-m M] [--passes P]
               [--min-util X] [--seed S] [--restarts R] [--workers K]
               [--session FILE] [--journal FILE] [--sync-every N]
+              [--sync-interval SECS]
               [--bench [FILE]] [--trace FILE] [--metrics FILE]
+              [--metrics-every SECS] [--events FILE]
+              [--listen ADDR] [--stall-after SECS]
               [--profile] [--progress [SECS]]
                                            multi-device sweep (cached, resumable);
                                            --journal appends every row to an
                                            fsync'd crash-safe log as it completes
-                                           (--sync-every batches the fsyncs);
+                                           (--sync-every batches the fsyncs,
+                                           --sync-interval also fsyncs at least
+                                           every SECS of wall time);
                                            --bench re-sweeps warm and writes
                                            cold/warm evals/sec + a per-phase
                                            breakdown to FILE (default
                                            BENCH_dse.json);
                                            --trace writes Chrome trace_event
                                            spans (load in Perfetto); --metrics
-                                           dumps the counter registry as JSON;
-                                           --profile prints a per-phase latency
-                                           table; --progress reports live status
-                                           on stderr every SECS (default 2)
+                                           dumps the counter registry as JSON
+                                           (--metrics-every rewrites it
+                                           atomically every SECS while the
+                                           sweep runs); --events appends
+                                           NDJSON lifecycle events (sweep
+                                           start/finish, waves, restarts,
+                                           recovery, stalls); --listen serves
+                                           GET /metrics (Prometheus text),
+                                           /status (JSON) and /healthz on ADDR
+                                           (e.g. 127.0.0.1:9100) while the
+                                           sweep runs; --stall-after warns
+                                           (once per job) when an evaluation
+                                           exceeds SECS; --profile prints a
+                                           per-phase latency table; --progress
+                                           reports live status with ETA on
+                                           stderr every SECS (default 2)
   dse resume  --session FILE | --journal FILE  [space/strategy/telemetry flags]
                                            reload a session — or recover a
                                            (possibly torn) journal — and finish
@@ -472,21 +493,60 @@ fn file_flag<'a>(args: &'a Args, name: &str) -> Result<Option<&'a str>> {
     }
 }
 
+/// Parse a `--name SECS` flag into a positive, finite duration
+/// (`Duration::from_secs_f64` would panic on anything else).
+fn secs_flag(args: &Args, name: &str) -> Result<Option<Duration>> {
+    let Some(v) = args.flag(name) else { return Ok(None) };
+    let secs: f64 = v.parse().map_err(|_| {
+        Error::Explore(format!("bad value for --{name}: `{v}`"))
+    })?;
+    if !(secs.is_finite() && secs > 0.0) {
+        return Err(Error::Explore(format!(
+            "--{name} wants a positive number of seconds, got `{v}`"
+        )));
+    }
+    Ok(Some(Duration::from_secs_f64(secs)))
+}
+
 /// Telemetry sinks selected by the sweep flags.  `obs` stays `None`
 /// when every sink is off, so the default path pays nothing.
 struct SweepObs {
     obs: Option<Arc<Obs>>,
     trace_path: Option<String>,
     metrics_path: Option<String>,
+    events_path: Option<String>,
+    listen: Option<String>,
+    metrics_every: Option<Duration>,
+    stall_after: Option<Duration>,
     profile: bool,
 }
 
-/// Build the observer from `--trace` / `--metrics` / `--profile` /
-/// `--progress` (and `--bench`, whose phase breakdown needs the phase
-/// histograms even with every explicit sink off).
+/// Build the observer from `--trace` / `--metrics` / `--events` /
+/// `--listen` / `--stall-after` / `--profile` / `--progress` (and
+/// `--bench`, whose phase breakdown needs the phase histograms even
+/// with every explicit sink off).
 fn sweep_obs(args: &Args) -> Result<SweepObs> {
     let trace_path = file_flag(args, "trace")?.map(str::to_string);
     let metrics_path = file_flag(args, "metrics")?.map(str::to_string);
+    let events_path = file_flag(args, "events")?.map(str::to_string);
+    let listen = match args.flag("listen") {
+        Some("true") => {
+            return Err(Error::Explore(
+                "--listen needs an ADDR argument (e.g. 127.0.0.1:9100, port 0 \
+                 for ephemeral)"
+                    .into(),
+            ))
+        }
+        other => other.map(str::to_string),
+    };
+    let metrics_every = secs_flag(args, "metrics-every")?;
+    if metrics_every.is_some() && metrics_path.is_none() {
+        return Err(Error::Explore(
+            "--metrics-every requires --metrics FILE (the snapshot to rewrite)"
+                .into(),
+        ));
+    }
+    let stall_after = secs_flag(args, "stall-after")?;
     let profile = args.flag("profile").is_some();
     let progress = match args.flag("progress") {
         None => None,
@@ -498,6 +558,9 @@ fn sweep_obs(args: &Args) -> Result<SweepObs> {
     let bench = args.flag("bench").is_some();
     if trace_path.is_none()
         && metrics_path.is_none()
+        && events_path.is_none()
+        && listen.is_none()
+        && stall_after.is_none()
         && !profile
         && progress.is_none()
         && !bench
@@ -506,12 +569,19 @@ fn sweep_obs(args: &Args) -> Result<SweepObs> {
             obs: None,
             trace_path: None,
             metrics_path: None,
+            events_path: None,
+            listen: None,
+            metrics_every: None,
+            stall_after: None,
             profile: false,
         });
     }
     let mut obs = Obs::new();
     if let Some(path) = &trace_path {
         obs = obs.with_trace(TraceSink::create(path)?);
+    }
+    if let Some(path) = &events_path {
+        obs = obs.with_events(EventLog::create(path)?);
     }
     if let Some(secs) = progress {
         obs = obs.with_progress(Progress::new(secs));
@@ -520,8 +590,104 @@ fn sweep_obs(args: &Args) -> Result<SweepObs> {
         obs: Some(Arc::new(obs)),
         trace_path,
         metrics_path,
+        events_path,
+        listen,
+        metrics_every,
+        stall_after,
         profile,
     })
+}
+
+/// The live plane behind `--listen` / `--metrics-every` /
+/// `--stall-after`: scrape server, periodic snapshot writer, stall
+/// watchdog.  All three are background reader threads over the shared
+/// hub — the sweep itself never blocks on them — and each stops on
+/// drop, so the error path tears them down too.
+struct LivePlane {
+    server: Option<ObsServer>,
+    snapshots: Option<SnapshotWriter>,
+    watchdog: Option<Watchdog>,
+}
+
+impl LivePlane {
+    fn start(
+        so: &SweepObs,
+        obs: &Arc<Obs>,
+        id: report::SweepIdentity,
+        cache: &Arc<EvalCache>,
+        journal: Option<&Arc<JournalWriter>>,
+    ) -> Result<LivePlane> {
+        let server = match &so.listen {
+            None => None,
+            Some(addr) => {
+                let (obs2, cache2) = (Arc::clone(obs), Arc::clone(cache));
+                let journal2 = journal.cloned();
+                let status: crate::obs::serve::StatusFn = Arc::new(move || {
+                    report::status_json(&id, &obs2, &cache2, journal2.as_deref())
+                });
+                let server = ObsServer::start(addr, Arc::clone(obs), status)?;
+                eprintln!(
+                    "obs: serving on http://{} (/metrics /status /healthz)",
+                    server.addr()
+                );
+                Some(server)
+            }
+        };
+        let snapshots = match (&so.metrics_path, so.metrics_every) {
+            (Some(path), Some(every)) => Some(SnapshotWriter::start(
+                PathBuf::from(path),
+                every,
+                Arc::clone(obs),
+            )?),
+            _ => None,
+        };
+        // the watchdog also feeds the inflight-age gauges the scrape
+        // endpoint exports, so it runs whenever the server does
+        let watchdog = if so.stall_after.is_some() || server.is_some() {
+            Some(Watchdog::start(Arc::clone(obs), so.stall_after)?)
+        } else {
+            None
+        };
+        Ok(LivePlane { server, snapshots, watchdog })
+    }
+
+    /// Stop and join all three threads (idempotent; drop does the same
+    /// member-wise).  Called before the final metrics write so the
+    /// shutdown snapshot never races a periodic one.
+    fn shutdown(&mut self) {
+        if let Some(s) = &mut self.server {
+            s.shutdown();
+        }
+        if let Some(s) = &mut self.snapshots {
+            s.shutdown();
+        }
+        if let Some(w) = &mut self.watchdog {
+            w.shutdown();
+        }
+    }
+}
+
+/// Error-path telemetry flush: a sweep that dies mid-batch must not
+/// take its telemetry with it.  Marks the snapshot partial
+/// (`sweep.partial` gauge), records a `sweep-error` event, then
+/// finalizes the trace, metrics and event files with whatever they
+/// hold.  Returns the error unchanged so callers can `map_err` it.
+fn flush_partial(so: &SweepObs, err: Error) -> Error {
+    if let Some(obs) = &so.obs {
+        obs.metrics.gauge("sweep.partial").set(1);
+        obs.event("sweep-error", vec![("error", dse_json::str(&err.to_string()))]);
+        if let Some(trace) = &obs.trace {
+            let _ = trace.finish();
+        }
+        if let Some(path) = &so.metrics_path {
+            let _ = crate::obs::serve::write_metrics_snapshot(Path::new(path), obs);
+            eprintln!("  partial metrics snapshot written to {path}");
+        }
+        if let Some(log) = &obs.events {
+            let _ = log.flush();
+        }
+    }
+    err
 }
 
 /// Flush the telemetry sinks once the sweep is done: mirror the cache
@@ -550,8 +716,16 @@ fn finish_obs(
         }
     }
     if let Some(path) = &so.metrics_path {
-        std::fs::write(path, obs.metrics.snapshot().to_string())?;
+        // the shared snapshot writer, so the final file counts itself
+        // in `obs.snapshots` and replaces any periodic one atomically
+        crate::obs::serve::write_metrics_snapshot(Path::new(path), obs)?;
         println!("  metrics snapshot written to {path}");
+    }
+    if let Some(log) = &obs.events {
+        log.flush()?;
+        if let Some(path) = &so.events_path {
+            println!("  event log written to {path} ({} events)", log.seq());
+        }
     }
     if so.profile {
         print!("{}", report::phase_profile(&obs.phase_stats()));
@@ -574,6 +748,11 @@ fn bench_phases(so: &SweepObs) -> dse_json::Json {
 }
 
 fn cmd_dse_sweep(args: &Args) -> Result<i32> {
+    let so = sweep_obs(args)?;
+    dse_sweep_body(args, &so).map_err(|e| flush_partial(&so, e))
+}
+
+fn dse_sweep_body(args: &Args, so: &SweepObs) -> Result<i32> {
     let space = dse_space(args)?;
     let empty = dse_json::obj(vec![]);
     let (strategy, params) = dse_strategy_with_params(
@@ -581,9 +760,9 @@ fn cmd_dse_sweep(args: &Args) -> Result<i32> {
         args.flag("strategy").unwrap_or("exhaustive"),
         &empty,
     )?;
-    let so = sweep_obs(args)?;
     let sync_every: usize = args.get("sync-every", 0)?;
-    let cache = EvalCache::new();
+    let sync_interval = secs_flag(args, "sync-interval")?;
+    let cache = Arc::new(EvalCache::new());
     let journal = match file_flag(args, "journal")? {
         Some(path) => {
             // refuse to truncate an interrupted journal: the natural
@@ -608,23 +787,51 @@ fn cmd_dse_sweep(args: &Args) -> Result<i32> {
             if sync_every > 0 {
                 writer = writer.with_sync_every(sync_every);
             }
+            if let Some(interval) = sync_interval {
+                writer = writer.with_sync_interval(interval);
+            }
             if let Some(obs) = &so.obs {
                 writer = writer.with_obs(obs.clone());
             }
-            Some(writer)
+            Some(Arc::new(writer))
         }
         None => None,
     };
     let mut ctx = SweepContext::new(&cache, dse_workers(args)?);
     if let Some(writer) = &journal {
-        ctx = ctx.with_sink(writer);
+        ctx = ctx.with_sink(&**writer);
     }
     if let Some(obs) = &so.obs {
         ctx = ctx.with_obs(obs);
         if let Some(p) = &obs.progress {
             p.add_total(space.len() as u64);
         }
+        obs.metrics.gauge("sweep.candidates").set(space.len() as i64);
+        obs.event(
+            "sweep-start",
+            vec![
+                ("workload", dse_json::str(space.workload)),
+                ("strategy", dse_json::str(strategy.name())),
+                ("candidates", dse_json::uint(space.len() as u64)),
+                ("fingerprint", dse_json::str(&space_fingerprint(&space))),
+            ],
+        );
     }
+    let mut plane = match &so.obs {
+        Some(obs) => Some(LivePlane::start(
+            so,
+            obs,
+            report::SweepIdentity {
+                workload: space.workload.to_string(),
+                strategy: strategy.name().to_string(),
+                fingerprint: space_fingerprint(&space),
+                candidates: space.len(),
+            },
+            &cache,
+            journal.as_ref(),
+        )?),
+        None => None,
+    };
     println!(
         "sweeping {} candidates ({} workload, {} grids x {} devices x {} ddr) with `{}` ...",
         space.len(),
@@ -679,7 +886,7 @@ fn cmd_dse_sweep(args: &Args) -> Result<i32> {
                 ]),
             ),
             ("speedup", dse_json::num(dt / dt_warm.max(1e-9))),
-            ("phases", bench_phases(&so)),
+            ("phases", bench_phases(so)),
         ]);
         std::fs::write(path, bench.to_string())?;
         println!("  bench written to {path}");
@@ -698,7 +905,22 @@ fn cmd_dse_sweep(args: &Args) -> Result<i32> {
         session.save(path)?;
         println!("  session saved to {path} ({} rows)", session.rows.len());
     }
-    finish_obs(&so, &cache, journal.as_ref(), ctx.workers, space.len())?;
+    if let Some(obs) = &so.obs {
+        obs.event(
+            "sweep-finish",
+            vec![
+                ("rows", dse_json::uint(result.evals.len() as u64)),
+                ("evaluated", dse_json::uint(result.evaluated as u64)),
+                ("cache_hits", dse_json::uint(result.cache_hits)),
+                ("skipped", dse_json::uint(result.skipped as u64)),
+                ("seconds", dse_json::num(dt)),
+            ],
+        );
+    }
+    if let Some(plane) = &mut plane {
+        plane.shutdown();
+    }
+    finish_obs(so, &cache, journal.as_deref(), ctx.workers, space.len())?;
     Ok(0)
 }
 
@@ -708,16 +930,21 @@ fn throughput(evals: usize, seconds: f64) -> f64 {
 }
 
 fn cmd_dse_resume(args: &Args) -> Result<i32> {
+    let so = sweep_obs(args)?;
+    dse_resume_body(args, &so).map_err(|e| flush_partial(&so, e))
+}
+
+fn dse_resume_body(args: &Args, so: &SweepObs) -> Result<i32> {
     match (file_flag(args, "journal")?, file_flag(args, "session")?) {
-        (Some(journal), _) => resume_journal(args, journal),
-        (None, Some(session)) => resume_session(args, session),
+        (Some(journal), _) => resume_journal(args, so, journal),
+        (None, Some(session)) => resume_session(args, so, session),
         (None, None) => Err(Error::Explore(
             "dse resume: --session FILE or --journal FILE required".into(),
         )),
     }
 }
 
-fn resume_session(args: &Args, path: &str) -> Result<i32> {
+fn resume_session(args: &Args, so: &SweepObs, path: &str) -> Result<i32> {
     let prior = Session::load(path)?;
     // the session records its space: flags only override axes they name
     let space = dse_space_from(args, &prior.space)?;
@@ -729,8 +956,7 @@ fn resume_session(args: &Args, path: &str) -> Result<i32> {
     // resume replays the same hill-climb / prune search
     let (strategy, params) =
         dse_strategy_with_params(args, &strategy_name, &prior.params)?;
-    let so = sweep_obs(args)?;
-    let cache = EvalCache::new();
+    let cache = Arc::new(EvalCache::new());
     let loaded = prior.preload(&cache);
     let mut ctx = SweepContext::new(&cache, dse_workers(args)?);
     if let Some(obs) = &so.obs {
@@ -738,13 +964,47 @@ fn resume_session(args: &Args, path: &str) -> Result<i32> {
         if let Some(p) = &obs.progress {
             p.add_total(space.len() as u64);
         }
+        obs.metrics.gauge("sweep.candidates").set(space.len() as i64);
+        obs.event(
+            "cache-preload",
+            vec![
+                ("source", dse_json::str("session")),
+                ("rows", dse_json::uint(loaded as u64)),
+            ],
+        );
+        obs.event(
+            "sweep-start",
+            vec![
+                ("workload", dse_json::str(space.workload)),
+                ("strategy", dse_json::str(strategy.name())),
+                ("candidates", dse_json::uint(space.len() as u64)),
+                ("fingerprint", dse_json::str(&space_fingerprint(&space))),
+            ],
+        );
     }
+    let mut plane = match &so.obs {
+        Some(obs) => Some(LivePlane::start(
+            so,
+            obs,
+            report::SweepIdentity {
+                workload: space.workload.to_string(),
+                strategy: strategy.name().to_string(),
+                fingerprint: space_fingerprint(&space),
+                candidates: space.len(),
+            },
+            &cache,
+            None,
+        )?),
+        None => None,
+    };
     println!(
         "resuming from {path}: {loaded} rows preloaded, sweeping {} candidates with `{}` ...",
         space.len(),
         strategy.name()
     );
+    let t0 = std::time::Instant::now();
     let result = strategy.run(&space, &ctx)?;
+    let dt = t0.elapsed().as_secs_f64();
     println!("{}", report::dse_table(&result.evals));
     print!("{}", report::sweep_summary(&result));
     println!(
@@ -758,7 +1018,22 @@ fn resume_session(args: &Args, path: &str) -> Result<i32> {
     merged.merge(&Session::from_sweep(&result, &space))?;
     merged.save(path)?;
     println!("  session now {} rows ({path})", merged.rows.len());
-    finish_obs(&so, &cache, None, ctx.workers, space.len())?;
+    if let Some(obs) = &so.obs {
+        obs.event(
+            "sweep-finish",
+            vec![
+                ("rows", dse_json::uint(result.evals.len() as u64)),
+                ("evaluated", dse_json::uint(result.evaluated as u64)),
+                ("cache_hits", dse_json::uint(result.cache_hits)),
+                ("skipped", dse_json::uint(result.skipped as u64)),
+                ("seconds", dse_json::num(dt)),
+            ],
+        );
+    }
+    if let Some(plane) = &mut plane {
+        plane.shutdown();
+    }
+    finish_obs(so, &cache, None, ctx.workers, space.len())?;
     Ok(0)
 }
 
@@ -769,7 +1044,7 @@ fn resume_session(args: &Args, path: &str) -> Result<i32> {
 /// strategy, or its parameters, the journal is rewritten under an
 /// updated header (carrying the recovered rows over); otherwise the
 /// torn tail is truncated and the sweep appends in place.
-fn resume_journal(args: &Args, path: &str) -> Result<i32> {
+fn resume_journal(args: &Args, so: &SweepObs, path: &str) -> Result<i32> {
     let prior = Journal::recover(path)?;
     let space = dse_space_from(args, &prior.space)?;
     let strategy_name = args
@@ -778,10 +1053,26 @@ fn resume_journal(args: &Args, path: &str) -> Result<i32> {
         .unwrap_or_else(|| prior.strategy.clone());
     let (strategy, params) =
         dse_strategy_with_params(args, &strategy_name, &prior.params)?;
-    let so = sweep_obs(args)?;
     let sync_every: usize = args.get("sync-every", 0)?;
-    let cache = EvalCache::new();
+    let sync_interval = secs_flag(args, "sync-interval")?;
+    let cache = Arc::new(EvalCache::new());
     let loaded = Session::from_journal(&prior).preload(&cache);
+    if let Some(obs) = &so.obs {
+        obs.event(
+            "journal-recovered",
+            vec![
+                ("rows", dse_json::uint(prior.rows.len() as u64)),
+                ("finalized", dse_json::Json::Bool(prior.complete())),
+            ],
+        );
+        obs.event(
+            "cache-preload",
+            vec![
+                ("source", dse_json::str("journal")),
+                ("rows", dse_json::uint(loaded as u64)),
+            ],
+        );
+    }
     let unchanged = space_fingerprint(&space) == prior.fingerprint
         && strategy.name() == prior.strategy
         && params == prior.params;
@@ -807,16 +1098,45 @@ fn resume_journal(args: &Args, path: &str) -> Result<i32> {
     if sync_every > 0 {
         writer = writer.with_sync_every(sync_every);
     }
+    if let Some(interval) = sync_interval {
+        writer = writer.with_sync_interval(interval);
+    }
     if let Some(obs) = &so.obs {
         writer = writer.with_obs(obs.clone());
     }
-    let mut ctx = SweepContext::new(&cache, dse_workers(args)?).with_sink(&writer);
+    let writer = Arc::new(writer);
+    let mut ctx = SweepContext::new(&cache, dse_workers(args)?).with_sink(&*writer);
     if let Some(obs) = &so.obs {
         ctx = ctx.with_obs(obs);
         if let Some(p) = &obs.progress {
             p.add_total(space.len() as u64);
         }
+        obs.metrics.gauge("sweep.candidates").set(space.len() as i64);
+        obs.event(
+            "sweep-start",
+            vec![
+                ("workload", dse_json::str(space.workload)),
+                ("strategy", dse_json::str(strategy.name())),
+                ("candidates", dse_json::uint(space.len() as u64)),
+                ("fingerprint", dse_json::str(&space_fingerprint(&space))),
+            ],
+        );
     }
+    let mut plane = match &so.obs {
+        Some(obs) => Some(LivePlane::start(
+            so,
+            obs,
+            report::SweepIdentity {
+                workload: space.workload.to_string(),
+                strategy: strategy.name().to_string(),
+                fingerprint: space_fingerprint(&space),
+                candidates: space.len(),
+            },
+            &cache,
+            Some(&writer),
+        )?),
+        None => None,
+    };
     println!(
         "resuming journal {path}: {loaded} rows recovered ({}), sweeping {} \
          candidates with `{}` ...",
@@ -824,7 +1144,9 @@ fn resume_journal(args: &Args, path: &str) -> Result<i32> {
         space.len(),
         strategy.name()
     );
+    let t0 = std::time::Instant::now();
     let result = strategy.run(&space, &ctx)?;
+    let dt = t0.elapsed().as_secs_f64();
     writer.finalize(&result)?;
     println!("{}", report::dse_table(&result.evals));
     print!("{}", report::sweep_summary(&result));
@@ -836,7 +1158,22 @@ fn resume_journal(args: &Args, path: &str) -> Result<i32> {
         "  journal finalized: {} rows ({path})",
         writer.rows_written()
     );
-    finish_obs(&so, &cache, Some(&writer), ctx.workers, space.len())?;
+    if let Some(obs) = &so.obs {
+        obs.event(
+            "sweep-finish",
+            vec![
+                ("rows", dse_json::uint(result.evals.len() as u64)),
+                ("evaluated", dse_json::uint(result.evaluated as u64)),
+                ("cache_hits", dse_json::uint(result.cache_hits)),
+                ("skipped", dse_json::uint(result.skipped as u64)),
+                ("seconds", dse_json::num(dt)),
+            ],
+        );
+    }
+    if let Some(plane) = &mut plane {
+        plane.shutdown();
+    }
+    finish_obs(so, &cache, Some(&writer), ctx.workers, space.len())?;
     Ok(0)
 }
 
@@ -1301,11 +1638,49 @@ mod tests {
         let err = file_flag(&b, "session").unwrap_err().to_string();
         assert!(err.contains("--session needs a FILE"), "{err}");
         assert!(file_flag(&b, "journal").unwrap().is_none());
-        for flag in ["trace", "metrics"] {
+        for flag in ["trace", "metrics", "events"] {
             let a = Args::parse(&[format!("--{flag}")]);
             let err = sweep_obs(&a).err().unwrap().to_string();
             assert!(err.contains(&format!("--{flag} needs a FILE")), "{err}");
         }
+        let l = Args::parse(&["--listen".into()]);
+        let err = sweep_obs(&l).err().unwrap().to_string();
+        assert!(err.contains("--listen needs an ADDR"), "{err}");
+    }
+
+    #[test]
+    fn live_flags_are_validated() {
+        // --metrics-every without the snapshot file to rewrite
+        let a = Args::parse(&["--metrics-every".into(), "1".into()]);
+        let err = sweep_obs(&a).err().unwrap().to_string();
+        assert!(err.contains("requires --metrics"), "{err}");
+        // intervals must be positive, finite seconds
+        for bad in ["0", "-1", "inf", "NaN", "soon"] {
+            let a = Args::parse(&[
+                "--metrics".into(),
+                "m.json".into(),
+                "--metrics-every".into(),
+                bad.into(),
+            ]);
+            assert!(sweep_obs(&a).is_err(), "--metrics-every {bad}");
+            let s = Args::parse(&["--stall-after".into(), bad.into()]);
+            assert!(sweep_obs(&s).is_err(), "--stall-after {bad}");
+            let j = Args::parse(&["--sync-interval".into(), bad.into()]);
+            assert!(secs_flag(&j, "sync-interval").is_err(), "--sync-interval {bad}");
+        }
+        // well-formed flags parse into durations
+        let ok = Args::parse(&[
+            "--metrics".into(),
+            "m.json".into(),
+            "--metrics-every".into(),
+            "0.5".into(),
+            "--stall-after".into(),
+            "30".into(),
+        ]);
+        let so = sweep_obs(&ok).unwrap();
+        assert_eq!(so.metrics_every, Some(Duration::from_millis(500)));
+        assert_eq!(so.stall_after, Some(Duration::from_secs(30)));
+        assert!(so.obs.is_some());
     }
 
     #[test]

@@ -182,12 +182,17 @@ fn evaluate_job(
         "eval {} (n={}, m={}) {}x{} @ {}",
         cfg.workload, design.n, design.m, design.w, design.h, cfg.device.key
     );
+    // heartbeat for /status and the stall watchdog: the in-flight
+    // board sees every evaluation start and finish, reusing the
+    // already-formatted span label as the job name
+    o.job_started(&name);
     o.begin("eval", &name, Vec::new());
     let out = match cache {
         Some(c) => c.evaluate_phased(design, cfg, obs),
         None => evaluate_phased(design, cfg, obs).map(|(e, t)| (Arc::new(e), Some(t))),
     };
     o.end("eval", &name);
+    o.job_finished();
     match out {
         Ok((e, times)) => (Ok(e), times),
         Err(err) => (Err(err), None),
@@ -346,6 +351,14 @@ mod tests {
         // two batches x two workers, all lifetimes accounted
         assert_eq!(obs.metrics.counter("worker.spawned").get(), 4);
         assert!(obs.metrics.counter("worker.busy_ns").get() > 0);
+        // the in-flight board saw the named workers and all are idle
+        let states = obs.worker_states();
+        assert!(!states.is_empty());
+        for s in &states {
+            assert!(s.name.starts_with("worker-"), "{}", s.name);
+            assert!(!s.busy, "{} still busy after the batch", s.name);
+            assert_eq!(s.age_ns, 0);
+        }
     }
 
     #[test]

@@ -51,6 +51,7 @@ use std::collections::HashSet;
 use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::Path;
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
 use crate::explore::Evaluation;
@@ -285,6 +286,10 @@ struct Inner {
     /// rows appended since the last fsync
     pending: usize,
     sync_every: usize,
+    /// also fsync whenever this much time has passed since the last
+    /// one (checked on append; None = batch size only)
+    sync_interval: Option<Duration>,
+    last_sync: Instant,
     /// fsyncs issued over the journal's lifetime (header sync included)
     fsyncs: u64,
 }
@@ -340,6 +345,8 @@ impl JournalWriter {
                 rows: 0,
                 pending: 0,
                 sync_every: DEFAULT_SYNC_EVERY,
+                sync_interval: None,
+                last_sync: Instant::now(),
                 fsyncs: 1, // the header sync above
             }),
         })
@@ -376,6 +383,8 @@ impl JournalWriter {
                 seen,
                 pending: 0,
                 sync_every: DEFAULT_SYNC_EVERY,
+                sync_interval: None,
+                last_sync: Instant::now(),
                 fsyncs: 0,
             }),
         })
@@ -385,6 +394,17 @@ impl JournalWriter {
     /// the append returns).
     pub fn with_sync_every(self, every: usize) -> JournalWriter {
         self.inner.lock().unwrap().sync_every = every.max(1);
+        self
+    }
+
+    /// Also fsync whenever `interval` has elapsed since the last sync,
+    /// regardless of how few rows are pending — bounds the data a
+    /// crash can lose by *time*, complementing the row-count batch.
+    /// Checked on append (an idle journal with nothing pending has
+    /// nothing to lose), routed through the same timed fsync helper so
+    /// `journal.fsync_ns` accounting stays exact.
+    pub fn with_sync_interval(self, interval: Duration) -> JournalWriter {
+        self.inner.lock().unwrap().sync_interval = Some(interval);
         self
     }
 
@@ -415,11 +435,13 @@ impl JournalWriter {
         res?;
         inner.fsyncs += 1;
         inner.pending = 0;
+        inner.last_sync = Instant::now();
         Ok(())
     }
 
     /// Append one evaluated row (deduplicated by content address);
-    /// fsyncs every `sync_every` appended rows.
+    /// fsyncs every `sync_every` appended rows, or sooner when the
+    /// configured sync interval has elapsed.
     pub fn append(&self, eval: &Evaluation) -> Result<()> {
         let key = row_key(eval, self.latency);
         let mut inner = self.inner.lock().unwrap();
@@ -431,7 +453,11 @@ impl JournalWriter {
         write_record(&mut inner.file, &record)?;
         inner.rows += 1;
         inner.pending += 1;
-        if inner.pending >= inner.sync_every {
+        let due_batch = inner.pending >= inner.sync_every;
+        let due_time = inner
+            .sync_interval
+            .map_or(false, |d| inner.last_sync.elapsed() >= d);
+        if due_batch || due_time {
             self.fsync(&mut inner)?;
         }
         Ok(())
@@ -468,6 +494,17 @@ impl JournalWriter {
     /// fresh journal counts; a resumed writer starts at zero).
     pub fn fsyncs(&self) -> u64 {
         self.inner.lock().unwrap().fsyncs
+    }
+
+    /// Rows appended but not yet fsync'd — what a crash right now
+    /// would lose.  Surfaced by `/status` as the journal's flush lag.
+    pub fn pending_rows(&self) -> usize {
+        self.inner.lock().unwrap().pending
+    }
+
+    /// Time since the last fsync (or since the writer was opened).
+    pub fn last_sync_age(&self) -> Duration {
+        self.inner.lock().unwrap().last_sync.elapsed()
     }
 }
 
@@ -744,6 +781,40 @@ mod tests {
         }
         assert_eq!(w.fsyncs(), 1, "batch not reached: header sync only");
         w.sync().unwrap();
+        assert_eq!(w.fsyncs(), 2);
+        drop(w);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn sync_interval_flushes_on_time_not_only_batch() {
+        let path = tmp("interval");
+        let rows = rows();
+        // an already-elapsed interval forces an fsync on every append,
+        // even though the row batch is nowhere near full
+        let w = JournalWriter::create(&path, "exhaustive", &space())
+            .unwrap()
+            .with_sync_every(1000)
+            .with_sync_interval(Duration::ZERO);
+        assert_eq!(w.fsyncs(), 1, "header sync");
+        w.append(&rows[0]).unwrap();
+        assert_eq!(w.fsyncs(), 2, "elapsed interval forces the fsync");
+        assert_eq!(w.pending_rows(), 0);
+        w.append(&rows[1]).unwrap();
+        assert_eq!(w.fsyncs(), 3);
+        drop(w);
+
+        // a far-future interval leaves the row batch in charge
+        let w = JournalWriter::create(&path, "exhaustive", &space())
+            .unwrap()
+            .with_sync_every(1000)
+            .with_sync_interval(Duration::from_secs(3600));
+        w.append(&rows[0]).unwrap();
+        assert_eq!(w.fsyncs(), 1, "neither batch nor interval due");
+        assert_eq!(w.pending_rows(), 1);
+        assert!(w.last_sync_age() < Duration::from_secs(3600));
+        w.sync().unwrap();
+        assert_eq!(w.pending_rows(), 0);
         assert_eq!(w.fsyncs(), 2);
         drop(w);
         std::fs::remove_file(&path).ok();

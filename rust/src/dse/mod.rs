@@ -38,8 +38,12 @@
 //! streaming journal hook.  The same plumbing carries the optional
 //! telemetry hub ([`crate::obs::Obs`], attached with
 //! [`SweepContext::with_obs`]): per-evaluation phase timings, strategy
-//! skip counters, wave/restart trace spans and journal fsync spans all
-//! ride the batch path, and with no observer attached none of it runs.
+//! skip counters, wave/restart trace spans, lifecycle events and
+//! journal fsync spans all ride the batch path, and with no observer
+//! attached none of it runs.  On top of the hub sits the live plane
+//! ([`crate::obs::serve`]): `dse sweep --listen` scrapes the same
+//! counters over HTTP while the sweep runs, and `--stall-after` turns
+//! the per-worker heartbeat into a hung-evaluation watchdog.
 //!
 //! `explore::explore` (the seed API) is a thin wrapper over
 //! [`Exhaustive`] on a single-device space.

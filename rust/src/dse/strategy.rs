@@ -151,6 +151,13 @@ impl SearchStrategy for Exhaustive {
         let jobs: Vec<BatchJob> = cands.iter().map(|c| (c.cfg, c.design)).collect();
         let span = format!("exhaustive ({} jobs)", jobs.len());
         if let Some(o) = ctx.obs {
+            o.event(
+                "wave-start",
+                vec![
+                    ("strategy", crate::dse::json::str(self.name())),
+                    ("jobs", crate::dse::json::uint(jobs.len() as u64)),
+                ],
+            );
             o.begin("strategy", &span, Vec::new());
         }
         let out =
@@ -306,6 +313,14 @@ impl SearchStrategy for BoundedPrune {
                 }
                 let span = format!("wave m={m} ({} jobs)", wave.len());
                 if let Some(o) = ctx.obs {
+                    o.event(
+                        "wave-start",
+                        vec![
+                            ("strategy", crate::dse::json::str(self.name())),
+                            ("m", crate::dse::json::uint(m as u64)),
+                            ("jobs", crate::dse::json::uint(wave.len() as u64)),
+                        ],
+                    );
                     o.begin("strategy", &span, Vec::new());
                 }
                 let out = evaluate_batch_observed(
@@ -470,6 +485,13 @@ impl SearchStrategy for HillClimb {
             let span = format!("restart {restart}");
             if let Some(o) = ctx.obs {
                 o.metrics.add("strategy.hill-climb.restarts", 1);
+                o.event(
+                    "restart",
+                    vec![
+                        ("strategy", crate::dse::json::str(self.name())),
+                        ("restart", crate::dse::json::uint(restart as u64)),
+                    ],
+                );
                 o.begin("strategy", &span, Vec::new());
             }
             // immediately-invoked so an evaluation error still closes

@@ -33,8 +33,11 @@
 //! * [`runtime`] — PJRT execution of the JAX/Pallas AOT artifacts
 //!   (stubbed unless built with the `pjrt` feature);
 //! * [`coordinator`] — multi-threaded DSE job orchestration;
-//! * [`obs`] — sweep telemetry: metrics registry, Chrome-trace span
-//!   sink, per-phase profiling, progress reporting.
+//! * [`obs`] — sweep observability: metrics registry, Chrome-trace
+//!   span sink, per-phase profiling, progress reporting, NDJSON
+//!   lifecycle event log, and the live plane ([`obs::serve`]) — a
+//!   scrapeable `/metrics` + `/status` HTTP endpoint, periodic
+//!   atomic metrics snapshots, and a stalled-evaluation watchdog.
 //!
 //! ## Quickstart
 //!

@@ -1,0 +1,143 @@
+//! Structured NDJSON event log: one self-delimiting JSON object per
+//! noteworthy lifecycle transition of a sweep.
+//!
+//! Traces answer *where time went*, metrics answer *how much*, the
+//! event log answers *what happened, in order*: sweep start/finish,
+//! strategy waves, hill-climb restarts, journal recovery, cache
+//! preloads, worker stalls, errors.  Each record carries a monotonic
+//! sequence number (gapless per log, starting at 1) and a nanosecond
+//! timestamp relative to the log's creation, so events, trace spans
+//! and metric snapshots can be triangulated after the fact:
+//!
+//! ```text
+//! {"seq":1,"t_ns":120430,"event":"sweep-start","workload":"lbm",...}
+//! {"seq":2,"t_ns":384112,"event":"wave-start","m":1,"jobs":3}
+//! {"seq":3,"t_ns":901877,"event":"stall","worker":"worker-1",...}
+//! {"seq":4,"t_ns":998001,"event":"sweep-finish","rows":12,...}
+//! ```
+//!
+//! Like the trace sink, mid-sweep write errors are swallowed — an
+//! event log that cannot be written must never abort the sweep it is
+//! narrating — but every record is flushed to the OS as it is emitted
+//! (events are rare, and a live `tail -f` is the point), and
+//! [`EventLog::flush`] reports sync errors for the shutdown path.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::dse::json::{self, Json};
+use crate::error::Result;
+
+pub struct EventLog {
+    epoch: Instant,
+    inner: Mutex<EventInner>,
+}
+
+struct EventInner {
+    out: BufWriter<File>,
+    seq: u64,
+}
+
+impl EventLog {
+    /// Create (truncate) the event log file.
+    pub fn create(path: impl AsRef<Path>) -> Result<EventLog> {
+        let out = BufWriter::new(File::create(path)?);
+        Ok(EventLog {
+            epoch: Instant::now(),
+            inner: Mutex::new(EventInner { out, seq: 0 }),
+        })
+    }
+
+    /// Append one event record: `{"seq":N,"t_ns":T,"event":name,...}`
+    /// with `fields` spliced in after the envelope.  Returns the
+    /// record's sequence number.  Write errors are swallowed (the
+    /// sequence number still advances, so a later successful record
+    /// exposes the gap instead of hiding it).
+    pub fn emit(&self, name: &str, fields: Vec<(&str, Json)>) -> u64 {
+        let t_ns = self.epoch.elapsed().as_nanos() as u64;
+        let mut inner = self.inner.lock().unwrap();
+        inner.seq += 1;
+        let mut record = vec![
+            ("seq", json::uint(inner.seq)),
+            ("t_ns", json::uint(t_ns)),
+            ("event", json::str(name)),
+        ];
+        record.extend(fields);
+        let mut line = json::obj(record).to_string();
+        line.push('\n');
+        let _ = inner.out.write_all(line.as_bytes());
+        let _ = inner.out.flush();
+        inner.seq
+    }
+
+    /// Records emitted so far.
+    pub fn seq(&self) -> u64 {
+        self.inner.lock().unwrap().seq
+    }
+
+    /// Flush buffered records, reporting the error the hot path
+    /// swallows.  Called by the sweep's shutdown (and error) paths.
+    pub fn flush(&self) -> Result<()> {
+        self.inner.lock().unwrap().out.flush()?;
+        Ok(())
+    }
+}
+
+/// Parse an NDJSON event file back into records (each line one JSON
+/// object).  Used by tests and tooling to reconcile a log against the
+/// sweep that wrote it; a malformed line is an error, not a skip.
+pub fn parse_event_log(text: &str) -> Result<Vec<Json>> {
+    text.lines()
+        .filter(|line| !line.trim().is_empty())
+        .map(Json::parse)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir()
+            .join(format!("spdx_events_{tag}_{}.ndjson", std::process::id()))
+    }
+
+    #[test]
+    fn events_are_sequenced_and_parse_back() {
+        let path = tmp("roundtrip");
+        let log = EventLog::create(&path).unwrap();
+        assert_eq!(log.emit("sweep-start", vec![("jobs", json::uint(4))]), 1);
+        assert_eq!(log.emit("wave-start", vec![("m", json::uint(1))]), 2);
+        assert_eq!(log.emit("sweep-finish", Vec::new()), 3);
+        log.flush().unwrap();
+        assert_eq!(log.seq(), 3);
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let records = parse_event_log(&text).unwrap();
+        assert_eq!(records.len(), 3);
+        for (i, r) in records.iter().enumerate() {
+            assert_eq!(r.field("seq").unwrap().as_u64().unwrap(), i as u64 + 1);
+            assert!(r.field("t_ns").unwrap().as_u64().is_ok());
+        }
+        assert_eq!(
+            records[0].field("event").unwrap().as_str().unwrap(),
+            "sweep-start"
+        );
+        assert_eq!(records[0].field("jobs").unwrap().as_u64().unwrap(), 4);
+        // timestamps are monotone in sequence order
+        let ts: Vec<u64> = records
+            .iter()
+            .map(|r| r.field("t_ns").unwrap().as_u64().unwrap())
+            .collect();
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]), "{ts:?}");
+    }
+
+    #[test]
+    fn malformed_line_is_a_parse_error() {
+        assert!(parse_event_log("{\"seq\":1}\nnot json\n").is_err());
+        assert_eq!(parse_event_log("\n\n").unwrap().len(), 0);
+    }
+}

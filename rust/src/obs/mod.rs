@@ -1,5 +1,6 @@
-//! Sweep telemetry: metrics registry, Chrome-trace span sink, and
-//! progress reporting for the DSE engine.
+//! Sweep telemetry: metrics registry, Chrome-trace span sink, event
+//! log, live scrape endpoint, and progress reporting for the DSE
+//! engine.
 //!
 //! The paper's method is *measure to choose*; this module makes the
 //! measuring engine itself measurable.  Everything is dependency-free
@@ -9,7 +10,7 @@
 //! taken and no atomics are touched — the uninstrumented sweep path is
 //! byte-for-byte the old code.
 //!
-//! Three sinks hang off one [`Obs`] hub:
+//! Four sinks hang off one [`Obs`] hub:
 //!
 //! * [`MetricsRegistry`] — named atomic counters / gauges /
 //!   log-bucketed latency histograms, snapshotable to JSON
@@ -18,21 +19,39 @@
 //!   (`--trace FILE`): one track per worker thread, per-evaluation
 //!   spans split into compile / resource-replay / timing / power
 //!   phases, strategy-wave spans, journal fsync spans;
-//! * [`Progress`] — a throttled stderr progress line
-//!   (`--progress [SECS]`).
+//! * [`EventLog`] — NDJSON lifecycle events with gapless sequence
+//!   numbers (`--events FILE`): sweep start/finish, strategy waves,
+//!   restarts, journal recovery, cache preload, worker stalls;
+//! * [`Progress`] — a throttled stderr progress line with ETA and
+//!   cache-hit rate (`--progress [SECS]`).
+//!
+//! The *live* plane builds on the hub without touching the engine:
+//! [`serve::ObsServer`] answers `GET /metrics` (Prometheus text),
+//! `/status` (JSON) and `/healthz` over a hand-rolled HTTP/1.1
+//! listener (`--listen ADDR`); [`serve::SnapshotWriter`] rewrites the
+//! `--metrics` file atomically every `--metrics-every` seconds; and
+//! [`serve::Watchdog`] walks the per-worker in-flight board (fed by
+//! [`Obs::job_started`] / [`Obs::job_finished`] from the coordinator's
+//! observed branch) to export `worker.*.inflight_age_ns` gauges and
+//! flag evaluations that exceed `--stall-after`.
 
+pub mod events;
 pub mod metrics;
 pub mod progress;
+pub mod serve;
 pub mod trace;
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::dse::json::Json;
 
+pub use events::EventLog;
 pub use metrics::{Counter, Gauge, HistStats, Histogram, MetricsRegistry, PhaseHistograms};
 pub use progress::Progress;
+pub use serve::{ObsServer, SnapshotWriter, Watchdog};
 pub use trace::TraceSink;
 
 /// The four phases of one design-point evaluation (the pipeline of
@@ -92,13 +111,52 @@ pub fn current_tid() -> u64 {
     TID.with(|t| *t)
 }
 
+/// In-flight-board key for the calling thread: its name (the
+/// coordinator spawns `worker-{w}`), falling back to the stable tid.
+fn worker_key() -> String {
+    std::thread::current()
+        .name()
+        .map(str::to_string)
+        .unwrap_or_else(|| format!("thread-{}", current_tid()))
+}
+
+/// Live view of one worker thread, published by the coordinator's
+/// observed branch and read by `/status` and the stall watchdog.
+#[derive(Clone, Debug)]
+pub struct WorkerState {
+    /// Thread name (`worker-0`, `worker-1`, ...).
+    pub name: String,
+    /// `true` while an evaluation is in flight.
+    pub busy: bool,
+    /// Label of the in-flight evaluation (empty when idle).
+    pub job: String,
+    /// Age of the in-flight evaluation in nanoseconds (0 when idle).
+    pub age_ns: u64,
+    /// Bumped on every `job_started`; lets the watchdog flag a
+    /// specific job exactly once even across scan races.
+    pub generation: u64,
+    /// `true` once the watchdog flagged the current job as stalled.
+    pub stalled: bool,
+}
+
+#[derive(Default)]
+struct WorkerSlot {
+    busy: bool,
+    job: String,
+    since_ns: u64,
+    generation: u64,
+    stalled: bool,
+}
+
 /// The observability hub threaded through the sweep: always carries a
-/// registry, optionally a trace sink and a progress reporter.  Hot
-/// instruments (row counters, phase histograms) are pre-resolved so
-/// the per-evaluation cost is a handful of relaxed atomic ops.
+/// registry, optionally a trace sink, an event log and a progress
+/// reporter.  Hot instruments (row counters, phase histograms) are
+/// pre-resolved so the per-evaluation cost is a handful of relaxed
+/// atomic ops.
 pub struct Obs {
     pub metrics: MetricsRegistry,
     pub trace: Option<TraceSink>,
+    pub events: Option<EventLog>,
     pub progress: Option<Progress>,
     evaluated: Arc<Counter>,
     cache_hits: Arc<Counter>,
@@ -109,6 +167,7 @@ pub struct Obs {
     phases: [Arc<Histogram>; Phase::ALL.len()],
     busy_ns: Arc<Counter>,
     idle_ns: Arc<Counter>,
+    workers: Mutex<BTreeMap<String, WorkerSlot>>,
     epoch: Instant,
 }
 
@@ -128,6 +187,7 @@ impl Obs {
         Obs {
             metrics,
             trace: None,
+            events: None,
             progress: None,
             evaluated,
             cache_hits,
@@ -138,12 +198,18 @@ impl Obs {
             phases,
             busy_ns,
             idle_ns,
+            workers: Mutex::new(BTreeMap::new()),
             epoch: Instant::now(),
         }
     }
 
     pub fn with_trace(mut self, trace: TraceSink) -> Obs {
         self.trace = Some(trace);
+        self
+    }
+
+    pub fn with_events(mut self, events: EventLog) -> Obs {
+        self.events = Some(events);
         self
     }
 
@@ -169,6 +235,76 @@ impl Obs {
     pub fn end(&self, cat: &str, name: &str) {
         if let Some(t) = &self.trace {
             t.end(cat, name);
+        }
+    }
+
+    /// Emit a lifecycle event (no-op without an event log).
+    pub fn event(&self, name: &str, fields: Vec<(&str, Json)>) {
+        if let Some(e) = &self.events {
+            e.emit(name, fields);
+        }
+    }
+
+    /// Publish "this worker thread started evaluating `job`" on the
+    /// in-flight board, keyed by the thread's name.  Called only from
+    /// the coordinator's observed branch, so the unattached sweep path
+    /// never takes this lock.
+    pub fn job_started(&self, job: &str) {
+        let name = worker_key();
+        let since_ns = self.elapsed_ns();
+        let mut board = self.workers.lock().unwrap();
+        let slot = board.entry(name).or_default();
+        slot.busy = true;
+        slot.job = job.to_string();
+        slot.since_ns = since_ns;
+        slot.generation += 1;
+        slot.stalled = false;
+    }
+
+    /// Publish "this worker thread is idle again".
+    pub fn job_finished(&self) {
+        let name = worker_key();
+        let mut board = self.workers.lock().unwrap();
+        if let Some(slot) = board.get_mut(&name) {
+            slot.busy = false;
+            slot.job.clear();
+            slot.stalled = false;
+        }
+    }
+
+    /// Snapshot the in-flight board for `/status` and the watchdog.
+    pub fn worker_states(&self) -> Vec<WorkerState> {
+        let now_ns = self.elapsed_ns();
+        let board = self.workers.lock().unwrap();
+        board
+            .iter()
+            .map(|(name, slot)| WorkerState {
+                name: name.clone(),
+                busy: slot.busy,
+                job: slot.job.clone(),
+                age_ns: if slot.busy {
+                    now_ns.saturating_sub(slot.since_ns)
+                } else {
+                    0
+                },
+                generation: slot.generation,
+                stalled: slot.stalled,
+            })
+            .collect()
+    }
+
+    /// Mark worker `name`'s in-flight job as stalled, but only if it
+    /// is still the same job (`generation` matches), still running,
+    /// and not already flagged.  Returns whether this call flagged it
+    /// — the guarantee behind "exactly one stall event per job".
+    pub fn mark_stalled(&self, name: &str, generation: u64) -> bool {
+        let mut board = self.workers.lock().unwrap();
+        match board.get_mut(name) {
+            Some(slot) if slot.busy && slot.generation == generation && !slot.stalled => {
+                slot.stalled = true;
+                true
+            }
+            _ => false,
         }
     }
 
@@ -319,6 +455,32 @@ mod tests {
         assert_eq!(obs.phase_stats()[2].0, "timing");
         assert_eq!(obs.phase_stats()[2].1.count, 1);
         assert_eq!(times.get(Phase::Timing), times.total_ns());
+    }
+
+    #[test]
+    fn worker_board_tracks_inflight_jobs_and_stalls_flag_once() {
+        let obs = Obs::new();
+        obs.job_started("eval a");
+        let states = obs.worker_states();
+        assert_eq!(states.len(), 1);
+        let s = &states[0];
+        assert!(s.busy);
+        assert_eq!(s.job, "eval a");
+        assert!(!s.stalled);
+        assert!(obs.mark_stalled(&s.name, s.generation));
+        assert!(!obs.mark_stalled(&s.name, s.generation), "second flag must no-op");
+        // a new job clears the flag and bumps the generation
+        obs.job_started("eval b");
+        let s2 = &obs.worker_states()[0];
+        assert!(!s2.stalled);
+        assert_eq!(s2.generation, s.generation + 1);
+        assert!(!obs.mark_stalled(&s2.name, s.generation), "stale generation");
+        assert!(obs.mark_stalled(&s2.name, s2.generation));
+        obs.job_finished();
+        let s3 = &obs.worker_states()[0];
+        assert!(!s3.busy);
+        assert_eq!(s3.age_ns, 0);
+        assert!(!obs.mark_stalled(&s3.name, s3.generation), "idle worker");
     }
 
     #[test]

@@ -22,6 +22,8 @@ pub struct Progress {
 struct ProgressState {
     started: Instant,
     last: Option<Instant>,
+    /// `done` as of the previous printed line, for the trailing rate.
+    last_done: u64,
 }
 
 impl Progress {
@@ -30,7 +32,11 @@ impl Progress {
             total: AtomicU64::new(0),
             done: AtomicU64::new(0),
             every: every_secs.max(0.0),
-            state: Mutex::new(ProgressState { started: Instant::now(), last: None }),
+            state: Mutex::new(ProgressState {
+                started: Instant::now(),
+                last: None,
+                last_done: 0,
+            }),
         }
     }
 
@@ -50,28 +56,52 @@ impl Progress {
     pub fn advance(&self, n: u64, hit_rate: impl FnOnce() -> Option<f64>) {
         let done = self.done.fetch_add(n, Ordering::Relaxed) + n;
         let mut state = self.state.lock().unwrap();
+        let now = Instant::now();
         let due = match state.last {
             None => true,
-            Some(t) => t.elapsed().as_secs_f64() >= self.every,
+            Some(t) => (now - t).as_secs_f64() >= self.every,
         };
         if !due {
             return;
         }
-        state.last = Some(Instant::now());
         let total = self.total.load(Ordering::Relaxed).max(done);
-        let elapsed = state.started.elapsed().as_secs_f64().max(1e-9);
-        let rate = done as f64 / elapsed;
-        let eta = if rate > 0.0 { (total - done) as f64 / rate } else { 0.0 };
+        let overall = done as f64 / state.started.elapsed().as_secs_f64().max(1e-9);
+        // ETA from the trailing window between printed lines: a
+        // cache-warm tail runs orders of magnitude faster than cold
+        // evaluations, so the overall rate would wildly overestimate
+        // the remaining time.  The first line has no window yet and
+        // falls back to the overall rate.
+        let rate = match state.last {
+            Some(t) => {
+                let window = (now - t).as_secs_f64();
+                let delta = done.saturating_sub(state.last_done);
+                if window > 1e-9 { delta as f64 / window } else { overall }
+            }
+            None => overall,
+        };
+        state.last = Some(now);
+        state.last_done = done;
         let pct = 100.0 * done as f64 / total.max(1) as f64;
         let cache = match hit_rate() {
             Some(r) => format!(", cache {:.0}% hit", 100.0 * r),
             None => String::new(),
         };
+        let eta = match eta_secs(total - done, rate) {
+            Some(s) => format!("{s:.1}s"),
+            None => "--".to_string(),
+        };
         let _ = writeln!(
             std::io::stderr(),
-            "sweep: {done}/{total} ({pct:.0}%), {rate:.0} evals/sec{cache}, ETA {eta:.1}s"
+            "sweep: {done}/{total} ({pct:.0}%), {rate:.0} evals/sec{cache}, ETA {eta}"
         );
     }
+}
+
+/// Remaining work over rate; `None` when the rate carries no signal
+/// (first print of an instant sweep, or a window with zero progress),
+/// which renders as `ETA --` instead of a division by zero.
+fn eta_secs(remaining: u64, rate: f64) -> Option<f64> {
+    (rate > 0.0 && rate.is_finite()).then(|| remaining as f64 / rate)
 }
 
 #[cfg(test)]
@@ -85,6 +115,16 @@ mod tests {
         p.advance(1, || Some(0.5)); // first line prints immediately
         p.advance(4, || None); // throttled: hit_rate never invoked
         assert_eq!(p.done(), 5);
+    }
+
+    #[test]
+    fn eta_guards_zero_and_non_finite_rates() {
+        assert_eq!(eta_secs(10, 0.0), None);
+        assert_eq!(eta_secs(10, -1.0), None);
+        assert_eq!(eta_secs(10, f64::NAN), None);
+        assert_eq!(eta_secs(10, f64::INFINITY), None);
+        assert_eq!(eta_secs(10, 2.0), Some(5.0));
+        assert_eq!(eta_secs(0, 2.0), Some(0.0));
     }
 
     #[test]

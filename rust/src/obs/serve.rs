@@ -1,0 +1,480 @@
+//! Live observability plane: a hand-rolled HTTP/1.1 scrape endpoint,
+//! an atomic periodic metrics-snapshot writer, and a stall watchdog.
+//!
+//! The post-mortem sinks (metrics file, trace, events) tell you what a
+//! sweep did; this module tells you what it is doing *right now*.
+//! Everything here is dependency-free — plain `std::net::TcpListener`
+//! in the same spirit as `dse::json` — and lives entirely off the hot
+//! path: the server, snapshot writer and watchdog are reader threads
+//! over the shared [`Obs`] hub, and none of them exist unless their
+//! flag (`--listen`, `--metrics-every`, `--stall-after`) was given.
+//!
+//! * [`ObsServer`] answers `GET /metrics` (Prometheus text exposition
+//!   0.0.4 rendered from the registry snapshot), `GET /status` (a JSON
+//!   document assembled by the CLI: sweep identity, progress/ETA,
+//!   per-worker in-flight state, cache hit rate, journal fsync lag)
+//!   and `GET /healthz`.
+//! * [`SnapshotWriter`] rewrites the `--metrics` file every interval
+//!   via temp-file + rename, so scrapers never read a torn snapshot.
+//! * [`Watchdog`] walks the per-worker in-flight board, exports
+//!   `worker.<name>.inflight_age_ns` gauges and — past `--stall-after`
+//!   — flags each stuck evaluation exactly once: one `sweep.stalls`
+//!   increment, one NDJSON `stall` event, one stderr warning.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::dse::json::{self, Json};
+use crate::error::Result;
+
+use super::Obs;
+
+// ---------------------------------------------------------------------------
+// Prometheus text exposition
+
+/// Map a registry metric name onto the Prometheus grammar
+/// (`[a-zA-Z_:][a-zA-Z0-9_:]*`): dots and dashes become underscores,
+/// anything else invalid is dropped to `_`, and a leading digit gets
+/// an underscore prefix.
+pub fn sanitize_metric_name(name: &str) -> String {
+    let mut out = String::with_capacity(name.len() + 1);
+    for (i, c) in name.chars().enumerate() {
+        let ok = c.is_ascii_alphanumeric() || c == '_' || c == ':';
+        if i == 0 && c.is_ascii_digit() {
+            out.push('_');
+        }
+        out.push(if ok { c } else { '_' });
+    }
+    out
+}
+
+/// Render the registry snapshot as Prometheus text exposition format
+/// 0.0.4.  Counters and gauges map directly; histograms become
+/// summaries (`{quantile="..."}` series plus `_sum`/`_count`) with the
+/// exact observed maximum exported as a separate `<name>_max` gauge,
+/// since the quantiles are bucket-midpoint estimates but the max is
+/// exact.
+pub fn render_prometheus(obs: &Obs) -> String {
+    let snapshot = obs.metrics.snapshot();
+    let mut out = String::new();
+    let fields = |key: &str| -> Vec<(String, Json)> {
+        match snapshot.get(key) {
+            Some(Json::Obj(fields)) => fields.clone(),
+            _ => Vec::new(),
+        }
+    };
+    for (name, value) in fields("counters") {
+        let name = sanitize_metric_name(&name);
+        let v = value.as_u64().unwrap_or(0);
+        out.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
+    }
+    for (name, value) in fields("gauges") {
+        let name = sanitize_metric_name(&name);
+        let v = value.as_f64().unwrap_or(0.0);
+        out.push_str(&format!("# TYPE {name} gauge\n{name} {v}\n"));
+    }
+    for (name, stats) in fields("histograms") {
+        let name = sanitize_metric_name(&name);
+        let get = |k: &str| stats.get(k).and_then(|v| v.as_u64().ok()).unwrap_or(0);
+        out.push_str(&format!("# TYPE {name} summary\n"));
+        out.push_str(&format!("{name}{{quantile=\"0.5\"}} {}\n", get("p50_ns")));
+        out.push_str(&format!("{name}{{quantile=\"0.95\"}} {}\n", get("p95_ns")));
+        out.push_str(&format!("{name}_sum {}\n", get("sum_ns")));
+        out.push_str(&format!("{name}_count {}\n", get("count")));
+        out.push_str(&format!(
+            "# TYPE {name}_max gauge\n{name}_max {}\n",
+            get("max_ns")
+        ));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Atomic snapshot files
+
+/// Write `content` to `path` atomically: write a sibling temp file,
+/// then rename over the target, so a concurrent reader sees either
+/// the old complete file or the new complete file, never a torn one.
+pub fn atomic_write(path: &Path, content: &str) -> Result<()> {
+    let mut tmp = path.as_os_str().to_os_string();
+    tmp.push(format!(".tmp.{}", std::process::id()));
+    let tmp = PathBuf::from(tmp);
+    std::fs::write(&tmp, content)?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Atomically (re)write the `--metrics` snapshot file.  Bumps the
+/// `obs.snapshots` counter *before* taking the snapshot, so the file
+/// itself records how many snapshots have been written — the final
+/// file of a `--metrics-every` run therefore always shows ≥ 2
+/// (the writer's immediate first write plus the shutdown write).
+pub fn write_metrics_snapshot(path: &Path, obs: &Obs) -> Result<()> {
+    obs.metrics.add("obs.snapshots", 1);
+    let mut text = obs.metrics.snapshot().to_string();
+    text.push('\n');
+    atomic_write(path, &text)
+}
+
+/// Background thread that rewrites the metrics snapshot file every
+/// `every` (first write immediately on start).  Stops on drop.
+pub struct SnapshotWriter {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl SnapshotWriter {
+    pub fn start(path: PathBuf, every: Duration, obs: Arc<Obs>) -> Result<SnapshotWriter> {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("obs-snapshot".into())
+            .spawn(move || {
+                let _ = write_metrics_snapshot(&path, &obs);
+                while !sleep_unless_stopped(&stop2, every) {
+                    let _ = write_metrics_snapshot(&path, &obs);
+                }
+            })?;
+        Ok(SnapshotWriter { stop, handle: Some(handle) })
+    }
+
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(handle) = self.handle.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for SnapshotWriter {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Sleep for `total` in short slices, returning early (true) if
+/// `stop` was raised.
+fn sleep_unless_stopped(stop: &AtomicBool, total: Duration) -> bool {
+    let slice = Duration::from_millis(25);
+    let mut left = total;
+    while !left.is_zero() {
+        if stop.load(Ordering::SeqCst) {
+            return true;
+        }
+        let step = left.min(slice);
+        std::thread::sleep(step);
+        left -= step;
+    }
+    stop.load(Ordering::SeqCst)
+}
+
+// ---------------------------------------------------------------------------
+// Stall watchdog
+
+/// One watchdog pass over the in-flight board: refresh every worker's
+/// `worker.<name>.inflight_age_ns` gauge (0 when idle), and when
+/// `stall_after_ns` is set, flag jobs older than it — exactly once
+/// per job, via the board's generation check.  Returns how many jobs
+/// this pass newly flagged.  Pure and synchronous, so tests can drive
+/// it without a thread.
+pub fn scan_once(obs: &Obs, stall_after_ns: Option<u64>) -> usize {
+    let mut newly_stalled = 0;
+    for w in obs.worker_states() {
+        obs.metrics
+            .gauge(&format!("worker.{}.inflight_age_ns", w.name))
+            .set(w.age_ns as i64);
+        let Some(limit) = stall_after_ns else { continue };
+        if w.busy && w.age_ns > limit && obs.mark_stalled(&w.name, w.generation) {
+            obs.metrics.add("sweep.stalls", 1);
+            obs.event(
+                "stall",
+                vec![
+                    ("worker", json::str(&w.name)),
+                    ("job", json::str(&w.job)),
+                    ("age_ns", json::uint(w.age_ns)),
+                ],
+            );
+            eprintln!(
+                "warning: worker {} stalled: `{}` in flight for {:.1}s (stall-after {:.1}s)",
+                w.name,
+                w.job,
+                w.age_ns as f64 / 1e9,
+                limit as f64 / 1e9,
+            );
+            newly_stalled += 1;
+        }
+    }
+    newly_stalled
+}
+
+/// Background thread running [`scan_once`] on a tick derived from the
+/// stall threshold (a quarter of it, clamped to 10ms..1s, so a stall
+/// is detected within ~1.25x the threshold).  Stops on drop.
+pub struct Watchdog {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Watchdog {
+    pub fn start(obs: Arc<Obs>, stall_after: Option<Duration>) -> Result<Watchdog> {
+        let tick = stall_after
+            .map(|d| d / 4)
+            .unwrap_or(Duration::from_millis(250))
+            .clamp(Duration::from_millis(10), Duration::from_secs(1));
+        let stall_after_ns = stall_after.map(|d| d.as_nanos() as u64);
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("obs-watchdog".into())
+            .spawn(move || {
+                while !sleep_unless_stopped(&stop2, tick) {
+                    scan_once(&obs, stall_after_ns);
+                }
+            })?;
+        Ok(Watchdog { stop, handle: Some(handle) })
+    }
+
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(handle) = self.handle.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for Watchdog {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HTTP endpoint
+
+/// Builds the `/status` JSON on demand (the CLI closes over the obs
+/// hub, cache, and journal handles).
+pub type StatusFn = Arc<dyn Fn() -> Json + Send + Sync>;
+
+/// The scrape endpoint: accepts connections on a background thread,
+/// answers `GET /metrics`, `GET /status`, `GET /healthz`.  Stops on
+/// drop (a self-connect unblocks the accept loop).
+pub struct ObsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl ObsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9090`, port 0 for ephemeral) and
+    /// start serving.
+    pub fn start(addr: &str, obs: Arc<Obs>, status: StatusFn) -> Result<ObsServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("obs-serve".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if stop2.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    if let Ok(stream) = conn {
+                        // one request per connection, errors ignored:
+                        // a broken scraper must not hurt the sweep
+                        let _ = handle_conn(stream, &obs, &status);
+                    }
+                }
+            })?;
+        Ok(ObsServer { addr: local, stop, handle: Some(handle) })
+    }
+
+    /// The bound address (resolves port 0 to the real port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn shutdown(&mut self) {
+        if let Some(handle) = self.handle.take() {
+            self.stop.store(true, Ordering::SeqCst);
+            // unblock the blocking accept with a throwaway connection
+            let _ = TcpStream::connect(self.addr);
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for ObsServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn handle_conn(mut stream: TcpStream, obs: &Obs, status: &StatusFn) -> std::io::Result<()> {
+    let timeout = Some(Duration::from_millis(500));
+    stream.set_read_timeout(timeout)?;
+    stream.set_write_timeout(timeout)?;
+    // read until end of headers (we never accept request bodies)
+    let mut buf = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 1024];
+    while !buf.windows(4).any(|w| w == b"\r\n\r\n") {
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            break;
+        }
+        buf.extend_from_slice(&chunk[..n]);
+        if buf.len() > 16 * 1024 {
+            return respond(&mut stream, "431 Request Header Fields Too Large", "text/plain", "");
+        }
+    }
+    let request = String::from_utf8_lossy(&buf);
+    let mut parts = request.lines().next().unwrap_or("").split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("");
+    if method != "GET" {
+        return respond(&mut stream, "405 Method Not Allowed", "text/plain", "method not allowed\n");
+    }
+    match path {
+        "/metrics" => respond(
+            &mut stream,
+            "200 OK",
+            "text/plain; version=0.0.4; charset=utf-8",
+            &render_prometheus(obs),
+        ),
+        "/status" => {
+            let mut body = status().to_string();
+            body.push('\n');
+            respond(&mut stream, "200 OK", "application/json", &body)
+        }
+        "/healthz" => respond(&mut stream, "200 OK", "text/plain", "ok\n"),
+        _ => respond(&mut stream, "404 Not Found", "text/plain", "not found\n"),
+    }
+}
+
+fn respond(
+    stream: &mut TcpStream,
+    status: &str,
+    content_type: &str,
+    body: &str,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metric_names_are_sanitized_to_the_prometheus_grammar() {
+        assert_eq!(sanitize_metric_name("eval.total_ns"), "eval_total_ns");
+        assert_eq!(
+            sanitize_metric_name("strategy.bounded-prune.skip.dead-column"),
+            "strategy_bounded_prune_skip_dead_column"
+        );
+        assert_eq!(sanitize_metric_name("0weird name"), "_0weird_name");
+    }
+
+    #[test]
+    fn prometheus_rendering_covers_all_instrument_kinds() {
+        let obs = Obs::new();
+        obs.metrics.counter("sweep.rows").add(7);
+        obs.metrics.gauge("sweep.workers").set(4);
+        obs.metrics.histogram("journal.fsync_ns").record(2000);
+        let text = render_prometheus(&obs);
+        assert!(text.contains("# TYPE sweep_rows counter\nsweep_rows 7\n"));
+        assert!(text.contains("# TYPE sweep_workers gauge\nsweep_workers 4\n"));
+        assert!(text.contains("# TYPE journal_fsync_ns summary\n"));
+        assert!(text.contains("journal_fsync_ns{quantile=\"0.5\"} "));
+        assert!(text.contains("journal_fsync_ns_sum 2000\n"));
+        assert!(text.contains("journal_fsync_ns_count 1\n"));
+        assert!(text.contains("# TYPE journal_fsync_ns_max gauge\njournal_fsync_ns_max 2000\n"));
+        // every non-comment line is `name[{labels}] value`
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let (series, value) = line.rsplit_once(' ').expect(line);
+            assert!(!series.is_empty(), "{line}");
+            assert!(value.parse::<f64>().is_ok(), "{line}");
+        }
+    }
+
+    #[test]
+    fn atomic_write_replaces_content_and_leaves_no_temp() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("spdx_atomic_{}.json", std::process::id()));
+        atomic_write(&path, "first").unwrap();
+        atomic_write(&path, "second").unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(text, "second");
+        let stem = path.file_name().unwrap().to_string_lossy().to_string();
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().to_string())
+            .filter(|n| n.starts_with(&stem) && n.contains(".tmp."))
+            .collect();
+        assert!(leftovers.is_empty(), "{leftovers:?}");
+    }
+
+    #[test]
+    fn watchdog_scan_exports_age_gauges_without_threshold() {
+        let obs = Obs::new();
+        obs.job_started("eval x");
+        assert_eq!(scan_once(&obs, None), 0);
+        let name = &obs.worker_states()[0].name;
+        let gauge = obs.metrics.gauge(&format!("worker.{name}.inflight_age_ns"));
+        assert!(gauge.get() >= 0);
+        obs.job_finished();
+        scan_once(&obs, None);
+        assert_eq!(gauge.get(), 0);
+    }
+
+    #[test]
+    fn server_answers_metrics_status_healthz_and_404() {
+        let obs = Arc::new(Obs::new());
+        obs.metrics.counter("sweep.rows").add(3);
+        let status: StatusFn = Arc::new(|| json::obj(vec![("phase", json::str("running"))]));
+        let mut server = ObsServer::start("127.0.0.1:0", Arc::clone(&obs), status).unwrap();
+        let addr = server.addr();
+
+        let health = http_get(addr, "/healthz");
+        assert!(health.starts_with("HTTP/1.1 200 OK\r\n"), "{health}");
+        assert!(health.ends_with("ok\n"), "{health}");
+
+        let metrics = http_get(addr, "/metrics");
+        assert!(metrics.contains("version=0.0.4"), "{metrics}");
+        assert!(metrics.contains("sweep_rows 3\n"), "{metrics}");
+
+        let status_rsp = http_get(addr, "/status");
+        assert!(status_rsp.contains("application/json"), "{status_rsp}");
+        let body = status_rsp.split("\r\n\r\n").nth(1).unwrap();
+        let parsed = Json::parse(body.trim()).unwrap();
+        assert_eq!(parsed.field("phase").unwrap().as_str().unwrap(), "running");
+
+        let missing = http_get(addr, "/nope");
+        assert!(missing.starts_with("HTTP/1.1 404"), "{missing}");
+
+        server.shutdown();
+        server.shutdown(); // idempotent
+    }
+
+    fn http_get(addr: SocketAddr, path: &str) -> String {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream
+            .write_all(format!("GET {path} HTTP/1.1\r\nHost: test\r\n\r\n").as_bytes())
+            .unwrap();
+        let mut out = String::new();
+        stream.read_to_string(&mut out).unwrap();
+        out
+    }
+}

@@ -1,13 +1,16 @@
-//! Table rendering: regenerates the paper's Table III / Table IV rows
-//! from evaluations, and renders DSE sweep output — per-device tables
-//! and per-strategy comparisons.  Rows are labeled with the workload
-//! they were evaluated for (the explorer is workload-generic).
+//! Table rendering and status assembly: regenerates the paper's
+//! Table III / Table IV rows from evaluations, renders DSE sweep
+//! output — per-device tables and per-strategy comparisons — and
+//! assembles the live `/status` JSON document served by
+//! [`crate::obs::serve`].  Rows are labeled with the workload they
+//! were evaluated for (the explorer is workload-generic).
 
 use std::borrow::Borrow;
 
-use crate::dse::SweepResult;
+use crate::dse::json::{self, Json};
+use crate::dse::{EvalCache, JournalWriter, SweepResult};
 use crate::explore::Evaluation;
-use crate::obs::HistStats;
+use crate::obs::{HistStats, Obs};
 use crate::power::PAPER_TABLE3;
 use crate::resource::soc_peripherals;
 use crate::util::commas;
@@ -255,6 +258,105 @@ pub fn phase_profile(phases: &[(&'static str, HistStats)]) -> String {
     s
 }
 
+/// What the running sweep *is* — the slow-changing half of `/status`,
+/// fixed once the space and strategy are known.
+#[derive(Clone, Debug)]
+pub struct SweepIdentity {
+    pub workload: String,
+    pub strategy: String,
+    /// the space fingerprint (`dse::space_fingerprint`), matching the
+    /// journal header
+    pub fingerprint: String,
+    /// candidates in the swept space
+    pub candidates: usize,
+}
+
+/// Assemble the `/status` document from the live handles: sweep
+/// identity, progress (done / total / rate / ETA, from the registry's
+/// row counters), cache hit rate, the per-worker in-flight board, and
+/// — when a journal is attached — its fsync lag.  Every number is
+/// read fresh, so each scrape sees a consistent "now".
+pub fn status_json(
+    id: &SweepIdentity,
+    obs: &Obs,
+    cache: &EvalCache,
+    journal: Option<&JournalWriter>,
+) -> Json {
+    let rows = obs.metrics.counter("sweep.rows").get();
+    let skipped = obs.metrics.counter("sweep.skipped").get();
+    let done = rows + skipped;
+    let total = (id.candidates as u64).max(done);
+    let elapsed_sec = obs.elapsed_ns() as f64 / 1e9;
+    let rate = if elapsed_sec > 0.0 { done as f64 / elapsed_sec } else { 0.0 };
+    let eta = if rate > 0.0 && rate.is_finite() {
+        json::num((total - done) as f64 / rate)
+    } else {
+        Json::Null
+    };
+    let progress = json::obj(vec![
+        ("done", json::uint(done)),
+        ("total", json::uint(total)),
+        ("evaluated", json::uint(obs.metrics.counter("sweep.evaluated").get())),
+        ("cache_hits", json::uint(obs.metrics.counter("sweep.cache_hits").get())),
+        ("skipped", json::uint(skipped)),
+        ("errors", json::uint(obs.metrics.counter("sweep.errors").get())),
+        ("rate_per_sec", json::num(rate)),
+        ("eta_sec", eta),
+    ]);
+    let stats = cache.stats();
+    let lookups = stats.hits + stats.misses;
+    let hit_rate = if lookups > 0 {
+        json::num(stats.hits as f64 / lookups as f64)
+    } else {
+        Json::Null
+    };
+    let cache_json = json::obj(vec![
+        ("hits", json::uint(stats.hits)),
+        ("misses", json::uint(stats.misses)),
+        ("entries", json::uint(stats.entries as u64)),
+        ("hit_rate", hit_rate),
+    ]);
+    let workers = Json::Arr(
+        obs.worker_states()
+            .iter()
+            .map(|w| {
+                json::obj(vec![
+                    ("name", json::str(&w.name)),
+                    ("busy", Json::Bool(w.busy)),
+                    ("job", json::str(&w.job)),
+                    ("inflight_age_ns", json::uint(w.age_ns)),
+                    ("stalled", Json::Bool(w.stalled)),
+                ])
+            })
+            .collect(),
+    );
+    let journal_json = match journal {
+        Some(j) => json::obj(vec![
+            ("rows", json::uint(j.rows_written())),
+            ("fsyncs", json::uint(j.fsyncs())),
+            ("pending_rows", json::uint(j.pending_rows() as u64)),
+            ("last_fsync_age_ns", json::uint(j.last_sync_age().as_nanos() as u64)),
+        ]),
+        None => Json::Null,
+    };
+    json::obj(vec![
+        (
+            "sweep",
+            json::obj(vec![
+                ("workload", json::str(&id.workload)),
+                ("strategy", json::str(&id.strategy)),
+                ("fingerprint", json::str(&id.fingerprint)),
+                ("candidates", json::uint(id.candidates as u64)),
+            ]),
+        ),
+        ("uptime_ns", json::uint(obs.elapsed_ns())),
+        ("progress", progress),
+        ("cache", cache_json),
+        ("workers", workers),
+        ("journal", journal_json),
+    ])
+}
+
 /// Render the Table IV analogue (operator census of one pipeline).
 pub fn table4(census: &crate::expr::OpCensus) -> String {
     format!(
@@ -325,6 +427,77 @@ mod tests {
         // empty histograms render without dividing by zero
         let empty = phase_profile(&[("compile", HistStats::default())]);
         assert!(empty.contains("0.0%"), "{empty}");
+    }
+
+    #[test]
+    fn status_json_assembles_the_live_handles() {
+        use crate::dse::{
+            space_fingerprint, DesignSpace, Exhaustive, JournalWriter, SearchStrategy,
+            SweepContext,
+        };
+        use crate::explore::ExploreConfig;
+        let space = DesignSpace::from_explore(&ExploreConfig {
+            grid_w: 64,
+            grid_h: 32,
+            max_n: 1,
+            max_m: 2,
+            passes: 2,
+            ..Default::default()
+        });
+        let path = std::env::temp_dir()
+            .join(format!("spdx_status_{}.jnl", std::process::id()));
+        let writer = JournalWriter::create(&path, "exhaustive", &space).unwrap();
+        let cache = EvalCache::new();
+        let obs = Obs::new();
+        let ctx = SweepContext::new(&cache, 2).with_sink(&writer).with_obs(&obs);
+        Exhaustive.run(&space, &ctx).unwrap();
+        let id = SweepIdentity {
+            workload: space.workload.to_string(),
+            strategy: "exhaustive".to_string(),
+            fingerprint: space_fingerprint(&space),
+            candidates: space.len(),
+        };
+        let status = status_json(&id, &obs, &cache, Some(&writer));
+        drop(writer);
+        std::fs::remove_file(&path).ok();
+        // round-trips through text (what /status actually serves)
+        let parsed = Json::parse(&status.to_string()).unwrap();
+        let sweep = parsed.field("sweep").unwrap();
+        assert_eq!(sweep.field("strategy").unwrap().as_str().unwrap(), "exhaustive");
+        assert_eq!(sweep.field("workload").unwrap().as_str().unwrap(), "lbm");
+        assert_eq!(
+            sweep.field("fingerprint").unwrap().as_str().unwrap(),
+            space_fingerprint(&space)
+        );
+        let progress = parsed.field("progress").unwrap();
+        assert_eq!(progress.field("done").unwrap().as_u64().unwrap(), 2);
+        assert_eq!(progress.field("total").unwrap().as_u64().unwrap(), 2);
+        assert_eq!(progress.field("evaluated").unwrap().as_u64().unwrap(), 2);
+        assert!(progress.field("rate_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        let cache_json = parsed.field("cache").unwrap();
+        assert_eq!(cache_json.field("misses").unwrap().as_u64().unwrap(), 2);
+        assert!(cache_json.field("hit_rate").unwrap().as_f64().is_ok());
+        let journal = parsed.field("journal").unwrap();
+        assert_eq!(journal.field("rows").unwrap().as_u64().unwrap(), 2);
+        let workers = parsed.field("workers").unwrap().as_arr().unwrap();
+        assert!(!workers.is_empty());
+        assert!(workers.iter().all(|w| {
+            w.field("busy").unwrap() == &Json::Bool(false)
+                && w.field("inflight_age_ns").unwrap().as_u64().unwrap() == 0
+        }));
+        // without a journal the field is null, and an idle obs yields
+        // a null ETA instead of dividing by zero
+        let idle = Obs::new();
+        let empty = status_json(&id, &idle, &EvalCache::new(), None);
+        assert_eq!(empty.field("journal").unwrap(), &Json::Null);
+        assert_eq!(
+            empty.field("progress").unwrap().field("eta_sec").unwrap(),
+            &Json::Null
+        );
+        assert_eq!(
+            empty.field("cache").unwrap().field("hit_rate").unwrap(),
+            &Json::Null
+        );
     }
 
     #[test]

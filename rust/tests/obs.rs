@@ -1,20 +1,29 @@
 //! Integration tests for the sweep telemetry subsystem: the metrics
 //! registry must reconcile exactly with the sweep's own counters (no
 //! double counting, no dropped rows), the trace file must be
-//! well-formed Chrome `trace_event` JSON, and instrumentation must
-//! never change sweep results.
+//! well-formed Chrome `trace_event` JSON, instrumentation must never
+//! change sweep results, the live scrape endpoint must stay consistent
+//! under concurrent readers, the stall watchdog must flag a hung
+//! evaluation exactly once, and the NDJSON event log must reconcile
+//! with the sweep that wrote it — including on the error path.
 
 use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
 use std::path::PathBuf;
 use std::sync::Arc;
+use std::time::Duration;
 
 use spdx::dse::json::Json;
 use spdx::dse::{
-    BoundedPrune, DesignSpace, EvalCache, Exhaustive, HillClimb, JournalWriter,
-    SearchStrategy, SweepContext,
+    space_fingerprint, BoundedPrune, DesignSpace, EvalCache, Exhaustive,
+    HillClimb, JournalWriter, SearchStrategy, SweepContext,
 };
 use spdx::explore::ExploreConfig;
-use spdx::obs::{Obs, TraceSink};
+use spdx::obs::events::parse_event_log;
+use spdx::obs::serve::{scan_once, StatusFn};
+use spdx::obs::{EventLog, Obs, ObsServer, TraceSink, Watchdog};
+use spdx::report::{status_json, SweepIdentity};
 
 fn small_space() -> DesignSpace {
     DesignSpace::from_explore(&ExploreConfig {
@@ -190,4 +199,321 @@ fn observed_sweep_results_match_unobserved() {
             assert_eq!(a.power_w.to_bits(), b.power_w.to_bits());
         }
     }
+}
+
+/// Minimal HTTP/1.1 GET returning the raw response (headers + body).
+fn http_get(addr: SocketAddr, path: &str) -> String {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream
+        .write_all(format!("GET {path} HTTP/1.1\r\nHost: test\r\n\r\n").as_bytes())
+        .unwrap();
+    let mut out = String::new();
+    stream.read_to_string(&mut out).unwrap();
+    out
+}
+
+/// Concurrent scrapers against a live sweep: every `/metrics` response
+/// must be grammatical Prometheus exposition, every `/status` must be
+/// valid JSON, and the `sweep_rows` counter must never go backwards —
+/// even while the worker pool is mutating the registry underneath.
+#[test]
+fn live_endpoint_serves_consistent_scrapes_mid_sweep() {
+    let space = DesignSpace::from_explore(&ExploreConfig {
+        grid_w: 64,
+        grid_h: 32,
+        max_n: 3,
+        max_m: 3,
+        passes: 2,
+        ..Default::default()
+    });
+    let obs = Arc::new(Obs::new());
+    let cache = Arc::new(EvalCache::new());
+    let id = SweepIdentity {
+        workload: space.workload.to_string(),
+        strategy: "exhaustive".to_string(),
+        fingerprint: space_fingerprint(&space),
+        candidates: space.len(),
+    };
+    let (obs2, cache2) = (Arc::clone(&obs), Arc::clone(&cache));
+    let status: StatusFn =
+        Arc::new(move || status_json(&id, &obs2, &cache2, None));
+    let mut server =
+        ObsServer::start("127.0.0.1:0", Arc::clone(&obs), status).unwrap();
+    let addr = server.addr();
+
+    let result = std::thread::scope(|s| {
+        let sweep = s.spawn(|| {
+            let ctx = SweepContext::new(&cache, 2).with_obs(&obs);
+            Exhaustive.run(&space, &ctx).unwrap()
+        });
+        let scrapers: Vec<_> = (0..4)
+            .map(|_| {
+                s.spawn(move || {
+                    let mut last_rows = 0u64;
+                    for _ in 0..10 {
+                        let rsp = http_get(addr, "/metrics");
+                        assert!(rsp.contains("version=0.0.4"), "{rsp}");
+                        let body = rsp.split("\r\n\r\n").nth(1).unwrap();
+                        for line in
+                            body.lines().filter(|l| !l.starts_with('#') && !l.is_empty())
+                        {
+                            let (series, value) = line.rsplit_once(' ').expect(line);
+                            assert!(!series.is_empty(), "{line}");
+                            assert!(value.parse::<f64>().is_ok(), "{line}");
+                            if series == "sweep_rows" {
+                                let rows: u64 = value.parse().unwrap();
+                                assert!(
+                                    rows >= last_rows,
+                                    "sweep_rows went backwards: {rows} < {last_rows}"
+                                );
+                                last_rows = rows;
+                            }
+                        }
+                        let rsp = http_get(addr, "/status");
+                        let body = rsp.split("\r\n\r\n").nth(1).unwrap();
+                        let st = Json::parse(body.trim()).unwrap();
+                        let progress = st.field("progress").unwrap();
+                        let done = progress.field("done").unwrap().as_u64().unwrap();
+                        let total = progress.field("total").unwrap().as_u64().unwrap();
+                        assert!(done <= total, "{done} > {total}");
+                        assert_eq!(
+                            st.field("sweep")
+                                .unwrap()
+                                .field("strategy")
+                                .unwrap()
+                                .as_str()
+                                .unwrap(),
+                            "exhaustive"
+                        );
+                    }
+                })
+            })
+            .collect();
+        let r = sweep.join().unwrap();
+        for h in scrapers {
+            h.join().unwrap();
+        }
+        r
+    });
+
+    // after the sweep, one more scrape reconciles exactly
+    let rsp = http_get(addr, "/metrics");
+    let rows_line = rsp
+        .lines()
+        .find(|l| l.starts_with("sweep_rows "))
+        .expect("sweep_rows series");
+    assert_eq!(
+        rows_line,
+        format!("sweep_rows {}", result.evals.len()),
+        "final scrape matches the result"
+    );
+    server.shutdown();
+}
+
+/// An injected slow evaluation must produce exactly one stall event:
+/// the first watchdog scan past the threshold flags it, later scans
+/// must not re-flag, and finishing the job resets the age gauge.
+#[test]
+fn watchdog_flags_a_stalled_evaluation_exactly_once() {
+    let path = tmp("stall_events");
+    let obs = Obs::new().with_events(EventLog::create(&path).unwrap());
+    obs.job_started("eval lbm (n=4, m=4) 64x32 @ stratix-v");
+    std::thread::sleep(Duration::from_millis(20));
+    let stall_after = Some(1_000_000u64); // 1ms, long exceeded
+    assert_eq!(scan_once(&obs, stall_after), 1, "first scan flags the stall");
+    assert_eq!(scan_once(&obs, stall_after), 0, "second scan must not re-flag");
+    assert_eq!(obs.metrics.counter("sweep.stalls").get(), 1);
+    let w = &obs.worker_states()[0];
+    assert!(w.busy && w.stalled);
+    let gauge = obs.metrics.gauge(&format!("worker.{}.inflight_age_ns", w.name));
+    assert!(gauge.get() >= 1_000_000, "{}", gauge.get());
+    obs.job_finished();
+    scan_once(&obs, stall_after);
+    assert_eq!(gauge.get(), 0, "idle worker reads age 0");
+
+    obs.events.as_ref().unwrap().flush().unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let records = parse_event_log(&text).unwrap();
+    let stalls: Vec<&Json> = records
+        .iter()
+        .filter(|r| r.field("event").unwrap().as_str().unwrap() == "stall")
+        .collect();
+    assert_eq!(stalls.len(), 1, "exactly one stall event: {text}");
+    assert_eq!(stalls[0].field("worker").unwrap().as_str().unwrap(), w.name);
+    assert!(stalls[0]
+        .field("job")
+        .unwrap()
+        .as_str()
+        .unwrap()
+        .contains("n=4, m=4"));
+    assert!(stalls[0].field("age_ns").unwrap().as_u64().unwrap() >= 1_000_000);
+}
+
+/// The background watchdog thread detects the same injected stall on
+/// its own tick, still exactly once across many scans.
+#[test]
+fn watchdog_thread_detects_an_injected_stall_once() {
+    let obs = Arc::new(Obs::new());
+    obs.job_started("eval sleepy");
+    let mut dog =
+        Watchdog::start(Arc::clone(&obs), Some(Duration::from_millis(5))).unwrap();
+    // tick is clamped to 10ms, so ~8 scans happen in this window
+    std::thread::sleep(Duration::from_millis(80));
+    dog.shutdown();
+    assert_eq!(obs.metrics.counter("sweep.stalls").get(), 1);
+    obs.job_finished();
+}
+
+/// A full CLI sweep with `--events` writes a log that reconciles with
+/// the sweep: gapless sequence from 1, exactly one paired
+/// `sweep-start` / `sweep-finish`, waves in between, and finish totals
+/// matching the space.
+#[test]
+fn cli_sweep_event_log_reconciles_with_the_sweep() {
+    let events = tmp("cli_events");
+    let code = spdx::cli::run(vec![
+        "dse".into(),
+        "sweep".into(),
+        "--grids".into(),
+        "64x32".into(),
+        "--max-n".into(),
+        "2".into(),
+        "--max-m".into(),
+        "2".into(),
+        "--passes".into(),
+        "2".into(),
+        "--events".into(),
+        events.to_string_lossy().into_owned(),
+    ])
+    .unwrap();
+    assert_eq!(code, 0);
+    let text = std::fs::read_to_string(&events).unwrap();
+    std::fs::remove_file(&events).ok();
+    let records = parse_event_log(&text).unwrap();
+    for (i, r) in records.iter().enumerate() {
+        assert_eq!(
+            r.field("seq").unwrap().as_u64().unwrap(),
+            i as u64 + 1,
+            "gapless sequence"
+        );
+    }
+    let names: Vec<&str> = records
+        .iter()
+        .map(|r| r.field("event").unwrap().as_str().unwrap())
+        .collect();
+    assert_eq!(names.first(), Some(&"sweep-start"), "{names:?}");
+    assert_eq!(names.last(), Some(&"sweep-finish"), "{names:?}");
+    assert_eq!(names.iter().filter(|n| **n == "sweep-start").count(), 1);
+    assert_eq!(names.iter().filter(|n| **n == "sweep-finish").count(), 1);
+    assert!(names.contains(&"wave-start"), "{names:?}");
+    let start = &records[0];
+    assert_eq!(start.field("candidates").unwrap().as_u64().unwrap(), 4);
+    let finish = records.last().unwrap();
+    assert_eq!(finish.field("rows").unwrap().as_u64().unwrap(), 4);
+    assert_eq!(finish.field("evaluated").unwrap().as_u64().unwrap(), 4);
+    assert_eq!(finish.field("skipped").unwrap().as_u64().unwrap(), 0);
+}
+
+/// A sweep that errors mid-setup must still flush its telemetry: the
+/// metrics file exists and is marked partial, the trace is valid JSON,
+/// and the event log records the `sweep-error`.
+#[test]
+fn error_path_flushes_partial_telemetry() {
+    let missing_dir = tmp("errflush_nonexistent_dir");
+    let jnl = missing_dir.join("x.jnl"); // parent does not exist
+    let metrics = tmp("errflush_metrics");
+    let trace = tmp("errflush_trace");
+    let events = tmp("errflush_events");
+    let err = spdx::cli::run(vec![
+        "dse".into(),
+        "sweep".into(),
+        "--grids".into(),
+        "64x32".into(),
+        "--max-n".into(),
+        "2".into(),
+        "--max-m".into(),
+        "2".into(),
+        "--passes".into(),
+        "2".into(),
+        "--journal".into(),
+        jnl.to_string_lossy().into_owned(),
+        "--metrics".into(),
+        metrics.to_string_lossy().into_owned(),
+        "--trace".into(),
+        trace.to_string_lossy().into_owned(),
+        "--events".into(),
+        events.to_string_lossy().into_owned(),
+    ])
+    .unwrap_err();
+    assert!(!err.to_string().is_empty());
+
+    let m = Json::parse(&std::fs::read_to_string(&metrics).unwrap()).unwrap();
+    assert_eq!(
+        m.field("gauges")
+            .unwrap()
+            .field("sweep.partial")
+            .unwrap()
+            .as_u64()
+            .unwrap(),
+        1,
+        "partial snapshot is marked"
+    );
+    let trace_text = std::fs::read_to_string(&trace).unwrap();
+    Json::parse(&trace_text).unwrap().as_arr().unwrap();
+    let ev =
+        parse_event_log(&std::fs::read_to_string(&events).unwrap()).unwrap();
+    assert!(
+        ev.iter()
+            .any(|r| r.field("event").unwrap().as_str().unwrap() == "sweep-error"),
+        "event log records the failure"
+    );
+    std::fs::remove_file(&metrics).ok();
+    std::fs::remove_file(&trace).ok();
+    std::fs::remove_file(&events).ok();
+}
+
+/// `--listen` + `--metrics-every` end to end through the CLI: the run
+/// exits cleanly (server and snapshot writer shut down) and the final
+/// snapshot records at least two writes (the writer's immediate first
+/// write plus the shutdown write).
+#[test]
+fn cli_sweep_with_live_plane_writes_periodic_snapshots() {
+    let metrics = tmp("live_metrics");
+    let code = spdx::cli::run(vec![
+        "dse".into(),
+        "sweep".into(),
+        "--grids".into(),
+        "64x32".into(),
+        "--max-n".into(),
+        "2".into(),
+        "--max-m".into(),
+        "2".into(),
+        "--passes".into(),
+        "2".into(),
+        "--listen".into(),
+        "127.0.0.1:0".into(),
+        "--stall-after".into(),
+        "60".into(),
+        "--metrics".into(),
+        metrics.to_string_lossy().into_owned(),
+        "--metrics-every".into(),
+        "0.05".into(),
+    ])
+    .unwrap();
+    assert_eq!(code, 0);
+    let m = Json::parse(&std::fs::read_to_string(&metrics).unwrap()).unwrap();
+    std::fs::remove_file(&metrics).ok();
+    let snaps = m
+        .field("counters")
+        .unwrap()
+        .field("obs.snapshots")
+        .unwrap()
+        .as_u64()
+        .unwrap();
+    assert!(snaps >= 2, "expected >= 2 snapshots, got {snaps}");
+    assert_eq!(
+        m.field("counters").unwrap().field("sweep.rows").unwrap().as_u64().unwrap(),
+        4
+    );
 }
