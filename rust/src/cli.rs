@@ -130,7 +130,7 @@ COMMANDS:
               [--bench [FILE]] [--trace FILE] [--metrics FILE]
               [--metrics-every SECS] [--events FILE]
               [--listen ADDR] [--stall-after SECS]
-              [--profile] [--progress [SECS]]
+              [--profile] [--progress [SECS]] [--attrib]
                                            multi-device sweep (cached, resumable);
                                            --journal appends every row to an
                                            fsync'd crash-safe log as it completes
@@ -158,7 +158,16 @@ COMMANDS:
                                            exceeds SECS; --profile prints a
                                            per-phase latency table; --progress
                                            reports live status with ETA on
-                                           stderr every SECS (default 2)
+                                           stderr every SECS (default 2);
+                                           --attrib adds a bottleneck column
+                                           (why each row stalls) to the table
+  dse explain <workload> <n> <m> [--grid WxH] [--device KEY] [--ddr NAME]
+              [--passes P] [--json]        evaluate one design point and print
+                                           its full diagnosis: exact cycle
+                                           ledger, stall attribution, achieved
+                                           vs capacity bandwidth, roofline
+                                           position and bottleneck verdict
+                                           (--json for the machine form)
   dse resume  --session FILE | --journal FILE  [space/strategy/telemetry flags]
                                            reload a session — or recover a
                                            (possibly torn) journal — and finish
@@ -456,14 +465,97 @@ fn cmd_dse(args: &Args) -> Result<i32> {
         Some("sweep") => cmd_dse_sweep(args),
         Some("resume") => cmd_dse_resume(args),
         Some("compare") => cmd_dse_compare(args),
+        Some("explain") => cmd_dse_explain(args),
         Some("devices") => cmd_dse_devices(),
         other => {
             eprintln!(
-                "dse: unknown subcommand {:?} (sweep, resume, compare, devices)",
+                "dse: unknown subcommand {:?} (sweep, resume, compare, explain, devices)",
                 other.unwrap_or("<none>")
             );
             Ok(2)
         }
+    }
+}
+
+/// `dse explain <workload> <n> <m>`: evaluate one design point and
+/// print [`report::explain`]'s diagnosis (or the `--json` machine
+/// form).  The point is evaluated fresh — same single-point entry the
+/// sweeps use — so the attribution is always present, never the
+/// zeroed buckets of a pre-attribution session row.
+fn cmd_dse_explain(args: &Args) -> Result<i32> {
+    const EXPLAIN_USAGE: &str = "usage: dse explain <workload> <n> <m> \
+         [--grid WxH] [--device KEY] [--ddr NAME] [--passes P] [--json]";
+    let mut pos = args.positional.iter().skip(1);
+    let wl = match pos.next() {
+        Some(name) => workload::get(name)?,
+        None => {
+            return Err(Error::Explore(format!(
+                "dse explain: missing <workload>\n{EXPLAIN_USAGE}"
+            )))
+        }
+    };
+    let mut int = |what: &str| -> Result<u32> {
+        let v = pos.next().ok_or_else(|| {
+            Error::Explore(format!("dse explain: missing <{what}>\n{EXPLAIN_USAGE}"))
+        })?;
+        v.parse().map_err(|_| {
+            Error::Explore(format!("dse explain: bad <{what}> `{v}` (want a number)"))
+        })
+    };
+    let n = int("n")?;
+    let m = int("m")?;
+    let (grid_w, grid_h) = args.grid((720, 300))?;
+    let base = ExploreConfig::default();
+    let device = match args.flag("device") {
+        None => base.device,
+        Some(key) => device::by_name(key).ok_or_else(|| {
+            let known: Vec<&str> = device::catalog().iter().map(|d| d.key).collect();
+            Error::Explore(format!(
+                "unknown device `{key}` (available: {})",
+                known.join(", ")
+            ))
+        })?,
+    };
+    let ddr = match args.flag("ddr") {
+        None => base.ddr,
+        Some(name) => ddr_by_name(name).ok_or_else(|| {
+            Error::Explore(format!(
+                "unknown ddr variant `{name}` (available: {})",
+                DDR_VARIANT_NAMES.join(", ")
+            ))
+        })?,
+    };
+    let cfg = ExploreConfig {
+        workload: wl.name(),
+        grid_w,
+        grid_h,
+        max_n: n.max(1),
+        max_m: m.max(1),
+        passes: args.get("passes", base.passes)?,
+        ddr,
+        device,
+        keep_infeasible: true,
+        ..base
+    };
+    let e = evaluate(&DesignPoint::new(n, m, grid_w, grid_h), &cfg)?;
+    if args.flag("json").is_some() {
+        println!("{}", report::explain_json(&e).to_string());
+    } else {
+        print!("{}", report::explain(&e));
+    }
+    Ok(0)
+}
+
+/// The sweep table, switched to the bottleneck-annotated variant by
+/// `--attrib`.
+fn dse_table_for<E: std::borrow::Borrow<crate::explore::Evaluation>>(
+    args: &Args,
+    evals: &[E],
+) -> String {
+    if args.flag("attrib").is_some() {
+        report::dse_table_attrib(evals)
+    } else {
+        report::dse_table(evals)
     }
 }
 
@@ -844,7 +936,7 @@ fn dse_sweep_body(args: &Args, so: &SweepObs) -> Result<i32> {
     let t0 = std::time::Instant::now();
     let result = strategy.run(&space, &ctx)?;
     let dt = t0.elapsed().as_secs_f64();
-    println!("{}", report::dse_table(&result.evals));
+    println!("{}", dse_table_for(args, &result.evals));
     print!("{}", report::sweep_summary(&result));
     let cold_rate = throughput(result.evals.len(), dt);
     println!(
@@ -1005,7 +1097,7 @@ fn resume_session(args: &Args, so: &SweepObs, path: &str) -> Result<i32> {
     let t0 = std::time::Instant::now();
     let result = strategy.run(&space, &ctx)?;
     let dt = t0.elapsed().as_secs_f64();
-    println!("{}", report::dse_table(&result.evals));
+    println!("{}", dse_table_for(args, &result.evals));
     print!("{}", report::sweep_summary(&result));
     println!(
         "  reuse: {} answered from the session, {} recomputed",
@@ -1148,7 +1240,7 @@ fn resume_journal(args: &Args, so: &SweepObs, path: &str) -> Result<i32> {
     let result = strategy.run(&space, &ctx)?;
     let dt = t0.elapsed().as_secs_f64();
     writer.finalize(&result)?;
-    println!("{}", report::dse_table(&result.evals));
+    println!("{}", dse_table_for(args, &result.evals));
     print!("{}", report::sweep_summary(&result));
     println!(
         "  reuse: {} answered from the journal, {} recomputed",
@@ -1409,6 +1501,68 @@ mod tests {
     #[test]
     fn dse_unknown_subcommand_is_reported() {
         assert_eq!(run(vec!["dse".into(), "anneal".into()]).unwrap(), 2);
+    }
+
+    #[test]
+    fn dse_explain_runs_in_both_forms() {
+        for extra in [None, Some("--json")] {
+            let mut argv: Vec<String> = vec![
+                "dse".into(),
+                "explain".into(),
+                "lbm".into(),
+                "2".into(),
+                "1".into(),
+                "--grid".into(),
+                "64x32".into(),
+                "--passes".into(),
+                "2".into(),
+            ];
+            if let Some(flag) = extra {
+                argv.push(flag.into());
+            }
+            assert_eq!(run(argv).unwrap(), 0);
+        }
+    }
+
+    #[test]
+    fn dse_explain_rejects_bad_invocations() {
+        let explain = |rest: &[&str]| {
+            let mut argv: Vec<String> = vec!["dse".into(), "explain".into()];
+            argv.extend(rest.iter().map(|s| s.to_string()));
+            run(argv)
+        };
+        assert!(explain(&[]).is_err(), "missing workload");
+        assert!(explain(&["lbm"]).is_err(), "missing n");
+        assert!(explain(&["lbm", "2"]).is_err(), "missing m");
+        assert!(explain(&["lbm", "x", "1"]).is_err(), "non-numeric n");
+        assert!(explain(&["nope", "1", "1"]).is_err(), "unknown workload");
+        assert!(
+            explain(&["lbm", "1", "1", "--device", "nope"]).is_err(),
+            "unknown device"
+        );
+        assert!(
+            explain(&["lbm", "1", "1", "--ddr", "nope"]).is_err(),
+            "unknown ddr variant"
+        );
+    }
+
+    #[test]
+    fn dse_sweep_attrib_flag_is_accepted() {
+        let code = run(vec![
+            "dse".into(),
+            "sweep".into(),
+            "--grids".into(),
+            "64x32".into(),
+            "--max-n".into(),
+            "1".into(),
+            "--max-m".into(),
+            "2".into(),
+            "--passes".into(),
+            "2".into(),
+            "--attrib".into(),
+        ])
+        .unwrap();
+        assert_eq!(code, 0);
     }
 
     #[test]

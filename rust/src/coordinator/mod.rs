@@ -132,6 +132,7 @@ pub fn evaluate_batch_observed(
                         o.row_done((dt * 1e9) as u64, times.as_ref(), || {
                             hit_rate(cache)
                         });
+                        record_attribution(o, &e);
                     }
                     if let Some(sink) = sink {
                         if let Err(err) = sink.row(&e) {
@@ -159,6 +160,38 @@ pub fn evaluate_batch_observed(
     }
 
     Ok((slots.into_iter().flatten().collect(), metrics))
+}
+
+/// Feed one completed row's stall attribution into the live
+/// registry: cumulative per-bucket stall cycles and a bottleneck
+/// tally, the `attribution` section of `/status`.  Runs in the
+/// single-threaded drain loop (the counters are atomic anyway, but
+/// rows arrive here serialized), and skips rows whose buckets do not
+/// partition `n_s` — rows preloaded from pre-attribution sessions.
+fn record_attribution(o: &Obs, e: &Evaluation) {
+    let t = &e.timing;
+    if t.stall.total() != t.n_s {
+        return;
+    }
+    o.metrics.counter("attrib.rows").add(1);
+    o.metrics.counter("attrib.stall.dma_rearm_cycles").add(t.stall.dma_rearm);
+    o.metrics.counter("attrib.stall.fill_cycles").add(t.stall.fill);
+    o.metrics
+        .counter("attrib.stall.read_starved_cycles")
+        .add(t.stall.read_starved);
+    o.metrics
+        .counter("attrib.stall.write_backpressure_cycles")
+        .add(t.stall.write_backpressure);
+    o.metrics
+        .counter("attrib.stall.refresh_shadow_cycles")
+        .add(t.stall.refresh_shadow);
+    let bucket = match t.bottleneck() {
+        crate::sim::Bottleneck::Compute => "attrib.bottleneck.compute",
+        crate::sim::Bottleneck::Bandwidth => "attrib.bottleneck.bandwidth",
+        crate::sim::Bottleneck::Refresh => "attrib.bottleneck.refresh",
+        crate::sim::Bottleneck::Fill => "attrib.bottleneck.fill",
+    };
+    o.metrics.counter(bucket).add(1);
 }
 
 /// Evaluate one job, through the cache when present.  With an

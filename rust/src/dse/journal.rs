@@ -6,10 +6,10 @@
 //! line, appended (and fsync'd in batches) *as evaluations complete*,
 //! so a crashed sweep keeps everything it paid for.
 //!
-//! Record stream (`version` 1, newline-delimited JSON objects):
+//! Record stream (`version` 2, newline-delimited JSON objects):
 //!
 //! ```text
-//! {"record":"header","version":1,"strategy":"hill-climb",
+//! {"record":"header","version":2,"strategy":"hill-climb",
 //!  "params":{"seed":9,"restarts":4,"max-steps":64},
 //!  "fingerprint":"9f2c...","space":{...}}          // once, first
 //! {"record":"row","data":{...}}                    // one per evaluation
@@ -63,7 +63,13 @@ use super::session::{decode_row, decode_space, encode_row, encode_space, row_key
 use super::space::DesignSpace;
 use super::strategy::SweepResult;
 
-pub const JOURNAL_VERSION: u64 = 1;
+pub const JOURNAL_VERSION: u64 = 2;
+
+/// Oldest journal version this build still reads.  Version 2 added the
+/// stall-attribution fields to each row; version-1 journals decode with
+/// zeroed attribution (see [`super::session`]), so recovery accepts
+/// them unchanged.
+pub const JOURNAL_MIN_VERSION: u64 = 1;
 
 /// Rows between fsyncs (a crash loses at most this many rows).
 const DEFAULT_SYNC_EVERY: usize = 32;
@@ -143,9 +149,10 @@ fn decode_record(v: &Json) -> Result<Record> {
     match v.field("record")?.as_str()? {
         "header" => {
             let version = v.field("version")?.as_u64()?;
-            if version != JOURNAL_VERSION {
+            if !(JOURNAL_MIN_VERSION..=JOURNAL_VERSION).contains(&version) {
                 return Err(Error::Explore(format!(
-                    "journal version {version} unsupported (want {JOURNAL_VERSION})"
+                    "journal version {version} unsupported \
+                     (want {JOURNAL_MIN_VERSION}..={JOURNAL_VERSION})"
                 )));
             }
             Ok(Record::Header(Header {
@@ -700,11 +707,28 @@ mod tests {
         let w = JournalWriter::create(&path, "exhaustive", &space()).unwrap();
         drop(w);
         let text = std::fs::read_to_string(&path).unwrap();
-        std::fs::write(&path, text.replace("\"version\":1", "\"version\":9")).unwrap();
+        std::fs::write(&path, text.replace("\"version\":2", "\"version\":9")).unwrap();
         // the bad header is newline-terminated, so it is corruption
         // (not a torn tail) and recovery refuses the journal
         assert!(Journal::recover(&path).is_err());
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn version_1_journals_still_recover() {
+        // pre-attribution journals carry a version-1 header; recovery
+        // accepts them (rows decode with zeroed stall buckets)
+        let path = tmp("v1compat");
+        let rows = rows();
+        let w = JournalWriter::create(&path, "exhaustive", &space()).unwrap();
+        w.append(&rows[0]).unwrap();
+        drop(w);
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, text.replace("\"version\":2", "\"version\":1")).unwrap();
+        let j = Journal::recover(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(j.rows.len(), 1);
+        assert_eq!(j.rows[0].design, rows[0].design);
     }
 
     #[test]

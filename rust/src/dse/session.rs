@@ -8,11 +8,11 @@
 //! makes a re-run of the same sweep a pure cache walk — `dse resume`
 //! reports the hit count and recomputes nothing.
 //!
-//! Format (`version` 2, one JSON object):
+//! Format (`version` 3, one JSON object):
 //!
 //! ```json
 //! {
-//!   "version": 2,
+//!   "version": 3,
 //!   "strategy": "hill-climb",
 //!   "params": { "seed": 9, "restarts": 4, "max-steps": 64 },
 //!   "space": { "workload": "lbm", "grids": [[720, 300]],
@@ -33,8 +33,12 @@
 //! strategy *parameters* (the journal header's trick), so resuming a
 //! `hill-climb` or `--min-util` sweep replays the same search instead
 //! of a default-configured one; version-1 files still load, with empty
-//! parameters.  Floats use shortest-roundtrip formatting, so a
-//! save/load cycle reproduces every metric bit-exactly.
+//! parameters.  Version 3 adds the timing row's stall attribution
+//! (`stall` buckets, `drain_cycles`, per-stream byte totals); version-2
+//! files still load, with the attribution zeroed — reports render such
+//! rows as "attribution unknown" rather than inventing a diagnosis.
+//! Floats use shortest-roundtrip formatting, so a save/load cycle
+//! reproduces every metric bit-exactly.
 
 use std::collections::HashSet;
 use std::path::Path;
@@ -44,7 +48,7 @@ use crate::error::{Error, Result};
 use crate::explore::Evaluation;
 use crate::resource::device;
 use crate::resource::{ResourceEstimate, Resources};
-use crate::sim::{DdrConfig, TimingReport};
+use crate::sim::{DdrConfig, StallBreakdown, TimingReport};
 use crate::workload::{self, DesignPoint};
 
 use super::cache::{CacheKey, EvalCache};
@@ -53,7 +57,7 @@ use super::json::{self, Json};
 use super::space::DesignSpace;
 use super::strategy::SweepResult;
 
-pub const SESSION_VERSION: u64 = 2;
+pub const SESSION_VERSION: u64 = 3;
 
 /// A loaded (or about-to-be-saved) sweep session.
 #[derive(Clone, Debug)]
@@ -355,6 +359,22 @@ pub(crate) fn encode_row(e: &Evaluation) -> Json {
             json::obj(vec![
                 ("n_c", json::uint(e.timing.n_c)),
                 ("n_s", json::uint(e.timing.n_s)),
+                (
+                    "stall",
+                    json::obj(vec![
+                        ("dma_rearm", json::uint(e.timing.stall.dma_rearm)),
+                        ("fill", json::uint(e.timing.stall.fill)),
+                        ("read_starved", json::uint(e.timing.stall.read_starved)),
+                        (
+                            "write_backpressure",
+                            json::uint(e.timing.stall.write_backpressure),
+                        ),
+                        ("refresh_shadow", json::uint(e.timing.stall.refresh_shadow)),
+                    ]),
+                ),
+                ("drain_cycles", json::uint(e.timing.drain_cycles)),
+                ("read_bytes", json::uint(e.timing.read_bytes)),
+                ("write_bytes", json::uint(e.timing.write_bytes)),
                 ("total_cycles", json::uint(e.timing.total_cycles)),
                 ("utilization", json::num(e.timing.utilization)),
                 ("sustained_gflops", json::num(e.timing.sustained_gflops)),
@@ -387,11 +407,12 @@ pub(crate) fn decode_row(v: &Json) -> Result<Evaluation> {
     let over = decode_limit(res, "over_capacity")?;
     let t = v.field("timing")?;
     let passes = v.field("passes")?.as_u64()?;
+    let ddr = decode_ddr(v.field("ddr")?)?;
     Ok(Evaluation {
         workload,
         device: dev.name,
         design,
-        ddr: decode_ddr(v.field("ddr")?)?,
+        ddr,
         pe_depth: v.field("pe_depth")?.as_u32()?,
         resources: ResourceEstimate {
             core: decode_resources(res.field("core")?)?,
@@ -406,6 +427,10 @@ pub(crate) fn decode_row(v: &Json) -> Result<Evaluation> {
         timing: TimingReport {
             n_c: t.field("n_c")?.as_u64()?,
             n_s: t.field("n_s")?.as_u64()?,
+            stall: decode_stall(t)?,
+            drain_cycles: opt_u64(t, "drain_cycles")?,
+            read_bytes: opt_u64(t, "read_bytes")?,
+            write_bytes: opt_u64(t, "write_bytes")?,
             total_cycles: t.field("total_cycles")?.as_u64()?,
             passes,
             utilization: t.field("utilization")?.as_f64()?,
@@ -415,10 +440,38 @@ pub(crate) fn decode_row(v: &Json) -> Result<Evaluation> {
             read_gbps: t.field("read_gbps")?.as_f64()?,
             write_gbps: t.field("write_gbps")?.as_f64()?,
             demand_gbps: t.field("demand_gbps")?.as_f64()?,
+            // always derived, never persisted: a deterministic function
+            // of the DDR config, so old and new rows agree bit-exactly
+            capacity_gbps: ddr.duplex_capacity_per_dir(),
         },
         power_w: v.field("power_w")?.as_f64()?,
         perf_per_watt: v.field("perf_per_watt")?.as_f64()?,
         infeasible: decode_limit(v, "infeasible")?,
+    })
+}
+
+/// A u64 field that version-2 rows predate: absent decodes as 0 (the
+/// "attribution unknown" marker), present must be a valid integer.
+fn opt_u64(v: &Json, key: &str) -> Result<u64> {
+    match v.field(key) {
+        Ok(x) => x.as_u64(),
+        Err(_) => Ok(0),
+    }
+}
+
+/// The version-3 stall-attribution object; absent (version-2 rows)
+/// decodes as all-zero buckets, which reports render as "attribution
+/// unknown" (`stall.total() != n_s`) instead of a fabricated mix.
+fn decode_stall(t: &Json) -> Result<StallBreakdown> {
+    let Ok(s) = t.field("stall") else {
+        return Ok(StallBreakdown::default());
+    };
+    Ok(StallBreakdown {
+        dma_rearm: s.field("dma_rearm")?.as_u64()?,
+        fill: s.field("fill")?.as_u64()?,
+        read_starved: s.field("read_starved")?.as_u64()?,
+        write_backpressure: s.field("write_backpressure")?.as_u64()?,
+        refresh_shadow: s.field("refresh_shadow")?.as_u64()?,
     })
 }
 
@@ -491,6 +544,16 @@ mod tests {
             assert_eq!(a.resources.total, b.resources.total);
             assert_eq!(a.timing.n_c, b.timing.n_c);
             assert_eq!(a.timing.passes, b.timing.passes);
+            // v3: attribution roundtrips bit-exactly, capacity is
+            // re-derived from the DDR config
+            assert_eq!(a.timing.stall, b.timing.stall);
+            assert_eq!(a.timing.drain_cycles, b.timing.drain_cycles);
+            assert_eq!(a.timing.read_bytes, b.timing.read_bytes);
+            assert_eq!(a.timing.write_bytes, b.timing.write_bytes);
+            assert_eq!(
+                a.timing.capacity_gbps.to_bits(),
+                b.timing.capacity_gbps.to_bits()
+            );
             assert_eq!(a.power_w.to_bits(), b.power_w.to_bits());
             assert_eq!(a.perf_per_watt.to_bits(), b.perf_per_watt.to_bits());
             assert_eq!(a.infeasible, b.infeasible);
@@ -577,15 +640,53 @@ mod tests {
 
         // a version-1 file has no params field: decodes to empty params
         let v1 = text
-            .replace("\"version\":2", "\"version\":1")
+            .replace("\"version\":3", "\"version\":1")
             .replace(&format!("\"params\":{},", params.to_string()), "");
         let old = Session::decode(&Json::parse(&v1).unwrap()).unwrap();
         assert_eq!(old.params, Json::Obj(Vec::new()));
         assert_eq!(old.rows.len(), 2);
 
         // versions we never wrote stay refused
-        let v9 = text.replace("\"version\":2", "\"version\":9");
+        let v9 = text.replace("\"version\":3", "\"version\":9");
         assert!(Session::decode(&Json::parse(&v9).unwrap()).is_err());
+    }
+
+    #[test]
+    fn v2_rows_load_with_zeroed_attribution() {
+        // a version-2 file predates the stall attribution: strip the
+        // v3 fields from an encoded session and the rows must still
+        // decode, with all-zero buckets marking "attribution unknown"
+        let s = Session {
+            strategy: "exhaustive".to_string(),
+            params: Json::Obj(Vec::new()),
+            space: space(),
+            rows: rows(),
+        };
+        let mut text = s.encode().to_string();
+        while let Some(i) = text.find("\"stall\":") {
+            let j = text[i..].find("\"total_cycles\"").unwrap();
+            text.replace_range(i..i + j, "");
+        }
+        assert!(!text.contains("drain_cycles"), "v3 fields must be gone");
+        let text = text.replace("\"version\":3", "\"version\":2");
+        let old = Session::decode(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(old.rows.len(), 2);
+        for (a, b) in s.rows.iter().zip(&old.rows) {
+            let t = &b.timing;
+            assert_eq!(t.stall, StallBreakdown::default());
+            assert_eq!(t.drain_cycles, 0);
+            assert_eq!(t.read_bytes, 0);
+            // attribution is recognizably unknown (buckets don't close)
+            assert!(t.n_s > 0 && t.stall.total() != t.n_s);
+            // everything that was in v2 still roundtrips
+            assert_eq!(a.timing.n_c, t.n_c);
+            assert_eq!(a.timing.utilization.to_bits(), t.utilization.to_bits());
+            // capacity is derived, so even old rows carry it
+            assert_eq!(
+                a.timing.capacity_gbps.to_bits(),
+                t.capacity_gbps.to_bits()
+            );
+        }
     }
 
     #[test]

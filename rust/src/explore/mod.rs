@@ -508,6 +508,51 @@ mod tests {
     }
 
     #[test]
+    fn attribution_conserves_cycles_for_every_workload() {
+        // every registered workload, through the real evaluation path:
+        // stall buckets partition n_s, cycles are fully accounted, the
+        // byte ledger closes, and the cycle-stepped oracle agrees with
+        // the fast-forwarded report bucket-for-bucket
+        use crate::sim::run_timing_oracle;
+        for wl in workload::all() {
+            let cfg = ExploreConfig { workload: wl.name(), ..small_cfg() };
+            for (n, m) in [(1u32, 1u32), (2, 2)] {
+                let d = DesignPoint::new(n, m, 64, 32);
+                let e = evaluate(&d, &cfg).unwrap();
+                let t = &e.timing;
+                let ctx = format!("{} ({n},{m})", wl.name());
+                assert_eq!(t.stall.total(), t.n_s, "{ctx}: buckets sum to n_s");
+                assert_eq!(
+                    t.n_c + t.n_s + t.drain_cycles,
+                    t.total_cycles,
+                    "{ctx}: cycle conservation"
+                );
+                let pass_bytes = d.cells() * (wl.words_per_cell() * 4) as u64;
+                assert_eq!(
+                    t.read_bytes,
+                    t.passes * pass_bytes,
+                    "{ctx}: read-byte ledger"
+                );
+                let residue = t.read_bytes - t.write_bytes;
+                assert!(residue < e.ddr.burst_bytes, "{ctx}: residue {residue}");
+
+                let td = TimingDesign {
+                    lanes: d.n as usize,
+                    words_per_cell: wl.words_per_cell(),
+                    depth: e.pe_depth * d.m,
+                    cells: d.cells(),
+                    steps_per_pass: d.m,
+                    flops_per_cell_step: wl.flops_per_cell(),
+                };
+                let oracle = run_timing_oracle(&td, cfg.ddr, cfg.passes);
+                assert_eq!(oracle.stall, t.stall, "{ctx}: oracle stall mix");
+                assert_eq!(oracle.drain_cycles, t.drain_cycles, "{ctx}: drain");
+                assert_eq!(oracle.read_bytes, t.read_bytes, "{ctx}: bytes");
+            }
+        }
+    }
+
+    #[test]
     fn evaluate_against_bigger_device_lifts_infeasibility() {
         use crate::resource::ARRIA_10_GX1150;
         // 6 LBM pipelines need 288 DSPs (and ~200k ALMs): over on the

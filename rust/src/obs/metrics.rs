@@ -167,6 +167,38 @@ impl Histogram {
             max,
         }
     }
+
+    /// Cumulative `(upper_bound, count_le)` pairs for Prometheus
+    /// histogram exposition, one per bucket up to the highest
+    /// non-empty one.  Bucket `i` holds values of bit length `i`, so
+    /// its inclusive upper bound is `2^i - 1` (bucket 0 = the value 0
+    /// alone).  Counts are cumulative as the `_bucket{le="..."}`
+    /// series demands; the `+Inf` terminal the exporter appends
+    /// equals [`Histogram::count`].  Empty histogram → empty vec.
+    pub fn cumulative_buckets(&self) -> Vec<(u64, u64)> {
+        let counts: Vec<u64> =
+            self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let Some(last) = counts.iter().rposition(|&c| c > 0) else {
+            return Vec::new();
+        };
+        let mut out = Vec::with_capacity(last + 1);
+        let mut cum = 0u64;
+        for (i, &c) in counts.iter().take(last + 1).enumerate() {
+            cum += c;
+            out.push((bucket_upper_bound(i), cum));
+        }
+        out
+    }
+}
+
+/// Inclusive upper bound of bucket `i` (the largest value of bit
+/// length `i`).
+fn bucket_upper_bound(i: usize) -> u64 {
+    match i {
+        0 => 0,
+        1..=63 => (1u64 << i) - 1,
+        _ => u64::MAX,
+    }
 }
 
 /// Midpoint of bucket `i` (values of bit length `i`).
@@ -287,6 +319,19 @@ impl MetricsRegistry {
         self.counter(name).add(delta);
     }
 
+    /// Every registered histogram with its live handle, sorted by
+    /// name — for exporters that need the raw buckets (the Prometheus
+    /// `_hist` family), which [`HistStats`] deliberately does not
+    /// carry.
+    pub fn histograms_raw(&self) -> Vec<(String, Arc<Histogram>)> {
+        self.histograms
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(name, h)| (name.clone(), Arc::clone(h)))
+            .collect()
+    }
+
     /// Serialize every instrument:
     /// `{"counters": {..}, "gauges": {..}, "histograms": {..}}` with
     /// histogram values as [`HistStats::encode`] objects.
@@ -351,6 +396,44 @@ mod tests {
         let p50 = h.quantile(0.50);
         assert!((64..=127).contains(&p50), "p50 = {p50}");
         assert!(h.quantile(1.0) >= (1 << 19));
+    }
+
+    #[test]
+    fn cumulative_buckets_are_monotone_and_bounded() {
+        let h = Histogram::new();
+        assert!(h.cumulative_buckets().is_empty(), "empty histogram");
+        for v in [0, 1, 3, 100, 100, 1 << 20] {
+            h.record(v);
+        }
+        let buckets = h.cumulative_buckets();
+        // bucket 0 carries the lone zero sample with le=0
+        assert_eq!(buckets[0], (0, 1));
+        // cumulative counts never decrease, bounds strictly increase
+        for w in buckets.windows(2) {
+            assert!(w[0].0 < w[1].0);
+            assert!(w[0].1 <= w[1].1);
+        }
+        // the last listed bucket accounts for every sample (le 2^21-1
+        // covers the 1<<20 record), so +Inf adds nothing new
+        assert_eq!(buckets.last().unwrap(), &((1 << 21) - 1, h.count()));
+        // upper bounds are the exact bit-length boundaries
+        assert!(buckets.iter().any(|&(le, _)| le == 127), "100 lands in le=127");
+    }
+
+    #[test]
+    fn histograms_raw_exposes_live_handles() {
+        let reg = MetricsRegistry::new();
+        reg.histogram("z.ns").record(10);
+        reg.histogram("a.ns").record(20);
+        let raw = reg.histograms_raw();
+        assert_eq!(
+            raw.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>(),
+            vec!["a.ns", "z.ns"],
+            "sorted by name"
+        );
+        // live handle, not a copy: later records are visible
+        reg.histogram("a.ns").record(30);
+        assert_eq!(raw[0].1.count(), 2);
     }
 
     #[test]

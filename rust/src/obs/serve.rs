@@ -58,7 +58,12 @@ pub fn sanitize_metric_name(name: &str) -> String {
 /// summaries (`{quantile="..."}` series plus `_sum`/`_count`) with the
 /// exact observed maximum exported as a separate `<name>_max` gauge,
 /// since the quantiles are bucket-midpoint estimates but the max is
-/// exact.
+/// exact.  Each histogram is *additionally* exported as a real
+/// Prometheus histogram family named `<name>_hist` — cumulative
+/// `_bucket{le="..."}` series at the registry's bit-length bucket
+/// bounds plus the `+Inf` terminal — because one metric name cannot
+/// carry two TYPEs, and the summary form predates this and stays for
+/// its dashboards.
 pub fn render_prometheus(obs: &Obs) -> String {
     let snapshot = obs.metrics.snapshot();
     let mut out = String::new();
@@ -90,6 +95,21 @@ pub fn render_prometheus(obs: &Obs) -> String {
             "# TYPE {name}_max gauge\n{name}_max {}\n",
             get("max_ns")
         ));
+    }
+    // the real histogram families, from the live buckets (the JSON
+    // snapshot deliberately carries only the summary stats)
+    for (name, hist) in obs.metrics.histograms_raw() {
+        let name = sanitize_metric_name(&name);
+        out.push_str(&format!("# TYPE {name}_hist histogram\n"));
+        for (le, cum) in hist.cumulative_buckets() {
+            out.push_str(&format!("{name}_hist_bucket{{le=\"{le}\"}} {cum}\n"));
+        }
+        out.push_str(&format!(
+            "{name}_hist_bucket{{le=\"+Inf\"}} {}\n",
+            hist.count()
+        ));
+        out.push_str(&format!("{name}_hist_sum {}\n", hist.sum()));
+        out.push_str(&format!("{name}_hist_count {}\n", hist.count()));
     }
     out
 }
@@ -399,12 +419,49 @@ mod tests {
         assert!(text.contains("journal_fsync_ns_sum 2000\n"));
         assert!(text.contains("journal_fsync_ns_count 1\n"));
         assert!(text.contains("# TYPE journal_fsync_ns_max gauge\njournal_fsync_ns_max 2000\n"));
+        // the real histogram family rides alongside the summary:
+        // cumulative le-labeled buckets closed by the +Inf terminal
+        assert!(text.contains("# TYPE journal_fsync_ns_hist histogram\n"), "{text}");
+        // 2000 has bit length 11, so its bucket's bound is 2^11-1
+        assert!(
+            text.contains("journal_fsync_ns_hist_bucket{le=\"2047\"} 1\n"),
+            "{text}"
+        );
+        assert!(
+            text.contains("journal_fsync_ns_hist_bucket{le=\"+Inf\"} 1\n"),
+            "{text}"
+        );
+        assert!(text.contains("journal_fsync_ns_hist_sum 2000\n"), "{text}");
+        assert!(text.contains("journal_fsync_ns_hist_count 1\n"), "{text}");
         // every non-comment line is `name[{labels}] value`
         for line in text.lines().filter(|l| !l.starts_with('#')) {
             let (series, value) = line.rsplit_once(' ').expect(line);
             assert!(!series.is_empty(), "{line}");
             assert!(value.parse::<f64>().is_ok(), "{line}");
         }
+    }
+
+    #[test]
+    fn histogram_family_buckets_are_cumulative_across_series() {
+        let obs = Obs::new();
+        let h = obs.metrics.histogram("eval.phase.timing_ns");
+        h.record(1); // bucket le=1
+        h.record(100); // bucket le=127
+        h.record(100);
+        let text = render_prometheus(&obs);
+        assert!(
+            text.contains("eval_phase_timing_ns_hist_bucket{le=\"1\"} 1\n"),
+            "{text}"
+        );
+        // cumulative: the le=127 series counts the le=1 sample too
+        assert!(
+            text.contains("eval_phase_timing_ns_hist_bucket{le=\"127\"} 3\n"),
+            "{text}"
+        );
+        assert!(
+            text.contains("eval_phase_timing_ns_hist_bucket{le=\"+Inf\"} 3\n"),
+            "{text}"
+        );
     }
 
     #[test]

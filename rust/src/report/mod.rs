@@ -4,6 +4,16 @@
 //! assembles the live `/status` JSON document served by
 //! [`crate::obs::serve`].  Rows are labeled with the workload they
 //! were evaluated for (the explorer is workload-generic).
+//!
+//! The introspection half lives here too: [`explain`] renders one
+//! design point's full diagnosis — cycle ledger, stall attribution
+//! with percentages, achieved-vs-capacity bandwidth, roofline
+//! position, and the derived bottleneck verdict — and
+//! [`explain_json`] is its machine-readable twin (the `dse explain
+//! --json` document validated by CI).  Rows decoded from
+//! pre-attribution sessions carry zero-filled stall buckets; every
+//! renderer checks [`has_attribution`] and prints `?` instead of
+//! fabricating a diagnosis for them.
 
 use std::borrow::Borrow;
 
@@ -112,11 +122,24 @@ pub fn table3_vs_paper<E: Borrow<Evaluation>>(evals: &[E]) -> String {
 /// order of first appearance), rows like `table3` plus grid and DDR
 /// context.
 pub fn dse_table<E: Borrow<Evaluation>>(evals: &[E]) -> String {
+    render_dse_table(evals, false)
+}
+
+/// [`dse_table`] with a trailing bottleneck column (`dse sweep
+/// --attrib`): *why* each row performs the way it does, so a reader
+/// can see where the frontier bends from bandwidth-bound to
+/// fill-dominated.  Rows without attribution (loaded from
+/// pre-attribution sessions) show `?`.
+pub fn dse_table_attrib<E: Borrow<Evaluation>>(evals: &[E]) -> String {
+    render_dse_table(evals, true)
+}
+
+fn render_dse_table<E: Borrow<Evaluation>>(evals: &[E], attrib: bool) -> String {
     let mut s = String::new();
     for dev in distinct_devices(evals) {
         s.push_str(&format!("== {dev} ==\n"));
         s.push_str(&format!(
-            "{:<22} {:>9} {:>6} {:>8} {:>9} {:>12} {:>5} {:>8} {:>9} {:>7} {:>9}\n",
+            "{:<22} {:>9} {:>6} {:>8} {:>9} {:>12} {:>5} {:>8} {:>9} {:>7} {:>9}",
             "workload (n,m)",
             "grid",
             "DIMMs",
@@ -129,6 +152,10 @@ pub fn dse_table<E: Borrow<Evaluation>>(evals: &[E]) -> String {
             "P[W]",
             "GF/sW"
         ));
+        if attrib {
+            s.push_str(&format!(" {:<16}", "bottleneck"));
+        }
+        s.push('\n');
         for e in evals.iter().map(Borrow::borrow).filter(|e| e.device == dev) {
             let d = e.design;
             let label = format!(
@@ -139,7 +166,7 @@ pub fn dse_table<E: Borrow<Evaluation>>(evals: &[E]) -> String {
                 if e.infeasible.is_some() { " !fit" } else { "" }
             );
             s.push_str(&format!(
-                "{:<22} {:>9} {:>6} {:>8} {:>9} {:>12} {:>5} {:>8.3} {:>9.1} {:>7.1} {:>9.3}\n",
+                "{:<22} {:>9} {:>6} {:>8} {:>9} {:>12} {:>5} {:>8.3} {:>9.1} {:>7.1} {:>9.3}",
                 label,
                 format!("{}x{}", d.w, d.h),
                 e.ddr.n_dimms,
@@ -152,9 +179,31 @@ pub fn dse_table<E: Borrow<Evaluation>>(evals: &[E]) -> String {
                 e.power_w,
                 e.perf_per_watt,
             ));
+            if attrib {
+                s.push_str(&format!(" {:<16}", bottleneck_label(e)));
+            }
+            s.push('\n');
         }
     }
     s
+}
+
+/// True when the row's stall buckets actually partition `n_s`.  Rows
+/// decoded from pre-attribution sessions/journals carry zero-filled
+/// buckets (recognizable because real runs always pay the DMA re-arm
+/// stall), and a renderer must not diagnose them.
+pub fn has_attribution(e: &Evaluation) -> bool {
+    e.timing.stall.total() == e.timing.n_s
+}
+
+/// Bottleneck verdict for a table cell: the classified name, or `?`
+/// when the row predates stall attribution.
+fn bottleneck_label(e: &Evaluation) -> &'static str {
+    if has_attribution(e) {
+        e.timing.bottleneck().name()
+    } else {
+        "?"
+    }
 }
 
 /// Devices in row order of first appearance (sweep tables group by
@@ -171,15 +220,25 @@ fn distinct_devices<E: Borrow<Evaluation>>(evals: &[E]) -> Vec<&'static str> {
 }
 
 /// One summary line per strategy: coverage, pruning, cache behavior,
-/// and the winner — the `dse compare` output.
+/// the winner, and the winner's bottleneck — the `dse compare`
+/// output.  Below the table, one stall-mix line per device (from the
+/// widest-coverage strategy's rows) says *why* designs on that device
+/// stall — the diagnosis behind the GF/sW ordering.
 pub fn strategy_comparison(results: &[&SweepResult]) -> String {
     let mut s = String::new();
     s.push_str(&format!(
-        "{:<14} {:>10} {:>10} {:>9} {:>11} {:>20} {:>9}\n",
-        "strategy", "candidates", "evaluated", "skipped", "cache hits", "best (n,m)@device", "GF/sW"
+        "{:<14} {:>10} {:>10} {:>9} {:>11} {:>20} {:>9} {:<16}\n",
+        "strategy",
+        "candidates",
+        "evaluated",
+        "skipped",
+        "cache hits",
+        "best (n,m)@device",
+        "GF/sW",
+        "bottleneck"
     ));
     for r in results {
-        let (best_label, best_ppw) = match r.best() {
+        let (best_label, best_ppw, best_attrib) = match r.best() {
             Some(b) => {
                 let key = crate::resource::device::by_name(b.device)
                     .map(|d| d.key)
@@ -187,16 +246,269 @@ pub fn strategy_comparison(results: &[&SweepResult]) -> String {
                 (
                     format!("({}, {})@{}", b.design.n, b.design.m, key),
                     format!("{:.3}", b.perf_per_watt),
+                    bottleneck_label(b),
                 )
             }
-            None => ("-".to_string(), "-".to_string()),
+            None => ("-".to_string(), "-".to_string(), "-"),
         };
         s.push_str(&format!(
-            "{:<14} {:>10} {:>10} {:>9} {:>11} {:>20} {:>9}\n",
-            r.strategy, r.candidates, r.evaluated, r.skipped, r.cache_hits, best_label, best_ppw,
+            "{:<14} {:>10} {:>10} {:>9} {:>11} {:>20} {:>9} {:<16}\n",
+            r.strategy, r.candidates, r.evaluated, r.skipped, r.cache_hits, best_label,
+            best_ppw, best_attrib,
+        ));
+    }
+    // stall-mix summary from the strategy that touched the most rows
+    // (exhaustive when present) — per-strategy mixes would repeat the
+    // same evaluations
+    if let Some(widest) = results.iter().max_by_key(|r| r.evals.len()) {
+        if !widest.evals.is_empty() {
+            s.push_str(&format!("stall mix per device ({} rows):\n", widest.strategy));
+            s.push_str(&stall_mix_lines(&widest.evals));
+        }
+    }
+    s
+}
+
+/// One aggregate stall-mix line per device: each bucket's share of
+/// the device's total stall cycles, over the rows that carry
+/// attribution.
+fn stall_mix_lines<E: Borrow<Evaluation>>(evals: &[E]) -> String {
+    let mut s = String::new();
+    for dev in distinct_devices(evals) {
+        let rows: Vec<&Evaluation> = evals
+            .iter()
+            .map(Borrow::borrow)
+            .filter(|e| e.device == dev && has_attribution(e))
+            .collect();
+        if rows.is_empty() {
+            s.push_str(&format!("  {dev}: no attributed rows\n"));
+            continue;
+        }
+        let mut sum = crate::sim::StallBreakdown::default();
+        for e in &rows {
+            let st = &e.timing.stall;
+            sum.dma_rearm += st.dma_rearm;
+            sum.fill += st.fill;
+            sum.read_starved += st.read_starved;
+            sum.write_backpressure += st.write_backpressure;
+            sum.refresh_shadow += st.refresh_shadow;
+        }
+        let total = sum.total().max(1) as f64;
+        let pct = |v: u64| 100.0 * v as f64 / total;
+        s.push_str(&format!(
+            "  {dev}: read-starved {:.1}%, write-backpressure {:.1}%, fill {:.1}%, \
+             dma-rearm {:.1}%, refresh {:.1}%  ({} stall cycles over {} rows)\n",
+            pct(sum.read_starved),
+            pct(sum.write_backpressure),
+            pct(sum.fill),
+            pct(sum.dma_rearm),
+            pct(sum.refresh_shadow),
+            commas(sum.total()),
+            rows.len(),
         ));
     }
     s
+}
+
+/// Render the `dse explain` diagnosis for one evaluated design point:
+/// identity, resources, the exact cycle ledger
+/// (`n_c + n_s + drain == total`), the stall attribution with each
+/// bucket's share of `n_s`, achieved-vs-capacity bandwidth, roofline
+/// position, and the bottleneck verdict.
+pub fn explain(e: &Evaluation) -> String {
+    let t = &e.timing;
+    let d = e.design;
+    let mut s = String::new();
+    s.push_str(&format!(
+        "== {} (n, m) = ({}, {}) on {}x{} ==\n",
+        e.workload, d.n, d.m, d.w, d.h
+    ));
+    s.push_str(&format!(
+        "device        {}{}\n",
+        e.device,
+        match e.infeasible {
+            Some(why) => format!(" — DOES NOT FIT ({why})"),
+            None => " — fits".to_string(),
+        }
+    ));
+    s.push_str(&format!(
+        "memory        {} DIMM(s) @ {:.1} GB/s peak, duplex capacity {:.2} GB/s per direction\n",
+        e.ddr.n_dimms, e.ddr.peak_gbps, t.capacity_gbps
+    ));
+    s.push_str(&format!(
+        "resources     ALMs {}  Regs {}  BRAM {} bits  DSPs {}\n",
+        commas(e.resources.core.alms),
+        commas(e.resources.core.regs),
+        commas(e.resources.core.bram_bits),
+        e.resources.core.dsps,
+    ));
+    s.push_str(&format!(
+        "cycles        total {} = compute {} + stall {} + drain {}  ({} passes)\n",
+        commas(t.total_cycles),
+        commas(t.n_c),
+        commas(t.n_s),
+        commas(t.drain_cycles),
+        t.passes,
+    ));
+    s.push_str(&format!(
+        "utilization   u = {:.3}   performance {:.1} GFlop/s (u x peak {:.1}), sustained {:.1}\n",
+        t.utilization, t.performance_gflops, t.peak_gflops, t.sustained_gflops,
+    ));
+    if has_attribution(e) {
+        s.push_str(&format!("stall attribution ({} cycles):\n", commas(t.n_s)));
+        let total = t.n_s.max(1) as f64;
+        for (name, v) in [
+            ("read-starved", t.stall.read_starved),
+            ("write-backpressure", t.stall.write_backpressure),
+            ("frame fill", t.stall.fill),
+            ("dma-rearm", t.stall.dma_rearm),
+            ("refresh-shadow", t.stall.refresh_shadow),
+        ] {
+            s.push_str(&format!(
+                "  {:<20} {:>14} {:>6.1}%\n",
+                name,
+                commas(v),
+                100.0 * v as f64 / total
+            ));
+        }
+    } else {
+        s.push_str(
+            "stall attribution: unavailable (row predates attribution; re-evaluate to diagnose)\n",
+        );
+    }
+    s.push_str(&format!(
+        "bandwidth     read {:.2} GB/s, write {:.2} GB/s of {:.2} capacity -> {:.0}% channel occupancy\n",
+        t.read_gbps,
+        t.write_gbps,
+        t.capacity_gbps,
+        100.0 * t.channel_occupancy(),
+    ));
+    s.push_str(&format!(
+        "streamed      {} bytes read, {} bytes written\n",
+        commas(t.read_bytes),
+        commas(t.write_bytes)
+    ));
+    let (intensity, ridge) = roofline(t);
+    s.push_str(&format!(
+        "roofline      {:.2} flops/byte vs ridge {:.2} -> {} side\n",
+        intensity,
+        ridge,
+        if intensity < ridge { "memory" } else { "compute" },
+    ));
+    if has_attribution(e) {
+        s.push_str(&format!("verdict       {}\n", t.bottleneck().name()));
+    } else {
+        s.push_str("verdict       ? (no attribution)\n");
+    }
+    s
+}
+
+/// Arithmetic intensity (sustained flops per streamed byte) and the
+/// roofline ridge point (peak flops per byte of duplex capacity).
+/// Left of the ridge the memory roof binds; right of it the compute
+/// roof does.
+fn roofline(t: &crate::sim::TimingReport) -> (f64, f64) {
+    let wall_s = t.total_cycles as f64 * (1000.0 / crate::CORE_FREQ_MHZ) * 1e-9;
+    let total_flops = t.sustained_gflops * wall_s * 1e9;
+    let bytes = (t.read_bytes + t.write_bytes).max(1) as f64;
+    let intensity = total_flops / bytes;
+    let ridge = if t.capacity_gbps > 0.0 {
+        t.peak_gflops / t.capacity_gbps
+    } else {
+        f64::INFINITY
+    };
+    (intensity, ridge)
+}
+
+/// The machine-readable `dse explain --json` document.  Carries every
+/// term of both conservation invariants (stall buckets vs `n_s`, the
+/// cycle ledger) so a validator can re-check them, plus the derived
+/// roofline position and bottleneck verdict.
+pub fn explain_json(e: &Evaluation) -> Json {
+    let t = &e.timing;
+    let (intensity, ridge) = roofline(t);
+    json::obj(vec![
+        ("workload", json::str(e.workload)),
+        (
+            "design",
+            json::obj(vec![
+                ("n", json::uint(e.design.n as u64)),
+                ("m", json::uint(e.design.m as u64)),
+                ("w", json::uint(e.design.w as u64)),
+                ("h", json::uint(e.design.h as u64)),
+            ]),
+        ),
+        ("device", json::str(e.device)),
+        ("feasible", Json::Bool(e.infeasible.is_none())),
+        ("passes", json::uint(t.passes)),
+        (
+            "cycles",
+            json::obj(vec![
+                ("total", json::uint(t.total_cycles)),
+                ("compute", json::uint(t.n_c)),
+                ("stall", json::uint(t.n_s)),
+                ("drain", json::uint(t.drain_cycles)),
+            ]),
+        ),
+        (
+            "stall",
+            json::obj(vec![
+                ("dma_rearm", json::uint(t.stall.dma_rearm)),
+                ("fill", json::uint(t.stall.fill)),
+                ("read_starved", json::uint(t.stall.read_starved)),
+                ("write_backpressure", json::uint(t.stall.write_backpressure)),
+                ("refresh_shadow", json::uint(t.stall.refresh_shadow)),
+            ]),
+        ),
+        ("attribution_known", Json::Bool(has_attribution(e))),
+        (
+            "bytes",
+            json::obj(vec![
+                ("read", json::uint(t.read_bytes)),
+                ("write", json::uint(t.write_bytes)),
+            ]),
+        ),
+        (
+            "bandwidth",
+            json::obj(vec![
+                ("read_gbps", json::num(t.read_gbps)),
+                ("write_gbps", json::num(t.write_gbps)),
+                ("demand_gbps", json::num(t.demand_gbps)),
+                ("capacity_gbps", json::num(t.capacity_gbps)),
+                ("occupancy", json::num(t.channel_occupancy())),
+            ]),
+        ),
+        (
+            "performance",
+            json::obj(vec![
+                ("utilization", json::num(t.utilization)),
+                ("sustained_gflops", json::num(t.sustained_gflops)),
+                ("performance_gflops", json::num(t.performance_gflops)),
+                ("peak_gflops", json::num(t.peak_gflops)),
+                ("power_w", json::num(e.power_w)),
+                ("gflops_per_watt", json::num(e.perf_per_watt)),
+            ]),
+        ),
+        (
+            "roofline",
+            json::obj(vec![
+                ("intensity_flops_per_byte", json::num(intensity)),
+                ("ridge_flops_per_byte", json::num(ridge)),
+                (
+                    "bound",
+                    json::str(if intensity < ridge { "memory" } else { "compute" }),
+                ),
+            ]),
+        ),
+        (
+            "bottleneck",
+            if has_attribution(e) {
+                json::str(t.bottleneck().name())
+            } else {
+                Json::Null
+            },
+        ),
+    ])
 }
 
 /// Sweep summary: best design per device plus frontier and cache
@@ -339,6 +651,32 @@ pub fn status_json(
         ]),
         None => Json::Null,
     };
+    // live stall-attribution aggregate: cumulative bucket cycles and
+    // bottleneck tallies over the rows evaluated so far (accumulated
+    // by the coordinator's drain loop)
+    let c = |name: &str| json::uint(obs.metrics.counter(name).get());
+    let attribution = json::obj(vec![
+        ("rows", c("attrib.rows")),
+        (
+            "stall_cycles",
+            json::obj(vec![
+                ("dma_rearm", c("attrib.stall.dma_rearm_cycles")),
+                ("fill", c("attrib.stall.fill_cycles")),
+                ("read_starved", c("attrib.stall.read_starved_cycles")),
+                ("write_backpressure", c("attrib.stall.write_backpressure_cycles")),
+                ("refresh_shadow", c("attrib.stall.refresh_shadow_cycles")),
+            ]),
+        ),
+        (
+            "bottlenecks",
+            json::obj(vec![
+                ("compute", c("attrib.bottleneck.compute")),
+                ("bandwidth", c("attrib.bottleneck.bandwidth")),
+                ("refresh", c("attrib.bottleneck.refresh")),
+                ("fill", c("attrib.bottleneck.fill")),
+            ]),
+        ),
+    ]);
     json::obj(vec![
         (
             "sweep",
@@ -354,6 +692,7 @@ pub fn status_json(
         ("cache", cache_json),
         ("workers", workers),
         ("journal", journal_json),
+        ("attribution", attribution),
     ])
 }
 
@@ -479,6 +818,22 @@ mod tests {
         assert!(cache_json.field("hit_rate").unwrap().as_f64().is_ok());
         let journal = parsed.field("journal").unwrap();
         assert_eq!(journal.field("rows").unwrap().as_u64().unwrap(), 2);
+        let attribution = parsed.field("attribution").unwrap();
+        assert!(attribution.field("rows").unwrap().as_u64().is_ok());
+        assert!(attribution
+            .field("stall_cycles")
+            .unwrap()
+            .field("read_starved")
+            .unwrap()
+            .as_u64()
+            .is_ok());
+        assert!(attribution
+            .field("bottlenecks")
+            .unwrap()
+            .field("bandwidth")
+            .unwrap()
+            .as_u64()
+            .is_ok());
         let workers = parsed.field("workers").unwrap().as_arr().unwrap();
         assert!(!workers.is_empty());
         assert!(workers.iter().all(|w| {
@@ -501,6 +856,111 @@ mod tests {
     }
 
     #[test]
+    fn explain_renders_the_full_diagnosis() {
+        use crate::explore::{evaluate, ExploreConfig};
+        use crate::workload::DesignPoint;
+        let cfg = ExploreConfig {
+            grid_w: 64,
+            grid_h: 32,
+            max_n: 2,
+            max_m: 2,
+            passes: 2,
+            ..Default::default()
+        };
+        let e = evaluate(&DesignPoint::new(2, 1, 64, 32), &cfg).unwrap();
+        let t = explain(&e);
+        assert!(t.contains("== lbm (n, m) = (2, 1) on 64x32 =="), "{t}");
+        assert!(t.contains("— fits"), "{t}");
+        assert!(t.contains("stall attribution"), "{t}");
+        assert!(t.contains("read-starved"), "{t}");
+        assert!(t.contains("dma-rearm"), "{t}");
+        assert!(t.contains("roofline"), "{t}");
+        assert!(t.contains("verdict"), "{t}");
+        assert!(!t.contains('?'), "attributed row renders no '?': {t}");
+
+        // a row with zeroed buckets (pre-attribution session) must not
+        // be diagnosed
+        let mut old = e.clone();
+        old.timing.stall = Default::default();
+        assert!(!has_attribution(&old));
+        let t = explain(&old);
+        assert!(t.contains("attribution: unavailable"), "{t}");
+        assert!(t.contains("verdict       ?"), "{t}");
+    }
+
+    #[test]
+    fn explain_json_carries_both_conservation_invariants() {
+        use crate::explore::{evaluate, ExploreConfig};
+        use crate::workload::DesignPoint;
+        let cfg = ExploreConfig {
+            grid_w: 64,
+            grid_h: 32,
+            max_n: 2,
+            max_m: 2,
+            passes: 2,
+            ..Default::default()
+        };
+        let e = evaluate(&DesignPoint::new(1, 2, 64, 32), &cfg).unwrap();
+        // round-trip through text, exactly what the CLI prints
+        let doc = Json::parse(&explain_json(&e).to_string()).unwrap();
+        let u = |v: &Json, k: &str| v.field(k).unwrap().as_u64().unwrap();
+        let cycles = doc.field("cycles").unwrap();
+        let stall = doc.field("stall").unwrap();
+        let bucket_sum = u(stall, "dma_rearm")
+            + u(stall, "fill")
+            + u(stall, "read_starved")
+            + u(stall, "write_backpressure")
+            + u(stall, "refresh_shadow");
+        assert_eq!(bucket_sum, u(cycles, "stall"), "buckets partition n_s");
+        assert_eq!(
+            u(cycles, "compute") + u(cycles, "stall") + u(cycles, "drain"),
+            u(cycles, "total"),
+            "cycle ledger closes"
+        );
+        assert_eq!(doc.field("attribution_known").unwrap(), &Json::Bool(true));
+        assert_eq!(
+            doc.field("bottleneck").unwrap().as_str().unwrap(),
+            e.timing.bottleneck().name()
+        );
+        let bw = doc.field("bandwidth").unwrap();
+        assert!(bw.field("capacity_gbps").unwrap().as_f64().unwrap() > 0.0);
+        let roof = doc.field("roofline").unwrap();
+        assert!(roof.field("intensity_flops_per_byte").unwrap().as_f64().unwrap() > 0.0);
+        assert!(roof.field("bound").unwrap().as_str().is_ok());
+        // unattributed rows serialize a null verdict
+        let mut old = e.clone();
+        old.timing.stall = Default::default();
+        let doc = explain_json(&old);
+        assert_eq!(doc.field("attribution_known").unwrap(), &Json::Bool(false));
+        assert_eq!(doc.field("bottleneck").unwrap(), &Json::Null);
+    }
+
+    #[test]
+    fn attrib_table_adds_bottleneck_column() {
+        use crate::explore::{evaluate, ExploreConfig};
+        use crate::workload::DesignPoint;
+        let cfg = ExploreConfig {
+            grid_w: 64,
+            grid_h: 32,
+            max_n: 2,
+            max_m: 2,
+            passes: 2,
+            ..Default::default()
+        };
+        let e = evaluate(&DesignPoint::new(1, 1, 64, 32), &cfg).unwrap();
+        let plain = dse_table(std::slice::from_ref(&e));
+        assert!(!plain.contains("bottleneck"), "{plain}");
+        let t = dse_table_attrib(std::slice::from_ref(&e));
+        assert!(t.contains("bottleneck"), "{t}");
+        assert!(t.contains(e.timing.bottleneck().name()), "{t}");
+        // a zero-bucket row renders '?' instead of a fabricated verdict
+        let mut old = e.clone();
+        old.timing.stall = Default::default();
+        let t = dse_table_attrib(std::slice::from_ref(&old));
+        assert!(t.contains(" ?"), "{t}");
+    }
+
+    #[test]
     fn strategy_comparison_and_summary_render() {
         use crate::dse::{DesignSpace, EvalCache, Exhaustive, SearchStrategy, SweepContext};
         use crate::explore::ExploreConfig;
@@ -518,6 +978,10 @@ mod tests {
         let cmp = strategy_comparison(&[&r]);
         assert!(cmp.contains("exhaustive"));
         assert!(cmp.contains("(1, 2)") || cmp.contains("(1, 1)"));
+        // the bottleneck column and the per-device stall-mix summary
+        assert!(cmp.contains("bottleneck"), "{cmp}");
+        assert!(cmp.contains("stall mix per device"), "{cmp}");
+        assert!(cmp.contains("read-starved"), "{cmp}");
         let sum = sweep_summary(&r);
         assert!(sum.contains("best on Stratix V 5SGXEA7"));
         assert!(sum.contains("pareto frontier"));

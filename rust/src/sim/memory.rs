@@ -126,6 +126,11 @@ pub struct MemPhase {
     last_dir: [u8; MAX_FF_DIMMS],
     in_fifo: u64,
     out_fifo: u64,
+    /// How far the refresh shadow extends past this instant (0 once it
+    /// has lapsed — saturated, so an arbitrarily old shadow does not
+    /// break periodicity).  Part of the phase because stall
+    /// *attribution* (not just stall counts) must repeat each period.
+    shadow_rel: u64,
 }
 
 /// The memory system: burst-level service of a read stream (filling the
@@ -154,6 +159,10 @@ pub struct DdrSystem {
     /// totals for reporting
     pub total_read: u64,
     pub total_written: u64,
+    /// latest instant (deci-cycles) up to which some controller's
+    /// service was pushed out by a refresh — the window within which a
+    /// core stall is attributed to refresh rather than raw bandwidth
+    refresh_shadow_until_dc: u64,
 }
 
 impl DdrSystem {
@@ -180,6 +189,7 @@ impl DdrSystem {
             read_remaining: 0,
             total_read: 0,
             total_written: 0,
+            refresh_shadow_until_dc: 0,
         }
     }
 
@@ -250,6 +260,10 @@ impl DdrSystem {
             dimm.busy_until_dc =
                 dimm.busy_until_dc.max(dimm.next_refresh_dc) + self.trfc_dc;
             dimm.next_refresh_dc += self.trefi_dc;
+            // the controller's service horizon was pushed out by tRFC:
+            // core stalls until that horizon are refresh-shadowed
+            self.refresh_shadow_until_dc =
+                self.refresh_shadow_until_dc.max(dimm.busy_until_dc);
         }
         if dimm.busy_until_dc > now_dc {
             return false;
@@ -266,6 +280,14 @@ impl DdrSystem {
         dimm.busy_until_dc = start + turnaround + self.burst_dc;
         dimm.last_dir = Some(dir);
         true
+    }
+
+    /// Whether `now_dc` falls inside the refresh shadow: some
+    /// controller recently folded a tRFC into its service horizon and
+    /// that horizon has not lapsed yet.  Stalls inside the shadow are
+    /// attributed to refresh, not to raw bandwidth.
+    pub fn in_refresh_shadow(&self, now_dc: u64) -> bool {
+        now_dc < self.refresh_shadow_until_dc
     }
 
     /// Core-side: try to consume `bytes` from the input FIFO.
@@ -301,6 +323,7 @@ impl DdrSystem {
             last_dir: [0; MAX_FF_DIMMS],
             in_fifo: self.in_fifo_bytes,
             out_fifo: self.out_fifo_bytes,
+            shadow_rel: self.refresh_shadow_until_dc.saturating_sub(now_dc),
         };
         for (i, d) in self.dimms.iter().enumerate() {
             p.busy_rel[i] = d.busy_until_dc as i64 - now_dc as i64;
@@ -324,6 +347,11 @@ impl DdrSystem {
         for d in &mut self.dimms {
             d.busy_until_dc += delta_dc;
             d.next_refresh_dc += delta_dc;
+        }
+        // a lapsed shadow stays lapsed (saturated at 0 in the phase),
+        // an active one keeps its relative extent
+        if self.refresh_shadow_until_dc > 0 {
+            self.refresh_shadow_until_dc += delta_dc;
         }
         self.read_remaining -= read_bytes;
         self.total_read += read_bytes;

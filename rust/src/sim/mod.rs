@@ -21,5 +21,6 @@ pub use engine::Engine;
 pub use memory::{DdrConfig, DdrSystem, MemPhase};
 pub use timing::{
     run as run_timing, run_oracle as run_timing_oracle, run_with_stats,
-    FastForwardStats, TimingDesign, TimingReport, DMA_REARM_CYCLES,
+    Bottleneck, FastForwardStats, StallBreakdown, TimingDesign, TimingReport,
+    DMA_REARM_CYCLES,
 };
