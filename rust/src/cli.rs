@@ -15,7 +15,7 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::coordinator::Coordinator;
+use crate::coordinator::{Coordinator, DegradingSink, FaultPlan, Supervisor};
 use crate::dfg;
 use crate::dse::json as dse_json;
 use crate::dse::{
@@ -131,6 +131,8 @@ COMMANDS:
               [--metrics-every SECS] [--events FILE]
               [--listen ADDR] [--stall-after SECS]
               [--profile] [--progress [SECS]] [--attrib]
+              [--retries N] [--backoff SECS] [--eval-timeout SECS]
+              [--fail-fast] [--fault-plan FILE]
                                            multi-device sweep (cached, resumable);
                                            --journal appends every row to an
                                            fsync'd crash-safe log as it completes
@@ -160,7 +162,20 @@ COMMANDS:
                                            reports live status with ETA on
                                            stderr every SECS (default 2);
                                            --attrib adds a bottleneck column
-                                           (why each row stalls) to the table
+                                           (why each row stalls) to the table;
+                                           a panicking, hanging or erroring
+                                           evaluation is retried (--retries,
+                                           default 2) with deterministic
+                                           exponential backoff (--backoff SECS
+                                           base, default 0.05) and then
+                                           quarantined while the sweep keeps
+                                           going — --fail-fast aborts on the
+                                           first exhausted point instead;
+                                           --eval-timeout cancels any single
+                                           evaluation exceeding SECS and
+                                           requeues it once; --fault-plan
+                                           injects the deterministic faults
+                                           described in FILE (chaos testing)
   dse explain <workload> <n> <m> [--grid WxH] [--device KEY] [--ddr NAME]
               [--passes P] [--json]        evaluate one design point and print
                                            its full diagnosis: exact cycle
@@ -168,10 +183,14 @@ COMMANDS:
                                            vs capacity bandwidth, roofline
                                            position and bottleneck verdict
                                            (--json for the machine form)
-  dse resume  --session FILE | --journal FILE  [space/strategy/telemetry flags]
+  dse resume  --session FILE | --journal FILE  [--retry-failed]
+              [space/strategy/telemetry flags]
                                            reload a session — or recover a
                                            (possibly torn) journal — and finish
-                                           the sweep without recomputing its rows
+                                           the sweep without recomputing its
+                                           rows; quarantined points stay
+                                           quarantined unless --retry-failed
+                                           re-attempts them
   dse compare [space flags]                run all strategies, compare coverage
   dse devices                              list the device catalog
   simulate [--workload NAME] --n N --m M [--grid WxH] [--steps S]
@@ -600,6 +619,45 @@ fn secs_flag(args: &Args, name: &str) -> Result<Option<Duration>> {
     Ok(Some(Duration::from_secs_f64(secs)))
 }
 
+/// Build the sweep's fault-tolerance policy from `--retries` /
+/// `--backoff` / `--eval-timeout` / `--fail-fast` (quarantine-and-
+/// continue is the default) / `--fault-plan`.  `--seed` doubles as the
+/// backoff jitter seed, so a replayed sweep waits the same schedule.
+fn sweep_supervisor(args: &Args) -> Result<Supervisor> {
+    let keep_going = match (args.flag("keep-going"), args.flag("fail-fast")) {
+        (Some(_), Some(_)) => {
+            return Err(Error::Explore(
+                "--keep-going and --fail-fast are mutually exclusive".into(),
+            ))
+        }
+        (_, fail_fast) => fail_fast.is_none(),
+    };
+    let mut sup = Supervisor::new()
+        .with_retries(args.get("retries", 2)?)
+        .with_keep_going(keep_going)
+        .with_seed(args.get("seed", 0)?);
+    if let Some(v) = args.flag("backoff") {
+        // unlike `secs_flag`, zero is meaningful here: it disables the
+        // delay entirely (retries fire back to back)
+        let secs: f64 = v.parse().map_err(|_| {
+            Error::Explore(format!("bad value for --backoff: `{v}`"))
+        })?;
+        if !(secs.is_finite() && secs >= 0.0) {
+            return Err(Error::Explore(format!(
+                "--backoff wants a non-negative number of seconds, got `{v}`"
+            )));
+        }
+        sup = sup.with_backoff(Duration::from_secs_f64(secs));
+    }
+    if let Some(deadline) = secs_flag(args, "eval-timeout")? {
+        sup = sup.with_eval_timeout(deadline);
+    }
+    if let Some(path) = file_flag(args, "fault-plan")? {
+        sup = sup.with_faults(Arc::new(FaultPlan::load(path)?));
+    }
+    Ok(sup)
+}
+
 /// Telemetry sinks selected by the sweep flags.  `obs` stays `None`
 /// when every sink is off, so the default path pays nothing.
 struct SweepObs {
@@ -889,9 +947,24 @@ fn dse_sweep_body(args: &Args, so: &SweepObs) -> Result<i32> {
         }
         None => None,
     };
-    let mut ctx = SweepContext::new(&cache, dse_workers(args)?);
-    if let Some(writer) = &journal {
-        ctx = ctx.with_sink(&**writer);
+    let supervisor = sweep_supervisor(args)?;
+    // the journal rides behind a degrading wrapper: a write error
+    // mid-sweep flips it to memory-only instead of killing the run,
+    // and `is_degraded` gates the finalize below
+    let sink = journal.as_ref().map(|writer| {
+        let mut s = DegradingSink::new(&**writer);
+        if let Some(obs) = &so.obs {
+            s = s.with_obs(obs);
+        }
+        if let Some(plan) = supervisor.faults() {
+            s = s.with_faults(plan);
+        }
+        s
+    });
+    let mut ctx = SweepContext::new(&cache, dse_workers(args)?)
+        .with_supervisor(&supervisor);
+    if let Some(sink) = &sink {
+        ctx = ctx.with_sink(sink);
     }
     if let Some(obs) = &so.obs {
         ctx = ctx.with_obs(obs);
@@ -984,12 +1057,22 @@ fn dse_sweep_body(args: &Args, so: &SweepObs) -> Result<i32> {
         println!("  bench written to {path}");
     }
     if let Some(writer) = &journal {
-        writer.finalize(&result)?;
-        println!(
-            "  journal finalized: {} rows in {}",
-            writer.rows_written(),
-            file_flag(args, "journal")?.unwrap_or_default()
-        );
+        if sink.as_ref().map_or(false, |s| s.is_degraded()) {
+            // a degraded journal is missing rows; a finalize record
+            // would falsely mark it complete and block a later resume
+            eprintln!(
+                "warning: journal degraded mid-sweep; NOT finalizing {} \
+                 (resume it to fill the gap)",
+                file_flag(args, "journal")?.unwrap_or_default()
+            );
+        } else {
+            writer.finalize(&result)?;
+            println!(
+                "  journal finalized: {} rows in {}",
+                writer.rows_written(),
+                file_flag(args, "journal")?.unwrap_or_default()
+            );
+        }
     }
     if let Some(path) = file_flag(args, "session")? {
         let session =
@@ -1005,6 +1088,7 @@ fn dse_sweep_body(args: &Args, so: &SweepObs) -> Result<i32> {
                 ("evaluated", dse_json::uint(result.evaluated as u64)),
                 ("cache_hits", dse_json::uint(result.cache_hits)),
                 ("skipped", dse_json::uint(result.skipped as u64)),
+                ("failed", dse_json::uint(result.failures.len() as u64)),
                 ("seconds", dse_json::num(dt)),
             ],
         );
@@ -1050,7 +1134,16 @@ fn resume_session(args: &Args, so: &SweepObs, path: &str) -> Result<i32> {
         dse_strategy_with_params(args, &strategy_name, &prior.params)?;
     let cache = Arc::new(EvalCache::new());
     let loaded = prior.preload(&cache);
-    let mut ctx = SweepContext::new(&cache, dse_workers(args)?);
+    // quarantined points stay quarantined across resumes — they fail
+    // instantly with their recorded reason — unless `--retry-failed`
+    // grants them a fresh set of attempts
+    let mut supervisor = sweep_supervisor(args)?;
+    if args.flag("retry-failed").is_none() {
+        supervisor = supervisor.with_quarantine(prior.quarantine_keys());
+    }
+    let retrying = args.flag("retry-failed").is_some() && !prior.failures.is_empty();
+    let mut ctx =
+        SweepContext::new(&cache, dse_workers(args)?).with_supervisor(&supervisor);
     if let Some(obs) = &so.obs {
         ctx = ctx.with_obs(obs);
         if let Some(p) = &obs.progress {
@@ -1094,6 +1187,18 @@ fn resume_session(args: &Args, so: &SweepObs, path: &str) -> Result<i32> {
         space.len(),
         strategy.name()
     );
+    if supervisor.quarantined() > 0 {
+        println!(
+            "  {} quarantined point(s) carried over (pass --retry-failed to \
+             re-attempt them)",
+            supervisor.quarantined()
+        );
+    } else if retrying {
+        println!(
+            "  re-attempting {} previously quarantined point(s)",
+            prior.failures.len()
+        );
+    }
     let t0 = std::time::Instant::now();
     let result = strategy.run(&space, &ctx)?;
     let dt = t0.elapsed().as_secs_f64();
@@ -1118,6 +1223,7 @@ fn resume_session(args: &Args, so: &SweepObs, path: &str) -> Result<i32> {
                 ("evaluated", dse_json::uint(result.evaluated as u64)),
                 ("cache_hits", dse_json::uint(result.cache_hits)),
                 ("skipped", dse_json::uint(result.skipped as u64)),
+                ("failed", dse_json::uint(result.failures.len() as u64)),
                 ("seconds", dse_json::num(dt)),
             ],
         );
@@ -1149,6 +1255,13 @@ fn resume_journal(args: &Args, so: &SweepObs, path: &str) -> Result<i32> {
     let sync_interval = secs_flag(args, "sync-interval")?;
     let cache = Arc::new(EvalCache::new());
     let loaded = Session::from_journal(&prior).preload(&cache);
+    let mut supervisor = sweep_supervisor(args)?;
+    if args.flag("retry-failed").is_none() {
+        supervisor = supervisor.with_quarantine(
+            prior.failures.iter().map(|f| f.key(prior.space.latency)),
+        );
+    }
+    let retrying = args.flag("retry-failed").is_some() && !prior.failures.is_empty();
     if let Some(obs) = &so.obs {
         obs.event(
             "journal-recovered",
@@ -1183,6 +1296,9 @@ fn resume_journal(args: &Args, so: &SweepObs, path: &str) -> Result<i32> {
         for row in &prior.rows {
             writer.append(row)?;
         }
+        for f in &prior.failures {
+            writer.append_fail(f)?;
+        }
         writer.sync()?;
         std::fs::rename(&tmp, path)?;
         writer
@@ -1197,7 +1313,19 @@ fn resume_journal(args: &Args, so: &SweepObs, path: &str) -> Result<i32> {
         writer = writer.with_obs(obs.clone());
     }
     let writer = Arc::new(writer);
-    let mut ctx = SweepContext::new(&cache, dse_workers(args)?).with_sink(&*writer);
+    let sink = {
+        let mut s = DegradingSink::new(&*writer);
+        if let Some(obs) = &so.obs {
+            s = s.with_obs(obs);
+        }
+        if let Some(plan) = supervisor.faults() {
+            s = s.with_faults(plan);
+        }
+        s
+    };
+    let mut ctx = SweepContext::new(&cache, dse_workers(args)?)
+        .with_sink(&sink)
+        .with_supervisor(&supervisor);
     if let Some(obs) = &so.obs {
         ctx = ctx.with_obs(obs);
         if let Some(p) = &obs.progress {
@@ -1236,20 +1364,39 @@ fn resume_journal(args: &Args, so: &SweepObs, path: &str) -> Result<i32> {
         space.len(),
         strategy.name()
     );
+    if supervisor.quarantined() > 0 {
+        println!(
+            "  {} quarantined point(s) carried over (pass --retry-failed to \
+             re-attempt them)",
+            supervisor.quarantined()
+        );
+    } else if retrying {
+        println!(
+            "  re-attempting {} previously quarantined point(s)",
+            prior.failures.len()
+        );
+    }
     let t0 = std::time::Instant::now();
     let result = strategy.run(&space, &ctx)?;
     let dt = t0.elapsed().as_secs_f64();
-    writer.finalize(&result)?;
     println!("{}", dse_table_for(args, &result.evals));
     print!("{}", report::sweep_summary(&result));
     println!(
         "  reuse: {} answered from the journal, {} recomputed",
         result.cache_hits, result.evaluated
     );
-    println!(
-        "  journal finalized: {} rows ({path})",
-        writer.rows_written()
-    );
+    if sink.is_degraded() {
+        eprintln!(
+            "warning: journal degraded mid-sweep; NOT finalizing {path} \
+             (resume it to fill the gap)"
+        );
+    } else {
+        writer.finalize(&result)?;
+        println!(
+            "  journal finalized: {} rows ({path})",
+            writer.rows_written()
+        );
+    }
     if let Some(obs) = &so.obs {
         obs.event(
             "sweep-finish",
@@ -1258,6 +1405,7 @@ fn resume_journal(args: &Args, so: &SweepObs, path: &str) -> Result<i32> {
                 ("evaluated", dse_json::uint(result.evaluated as u64)),
                 ("cache_hits", dse_json::uint(result.cache_hits)),
                 ("skipped", dse_json::uint(result.skipped as u64)),
+                ("failed", dse_json::uint(result.failures.len() as u64)),
                 ("seconds", dse_json::num(dt)),
             ],
         );
@@ -1275,9 +1423,12 @@ fn cmd_dse_compare(args: &Args) -> Result<i32> {
     let mut results = Vec::new();
     for name in ["exhaustive", "prune", "hill"] {
         let strategy = dse_strategy(args, name)?;
-        // fresh cache per strategy so the evaluation counts compare
+        // fresh cache and supervisor per strategy so the evaluation
+        // counts compare — and a `--fault-plan` arms the same fault
+        // charges against each strategy
+        let supervisor = sweep_supervisor(args)?;
         let cache = EvalCache::new();
-        let ctx = SweepContext::new(&cache, workers);
+        let ctx = SweepContext::new(&cache, workers).with_supervisor(&supervisor);
         results.push(strategy.run(&space, &ctx)?);
     }
     let refs: Vec<&crate::dse::SweepResult> = results.iter().collect();
@@ -1932,6 +2083,170 @@ mod tests {
         assert_eq!(space.grids.len(), 2);
         assert_eq!(space.devices.len(), 3);
         assert_eq!(space.ddr_variants.len(), 2);
+    }
+
+    #[test]
+    fn sweep_supervisor_flags_are_validated() {
+        let d = sweep_supervisor(&Args::parse(&[])).unwrap();
+        assert_eq!(d.retries, 2);
+        assert!(d.keep_going, "sweeps quarantine-and-continue by default");
+        assert!(d.eval_timeout.is_none());
+        let s = sweep_supervisor(&Args::parse(&[
+            "--retries".into(),
+            "5".into(),
+            "--backoff".into(),
+            "0".into(),
+            "--eval-timeout".into(),
+            "1.5".into(),
+            "--fail-fast".into(),
+        ]))
+        .unwrap();
+        assert_eq!(s.retries, 5);
+        assert!(!s.keep_going);
+        assert_eq!(s.backoff, Duration::ZERO);
+        assert_eq!(s.eval_timeout, Some(Duration::from_secs_f64(1.5)));
+        for bad in ["-1", "NaN", "soon"] {
+            let a = Args::parse(&["--backoff".into(), bad.into()]);
+            assert!(sweep_supervisor(&a).is_err(), "--backoff {bad}");
+        }
+        let both = Args::parse(&["--keep-going".into(), "--fail-fast".into()]);
+        let err = sweep_supervisor(&both).unwrap_err().to_string();
+        assert!(err.contains("mutually exclusive"), "{err}");
+        let bare = Args::parse(&["--fault-plan".into()]);
+        let err = sweep_supervisor(&bare).unwrap_err().to_string();
+        assert!(err.contains("--fault-plan needs a FILE"), "{err}");
+        let words = Args::parse(&["--retries".into(), "many".into()]);
+        assert!(sweep_supervisor(&words).is_err());
+    }
+
+    #[test]
+    fn dse_sweep_quarantines_faulted_points_and_resume_retries() {
+        let dir = std::env::temp_dir();
+        let pid = std::process::id();
+        let plan = dir.join(format!("spdx_cli_faults_{pid}_plan.json"));
+        let sess = dir.join(format!("spdx_cli_faults_{pid}.json"));
+        let jnl = dir.join(format!("spdx_cli_faults_{pid}.jnl"));
+        // the (2, 2) point panics on both of its attempts (--retries 1)
+        std::fs::write(
+            &plan,
+            r#"{"faults":[{"point":{"n":2,"m":2},"kind":"panic","times":2}]}"#,
+        )
+        .unwrap();
+        let code = run(vec![
+            "dse".into(),
+            "sweep".into(),
+            "--grids".into(),
+            "64x32".into(),
+            "--max-n".into(),
+            "2".into(),
+            "--max-m".into(),
+            "2".into(),
+            "--passes".into(),
+            "2".into(),
+            "--retries".into(),
+            "1".into(),
+            "--backoff".into(),
+            "0".into(),
+            "--fault-plan".into(),
+            plan.to_string_lossy().into_owned(),
+            "--session".into(),
+            sess.to_string_lossy().into_owned(),
+            "--journal".into(),
+            jnl.to_string_lossy().into_owned(),
+        ])
+        .unwrap();
+        assert_eq!(code, 0, "a faulted sweep still exits cleanly");
+        let s = Session::load(&sess).unwrap();
+        assert_eq!(s.rows.len(), 3, "the other three points evaluated");
+        assert_eq!(s.failures.len(), 1);
+        let f = &s.failures[0];
+        assert_eq!((f.design.n, f.design.m), (2, 2));
+        assert_eq!(f.kind, crate::dse::FailKind::Panic);
+        assert_eq!(f.attempts, 2);
+        assert!(f.error.contains("injected panic"), "{}", f.error);
+        let j = Journal::recover(&jnl).unwrap();
+        assert_eq!(j.rows.len(), 3);
+        assert_eq!(j.failures.len(), 1);
+        assert!(j.complete(), "quarantine does not block the finalize");
+        std::fs::remove_file(&plan).unwrap();
+        // a plain resume keeps the quarantine (instant, no fault plan
+        // on disk any more) ...
+        let code = run(vec![
+            "dse".into(),
+            "resume".into(),
+            "--session".into(),
+            sess.to_string_lossy().into_owned(),
+        ])
+        .unwrap();
+        assert_eq!(code, 0);
+        let s = Session::load(&sess).unwrap();
+        assert_eq!(s.rows.len(), 3);
+        assert_eq!(s.failures.len(), 1, "still quarantined");
+        // ... and --retry-failed re-attempts it, now fault-free: the
+        // fresh success row supersedes the fail row
+        let code = run(vec![
+            "dse".into(),
+            "resume".into(),
+            "--session".into(),
+            sess.to_string_lossy().into_owned(),
+            "--retry-failed".into(),
+        ])
+        .unwrap();
+        assert_eq!(code, 0);
+        let s = Session::load(&sess).unwrap();
+        std::fs::remove_file(&sess).ok();
+        assert_eq!(s.rows.len(), 4, "the quarantined point recovered");
+        assert!(s.failures.is_empty());
+        // the journal resumes the same way
+        let code = run(vec![
+            "dse".into(),
+            "resume".into(),
+            "--journal".into(),
+            jnl.to_string_lossy().into_owned(),
+            "--retry-failed".into(),
+        ])
+        .unwrap();
+        assert_eq!(code, 0);
+        let j = Journal::recover(&jnl).unwrap();
+        std::fs::remove_file(&jnl).ok();
+        assert_eq!(j.rows.len(), 4);
+        assert!(j.failures.is_empty(), "the success row resolved the fail");
+        assert!(j.complete());
+    }
+
+    #[test]
+    fn dse_sweep_fail_fast_aborts_on_a_fault() {
+        let dir = std::env::temp_dir();
+        let plan = dir
+            .join(format!("spdx_cli_failfast_{}_plan.json", std::process::id()));
+        std::fs::write(
+            &plan,
+            r#"{"faults":[{"point":{"n":1,"m":2},"kind":"panic","times":9}]}"#,
+        )
+        .unwrap();
+        let err = run(vec![
+            "dse".into(),
+            "sweep".into(),
+            "--grids".into(),
+            "64x32".into(),
+            "--max-n".into(),
+            "1".into(),
+            "--max-m".into(),
+            "2".into(),
+            "--passes".into(),
+            "2".into(),
+            "--retries".into(),
+            "0".into(),
+            "--backoff".into(),
+            "0".into(),
+            "--fail-fast".into(),
+            "--fault-plan".into(),
+            plan.to_string_lossy().into_owned(),
+        ])
+        .unwrap_err()
+        .to_string();
+        std::fs::remove_file(&plan).ok();
+        assert!(err.contains("injected panic"), "{err}");
     }
 
     #[test]

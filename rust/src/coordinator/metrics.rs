@@ -8,6 +8,10 @@ pub struct RunMetrics {
     pub jobs: usize,
     pub completed: usize,
     pub feasible: usize,
+    /// jobs that *failed* (aborted or quarantined) — distinct from
+    /// infeasible-but-evaluated rows, which count as completed with
+    /// `feasible: false`
+    pub failed: usize,
     /// per-job wall seconds, indexed by job id (0.0 = not finished)
     pub job_seconds: Vec<f64>,
     /// per-phase wall-time histograms (ns), fed from the observer's
@@ -22,6 +26,7 @@ impl RunMetrics {
             jobs,
             completed: 0,
             feasible: 0,
+            failed: 0,
             job_seconds: vec![0.0; jobs],
             phases: PhaseHistograms::default(),
         }
@@ -41,6 +46,23 @@ impl RunMetrics {
         if feasible {
             self.feasible += 1;
         }
+        if let Some(slot) = self.job_seconds.get_mut(index) {
+            *slot = seconds;
+        }
+    }
+
+    /// Record one *failed* job (evaluation error, quarantine, abort).
+    /// Counted as completed — the worker finished processing it — but
+    /// tallied separately from infeasible rows, which are legitimate
+    /// evaluations of designs that simply do not fit the device.
+    pub fn record_failed(&mut self, index: usize, seconds: f64) {
+        debug_assert!(
+            index < self.job_seconds.len(),
+            "job index {index} out of range ({} jobs)",
+            self.job_seconds.len()
+        );
+        self.completed += 1;
+        self.failed += 1;
         if let Some(slot) = self.job_seconds.get_mut(index) {
             *slot = seconds;
         }
@@ -94,8 +116,24 @@ mod tests {
         m.record(2, 2.0, false);
         assert_eq!(m.completed, 2);
         assert_eq!(m.feasible, 1);
+        assert_eq!(m.failed, 0);
         assert_eq!(m.total_seconds(), 3.0);
         assert_eq!(m.slowest_job(), Some((2, 2.0)));
+    }
+
+    #[test]
+    fn failed_jobs_are_tallied_apart_from_infeasible_rows() {
+        // regression: failures used to be recorded as `feasible: false`,
+        // indistinguishable from designs that evaluated fine but do
+        // not fit the device
+        let mut m = RunMetrics::new(3);
+        m.record(0, 1.0, true); // feasible row
+        m.record(1, 1.0, false); // infeasible row — NOT a failure
+        m.record_failed(2, 0.5); // quarantined/aborted job
+        assert_eq!(m.completed, 3);
+        assert_eq!(m.feasible, 1);
+        assert_eq!(m.failed, 1);
+        assert_eq!(m.total_seconds(), 2.5);
     }
 
     #[test]

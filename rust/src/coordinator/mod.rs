@@ -15,23 +15,33 @@
 //!
 //! No async runtime is available in the offline crate set; plain
 //! `std::thread` workers over an `mpsc` channel are used instead.
+//!
+//! [`evaluate_batch_supervised`] is the fault-tolerant entry point:
+//! with a [`Supervisor`] attached, a panicking, hanging, or repeatedly
+//! erroring job costs one quarantined row ([`FailRow`]) instead of the
+//! whole sweep (see [`supervise`]).
 
 pub mod metrics;
+pub mod supervise;
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread;
 
+use crate::dse::fail::FailRow;
+use crate::dse::json;
 use crate::dse::{EvalCache, RowSink};
 use crate::error::{Error, Result};
 use crate::explore::{
     candidates, evaluate, evaluate_phased, sort_by_perf_per_watt, Evaluation, ExploreConfig,
 };
 use crate::obs::{Obs, PhaseTimes};
+use crate::util::cancel::CancelToken;
 use crate::workload::DesignPoint;
 
 pub use metrics::RunMetrics;
+pub use supervise::{DegradingSink, Failure, Fault, FaultKind, FaultPlan, Supervisor};
 
 /// A DSE job: one design point plus the full evaluation context
 /// (workload, grid, device, DDR) it should be evaluated under.
@@ -81,12 +91,51 @@ pub fn evaluate_batch_observed(
     sink: Option<&dyn RowSink>,
     obs: Option<&Obs>,
 ) -> Result<(Vec<Arc<Evaluation>>, RunMetrics)> {
+    let out = evaluate_batch_supervised(jobs, workers, cache, sink, obs, None)?;
+    // without a supervisor there are no quarantines: on Ok every slot
+    // is filled, so flattening preserves job order and length
+    debug_assert!(out.failures.is_empty());
+    Ok((out.rows.into_iter().flatten().collect(), out.metrics))
+}
+
+/// What a supervised batch produced.
+pub struct BatchOutcome {
+    /// index-aligned with the submitted jobs; `None` marks a
+    /// quarantined (or, fail-fast, aborted) job
+    pub rows: Vec<Option<Arc<Evaluation>>>,
+    /// quarantined points, in completion order
+    pub failures: Vec<FailRow>,
+    pub metrics: RunMetrics,
+}
+
+/// [`evaluate_batch_observed`] under a [`Supervisor`]: each job runs
+/// with panic isolation, retry/backoff, an optional per-attempt
+/// deadline, and quarantine.  With `supervisor: None` (or a fail-fast
+/// supervisor) the first exhausted failure aborts the batch exactly
+/// like the unsupervised path; with keep-going (the supervised sweep
+/// default) exhausted jobs become [`FailRow`]s — pushed to the sink
+/// (`RowSink::fail`) as they happen, surfaced as `quarantine` events —
+/// and the batch returns `Ok` with `None` in those row slots.
+pub fn evaluate_batch_supervised(
+    jobs: &[BatchJob],
+    workers: usize,
+    cache: Option<&EvalCache>,
+    sink: Option<&dyn RowSink>,
+    obs: Option<&Obs>,
+    supervisor: Option<&Supervisor>,
+) -> Result<BatchOutcome> {
     let n_jobs = jobs.len();
     let mut metrics = RunMetrics::new(n_jobs);
     let next = AtomicUsize::new(0);
-    type Row = (usize, Result<Arc<Evaluation>>, f64, Option<PhaseTimes>);
+    type Row = (
+        usize,
+        std::result::Result<Arc<Evaluation>, Failure>,
+        f64,
+        Option<PhaseTimes>,
+    );
     let (tx, rx) = mpsc::channel::<Row>();
     let mut slots: Vec<Option<Arc<Evaluation>>> = vec![None; n_jobs];
+    let mut failures: Vec<FailRow> = Vec::new();
     let mut first_err: Option<Error> = None;
 
     thread::scope(|scope| {
@@ -103,9 +152,17 @@ pub fn evaluate_batch_observed(
                         let i = next.fetch_add(1, Ordering::Relaxed);
                         let Some((cfg, design)) = jobs.get(i) else { break };
                         let t0 = std::time::Instant::now();
-                        let (result, times) = evaluate_job(cfg, design, cache, obs);
-                        let result =
-                            result.map_err(|err| with_job_context(err, cfg, design));
+                        let (result, times) = match supervisor {
+                            Some(s) => s.run_job(cfg, design, cache, obs),
+                            None => {
+                                let (result, times) =
+                                    evaluate_job(cfg, design, cache, obs, None, None);
+                                let result = result.map_err(|err| {
+                                    Failure::Abort(with_job_context(err, cfg, design))
+                                });
+                                (result, times)
+                            }
+                        };
                         let dt = t0.elapsed();
                         busy_ns += dt.as_nanos() as u64;
                         if tx.send((i, result, dt.as_secs_f64(), times)).is_err() {
@@ -143,8 +200,34 @@ pub fn evaluate_batch_observed(
                     }
                     slots[index] = Some(e);
                 }
-                Err(err) => {
-                    metrics.record(index, dt, false);
+                Err(Failure::Quarantine(fail)) => {
+                    metrics.record_failed(index, dt);
+                    if let Some(o) = obs {
+                        o.row_quarantined();
+                        o.event(
+                            "quarantine",
+                            vec![
+                                ("workload", json::str(fail.workload)),
+                                ("n", json::uint(fail.design.n as u64)),
+                                ("m", json::uint(fail.design.m as u64)),
+                                ("device", json::str(fail.device)),
+                                ("kind", json::str(fail.kind.label())),
+                                ("error", json::str(&fail.error)),
+                                ("attempts", json::uint(fail.attempts as u64)),
+                            ],
+                        );
+                    }
+                    if let Some(sink) = sink {
+                        if let Err(err) = sink.fail(&fail) {
+                            if first_err.is_none() {
+                                first_err = Some(err);
+                            }
+                        }
+                    }
+                    failures.push(fail);
+                }
+                Err(Failure::Abort(err)) => {
+                    metrics.record_failed(index, dt);
                     if let Some(o) = obs {
                         o.row_failed();
                     }
@@ -159,7 +242,7 @@ pub fn evaluate_batch_observed(
         return Err(err);
     }
 
-    Ok((slots.into_iter().flatten().collect(), metrics))
+    Ok(BatchOutcome { rows: slots, failures, metrics })
 }
 
 /// Feed one completed row's stall attribution into the live
@@ -194,17 +277,44 @@ fn record_attribution(o: &Obs, e: &Evaluation) {
     o.metrics.counter(bucket).add(1);
 }
 
+/// Closes a worker's evaluation span and in-flight-board slot on drop,
+/// so a panicking or cancelled evaluation leaves the trace balanced
+/// and the worker idle instead of stuck "busy" forever.
+struct SpanGuard<'a> {
+    o: &'a Obs,
+    name: &'a str,
+}
+
+impl Drop for SpanGuard<'_> {
+    fn drop(&mut self) {
+        self.o.end("eval", self.name);
+        self.o.job_finished();
+    }
+}
+
 /// Evaluate one job, through the cache when present.  With an
 /// observer, the evaluation runs under a per-design trace span on
 /// this worker's track, and the returned [`PhaseTimes`] are `Some`
 /// exactly when a real evaluation ran (`None` = the cache answered).
+///
+/// `fault` injects an armed fault-plan fault before the evaluation
+/// (inside the span, so the watchdog sees delayed jobs as busy), and
+/// `token` is published to the in-flight board so the watchdog can
+/// cancel a hung job; both are `None` outside supervised runs.
 fn evaluate_job(
     cfg: &ExploreConfig,
     design: &DesignPoint,
     cache: Option<&EvalCache>,
     obs: Option<&Obs>,
+    fault: Option<&FaultKind>,
+    token: Option<&Arc<CancelToken>>,
 ) -> (Result<Arc<Evaluation>>, Option<PhaseTimes>) {
     let Some(o) = obs else {
+        if let Some(f) = fault {
+            if let Err(err) = supervise::inject(f) {
+                return (Err(err), None);
+            }
+        }
         let result = match cache {
             Some(c) => c.evaluate(design, cfg),
             None => evaluate(design, cfg).map(Arc::new),
@@ -218,14 +328,18 @@ fn evaluate_job(
     // heartbeat for /status and the stall watchdog: the in-flight
     // board sees every evaluation start and finish, reusing the
     // already-formatted span label as the job name
-    o.job_started(&name);
+    o.job_started_cancellable(&name, token.cloned());
     o.begin("eval", &name, Vec::new());
+    let _guard = SpanGuard { o, name: &name };
+    if let Some(f) = fault {
+        if let Err(err) = supervise::inject(f) {
+            return (Err(err), None);
+        }
+    }
     let out = match cache {
         Some(c) => c.evaluate_phased(design, cfg, obs),
         None => evaluate_phased(design, cfg, obs).map(|(e, t)| (Arc::new(e), Some(t))),
     };
-    o.end("eval", &name);
-    o.job_finished();
     match out {
         Ok((e, times)) => (Ok(e), times),
         Err(err) => (Err(err), None),
@@ -392,6 +506,131 @@ mod tests {
             assert!(!s.busy, "{} still busy after the batch", s.name);
             assert_eq!(s.age_ns, 0);
         }
+    }
+
+    #[test]
+    fn supervised_batch_quarantines_the_faulted_point_and_continues() {
+        use crate::obs::Obs;
+        let cfg = small_cfg();
+        let jobs: Vec<BatchJob> =
+            candidates(&cfg).into_iter().map(|d| (cfg, d)).collect();
+        // (2,1) panics on every attempt: 1 try + 2 retries = 3 charges
+        let plan = Arc::new(FaultPlan::new().with_fault(
+            Fault::new(FaultKind::Panic).at_n(2).at_m(1).times(3),
+        ));
+        let sup = Supervisor::new()
+            .with_backoff(std::time::Duration::ZERO)
+            .with_faults(plan);
+        let obs = Obs::new();
+        let out =
+            evaluate_batch_supervised(&jobs, 2, None, None, Some(&obs), Some(&sup))
+                .unwrap();
+        assert_eq!(out.rows.len(), 4);
+        let gaps: Vec<usize> = out
+            .rows
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.is_none())
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(gaps, vec![2], "exactly the faulted slot is empty");
+        assert_eq!(out.failures.len(), 1);
+        let f = &out.failures[0];
+        assert_eq!((f.design.n, f.design.m), (2, 1));
+        assert_eq!(f.kind, crate::dse::FailKind::Panic);
+        assert_eq!(f.attempts, 3);
+        assert!(f.error.contains("injected panic"), "{}", f.error);
+        assert_eq!(out.metrics.failed, 1);
+        assert_eq!(out.metrics.completed, 4, "failed jobs still complete");
+        // two retries were burned, one row quarantined
+        assert_eq!(obs.metrics.counter("sweep.retries").get(), 2);
+        assert_eq!(obs.metrics.counter("sweep.failed").get(), 1);
+        // the unwind left the worker board balanced
+        for s in obs.worker_states() {
+            assert!(!s.busy, "{} stuck busy after a panic", s.name);
+        }
+    }
+
+    #[test]
+    fn supervised_retry_recovers_after_transient_faults() {
+        let cfg = small_cfg();
+        let jobs: Vec<BatchJob> =
+            candidates(&cfg).into_iter().map(|d| (cfg, d)).collect();
+        // two transient I/O errors, then the default retry budget (2)
+        // lets the third attempt through
+        let plan = Arc::new(FaultPlan::new().with_fault(
+            Fault::new(FaultKind::IoError).at_n(1).at_m(2).times(2),
+        ));
+        let sup = Supervisor::new()
+            .with_backoff(std::time::Duration::ZERO)
+            .with_faults(plan);
+        let out = evaluate_batch_supervised(&jobs, 2, None, None, None, Some(&sup))
+            .unwrap();
+        assert!(out.failures.is_empty(), "retries must recover the point");
+        assert!(out.rows.iter().all(|r| r.is_some()));
+        assert_eq!(out.metrics.failed, 0);
+    }
+
+    #[test]
+    fn fail_fast_supervisor_aborts_with_job_context() {
+        let cfg = small_cfg();
+        let jobs: Vec<BatchJob> =
+            candidates(&cfg).into_iter().map(|d| (cfg, d)).collect();
+        let plan = Arc::new(
+            FaultPlan::new().with_fault(Fault::new(FaultKind::Panic).at_n(2).at_m(2)),
+        );
+        let sup = Supervisor::new()
+            .with_backoff(std::time::Duration::ZERO)
+            .with_retries(0)
+            .with_keep_going(false)
+            .with_faults(plan);
+        let err = evaluate_batch_supervised(&jobs, 2, None, None, None, Some(&sup))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("(n=2, m=2)"), "{err}");
+        assert!(err.contains("evaluation panicked"), "{err}");
+    }
+
+    #[test]
+    fn deadline_turns_a_hung_job_into_a_timeout_quarantine() {
+        let cfg = small_cfg();
+        let jobs: Vec<BatchJob> = vec![(cfg, DesignPoint::new(1, 1, 64, 32))];
+        // the delay outlives the deadline on every attempt; a timeout
+        // is requeued exactly once, so the point quarantines after 2
+        let plan = Arc::new(
+            FaultPlan::new().with_fault(Fault::new(FaultKind::Delay(60_000))),
+        );
+        let sup = Supervisor::new()
+            .with_backoff(std::time::Duration::ZERO)
+            .with_eval_timeout(std::time::Duration::from_millis(40))
+            .with_faults(plan);
+        let out = evaluate_batch_supervised(&jobs, 1, None, None, None, Some(&sup))
+            .unwrap();
+        assert_eq!(out.failures.len(), 1);
+        let f = &out.failures[0];
+        assert_eq!(f.kind, crate::dse::FailKind::Timeout);
+        assert_eq!(f.attempts, 2, "deadline misses requeue exactly once");
+        assert!(f.error.contains("deadline"), "{}", f.error);
+    }
+
+    #[test]
+    fn quarantined_points_fail_immediately_without_evaluation() {
+        let cfg = small_cfg();
+        let poison = DesignPoint::new(2, 2, 64, 32);
+        let jobs: Vec<BatchJob> =
+            candidates(&cfg).into_iter().map(|d| (cfg, d)).collect();
+        let cache = EvalCache::new();
+        let sup = Supervisor::new()
+            .with_quarantine([crate::dse::CacheKey::new(&poison, &cfg)]);
+        let out =
+            evaluate_batch_supervised(&jobs, 2, Some(&cache), None, None, Some(&sup))
+                .unwrap();
+        assert_eq!(out.failures.len(), 1);
+        let f = &out.failures[0];
+        assert_eq!((f.design.n, f.design.m), (2, 2));
+        assert_eq!(f.attempts, 0, "pre-quarantined points are never attempted");
+        assert!(f.error.contains("--retry-failed"), "{}", f.error);
+        assert_eq!(cache.stats().misses, 3, "the poison point was not evaluated");
     }
 
     #[test]

@@ -1,0 +1,790 @@
+//! The sweep supervisor: panic isolation, bounded retry with
+//! deterministic backoff, per-job deadlines, poison-point quarantine,
+//! and the fault-injection harness that tests all of it.
+//!
+//! The plain worker pool ([`super::evaluate_batch_observed`]) is
+//! fail-fast: the first failing job aborts the sweep, and a panicking
+//! evaluation kills the whole process.  A long-running sweep service
+//! cannot work that way — large heterogeneous spaces contain
+//! pathological points, and one of them must cost one *row*, not the
+//! run.  [`Supervisor`] wraps each evaluation attempt with:
+//!
+//! * **panic isolation** — `catch_unwind` turns a panicking point into
+//!   [`Error::EvalPanicked`] instead of a dead process (the worker's
+//!   trace span and in-flight-board slot are closed by drop guards, so
+//!   telemetry stays balanced through the unwind);
+//! * **deadlines** — with an `--eval-timeout`, a [`CancelToken`] is
+//!   installed for the attempt and the timing simulator's pass loop
+//!   cooperatively unwinds once it trips ([`crate::util::cancel`]).
+//!   The stall watchdog cancels through the same token
+//!   ([`crate::obs::Obs::mark_stalled`]), escalating it from flag-only
+//!   to cancel-and-requeue;
+//! * **bounded retry** — transient failures ([`Error::is_transient`])
+//!   are retried up to the budget with exponential backoff and
+//!   *deterministic* jitter (seeded from the sweep seed and the job's
+//!   content hash via [`XorShift64`], so a replayed sweep waits the
+//!   same schedule); deadline misses are requeued exactly once;
+//!   deterministic model errors are never retried;
+//! * **quarantine** — once the budget is exhausted the point becomes a
+//!   [`FailRow`] (journal v3 / session v4) and the sweep continues
+//!   (`--keep-going`, the sweep default); `dse resume` skips
+//!   quarantined points unless `--retry-failed`.
+//!
+//! [`FaultPlan`] is the deterministic chaos harness: it injects
+//! panics, delays, I/O errors and sink errors at content-addressed
+//! points (`--fault-plan FILE` or the builder API), so the whole
+//! supervision stack is exercised by ordinary integration tests.
+//! [`DegradingSink`] handles the last failure class — a journal that
+//! stops accepting writes mid-sweep degrades to memory-only operation
+//! (gauge + event + one stderr warning) instead of aborting.
+
+use std::collections::HashSet;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::dse::fail::{FailKind, FailRow};
+use crate::dse::json::{self, Json};
+use crate::dse::{CacheKey, EvalCache, RowSink};
+use crate::error::{Error, Result};
+use crate::explore::{Evaluation, ExploreConfig};
+use crate::obs::{Obs, PhaseTimes};
+use crate::util::cancel::{self, CancelToken, Cancelled};
+use crate::util::rng::XorShift64;
+use crate::workload::DesignPoint;
+
+/// How one job failed under supervision.
+pub enum Failure {
+    /// Fail-fast: abort the batch with this (job-contextualized) error.
+    Abort(Error),
+    /// Keep-going: quarantine the point and continue the batch.
+    Quarantine(FailRow),
+}
+
+/// One fault a [`FaultPlan`] injects.
+#[derive(Debug)]
+pub enum FaultKind {
+    /// Panic inside the evaluation (after the worker published the
+    /// job).  Raised with `resume_unwind`, so tests stay quiet.
+    Panic,
+    /// Sleep this many milliseconds inside the evaluation span before
+    /// evaluating — visible to the watchdog, cancellable by deadline.
+    Delay(u64),
+    /// Fail the evaluation with a (transient, retryable) I/O error.
+    IoError,
+    /// Fail the *row sink* write for a matching row — exercises
+    /// [`DegradingSink`].
+    SinkError,
+}
+
+impl FaultKind {
+    fn label(&self) -> &'static str {
+        match self {
+            FaultKind::Panic => "panic",
+            FaultKind::Delay(_) => "delay",
+            FaultKind::IoError => "io-error",
+            FaultKind::SinkError => "sink-error",
+        }
+    }
+}
+
+/// One content-addressed fault: match fields that are `None` are
+/// wildcards, and `times` bounds how often the fault fires (`None` =
+/// every match).
+#[derive(Debug)]
+pub struct Fault {
+    pub workload: Option<String>,
+    pub n: Option<u32>,
+    pub m: Option<u32>,
+    /// device display name (`Stratix V 5SGXEA7`), as success rows and
+    /// fail rows record it
+    pub device: Option<String>,
+    pub kind: FaultKind,
+    times: Option<AtomicU32>,
+}
+
+impl Fault {
+    /// A wildcard fault firing on every evaluation.
+    pub fn new(kind: FaultKind) -> Fault {
+        Fault { workload: None, n: None, m: None, device: None, kind, times: None }
+    }
+
+    pub fn at_workload(mut self, workload: &str) -> Fault {
+        self.workload = Some(workload.to_string());
+        self
+    }
+
+    pub fn at_n(mut self, n: u32) -> Fault {
+        self.n = Some(n);
+        self
+    }
+
+    pub fn at_m(mut self, m: u32) -> Fault {
+        self.m = Some(m);
+        self
+    }
+
+    pub fn at_device(mut self, device: &str) -> Fault {
+        self.device = Some(device.to_string());
+        self
+    }
+
+    /// Fire at most `k` times, then disarm.
+    pub fn times(mut self, k: u32) -> Fault {
+        self.times = Some(AtomicU32::new(k));
+        self
+    }
+
+    fn matches(&self, workload: &str, n: u32, m: u32, device: &str) -> bool {
+        self.workload.as_deref().map_or(true, |w| w == workload)
+            && self.n.map_or(true, |v| v == n)
+            && self.m.map_or(true, |v| v == m)
+            && self.device.as_deref().map_or(true, |d| d == device)
+    }
+
+    /// Consume one firing (atomically, for bounded faults).
+    fn take(&self) -> bool {
+        match &self.times {
+            None => true,
+            Some(left) => left
+                .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| v.checked_sub(1))
+                .is_ok(),
+        }
+    }
+}
+
+/// A deterministic fault-injection plan.
+///
+/// JSON form (`--fault-plan FILE`):
+///
+/// ```json
+/// { "faults": [
+///   {"point": {"workload": "lbm", "n": 2, "m": 1}, "kind": "panic", "times": 1},
+///   {"point": {"n": 1}, "kind": "delay", "ms": 40},
+///   {"point": {"m": 2}, "kind": "io-error", "times": 2},
+///   {"kind": "sink-error", "times": 1}
+/// ] }
+/// ```
+///
+/// Faults are tried in plan order; the first armed match fires (and,
+/// for bounded faults, consumes one charge).  Determinism note: a
+/// bounded fault whose matcher covers *several* points races the
+/// worker pool for its charges — pin the point (or run one worker)
+/// when a test needs an exact fault placement.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    pub faults: Vec<Fault>,
+}
+
+impl FaultPlan {
+    pub fn new() -> FaultPlan {
+        FaultPlan { faults: Vec::new() }
+    }
+
+    /// Builder-style test API.
+    pub fn with_fault(mut self, fault: Fault) -> FaultPlan {
+        self.faults.push(fault);
+        self
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<FaultPlan> {
+        let text = std::fs::read_to_string(&path)?;
+        FaultPlan::parse(&Json::parse(&text)?)
+    }
+
+    pub fn parse(v: &Json) -> Result<FaultPlan> {
+        let mut faults = Vec::new();
+        for f in v.field("faults")?.as_arr()? {
+            let kind = match f.field("kind")?.as_str()? {
+                "panic" => FaultKind::Panic,
+                "delay" => FaultKind::Delay(f.field("ms")?.as_u64()?),
+                "io-error" => FaultKind::IoError,
+                "sink-error" => FaultKind::SinkError,
+                other => {
+                    return Err(Error::Explore(format!(
+                        "fault plan: unknown kind `{other}`"
+                    )))
+                }
+            };
+            let mut fault = Fault::new(kind);
+            if let Some(p) = f.get("point") {
+                if let Some(w) = p.get("workload") {
+                    fault.workload = Some(w.as_str()?.to_string());
+                }
+                if let Some(n) = p.get("n") {
+                    fault.n = Some(n.as_u32()?);
+                }
+                if let Some(m) = p.get("m") {
+                    fault.m = Some(m.as_u32()?);
+                }
+                if let Some(d) = p.get("device") {
+                    fault.device = Some(d.as_str()?.to_string());
+                }
+            }
+            if let Some(t) = f.get("times") {
+                fault.times = Some(AtomicU32::new(t.as_u32()?));
+            }
+            faults.push(fault);
+        }
+        Ok(FaultPlan { faults })
+    }
+
+    /// The evaluation-side fault (panic / delay / io-error) armed for
+    /// this job, if any; consumes one charge.
+    pub(crate) fn fire_eval(
+        &self,
+        cfg: &ExploreConfig,
+        design: &DesignPoint,
+    ) -> Option<&FaultKind> {
+        self.faults
+            .iter()
+            .filter(|f| !matches!(f.kind, FaultKind::SinkError))
+            .find(|f| {
+                f.matches(cfg.workload, design.n, design.m, cfg.device.name) && f.take()
+            })
+            .map(|f| &f.kind)
+    }
+
+    /// `true` when a sink fault is armed for this row; consumes one
+    /// charge.
+    pub(crate) fn fire_sink(&self, e: &Evaluation) -> bool {
+        self.faults
+            .iter()
+            .filter(|f| matches!(f.kind, FaultKind::SinkError))
+            .any(|f| f.matches(e.workload, e.design.n, e.design.m, e.device) && f.take())
+    }
+}
+
+/// Inject an armed evaluation-side fault.  Runs inside the worker's
+/// evaluation span (after the job is on the in-flight board), so the
+/// watchdog and `/status` see delayed jobs as busy.  A delay checks
+/// the thread's cancel token, so a deadline cuts it short exactly like
+/// it cuts a long simulation short.
+pub(crate) fn inject(fault: &FaultKind) -> Result<()> {
+    match fault {
+        FaultKind::Panic => {
+            // resume_unwind skips the panic hook: injected panics are a
+            // test fixture, not a bug report
+            std::panic::resume_unwind(Box::new(
+                "injected panic (fault plan)".to_string(),
+            ));
+        }
+        FaultKind::Delay(ms) => {
+            let end = Instant::now() + Duration::from_millis(*ms);
+            loop {
+                cancel::checkpoint();
+                let now = Instant::now();
+                if now >= end {
+                    return Ok(());
+                }
+                std::thread::sleep((end - now).min(Duration::from_millis(5)));
+            }
+        }
+        FaultKind::IoError => Err(Error::Io(std::io::Error::other(
+            "injected I/O error (fault plan)",
+        ))),
+        FaultKind::SinkError => Ok(()), // sink faults fire in the sink
+    }
+}
+
+/// FNV-1a over the job's content address — the per-job component of
+/// the backoff jitter seed.  Deliberately not `DefaultHasher`: the
+/// value must be stable across builds so replayed sweeps reproduce
+/// their retry schedule.
+fn job_hash(cfg: &ExploreConfig, design: &DesignPoint) -> u64 {
+    let text = format!(
+        "{}|{}|{}|{}|{}|{}|{}",
+        cfg.workload, design.n, design.m, design.w, design.h, cfg.device.name, cfg.passes
+    );
+    let mut hash: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in text.bytes() {
+        hash ^= b as u64;
+        hash = hash.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    hash
+}
+
+/// Exponential backoff with deterministic jitter: `base * 2^(retry-1)`
+/// scaled by a factor in `[0.5, 1.0)` drawn from a [`XorShift64`]
+/// seeded by (sweep seed, job hash, retry ordinal).  Pure function of
+/// its inputs, so a replayed sweep waits the same schedule.
+pub fn backoff_delay(base: Duration, seed: u64, job: u64, retry: u32) -> Duration {
+    if base.is_zero() {
+        return Duration::ZERO;
+    }
+    let exp = base.saturating_mul(1u32 << (retry - 1).min(16));
+    let mut rng = XorShift64::new(
+        seed ^ job.rotate_left(17) ^ (retry as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+    );
+    exp.mul_f64(0.5 + 0.5 * rng.next_f64())
+}
+
+/// Fault-tolerant evaluation policy for one sweep.  Threaded through
+/// [`SweepContext`](crate::dse::SweepContext) into
+/// [`super::evaluate_batch_supervised`]; `None` keeps the exact
+/// fail-fast batch path.
+pub struct Supervisor {
+    /// extra attempts granted to transient failures (0 = fail on the
+    /// first error)
+    pub retries: u32,
+    /// base backoff delay (scaled exponentially per retry)
+    pub backoff: Duration,
+    /// per-attempt evaluation deadline
+    pub eval_timeout: Option<Duration>,
+    /// quarantine exhausted points and continue (`false` = abort the
+    /// sweep like the unsupervised path, after retries)
+    pub keep_going: bool,
+    /// jitter seed (mixed with each job's content hash)
+    pub seed: u64,
+    faults: Option<Arc<FaultPlan>>,
+    quarantine: HashSet<CacheKey>,
+}
+
+impl Default for Supervisor {
+    fn default() -> Supervisor {
+        Supervisor::new()
+    }
+}
+
+impl Supervisor {
+    pub fn new() -> Supervisor {
+        Supervisor {
+            retries: 2,
+            backoff: Duration::from_millis(50),
+            eval_timeout: None,
+            keep_going: true,
+            seed: 0,
+            faults: None,
+            quarantine: HashSet::new(),
+        }
+    }
+
+    pub fn with_retries(mut self, retries: u32) -> Supervisor {
+        self.retries = retries;
+        self
+    }
+
+    pub fn with_backoff(mut self, base: Duration) -> Supervisor {
+        self.backoff = base;
+        self
+    }
+
+    pub fn with_eval_timeout(mut self, deadline: Duration) -> Supervisor {
+        self.eval_timeout = Some(deadline);
+        self
+    }
+
+    pub fn with_keep_going(mut self, keep_going: bool) -> Supervisor {
+        self.keep_going = keep_going;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Supervisor {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_faults(mut self, plan: Arc<FaultPlan>) -> Supervisor {
+        self.faults = Some(plan);
+        self
+    }
+
+    /// Pre-quarantine these content addresses: matching jobs fail
+    /// immediately (fresh fail rows, no evaluation).  `dse resume`
+    /// seeds this from the recovered fail rows unless `--retry-failed`.
+    pub fn with_quarantine(
+        mut self,
+        keys: impl IntoIterator<Item = CacheKey>,
+    ) -> Supervisor {
+        self.quarantine.extend(keys);
+        self
+    }
+
+    /// The attached fault plan (shared with the [`DegradingSink`]).
+    pub fn faults(&self) -> Option<Arc<FaultPlan>> {
+        self.faults.clone()
+    }
+
+    pub fn quarantined(&self) -> usize {
+        self.quarantine.len()
+    }
+
+    /// Run one job under supervision: quarantine check, then attempts
+    /// with retry/backoff until success, budget exhaustion, or a
+    /// permanent error.
+    pub(crate) fn run_job(
+        &self,
+        cfg: &ExploreConfig,
+        design: &DesignPoint,
+        cache: Option<&EvalCache>,
+        obs: Option<&Obs>,
+    ) -> (std::result::Result<Arc<Evaluation>, Failure>, Option<PhaseTimes>) {
+        if self.quarantine.contains(&CacheKey::new(design, cfg)) {
+            let fail = self.fail_row(
+                cfg,
+                design,
+                FailKind::Error,
+                "quarantined by a previous run (dse resume --retry-failed \
+                 re-attempts it)",
+                0,
+            );
+            return (Err(Failure::Quarantine(fail)), None);
+        }
+        let mut attempt: u32 = 0;
+        let mut timeout_requeued = false;
+        let mut retries_spent: u32 = 0;
+        loop {
+            attempt += 1;
+            let (result, times) = self.attempt(cfg, design, cache, obs);
+            let err = match result {
+                Ok(e) => return (Ok(e), times),
+                Err(err) => err,
+            };
+            // a deadline miss is requeued exactly once; other transient
+            // failures draw on the retry budget
+            let retry = if err.is_timeout() {
+                !timeout_requeued && {
+                    timeout_requeued = true;
+                    true
+                }
+            } else {
+                err.is_transient() && retries_spent < self.retries
+            };
+            if retry {
+                if !err.is_timeout() {
+                    retries_spent += 1;
+                }
+                let delay =
+                    backoff_delay(self.backoff, self.seed, job_hash(cfg, design), attempt);
+                if let Some(o) = obs {
+                    o.metrics.add("sweep.retries", 1);
+                    o.event(
+                        "retry",
+                        vec![
+                            ("workload", json::str(cfg.workload)),
+                            ("n", json::uint(design.n as u64)),
+                            ("m", json::uint(design.m as u64)),
+                            ("device", json::str(cfg.device.name)),
+                            ("attempt", json::uint(attempt as u64)),
+                            ("delay_ms", json::uint(delay.as_millis() as u64)),
+                            ("error", json::str(&err.to_string())),
+                        ],
+                    );
+                }
+                if !delay.is_zero() {
+                    std::thread::sleep(delay);
+                }
+                continue;
+            }
+            let kind = match &err {
+                Error::EvalPanicked(_) => FailKind::Panic,
+                Error::EvalTimeout(_) => FailKind::Timeout,
+                _ => FailKind::Error,
+            };
+            if self.keep_going {
+                let fail =
+                    self.fail_row(cfg, design, kind, &err.to_string(), attempt);
+                return (Err(Failure::Quarantine(fail)), None);
+            }
+            let err = super::with_job_context(err, cfg, design);
+            return (Err(Failure::Abort(err)), None);
+        }
+    }
+
+    /// One evaluation attempt: install the cancel token, inject any
+    /// armed fault, evaluate, and catch unwinds (classifying a
+    /// cooperative cancellation as a timeout and anything else as a
+    /// panic).
+    fn attempt(
+        &self,
+        cfg: &ExploreConfig,
+        design: &DesignPoint,
+        cache: Option<&EvalCache>,
+        obs: Option<&Obs>,
+    ) -> (Result<Arc<Evaluation>>, Option<PhaseTimes>) {
+        let token = Arc::new(match self.eval_timeout {
+            Some(d) => CancelToken::with_deadline(Instant::now() + d),
+            // no deadline, but the watchdog can still cancel through it
+            None => CancelToken::new(),
+        });
+        let fault = self.faults.as_ref().and_then(|p| p.fire_eval(cfg, design));
+        let unwound = catch_unwind(AssertUnwindSafe(|| {
+            let _guard = cancel::install(token.clone());
+            super::evaluate_job(cfg, design, cache, obs, fault, Some(&token))
+        }));
+        match unwound {
+            Ok(out) => out,
+            Err(payload) => {
+                if payload.downcast_ref::<Cancelled>().is_some() {
+                    let msg = match self.eval_timeout {
+                        Some(d) if token.past_deadline() => {
+                            format!("deadline {:.3}s exceeded", d.as_secs_f64())
+                        }
+                        _ => "cancelled by the stall watchdog".to_string(),
+                    };
+                    (Err(Error::EvalTimeout(msg)), None)
+                } else {
+                    (Err(Error::EvalPanicked(panic_message(payload))), None)
+                }
+            }
+        }
+    }
+
+    fn fail_row(
+        &self,
+        cfg: &ExploreConfig,
+        design: &DesignPoint,
+        kind: FailKind,
+        error: &str,
+        attempts: u32,
+    ) -> FailRow {
+        FailRow {
+            workload: cfg.workload,
+            device: cfg.device.name,
+            design: *design,
+            ddr: cfg.ddr,
+            passes: cfg.passes,
+            kind,
+            error: error.to_string(),
+            attempts,
+        }
+    }
+}
+
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// A [`RowSink`] wrapper that *degrades* instead of aborting: the
+/// first write error flips the sink to memory-only operation — one
+/// stderr warning, a `sweep.sink_degraded` gauge and a `sink-degraded`
+/// event — and every later write is a no-op.  The sweep keeps its
+/// in-memory rows and finishes; it just stops being crash-safe, which
+/// beats throwing away a half-finished run because the disk filled.
+pub struct DegradingSink<'a> {
+    inner: &'a dyn RowSink,
+    obs: Option<&'a Obs>,
+    faults: Option<Arc<FaultPlan>>,
+    degraded: AtomicBool,
+}
+
+impl<'a> DegradingSink<'a> {
+    pub fn new(inner: &'a dyn RowSink) -> DegradingSink<'a> {
+        DegradingSink { inner, obs: None, faults: None, degraded: AtomicBool::new(false) }
+    }
+
+    pub fn with_obs(mut self, obs: &'a Obs) -> DegradingSink<'a> {
+        self.obs = Some(obs);
+        self
+    }
+
+    /// Attach the sweep's fault plan: armed `sink-error` faults fire
+    /// here, as if the underlying write had failed.
+    pub fn with_faults(mut self, plan: Arc<FaultPlan>) -> DegradingSink<'a> {
+        self.faults = Some(plan);
+        self
+    }
+
+    /// `true` once a write error degraded the sink.  The CLI checks
+    /// this before finalizing: a degraded journal is missing rows, and
+    /// a finalize record would falsely mark it complete.
+    pub fn is_degraded(&self) -> bool {
+        self.degraded.load(Ordering::Relaxed)
+    }
+
+    fn degrade(&self, err: &Error) {
+        if self.degraded.swap(true, Ordering::Relaxed) {
+            return;
+        }
+        eprintln!(
+            "warning: row sink write failed mid-sweep ({err}); continuing \
+             memory-only — rows from here on are not crash-safe"
+        );
+        if let Some(o) = self.obs {
+            o.metrics.gauge("sweep.sink_degraded").set(1);
+            o.event(
+                "sink-degraded",
+                vec![("error", json::str(&err.to_string()))],
+            );
+        }
+    }
+}
+
+impl RowSink for DegradingSink<'_> {
+    fn row(&self, eval: &Evaluation) -> Result<()> {
+        if self.is_degraded() {
+            return Ok(());
+        }
+        if let Some(p) = &self.faults {
+            if p.fire_sink(eval) {
+                self.degrade(&Error::Io(std::io::Error::other(
+                    "injected sink error (fault plan)",
+                )));
+                return Ok(());
+            }
+        }
+        if let Err(err) = self.inner.row(eval) {
+            self.degrade(&err);
+        }
+        Ok(())
+    }
+
+    fn fail(&self, f: &FailRow) -> Result<()> {
+        if self.is_degraded() {
+            return Ok(());
+        }
+        if let Err(err) = self.inner.fail(f) {
+            self.degrade(&err);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ExploreConfig {
+        ExploreConfig {
+            grid_w: 64,
+            grid_h: 32,
+            max_n: 2,
+            max_m: 2,
+            passes: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fault_plan_parses_and_matches_points() {
+        let text = r#"{ "faults": [
+            {"point": {"workload": "lbm", "n": 2, "m": 1}, "kind": "panic", "times": 1},
+            {"point": {"n": 1}, "kind": "delay", "ms": 7},
+            {"kind": "sink-error", "times": 1}
+        ] }"#;
+        let plan = FaultPlan::parse(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(plan.faults.len(), 3);
+        let c = cfg();
+        // first armed match fires and consumes its charge
+        let d21 = DesignPoint::new(2, 1, 64, 32);
+        assert!(matches!(plan.fire_eval(&c, &d21), Some(FaultKind::Panic)));
+        assert!(plan.fire_eval(&c, &d21).is_none(), "panic charge spent");
+        // the n=1 delay is unlimited
+        let d12 = DesignPoint::new(1, 2, 64, 32);
+        assert!(matches!(plan.fire_eval(&c, &d12), Some(FaultKind::Delay(7))));
+        assert!(matches!(plan.fire_eval(&c, &d12), Some(FaultKind::Delay(7))));
+        // sink faults never fire on the eval side
+        let d11 = DesignPoint::new(1, 1, 64, 32);
+        assert!(plan.fire_eval(&c, &d11).is_none());
+    }
+
+    #[test]
+    fn fault_plan_rejects_unknown_kinds() {
+        let bad = r#"{ "faults": [ {"kind": "oom"} ] }"#;
+        assert!(FaultPlan::parse(&Json::parse(bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn backoff_is_deterministic_exponential_and_jittered() {
+        let base = Duration::from_millis(40);
+        let a = backoff_delay(base, 9, 0x1234, 1);
+        assert_eq!(a, backoff_delay(base, 9, 0x1234, 1), "replays must agree");
+        // jitter keeps the delay in [base/2, base) for the first retry
+        assert!(a >= base / 2 && a < base, "{a:?}");
+        let b = backoff_delay(base, 9, 0x1234, 2);
+        assert!(b >= base && b < base * 2, "{b:?}");
+        // different jobs jitter differently (with overwhelming odds)
+        assert_ne!(a, backoff_delay(base, 9, 0x5678, 1));
+        assert_eq!(backoff_delay(Duration::ZERO, 9, 1, 1), Duration::ZERO);
+    }
+
+    #[test]
+    fn injected_io_error_is_transient_and_panic_unwinds() {
+        assert!(inject(&FaultKind::IoError).unwrap_err().is_transient());
+        let unwound = catch_unwind(AssertUnwindSafe(|| inject(&FaultKind::Panic)));
+        let payload = unwound.expect_err("panic fault must unwind");
+        assert_eq!(
+            payload.downcast_ref::<String>().unwrap(),
+            "injected panic (fault plan)"
+        );
+        // a delay returns after roughly its duration
+        let t0 = Instant::now();
+        inject(&FaultKind::Delay(5)).unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(5));
+    }
+
+    #[test]
+    fn delay_fault_is_cut_short_by_a_tripped_token() {
+        let token = Arc::new(CancelToken::new());
+        token.cancel();
+        let _guard = cancel::install(token);
+        let unwound = catch_unwind(AssertUnwindSafe(|| inject(&FaultKind::Delay(60_000))));
+        let payload = unwound.expect_err("tripped token must cut the delay short");
+        assert!(payload.downcast_ref::<Cancelled>().is_some());
+    }
+
+    struct FailingSink;
+    impl RowSink for FailingSink {
+        fn row(&self, _: &Evaluation) -> Result<()> {
+            Err(Error::Io(std::io::Error::other("disk full")))
+        }
+    }
+
+    #[test]
+    fn degrading_sink_swallows_write_errors_once() {
+        let inner = FailingSink;
+        let sink = DegradingSink::new(&inner);
+        assert!(!sink.is_degraded());
+        let e = crate::explore::evaluate(&DesignPoint::new(1, 1, 64, 32), &cfg()).unwrap();
+        sink.row(&e).unwrap();
+        assert!(sink.is_degraded(), "first write error must degrade");
+        sink.row(&e).unwrap(); // no-op, still Ok
+        assert!(sink.is_degraded());
+    }
+
+    #[test]
+    fn degrading_sink_fires_injected_sink_faults() {
+        struct CountingSink(std::sync::atomic::AtomicUsize);
+        impl RowSink for CountingSink {
+            fn row(&self, _: &Evaluation) -> Result<()> {
+                self.0.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            }
+        }
+        let inner = CountingSink(std::sync::atomic::AtomicUsize::new(0));
+        let plan = Arc::new(
+            FaultPlan::new().with_fault(Fault::new(FaultKind::SinkError).times(1)),
+        );
+        let sink = DegradingSink::new(&inner).with_faults(plan);
+        let e = crate::explore::evaluate(&DesignPoint::new(1, 1, 64, 32), &cfg()).unwrap();
+        sink.row(&e).unwrap();
+        assert!(sink.is_degraded(), "injected sink fault must degrade");
+        assert_eq!(inner.0.load(Ordering::Relaxed), 0, "write never reached inner");
+    }
+
+    #[test]
+    fn supervisor_defaults_are_the_sweep_policy() {
+        let s = Supervisor::new();
+        assert_eq!(s.retries, 2);
+        assert!(s.keep_going);
+        assert!(s.eval_timeout.is_none());
+        assert_eq!(s.quarantined(), 0);
+        let s = s
+            .with_retries(1)
+            .with_backoff(Duration::ZERO)
+            .with_eval_timeout(Duration::from_secs(5))
+            .with_keep_going(false)
+            .with_seed(7);
+        assert_eq!(s.retries, 1);
+        assert!(!s.keep_going);
+        assert_eq!(s.eval_timeout, Some(Duration::from_secs(5)));
+    }
+}

@@ -1,0 +1,196 @@
+//! Quarantined-evaluation records ("fail rows").
+//!
+//! When the sweep supervisor exhausts its retry budget on a design
+//! point — a panicking evaluation, a deadline miss, a persistent I/O
+//! error — the point is *quarantined*: the sweep records a [`FailRow`]
+//! and moves on instead of dying.  Fail rows carry the full content
+//! address of the evaluation (workload, design point, device, DDR,
+//! passes), so they round-trip through journal (`version` 3) and
+//! session (`version` 4) files exactly like success rows, `dse resume`
+//! can skip quarantined points by default, and `dse resume
+//! --retry-failed` can re-attempt exactly them.
+//!
+//! A later *success* row for the same content address supersedes a
+//! fail row (the point was retried and recovered); resolution happens
+//! at load time, in append order.
+
+use crate::dfg::OpLatency;
+use crate::error::{Error, Result};
+use crate::resource::device;
+use crate::sim::DdrConfig;
+use crate::workload::{self, DesignPoint};
+
+use super::cache::CacheKey;
+use super::json::{self, Json};
+use super::session::{decode_ddr, encode_ddr};
+
+/// Why a point was quarantined.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailKind {
+    /// The evaluation panicked (caught by the supervisor).
+    Panic,
+    /// The evaluation exceeded its `--eval-timeout` deadline.
+    Timeout,
+    /// A non-panic evaluation error (deterministic model errors land
+    /// here, as do I/O errors that survived the retry budget).
+    Error,
+}
+
+impl FailKind {
+    /// Stable serialization / display label.
+    pub fn label(self) -> &'static str {
+        match self {
+            FailKind::Panic => "panic",
+            FailKind::Timeout => "timeout",
+            FailKind::Error => "error",
+        }
+    }
+
+    pub fn from_label(s: &str) -> Option<FailKind> {
+        match s {
+            "panic" => Some(FailKind::Panic),
+            "timeout" => Some(FailKind::Timeout),
+            "error" => Some(FailKind::Error),
+            _ => None,
+        }
+    }
+}
+
+/// One quarantined design point: the full content address of the
+/// evaluation that kept failing, plus what happened.
+#[derive(Clone, Debug)]
+pub struct FailRow {
+    pub workload: &'static str,
+    /// device display name (the same interned string success rows use)
+    pub device: &'static str,
+    pub design: DesignPoint,
+    pub ddr: DdrConfig,
+    pub passes: u64,
+    pub kind: FailKind,
+    /// the final attempt's error message
+    pub error: String,
+    /// evaluation attempts consumed (1 = failed on the first try with
+    /// no retry budget)
+    pub attempts: u32,
+}
+
+impl FailRow {
+    /// The content address of the failed evaluation under the space's
+    /// operator latencies — the same identity success rows use, so
+    /// quarantine sets, cache keys and dedupe sets all agree.
+    pub fn key(&self, latency: OpLatency) -> CacheKey {
+        CacheKey::from_parts(
+            self.workload,
+            &self.design,
+            self.device,
+            self.passes,
+            latency,
+            self.ddr,
+        )
+    }
+}
+
+pub(crate) fn encode_fail(f: &FailRow) -> Json {
+    json::obj(vec![
+        ("workload", json::str(f.workload)),
+        ("device", json::str(f.device)),
+        ("n", json::uint(f.design.n as u64)),
+        ("m", json::uint(f.design.m as u64)),
+        ("w", json::uint(f.design.w as u64)),
+        ("h", json::uint(f.design.h as u64)),
+        ("passes", json::uint(f.passes)),
+        ("ddr", encode_ddr(&f.ddr)),
+        ("kind", json::str(f.kind.label())),
+        ("error", json::str(&f.error)),
+        ("attempts", json::uint(f.attempts as u64)),
+    ])
+}
+
+pub(crate) fn decode_fail(v: &Json) -> Result<FailRow> {
+    let workload = workload::get(v.field("workload")?.as_str()?)?.name();
+    let device_name = v.field("device")?.as_str()?;
+    let dev = device::by_name(device_name).ok_or_else(|| {
+        Error::Explore(format!("fail row: unknown device `{device_name}`"))
+    })?;
+    let kind_label = v.field("kind")?.as_str()?;
+    let kind = FailKind::from_label(kind_label).ok_or_else(|| {
+        Error::Explore(format!("fail row: unknown kind `{kind_label}`"))
+    })?;
+    Ok(FailRow {
+        workload,
+        device: dev.name,
+        design: DesignPoint::new(
+            v.field("n")?.as_u32()?,
+            v.field("m")?.as_u32()?,
+            v.field("w")?.as_u32()?,
+            v.field("h")?.as_u32()?,
+        ),
+        ddr: decode_ddr(v.field("ddr")?)?,
+        passes: v.field("passes")?.as_u64()?,
+        kind,
+        error: v.field("error")?.as_str()?.to_string(),
+        attempts: v.field("attempts")?.as_u32()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explore::ExploreConfig;
+
+    fn sample() -> FailRow {
+        let cfg = ExploreConfig::default();
+        FailRow {
+            workload: "lbm",
+            device: cfg.device.name,
+            design: DesignPoint::new(2, 3, 64, 32),
+            ddr: cfg.ddr,
+            passes: cfg.passes,
+            kind: FailKind::Panic,
+            error: "index out of bounds".to_string(),
+            attempts: 3,
+        }
+    }
+
+    #[test]
+    fn kinds_roundtrip_by_label() {
+        for k in [FailKind::Panic, FailKind::Timeout, FailKind::Error] {
+            assert_eq!(FailKind::from_label(k.label()), Some(k));
+        }
+        assert_eq!(FailKind::from_label("segfault"), None);
+    }
+
+    #[test]
+    fn fail_rows_roundtrip_through_json() {
+        let f = sample();
+        let text = encode_fail(&f).to_string();
+        let back = decode_fail(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.workload, f.workload);
+        assert_eq!(back.device, f.device);
+        assert_eq!(back.design, f.design);
+        assert_eq!(back.passes, f.passes);
+        assert_eq!(back.kind, f.kind);
+        assert_eq!(back.error, f.error);
+        assert_eq!(back.attempts, f.attempts);
+        let lat = crate::dfg::OpLatency::default();
+        assert_eq!(back.key(lat), f.key(lat));
+    }
+
+    #[test]
+    fn fail_key_matches_the_equivalent_success_key() {
+        let f = sample();
+        let cfg = ExploreConfig::default();
+        let want = CacheKey::new(&f.design, &cfg);
+        assert_eq!(f.key(cfg.latency), want);
+    }
+
+    #[test]
+    fn unknown_kind_or_device_is_an_error() {
+        let f = sample();
+        let text = encode_fail(&f).to_string();
+        let bad_kind = text.replace("\"kind\":\"panic\"", "\"kind\":\"segfault\"");
+        assert!(decode_fail(&Json::parse(&bad_kind).unwrap()).is_err());
+        let bad_dev = text.replace(f.device, "Vaporware 9000");
+        assert!(decode_fail(&Json::parse(&bad_dev).unwrap()).is_err());
+    }
+}

@@ -6,15 +6,16 @@
 //! line, appended (and fsync'd in batches) *as evaluations complete*,
 //! so a crashed sweep keeps everything it paid for.
 //!
-//! Record stream (`version` 2, newline-delimited JSON objects):
+//! Record stream (`version` 3, newline-delimited JSON objects):
 //!
 //! ```text
-//! {"record":"header","version":2,"strategy":"hill-climb",
+//! {"record":"header","version":3,"strategy":"hill-climb",
 //!  "params":{"seed":9,"restarts":4,"max-steps":64},
 //!  "fingerprint":"9f2c...","space":{...}}          // once, first
 //! {"record":"row","data":{...}}                    // one per evaluation
-//! {"record":"finalize","rows":12,"evaluated":12,
-//!  "cache_hits":0,"skipped":0,"candidates":12}     // on completion
+//! {"record":"fail","data":{...}}                   // one per quarantined point
+//! {"record":"finalize","rows":12,"evaluated":12,"cache_hits":0,
+//!  "skipped":0,"candidates":12,"failures":0}       // on completion
 //! ```
 //!
 //! * the **header** carries the swept [`DesignSpace`], the strategy
@@ -25,6 +26,12 @@
 //!   rows from a different space;
 //! * **row** records reuse the session row encoding
 //!   (shortest-roundtrip floats: metrics survive bit-exactly);
+//! * **fail** records quarantine a point the supervisor gave up on
+//!   ([`super::fail::FailRow`]): recovery resolves them against the
+//!   success rows — a success for the same content address supersedes
+//!   the fail, repeated fails collapse to the latest — so `dse resume`
+//!   can skip (or, with `--retry-failed`, re-attempt) exactly the
+//!   still-poisoned points;
 //! * the **finalize** record marks a completed sweep and archives the
 //!   run counters.  Rows appended after a finalize (a resumed journal)
 //!   put the journal back in the in-progress state until the next
@@ -58,17 +65,19 @@ use crate::explore::Evaluation;
 use crate::obs::Obs;
 
 use super::cache::CacheKey;
+use super::fail::{decode_fail, encode_fail, FailRow};
 use super::json::{self, Json};
 use super::session::{decode_row, decode_space, encode_row, encode_space, row_key};
 use super::space::DesignSpace;
 use super::strategy::SweepResult;
 
-pub const JOURNAL_VERSION: u64 = 2;
+pub const JOURNAL_VERSION: u64 = 3;
 
 /// Oldest journal version this build still reads.  Version 2 added the
 /// stall-attribution fields to each row; version-1 journals decode with
-/// zeroed attribution (see [`super::session`]), so recovery accepts
-/// them unchanged.
+/// zeroed attribution (see [`super::session`]).  Version 3 added `fail`
+/// records and the finalize `failures` counter; older journals simply
+/// contain neither, so recovery accepts them unchanged.
 pub const JOURNAL_MIN_VERSION: u64 = 1;
 
 /// Rows between fsyncs (a crash loses at most this many rows).
@@ -76,9 +85,17 @@ const DEFAULT_SYNC_EVERY: usize = 32;
 
 /// Observer receiving every completed evaluation of a sweep, in
 /// completion order.  An error aborts the sweep (a journal that cannot
-/// be written is not providing crash safety).
+/// be written is not providing crash safety — though see
+/// [`crate::coordinator::DegradingSink`] for the keep-going wrapper).
 pub trait RowSink {
     fn row(&self, eval: &Evaluation) -> Result<()>;
+
+    /// Receive one quarantined point.  Defaults to a no-op so plain
+    /// sinks (and tests) that only care about success rows keep
+    /// working; the journal writer persists it as a `fail` record.
+    fn fail(&self, _f: &FailRow) -> Result<()> {
+        Ok(())
+    }
 }
 
 /// Stable fingerprint of a design space: FNV-1a over its canonical
@@ -109,6 +126,9 @@ pub struct FinalizeRecord {
     pub skipped: u64,
     /// candidates in the swept space
     pub candidates: u64,
+    /// quarantined points still unresolved at finalize time (absent in
+    /// pre-v3 journals, decoded as 0)
+    pub failures: u64,
 }
 
 /// A recovered journal: the intact prefix of an append-only row log.
@@ -124,6 +144,9 @@ pub struct Journal {
     pub fingerprint: String,
     /// intact rows, in append order
     pub rows: Vec<Evaluation>,
+    /// still-quarantined points: fail records with no success row for
+    /// the same content address (resolved at recovery, latest kept)
+    pub failures: Vec<FailRow>,
     /// `Some` iff the journal ends in a finalize record (a completed
     /// sweep); rows appended after a finalize clear it
     pub finalized: Option<FinalizeRecord>,
@@ -135,6 +158,7 @@ pub struct Journal {
 enum Record {
     Header(Header),
     Row(Evaluation),
+    Fail(FailRow),
     Finalize(FinalizeRecord),
 }
 
@@ -163,12 +187,18 @@ fn decode_record(v: &Json) -> Result<Record> {
             }))
         }
         "row" => Ok(Record::Row(decode_row(v.field("data")?)?)),
+        "fail" => Ok(Record::Fail(decode_fail(v.field("data")?)?)),
         "finalize" => Ok(Record::Finalize(FinalizeRecord {
             rows: v.field("rows")?.as_u64()?,
             evaluated: v.field("evaluated")?.as_u64()?,
             cache_hits: v.field("cache_hits")?.as_u64()?,
             skipped: v.field("skipped")?.as_u64()?,
             candidates: v.field("candidates")?.as_u64()?,
+            // absent before journal v3
+            failures: match v.get("failures") {
+                Some(x) => x.as_u64()?,
+                None => 0,
+            },
         })),
         other => Err(Error::Explore(format!("journal: unknown record `{other}`"))),
     }
@@ -187,6 +217,7 @@ impl Journal {
         let bytes = std::fs::read(path)?;
         let mut header: Option<Header> = None;
         let mut rows = Vec::new();
+        let mut fails: Vec<FailRow> = Vec::new();
         let mut finalized = None;
         let mut pos = 0usize;
         let mut intact = 0usize;
@@ -232,6 +263,16 @@ impl Journal {
                     rows.push(e);
                     finalized = None;
                 }
+                Ok(Record::Fail(f)) => {
+                    if header.is_none() {
+                        return Err(Error::Explore(format!(
+                            "journal {}: fail record before the header",
+                            path.display()
+                        )));
+                    }
+                    fails.push(f);
+                    finalized = None;
+                }
                 Ok(Record::Finalize(f)) => {
                     if header.is_none() {
                         return Err(Error::Explore(format!(
@@ -263,12 +304,29 @@ impl Journal {
                 path.display()
             ))
         })?;
+        // resolve quarantines: a success row for the same content
+        // address supersedes any fail for it (the point was retried and
+        // recovered), and repeated fails collapse to the latest
+        let latency = header.space.latency;
+        let row_keys: HashSet<CacheKey> =
+            rows.iter().map(|e| row_key(e, latency)).collect();
+        let mut seen_fail: HashSet<CacheKey> = HashSet::new();
+        let mut failures: Vec<FailRow> = Vec::new();
+        for f in fails.into_iter().rev() {
+            let key = f.key(latency);
+            if row_keys.contains(&key) || !seen_fail.insert(key) {
+                continue;
+            }
+            failures.push(f);
+        }
+        failures.reverse();
         Ok(Journal {
             strategy: header.strategy,
             params: header.params,
             space: header.space,
             fingerprint: header.fingerprint,
             rows,
+            failures,
             finalized,
             intact_bytes: intact as u64,
         })
@@ -289,7 +347,12 @@ struct Inner {
     file: std::fs::File,
     /// content addresses already journaled (rows are logged once)
     seen: HashSet<CacheKey>,
+    /// content addresses already journaled as fails (a re-quarantined
+    /// point is logged once; a later *success* still appends, and
+    /// recovery resolves the pair in the row's favor)
+    failed_seen: HashSet<CacheKey>,
     rows: u64,
+    failures: u64,
     /// rows appended since the last fsync
     pending: usize,
     sync_every: usize,
@@ -349,7 +412,9 @@ impl JournalWriter {
             inner: Mutex::new(Inner {
                 file,
                 seen: HashSet::new(),
+                failed_seen: HashSet::new(),
                 rows: 0,
+                failures: 0,
                 pending: 0,
                 sync_every: DEFAULT_SYNC_EVERY,
                 sync_interval: None,
@@ -381,13 +446,19 @@ impl JournalWriter {
         for row in &recovered.rows {
             seen.insert(recovered.key_of(row));
         }
+        let mut failed_seen = HashSet::new();
+        for f in &recovered.failures {
+            failed_seen.insert(f.key(recovered.space.latency));
+        }
         Ok(JournalWriter {
             latency: recovered.space.latency,
             obs: None,
             inner: Mutex::new(Inner {
                 file,
                 rows: recovered.rows.len() as u64,
+                failures: recovered.failures.len() as u64,
                 seen,
+                failed_seen,
                 pending: 0,
                 sync_every: DEFAULT_SYNC_EVERY,
                 sync_interval: None,
@@ -470,6 +541,29 @@ impl JournalWriter {
         Ok(())
     }
 
+    /// Append one quarantined point as a `fail` record (deduplicated
+    /// by content address), under the same fsync batching as rows.
+    pub fn append_fail(&self, f: &FailRow) -> Result<()> {
+        let key = f.key(self.latency);
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.failed_seen.insert(key) {
+            return Ok(());
+        }
+        let record =
+            json::obj(vec![("record", json::str("fail")), ("data", encode_fail(f))]);
+        write_record(&mut inner.file, &record)?;
+        inner.failures += 1;
+        inner.pending += 1;
+        let due_batch = inner.pending >= inner.sync_every;
+        let due_time = inner
+            .sync_interval
+            .map_or(false, |d| inner.last_sync.elapsed() >= d);
+        if due_batch || due_time {
+            self.fsync(&mut inner)?;
+        }
+        Ok(())
+    }
+
     /// Force an fsync of everything appended so far.
     pub fn sync(&self) -> Result<()> {
         let mut inner = self.inner.lock().unwrap();
@@ -486,6 +580,7 @@ impl JournalWriter {
             ("cache_hits", json::uint(result.cache_hits)),
             ("skipped", json::uint(result.skipped as u64)),
             ("candidates", json::uint(result.candidates as u64)),
+            ("failures", json::uint(inner.failures)),
         ]);
         write_record(&mut inner.file, &record)?;
         inner.pending += 1;
@@ -495,6 +590,12 @@ impl JournalWriter {
     /// Distinct rows written to (or recovered into) this journal.
     pub fn rows_written(&self) -> u64 {
         self.inner.lock().unwrap().rows
+    }
+
+    /// Distinct fail records written to (or recovered into) this
+    /// journal.
+    pub fn failures_written(&self) -> u64 {
+        self.inner.lock().unwrap().failures
     }
 
     /// fsyncs issued over this writer's lifetime (the header sync of a
@@ -518,6 +619,10 @@ impl JournalWriter {
 impl RowSink for JournalWriter {
     fn row(&self, eval: &Evaluation) -> Result<()> {
         self.append(eval)
+    }
+
+    fn fail(&self, f: &FailRow) -> Result<()> {
+        self.append_fail(f)
     }
 }
 
@@ -565,10 +670,25 @@ mod tests {
         SweepResult {
             strategy: "exhaustive",
             evals: Vec::new(),
+            failures: Vec::new(),
             evaluated,
             cache_hits: 0,
             skipped: 0,
             candidates: evaluated,
+        }
+    }
+
+    fn fail_row(n: u32, m: u32) -> FailRow {
+        let cfg = cfg();
+        FailRow {
+            workload: "lbm",
+            device: cfg.device.name,
+            design: DesignPoint::new(n, m, 64, 32),
+            ddr: cfg.ddr,
+            passes: cfg.passes,
+            kind: super::super::fail::FailKind::Panic,
+            error: "injected panic (fault plan)".to_string(),
+            attempts: 3,
         }
     }
 
@@ -707,7 +827,7 @@ mod tests {
         let w = JournalWriter::create(&path, "exhaustive", &space()).unwrap();
         drop(w);
         let text = std::fs::read_to_string(&path).unwrap();
-        std::fs::write(&path, text.replace("\"version\":2", "\"version\":9")).unwrap();
+        std::fs::write(&path, text.replace("\"version\":3", "\"version\":9")).unwrap();
         // the bad header is newline-terminated, so it is corruption
         // (not a torn tail) and recovery refuses the journal
         assert!(Journal::recover(&path).is_err());
@@ -724,11 +844,74 @@ mod tests {
         w.append(&rows[0]).unwrap();
         drop(w);
         let text = std::fs::read_to_string(&path).unwrap();
-        std::fs::write(&path, text.replace("\"version\":2", "\"version\":1")).unwrap();
+        std::fs::write(&path, text.replace("\"version\":3", "\"version\":1")).unwrap();
         let j = Journal::recover(&path).unwrap();
         std::fs::remove_file(&path).ok();
         assert_eq!(j.rows.len(), 1);
         assert_eq!(j.rows[0].design, rows[0].design);
+    }
+
+    #[test]
+    fn version_2_journals_still_recover() {
+        // pre-quarantine journals (no fail records, no finalize
+        // `failures` counter) carry a version-2 header
+        let path = tmp("v2compat");
+        let rows = rows();
+        let w = JournalWriter::create(&path, "exhaustive", &space()).unwrap();
+        w.append(&rows[0]).unwrap();
+        w.finalize(&dummy_result(1)).unwrap();
+        drop(w);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v2 = text
+            .replace("\"version\":3", "\"version\":2")
+            .replace(",\"failures\":0", "");
+        std::fs::write(&path, v2).unwrap();
+        let j = Journal::recover(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(j.rows.len(), 1);
+        assert!(j.failures.is_empty());
+        assert!(j.complete());
+        assert_eq!(j.finalized.unwrap().failures, 0, "absent decodes as zero");
+    }
+
+    #[test]
+    fn fail_records_roundtrip_and_count_in_finalize() {
+        let path = tmp("fails");
+        let rows = rows();
+        let w = JournalWriter::create(&path, "exhaustive", &space()).unwrap();
+        w.append(&rows[0]).unwrap();
+        w.append_fail(&fail_row(2, 1)).unwrap();
+        w.append_fail(&fail_row(2, 1)).unwrap(); // deduped
+        w.append_fail(&fail_row(2, 2)).unwrap();
+        assert_eq!(w.failures_written(), 2);
+        w.finalize(&dummy_result(1)).unwrap();
+        drop(w);
+        let j = Journal::recover(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(j.rows.len(), 1);
+        assert_eq!(j.failures.len(), 2);
+        assert_eq!((j.failures[0].design.n, j.failures[0].design.m), (2, 1));
+        assert_eq!(j.failures[0].error, "injected panic (fault plan)");
+        assert_eq!(j.failures[0].attempts, 3);
+        assert!(j.complete());
+        assert_eq!(j.finalized.unwrap().failures, 2);
+    }
+
+    #[test]
+    fn a_success_row_supersedes_an_earlier_fail() {
+        let path = tmp("supersede");
+        let rows = rows();
+        let w = JournalWriter::create(&path, "exhaustive", &space()).unwrap();
+        // (1,2) fails first, then a retried run succeeds on it
+        w.append_fail(&fail_row(1, 2)).unwrap();
+        w.append_fail(&fail_row(2, 2)).unwrap();
+        w.append(&rows[1]).unwrap(); // the (1,2) success row
+        drop(w);
+        let j = Journal::recover(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(j.rows.len(), 1);
+        assert_eq!(j.failures.len(), 1, "the recovered point is no longer failed");
+        assert_eq!((j.failures[0].design.n, j.failures[0].design.m), (2, 2));
     }
 
     #[test]

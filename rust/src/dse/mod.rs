@@ -30,7 +30,14 @@
 //!   evaluation as it completes, fsync'd in batches; recovery
 //!   ([`Journal::recover`]) tolerates the torn tail record a crash
 //!   leaves and `dse resume --journal` reseeds the cache from the
-//!   intact prefix, so an interrupted sweep loses (almost) nothing.
+//!   intact prefix, so an interrupted sweep loses (almost) nothing;
+//! * **fault tolerance** ([`fail`], [`crate::coordinator::supervise`])
+//!   — with a [`crate::coordinator::Supervisor`] attached, a panicking,
+//!   hanging or erroring evaluation is isolated, retried with
+//!   deterministic backoff, and finally *quarantined* as a [`FailRow`]
+//!   (journaled, carried in the session) while the rest of the sweep
+//!   keeps running; `dse resume --retry-failed` re-attempts the
+//!   quarantined points later.
 //!
 //! All strategies evaluate through
 //! [`crate::coordinator::evaluate_batch`], so every sweep — pruned or
@@ -49,6 +56,7 @@
 //! [`Exhaustive`] on a single-device space.
 
 pub mod cache;
+pub mod fail;
 pub mod journal;
 pub mod json;
 pub mod session;
@@ -56,6 +64,7 @@ pub mod space;
 pub mod strategy;
 
 pub use cache::{CacheKey, CacheStats, EvalCache};
+pub use fail::{FailKind, FailRow};
 pub use journal::{
     space_fingerprint, FinalizeRecord, Journal, JournalWriter, RowSink,
 };

@@ -8,11 +8,11 @@
 //! makes a re-run of the same sweep a pure cache walk — `dse resume`
 //! reports the hit count and recomputes nothing.
 //!
-//! Format (`version` 3, one JSON object):
+//! Format (`version` 4, one JSON object):
 //!
 //! ```json
 //! {
-//!   "version": 3,
+//!   "version": 4,
 //!   "strategy": "hill-climb",
 //!   "params": { "seed": 9, "restarts": 4, "max-steps": 64 },
 //!   "space": { "workload": "lbm", "grids": [[720, 300]],
@@ -23,7 +23,11 @@
 //!               "n": 1, "m": 4, "w": 720, "h": 300, "pe_depth": 855,
 //!               "passes": 3, "ddr": {...}, "resources": {...},
 //!               "timing": {...}, "power_w": 39.0,
-//!               "perf_per_watt": 2.416, "infeasible": null }, ... ]
+//!               "perf_per_watt": 2.416, "infeasible": null }, ... ],
+//!   "failures": [ { "workload": "lbm", "device": "Stratix V 5SGXEA7",
+//!                   "n": 2, "m": 3, "w": 720, "h": 300, "passes": 3,
+//!                   "ddr": {...}, "kind": "panic",
+//!                   "error": "...", "attempts": 3 }, ... ]
 //! }
 //! ```
 //!
@@ -37,6 +41,10 @@
 //! (`stall` buckets, `drain_cycles`, per-stream byte totals); version-2
 //! files still load, with the attribution zeroed — reports render such
 //! rows as "attribution unknown" rather than inventing a diagnosis.
+//! Version 4 adds the `failures` array: points the supervisor
+//! quarantined after retries exhausted (see [`FailRow`]), so a resumed
+//! sweep knows which holes to skip — or to re-attempt with
+//! `--retry-failed`.  Version-3 and older files load with no failures.
 //! Floats use shortest-roundtrip formatting, so a save/load cycle
 //! reproduces every metric bit-exactly.
 
@@ -52,12 +60,13 @@ use crate::sim::{DdrConfig, StallBreakdown, TimingReport};
 use crate::workload::{self, DesignPoint};
 
 use super::cache::{CacheKey, EvalCache};
+use super::fail::{decode_fail, encode_fail, FailRow};
 use super::journal::{space_fingerprint, Journal};
 use super::json::{self, Json};
 use super::space::DesignSpace;
 use super::strategy::SweepResult;
 
-pub const SESSION_VERSION: u64 = 3;
+pub const SESSION_VERSION: u64 = 4;
 
 /// A loaded (or about-to-be-saved) sweep session.
 #[derive(Clone, Debug)]
@@ -71,6 +80,10 @@ pub struct Session {
     /// the design space the rows were swept from
     pub space: DesignSpace,
     pub rows: Vec<Evaluation>,
+    /// points the supervisor quarantined (retries exhausted); a
+    /// success row for the same content address always supersedes —
+    /// [`Session::merge`] and the decoders both enforce that
+    pub failures: Vec<FailRow>,
 }
 
 impl Session {
@@ -83,6 +96,7 @@ impl Session {
             params: Json::Obj(Vec::new()),
             space: space.clone(),
             rows: result.evals.iter().map(|e| (**e).clone()).collect(),
+            failures: result.failures.clone(),
         }
     }
 
@@ -103,6 +117,7 @@ impl Session {
             params: journal.params.clone(),
             space: journal.space.clone(),
             rows: journal.rows.clone(),
+            failures: journal.failures.clone(),
         }
     }
 
@@ -150,7 +165,29 @@ impl Session {
                 self.rows.push(row.clone());
             }
         }
+        // resolve failures against the merged row set: a success row
+        // for the same content address supersedes the fail (the point
+        // evidently works — the other session retried it successfully),
+        // and duplicate fails keep this session's copy
+        let latency = self.space.latency;
+        let mut fail_seen: HashSet<CacheKey> = HashSet::new();
+        let mut failures = Vec::new();
+        for f in self.failures.iter().chain(&other.failures) {
+            let key = f.key(latency);
+            if seen.contains(&key) || !fail_seen.insert(key) {
+                continue;
+            }
+            failures.push(f.clone());
+        }
+        self.failures = failures;
         Ok(())
+    }
+
+    /// Content addresses of the quarantined points — what a resumed
+    /// sweep skips (or re-attempts, under `--retry-failed`).
+    pub fn quarantine_keys(&self) -> Vec<CacheKey> {
+        let latency = self.space.latency;
+        self.failures.iter().map(|f| f.key(latency)).collect()
     }
 
     fn key_of(&self, e: &Evaluation) -> CacheKey {
@@ -174,6 +211,10 @@ impl Session {
             ("params", self.params.clone()),
             ("space", encode_space(&self.space)),
             ("rows", Json::Arr(self.rows.iter().map(encode_row).collect())),
+            (
+                "failures",
+                Json::Arr(self.failures.iter().map(encode_fail).collect()),
+            ),
         ])
     }
 
@@ -195,11 +236,30 @@ impl Session {
         for row in v.field("rows")?.as_arr()? {
             rows.push(decode_row(row)?);
         }
+        // version-3 and older files predate the failures array; in a
+        // v4 file a fail superseded by a success row for the same
+        // content address is dropped on load (belt-and-braces — the
+        // writer already resolves, but hand-merged files may not)
+        let mut failures = Vec::new();
+        if let Ok(arr) = v.field("failures") {
+            let row_keys: HashSet<CacheKey> =
+                rows.iter().map(|r| row_key(r, space.latency)).collect();
+            let mut fail_seen: HashSet<CacheKey> = HashSet::new();
+            for f in arr.as_arr()? {
+                let f = decode_fail(f)?;
+                let key = f.key(space.latency);
+                if row_keys.contains(&key) || !fail_seen.insert(key) {
+                    continue;
+                }
+                failures.push(f);
+            }
+        }
         Ok(Session {
             strategy: v.field("strategy")?.as_str()?.to_string(),
             params,
             space,
             rows,
+            failures,
         })
     }
 }
@@ -286,7 +346,7 @@ fn decode_latency(v: &Json) -> Result<OpLatency> {
     })
 }
 
-fn encode_ddr(d: &DdrConfig) -> Json {
+pub(crate) fn encode_ddr(d: &DdrConfig) -> Json {
     json::obj(vec![
         ("peak_gbps", json::num(d.peak_gbps)),
         ("n_dimms", json::uint(d.n_dimms as u64)),
@@ -297,7 +357,7 @@ fn encode_ddr(d: &DdrConfig) -> Json {
     ])
 }
 
-fn decode_ddr(v: &Json) -> Result<DdrConfig> {
+pub(crate) fn decode_ddr(v: &Json) -> Result<DdrConfig> {
     Ok(DdrConfig {
         peak_gbps: v.field("peak_gbps")?.as_f64()?,
         n_dimms: v.field("n_dimms")?.as_usize()?,
@@ -523,6 +583,7 @@ mod tests {
             params: Json::Obj(Vec::new()),
             space: space(),
             rows: rows.clone(),
+            failures: Vec::new(),
         };
         let back = Session::decode(&Json::parse(&s.encode().to_string()).unwrap()).unwrap();
         assert_eq!(back.strategy, "exhaustive");
@@ -568,6 +629,7 @@ mod tests {
             params: Json::Obj(Vec::new()),
             space: space(),
             rows,
+            failures: Vec::new(),
         };
         let cache = EvalCache::new();
         assert_eq!(s.preload(&cache), 2);
@@ -584,12 +646,14 @@ mod tests {
             params: Json::Obj(Vec::new()),
             space: space(),
             rows: vec![rows[0].clone()],
+            failures: Vec::new(),
         };
         let b = Session {
             strategy: "bounded-prune".to_string(),
             params: Json::Obj(Vec::new()),
             space: space(),
             rows: rows.clone(),
+            failures: Vec::new(),
         };
         a.merge(&b).unwrap();
         assert_eq!(a.rows.len(), 2, "duplicate row must not be added twice");
@@ -602,6 +666,7 @@ mod tests {
                 ..space()
             },
             rows: vec![],
+            failures: Vec::new(),
         };
         assert!(a.merge(&c).is_err());
     }
@@ -614,6 +679,7 @@ mod tests {
             params: Json::Obj(Vec::new()),
             space: space(),
             rows: vec![rows[0].clone()],
+            failures: Vec::new(),
         };
         let mut text = s.encode().to_string();
         text = text.replace("Stratix V 5SGXEA7", "Vaporware 9000");
@@ -631,6 +697,7 @@ mod tests {
             params: Json::Obj(Vec::new()),
             space: space(),
             rows: rows(),
+            failures: Vec::new(),
         }
         .with_params(params.clone());
         let text = s.encode().to_string();
@@ -638,16 +705,19 @@ mod tests {
         assert_eq!(back.params, params);
         assert_eq!(back.params.field("seed").unwrap().as_u64().unwrap(), 9);
 
-        // a version-1 file has no params field: decodes to empty params
+        // a version-1 file has no params (or failures) field: decodes
+        // to empty params
         let v1 = text
-            .replace("\"version\":3", "\"version\":1")
-            .replace(&format!("\"params\":{},", params.to_string()), "");
+            .replace("\"version\":4", "\"version\":1")
+            .replace(&format!("\"params\":{},", params.to_string()), "")
+            .replace(",\"failures\":[]", "");
         let old = Session::decode(&Json::parse(&v1).unwrap()).unwrap();
         assert_eq!(old.params, Json::Obj(Vec::new()));
         assert_eq!(old.rows.len(), 2);
+        assert!(old.failures.is_empty());
 
         // versions we never wrote stay refused
-        let v9 = text.replace("\"version\":3", "\"version\":9");
+        let v9 = text.replace("\"version\":4", "\"version\":9");
         assert!(Session::decode(&Json::parse(&v9).unwrap()).is_err());
     }
 
@@ -661,6 +731,7 @@ mod tests {
             params: Json::Obj(Vec::new()),
             space: space(),
             rows: rows(),
+            failures: Vec::new(),
         };
         let mut text = s.encode().to_string();
         while let Some(i) = text.find("\"stall\":") {
@@ -668,7 +739,9 @@ mod tests {
             text.replace_range(i..i + j, "");
         }
         assert!(!text.contains("drain_cycles"), "v3 fields must be gone");
-        let text = text.replace("\"version\":3", "\"version\":2");
+        let text = text
+            .replace("\"version\":4", "\"version\":2")
+            .replace(",\"failures\":[]", "");
         let old = Session::decode(&Json::parse(&text).unwrap()).unwrap();
         assert_eq!(old.rows.len(), 2);
         for (a, b) in s.rows.iter().zip(&old.rows) {
@@ -711,5 +784,99 @@ mod tests {
         let s = Session::from_journal(&j);
         assert_eq!(s.params, params);
         assert_eq!(s.rows.len(), 1);
+    }
+
+    fn fail_of(n: u32, m: u32) -> FailRow {
+        use super::super::fail::FailKind;
+        let cfg = cfg();
+        FailRow {
+            workload: "lbm",
+            device: cfg.device.name,
+            design: DesignPoint::new(n, m, 64, 32),
+            ddr: cfg.ddr,
+            passes: cfg.passes,
+            kind: FailKind::Timeout,
+            error: "deadline 0.5s exceeded".to_string(),
+            attempts: 2,
+        }
+    }
+
+    #[test]
+    fn failures_roundtrip_and_a_success_row_supersedes() {
+        use super::super::fail::FailKind;
+        let rows = rows();
+        let s = Session {
+            strategy: "exhaustive".to_string(),
+            params: Json::Obj(Vec::new()),
+            space: space(),
+            rows: rows.clone(),
+            failures: vec![fail_of(2, 2)],
+        };
+        let back =
+            Session::decode(&Json::parse(&s.encode().to_string()).unwrap()).unwrap();
+        assert_eq!(back.failures.len(), 1);
+        let f = &back.failures[0];
+        assert_eq!(f.design, DesignPoint::new(2, 2, 64, 32));
+        assert_eq!(f.kind, FailKind::Timeout);
+        assert_eq!(f.error, "deadline 0.5s exceeded");
+        assert_eq!(f.attempts, 2);
+        assert_eq!(back.quarantine_keys(), s.quarantine_keys());
+
+        // a fail shadowed by a success row for the same content
+        // address is dropped at load time: rows[0] is the evaluated
+        // (1, 1) point, so a (1, 1) fail never survives the decode
+        let shadowed = Session { failures: vec![fail_of(1, 1)], ..s };
+        let back = Session::decode(
+            &Json::parse(&shadowed.encode().to_string()).unwrap(),
+        )
+        .unwrap();
+        assert!(back.failures.is_empty(), "success supersedes the fail");
+    }
+
+    #[test]
+    fn merge_resolves_failures_against_success_rows() {
+        let rows = rows();
+        // session a: evaluated (1, 1); quarantined (2, 2) and (1, 2)
+        let mut a = Session {
+            strategy: "exhaustive".to_string(),
+            params: Json::Obj(Vec::new()),
+            space: space(),
+            rows: vec![rows[0].clone()],
+            failures: vec![fail_of(2, 2), fail_of(1, 2)],
+        };
+        // session b: a retry that evaluated (1, 2) fine, and hit the
+        // same (2, 2) quarantine again
+        let b = Session {
+            strategy: "exhaustive".to_string(),
+            params: Json::Obj(Vec::new()),
+            space: space(),
+            rows: vec![rows[1].clone()],
+            failures: vec![fail_of(2, 2)],
+        };
+        a.merge(&b).unwrap();
+        assert_eq!(a.rows.len(), 2);
+        // (1, 2) recovered; (2, 2) kept exactly once
+        assert_eq!(a.failures.len(), 1);
+        assert_eq!(a.failures[0].design, DesignPoint::new(2, 2, 64, 32));
+    }
+
+    #[test]
+    fn v3_sessions_without_failures_still_load() {
+        let s = Session {
+            strategy: "exhaustive".to_string(),
+            params: Json::Obj(Vec::new()),
+            space: space(),
+            rows: rows(),
+            failures: Vec::new(),
+        };
+        let text = s
+            .encode()
+            .to_string()
+            .replace("\"version\":4", "\"version\":3")
+            .replace(",\"failures\":[]", "");
+        assert!(!text.contains("failures"));
+        let old = Session::decode(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(old.rows.len(), 2);
+        assert!(old.failures.is_empty());
     }
 }

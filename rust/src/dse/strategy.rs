@@ -1,8 +1,8 @@
 //! Pluggable search strategies.
 //!
 //! Three ways to walk a [`DesignSpace`], all funneling evaluations
-//! through [`crate::coordinator::evaluate_batch`] and a shared
-//! [`EvalCache`]:
+//! through [`crate::coordinator::evaluate_batch_supervised`] and a
+//! shared [`EvalCache`]:
 //!
 //! * [`Exhaustive`] — every candidate (the paper's manual sweep,
 //!   automated; exact by construction);
@@ -24,11 +24,18 @@
 //! runs, via the batch collector* — that is what lets a crash-safe
 //! journal persist a long sweep incrementally instead of only at the
 //! end (see [`super::journal`]).
+//!
+//! When a [`Supervisor`] is attached ([`SweepContext::with_supervisor`])
+//! a failing point is *quarantined* instead of aborting the sweep: the
+//! strategy receives `None` in that job's result slot, records the
+//! [`FailRow`], and keeps walking.  Pruning stays conservative around
+//! holes — a quarantined point teaches [`BoundedPrune`] nothing, so no
+//! cut can ever hinge on a failure.
 
 use std::collections::HashSet;
 use std::sync::Arc;
 
-use crate::coordinator::{evaluate_batch_observed, BatchJob};
+use crate::coordinator::{evaluate_batch_supervised, BatchJob, Supervisor};
 use crate::error::Result;
 use crate::explore::{self, sort_by_perf_per_watt, valid_ns, Evaluation};
 use crate::obs::Obs;
@@ -37,6 +44,7 @@ use crate::util::rng::XorShift64;
 use crate::workload::DesignPoint;
 
 use super::cache::{CacheKey, EvalCache};
+use super::fail::FailRow;
 use super::journal::RowSink;
 use super::space::DesignSpace;
 
@@ -54,11 +62,15 @@ pub struct SweepContext<'a> {
     /// wrap their waves in spans, the batch layer does the rest —
     /// `None` costs nothing
     pub obs: Option<&'a Obs>,
+    /// fault-tolerance policy (panic isolation, retry, deadlines,
+    /// quarantine — see [`crate::coordinator::supervise`]); `None`
+    /// keeps the exact fail-fast batch path
+    pub supervisor: Option<&'a Supervisor>,
 }
 
 impl<'a> SweepContext<'a> {
     pub fn new(cache: &'a EvalCache, workers: usize) -> SweepContext<'a> {
-        SweepContext { cache, workers, sink: None, obs: None }
+        SweepContext { cache, workers, sink: None, obs: None, supervisor: None }
     }
 
     /// Stream every completed row to `sink` (a journal writer).
@@ -69,6 +81,11 @@ impl<'a> SweepContext<'a> {
     /// Record sweep telemetry into `obs`.
     pub fn with_obs(self, obs: &'a Obs) -> SweepContext<'a> {
         SweepContext { obs: Some(obs), ..self }
+    }
+
+    /// Run every evaluation under `supervisor`.
+    pub fn with_supervisor(self, supervisor: &'a Supervisor) -> SweepContext<'a> {
+        SweepContext { supervisor: Some(supervisor), ..self }
     }
 }
 
@@ -87,6 +104,9 @@ pub struct SweepResult {
     pub skipped: usize,
     /// total candidates in the space
     pub candidates: usize,
+    /// points quarantined by the supervisor after retries exhausted
+    /// (always empty on the fail-fast path — an error aborts instead)
+    pub failures: Vec<FailRow>,
 }
 
 impl SweepResult {
@@ -124,6 +144,7 @@ fn finish(
     before: super::cache::CacheStats,
     skipped: usize,
     candidates: usize,
+    failures: Vec<FailRow>,
 ) -> SweepResult {
     sort_by_perf_per_watt(&mut evals);
     let after = ctx.cache.stats();
@@ -134,6 +155,7 @@ fn finish(
         cache_hits: after.hits - before.hits,
         skipped,
         candidates,
+        failures,
     }
 }
 
@@ -160,13 +182,20 @@ impl SearchStrategy for Exhaustive {
             );
             o.begin("strategy", &span, Vec::new());
         }
-        let out =
-            evaluate_batch_observed(&jobs, ctx.workers, Some(ctx.cache), ctx.sink, ctx.obs);
+        let out = evaluate_batch_supervised(
+            &jobs,
+            ctx.workers,
+            Some(ctx.cache),
+            ctx.sink,
+            ctx.obs,
+            ctx.supervisor,
+        );
         if let Some(o) = ctx.obs {
             o.end("strategy", &span);
         }
-        let (evals, _) = out?;
-        Ok(finish(self.name(), evals, ctx, before, 0, jobs.len()))
+        let out = out?;
+        let evals = out.rows.into_iter().flatten().collect();
+        Ok(finish(self.name(), evals, ctx, before, 0, jobs.len(), out.failures))
     }
 }
 
@@ -247,6 +276,7 @@ impl SearchStrategy for BoundedPrune {
     fn run(&self, space: &DesignSpace, ctx: &SweepContext) -> Result<SweepResult> {
         let before = ctx.cache.stats();
         let mut evals: Vec<Arc<Evaluation>> = Vec::new();
+        let mut failures: Vec<FailRow> = Vec::new();
         let mut skipped = 0usize;
         let mut candidates = 0usize;
         let soc_dsps = soc_peripherals().dsps as f64;
@@ -323,18 +353,24 @@ impl SearchStrategy for BoundedPrune {
                     );
                     o.begin("strategy", &span, Vec::new());
                 }
-                let out = evaluate_batch_observed(
+                let out = evaluate_batch_supervised(
                     &wave,
                     ctx.workers,
                     Some(ctx.cache),
                     ctx.sink,
                     ctx.obs,
+                    ctx.supervisor,
                 );
                 if let Some(o) = ctx.obs {
                     o.end("strategy", &span);
                 }
-                let (wave_evals, _) = out?;
-                for (e, &ci) in wave_evals.iter().zip(&wave_cols) {
+                let out = out?;
+                // rows are index-aligned with `wave` (and so with
+                // `wave_cols`); a quarantined slot is `None` and
+                // teaches the column nothing — its cascade stays
+                // alive, so no cut ever hinges on a failure
+                for (slot, &ci) in out.rows.iter().zip(&wave_cols) {
+                    let Some(e) = slot else { continue };
                     let col = &mut cols[ci];
                     let nm = (e.design.n * e.design.m) as f64;
                     let pp = e.resources.core.dsps as f64 / nm;
@@ -350,10 +386,11 @@ impl SearchStrategy for BoundedPrune {
                         col.low_util = true;
                     }
                 }
-                evals.extend(wave_evals);
+                evals.extend(out.rows.into_iter().flatten());
+                failures.extend(out.failures);
             }
         }
-        Ok(finish(self.name(), evals, ctx, before, skipped, candidates))
+        Ok(finish(self.name(), evals, ctx, before, skipped, candidates, failures))
     }
 }
 
@@ -458,27 +495,41 @@ impl SearchStrategy for HillClimb {
             || space.ddr_variants.is_empty()
             || space.max_m == 0
         {
-            return Ok(finish(self.name(), Vec::new(), ctx, before, 0, 0));
+            return Ok(finish(self.name(), Vec::new(), ctx, before, 0, 0, Vec::new()));
         }
         let total = space.len();
         let mut rng = XorShift64::new(self.seed);
         let mut visited: HashSet<CacheKey> = HashSet::new();
         let mut evals: Vec<Arc<Evaluation>> = Vec::new();
+        let mut failures: Vec<FailRow> = Vec::new();
 
         let touch = |batch: &[BatchJob],
                          visited: &mut HashSet<CacheKey>,
-                         evals: &mut Vec<Arc<Evaluation>>|
-         -> Result<Vec<Arc<Evaluation>>> {
-            let (out, _) =
-                evaluate_batch_observed(batch, ctx.workers, Some(ctx.cache), ctx.sink, ctx.obs)?;
-            // record first-visits (keyed like the cache)
-            for ((cfg, design), e) in batch.iter().zip(&out) {
+                         evals: &mut Vec<Arc<Evaluation>>,
+                         failures: &mut Vec<FailRow>|
+         -> Result<Vec<Option<Arc<Evaluation>>>> {
+            let out = evaluate_batch_supervised(
+                batch,
+                ctx.workers,
+                Some(ctx.cache),
+                ctx.sink,
+                ctx.obs,
+                ctx.supervisor,
+            )?;
+            // record first-visits (keyed like the cache); quarantined
+            // points count as visited too — the walk spent a job on
+            // them, and re-touching a poison point would just fail
+            // again
+            for ((cfg, design), slot) in batch.iter().zip(&out.rows) {
                 let key = CacheKey::new(design, cfg);
                 if visited.insert(key) {
-                    evals.push(e.clone());
+                    if let Some(e) = slot {
+                        evals.push(e.clone());
+                    }
                 }
             }
-            Ok(out)
+            failures.extend(out.failures);
+            Ok(out.rows)
         };
 
         for restart in 0..self.restarts.max(1) {
@@ -511,8 +562,12 @@ impl SearchStrategy for HillClimb {
                     m: 1 + rng.below(space.max_m as u64) as u32,
                 };
                 let start_job = coord_job(space, cur);
+                let start =
+                    touch(&[start_job], &mut visited, &mut evals, &mut failures)?;
+                // a quarantined start scores -inf: the walk still runs,
+                // and any feasible neighbor is an improvement
                 let mut cur_score =
-                    score(&touch(&[start_job], &mut visited, &mut evals)?[0]);
+                    start[0].as_deref().map_or(f64::NEG_INFINITY, score);
 
                 for _ in 0..self.max_steps {
                     let neigh = self.neighbors(space, cur);
@@ -524,11 +579,11 @@ impl SearchStrategy for HillClimb {
                     }
                     let jobs: Vec<BatchJob> =
                         neigh.iter().map(|&c| coord_job(space, c)).collect();
-                    let out = touch(&jobs, &mut visited, &mut evals)?;
+                    let out = touch(&jobs, &mut visited, &mut evals, &mut failures)?;
                     let Some((best_i, best_score)) = out
                         .iter()
                         .enumerate()
-                        .map(|(i, e)| (i, score(e)))
+                        .map(|(i, e)| (i, e.as_deref().map_or(f64::NEG_INFINITY, score)))
                         .max_by(|a, b| a.1.total_cmp(&b.1))
                     else {
                         break;
@@ -556,6 +611,6 @@ impl SearchStrategy for HillClimb {
             // registry totals cover the whole space like SweepResult's
             o.skip(self.name(), "unvisited", skipped as u64);
         }
-        Ok(finish(self.name(), evals, ctx, before, skipped, total))
+        Ok(finish(self.name(), evals, ctx, before, skipped, total, failures))
     }
 }

@@ -46,6 +46,15 @@ pub enum Error {
     Io(std::io::Error),
 
     Xla(String),
+
+    /// A worker panicked while evaluating a design point.  The payload
+    /// is the panic message; the supervisor turns this into a retry or
+    /// a quarantined `fail` row instead of a dead process.
+    EvalPanicked(String),
+
+    /// An evaluation exceeded its `--eval-timeout` deadline and was
+    /// cooperatively cancelled inside the timing loop.
+    EvalTimeout(String),
 }
 
 impl fmt::Display for Error {
@@ -64,6 +73,8 @@ impl fmt::Display for Error {
             Error::Verilog(m) => write!(f, "verilog error: {m}"),
             Error::Io(e) => write!(f, "I/O error: {e}"),
             Error::Xla(m) => write!(f, "XLA error: {m}"),
+            Error::EvalPanicked(m) => write!(f, "evaluation panicked: {m}"),
+            Error::EvalTimeout(m) => write!(f, "evaluation timed out: {m}"),
         }
     }
 }
@@ -93,6 +104,25 @@ impl Error {
     pub fn dfg(core: impl Into<String>, msg: impl Into<String>) -> Self {
         Error::Dfg { core: core.into(), msg: msg.into() }
     }
+
+    /// Transient/permanent classification for the sweep supervisor's
+    /// retry policy.  Transient failures (I/O hiccups, a panicking
+    /// worker, a timed-out evaluation) may succeed on a retry of the
+    /// *same* inputs; everything else is a deterministic property of
+    /// the design point (a parse error retried is the same parse
+    /// error) and retrying would only burn the budget.
+    pub fn is_transient(&self) -> bool {
+        matches!(
+            self,
+            Error::Io(_) | Error::EvalPanicked(_) | Error::EvalTimeout(_)
+        )
+    }
+
+    /// `true` for a deadline miss — the supervisor requeues these
+    /// exactly once regardless of the general retry budget.
+    pub fn is_timeout(&self) -> bool {
+        matches!(self, Error::EvalTimeout(_))
+    }
 }
 
 #[cfg(feature = "pjrt")]
@@ -120,5 +150,26 @@ mod tests {
             Error::Explore("unknown workload".into()).to_string(),
             "explore error: unknown workload"
         );
+        assert_eq!(
+            Error::EvalPanicked("index out of bounds".into()).to_string(),
+            "evaluation panicked: index out of bounds"
+        );
+        assert_eq!(
+            Error::EvalTimeout("deadline 2s exceeded".into()).to_string(),
+            "evaluation timed out: deadline 2s exceeded"
+        );
+    }
+
+    #[test]
+    fn transient_classification_drives_retries() {
+        assert!(Error::EvalPanicked("boom".into()).is_transient());
+        assert!(Error::EvalTimeout("slow".into()).is_transient());
+        assert!(Error::from(std::io::Error::other("disk")).is_transient());
+        assert!(!Error::Explore("bad point".into()).is_transient());
+        assert!(!Error::Sim("bad config".into()).is_transient());
+        assert!(!Error::parse(1, "x").is_transient());
+
+        assert!(Error::EvalTimeout("slow".into()).is_timeout());
+        assert!(!Error::EvalPanicked("boom".into()).is_timeout());
     }
 }

@@ -16,15 +16,18 @@
 //! {"seq":4,"t_ns":998001,"event":"sweep-finish","rows":12,...}
 //! ```
 //!
-//! Like the trace sink, mid-sweep write errors are swallowed — an
-//! event log that cannot be written must never abort the sweep it is
-//! narrating — but every record is flushed to the OS as it is emitted
-//! (events are rare, and a live `tail -f` is the point), and
-//! [`EventLog::flush`] reports sync errors for the shutdown path.
+//! Like the trace sink, mid-sweep write errors must never abort the
+//! sweep the log is narrating — but they are not *silent* either: each
+//! dropped record is counted ([`EventLog::dropped`], mirrored into the
+//! `obs.events_dropped` metric) and the first one warns on stderr.
+//! Every record is flushed to the OS as it is emitted (events are
+//! rare, and a live `tail -f` is the point), and [`EventLog::flush`]
+//! reports sync errors for the shutdown path.
 
 use std::fs::File;
 use std::io::{BufWriter, Write};
 use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -34,6 +37,10 @@ use crate::error::Result;
 pub struct EventLog {
     epoch: Instant,
     inner: Mutex<EventInner>,
+    /// records whose write (or flush) failed — they are gone from the
+    /// file, but not unnoticed
+    dropped: AtomicU64,
+    warned: AtomicBool,
 }
 
 struct EventInner {
@@ -48,14 +55,17 @@ impl EventLog {
         Ok(EventLog {
             epoch: Instant::now(),
             inner: Mutex::new(EventInner { out, seq: 0 }),
+            dropped: AtomicU64::new(0),
+            warned: AtomicBool::new(false),
         })
     }
 
     /// Append one event record: `{"seq":N,"t_ns":T,"event":name,...}`
     /// with `fields` spliced in after the envelope.  Returns the
-    /// record's sequence number.  Write errors are swallowed (the
-    /// sequence number still advances, so a later successful record
-    /// exposes the gap instead of hiding it).
+    /// record's sequence number.  A write error does not abort the
+    /// sweep: the record is counted dropped (first one warns on
+    /// stderr), and the sequence number still advances, so a later
+    /// successful record exposes the gap instead of hiding it.
     pub fn emit(&self, name: &str, fields: Vec<(&str, Json)>) -> u64 {
         let t_ns = self.epoch.elapsed().as_nanos() as u64;
         let mut inner = self.inner.lock().unwrap();
@@ -68,14 +78,30 @@ impl EventLog {
         record.extend(fields);
         let mut line = json::obj(record).to_string();
         line.push('\n');
-        let _ = inner.out.write_all(line.as_bytes());
-        let _ = inner.out.flush();
+        let wrote = inner
+            .out
+            .write_all(line.as_bytes())
+            .and_then(|()| inner.out.flush());
+        if let Err(err) = wrote {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            if !self.warned.swap(true, Ordering::Relaxed) {
+                eprintln!(
+                    "warning: event log write failed ({err}); further drops are \
+                     counted in obs.events_dropped"
+                );
+            }
+        }
         inner.seq
     }
 
     /// Records emitted so far.
     pub fn seq(&self) -> u64 {
         self.inner.lock().unwrap().seq
+    }
+
+    /// Records whose write failed (0 on a healthy log).
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
     }
 
     /// Flush buffered records, reporting the error the hot path
@@ -114,6 +140,7 @@ mod tests {
         assert_eq!(log.emit("sweep-finish", Vec::new()), 3);
         log.flush().unwrap();
         assert_eq!(log.seq(), 3);
+        assert_eq!(log.dropped(), 0, "healthy log drops nothing");
         let text = std::fs::read_to_string(&path).unwrap();
         std::fs::remove_file(&path).ok();
         let records = parse_event_log(&text).unwrap();
@@ -133,6 +160,20 @@ mod tests {
             .map(|r| r.field("t_ns").unwrap().as_u64().unwrap())
             .collect();
         assert!(ts.windows(2).all(|w| w[0] <= w[1]), "{ts:?}");
+    }
+
+    #[test]
+    fn write_errors_are_counted_not_silent() {
+        // regression: emit() used to `let _ =` write errors away with
+        // no counter and no warning
+        if !std::path::Path::new("/dev/full").exists() {
+            return; // needs the Linux always-ENOSPC device
+        }
+        let log = EventLog::create("/dev/full").unwrap();
+        assert_eq!(log.emit("sweep-start", Vec::new()), 1);
+        assert_eq!(log.emit("wave-start", Vec::new()), 2, "seq still advances");
+        assert_eq!(log.dropped(), 2);
+        assert!(log.flush().is_err());
     }
 
     #[test]

@@ -47,6 +47,7 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::dse::json::Json;
+use crate::util::cancel::CancelToken;
 
 pub use events::EventLog;
 pub use metrics::{Counter, Gauge, HistStats, Histogram, MetricsRegistry, PhaseHistograms};
@@ -146,6 +147,10 @@ struct WorkerSlot {
     since_ns: u64,
     generation: u64,
     stalled: bool,
+    /// The in-flight evaluation's cancel token (supervised runs only):
+    /// lets the stall watchdog escalate from flagging a hung job to
+    /// cancelling it, so the supervisor can requeue the point.
+    cancel: Option<Arc<CancelToken>>,
 }
 
 /// The observability hub threaded through the sweep: always carries a
@@ -163,6 +168,7 @@ pub struct Obs {
     rows: Arc<Counter>,
     skipped: Arc<Counter>,
     errors: Arc<Counter>,
+    failed: Arc<Counter>,
     eval_ns: Arc<Histogram>,
     phases: [Arc<Histogram>; Phase::ALL.len()],
     busy_ns: Arc<Counter>,
@@ -179,6 +185,7 @@ impl Obs {
         let rows = metrics.counter("sweep.rows");
         let skipped = metrics.counter("sweep.skipped");
         let errors = metrics.counter("sweep.errors");
+        let failed = metrics.counter("sweep.failed");
         let eval_ns = metrics.histogram("eval.total_ns");
         let phases =
             Phase::ALL.map(|p| metrics.histogram(&format!("eval.phase.{}_ns", p.name())));
@@ -194,6 +201,7 @@ impl Obs {
             rows,
             skipped,
             errors,
+            failed,
             eval_ns,
             phases,
             busy_ns,
@@ -238,10 +246,16 @@ impl Obs {
         }
     }
 
-    /// Emit a lifecycle event (no-op without an event log).
+    /// Emit a lifecycle event (no-op without an event log).  Write
+    /// errors do not surface here — the log counts them (and warns
+    /// once); the count is mirrored into `obs.events_dropped`.
     pub fn event(&self, name: &str, fields: Vec<(&str, Json)>) {
         if let Some(e) = &self.events {
             e.emit(name, fields);
+            let dropped = e.dropped();
+            if dropped > 0 {
+                self.metrics.counter("obs.events_dropped").set(dropped);
+            }
         }
     }
 
@@ -250,6 +264,13 @@ impl Obs {
     /// the coordinator's observed branch, so the unattached sweep path
     /// never takes this lock.
     pub fn job_started(&self, job: &str) {
+        self.job_started_cancellable(job, None);
+    }
+
+    /// [`Obs::job_started`] with the evaluation's cancel token, when
+    /// the job runs under a supervisor: the stall watchdog cancels a
+    /// hung job through it ([`Obs::mark_stalled`]).
+    pub fn job_started_cancellable(&self, job: &str, cancel: Option<Arc<CancelToken>>) {
         let name = worker_key();
         let since_ns = self.elapsed_ns();
         let mut board = self.workers.lock().unwrap();
@@ -259,6 +280,7 @@ impl Obs {
         slot.since_ns = since_ns;
         slot.generation += 1;
         slot.stalled = false;
+        slot.cancel = cancel;
     }
 
     /// Publish "this worker thread is idle again".
@@ -269,6 +291,7 @@ impl Obs {
             slot.busy = false;
             slot.job.clear();
             slot.stalled = false;
+            slot.cancel = None;
         }
     }
 
@@ -297,11 +320,19 @@ impl Obs {
     /// is still the same job (`generation` matches), still running,
     /// and not already flagged.  Returns whether this call flagged it
     /// — the guarantee behind "exactly one stall event per job".
+    ///
+    /// When the job published a cancel token (supervised runs), the
+    /// flagging call also *cancels* it: the evaluation unwinds at its
+    /// next checkpoint and the supervisor requeues the point once —
+    /// the watchdog escalates from observing a hang to breaking it.
     pub fn mark_stalled(&self, name: &str, generation: u64) -> bool {
         let mut board = self.workers.lock().unwrap();
         match board.get_mut(name) {
             Some(slot) if slot.busy && slot.generation == generation && !slot.stalled => {
                 slot.stalled = true;
+                if let Some(token) = &slot.cancel {
+                    token.cancel();
+                }
                 true
             }
             _ => false,
@@ -347,6 +378,19 @@ impl Obs {
     /// so it counts toward neither `evaluated` nor `cache_hits`).
     pub fn row_failed(&self) {
         self.errors.incr();
+    }
+
+    /// Record a *quarantined* batch row: the supervisor exhausted its
+    /// retry budget and the point became a fail row.  Counts as an
+    /// error plus a `sweep.failed` tally, and advances the progress
+    /// line — the sweep is done with this point, just not successfully.
+    pub fn row_quarantined(&self) {
+        self.errors.incr();
+        self.failed.incr();
+        if let Some(p) = &self.progress {
+            p.add_failed(1);
+            p.advance(1, || None);
+        }
     }
 
     /// Record `n` candidates a strategy pruned without evaluating,
@@ -481,6 +525,32 @@ mod tests {
         assert!(!s3.busy);
         assert_eq!(s3.age_ns, 0);
         assert!(!obs.mark_stalled(&s3.name, s3.generation), "idle worker");
+    }
+
+    #[test]
+    fn mark_stalled_cancels_a_published_token() {
+        let obs = Obs::new();
+        let token = Arc::new(CancelToken::new());
+        obs.job_started_cancellable("eval slow", Some(token.clone()));
+        let s = &obs.worker_states()[0];
+        assert!(!token.is_cancelled());
+        assert!(obs.mark_stalled(&s.name, s.generation));
+        assert!(token.is_cancelled(), "flagging must escalate to cancel");
+        // a plain job_started publishes no token and still flags fine
+        obs.job_started("eval next");
+        let s2 = &obs.worker_states()[0];
+        assert!(obs.mark_stalled(&s2.name, s2.generation));
+        obs.job_finished();
+    }
+
+    #[test]
+    fn quarantined_rows_count_as_errors_and_failed() {
+        let obs = Obs::new();
+        obs.row_failed();
+        obs.row_quarantined();
+        obs.row_quarantined();
+        assert_eq!(obs.metrics.counter("sweep.errors").get(), 3);
+        assert_eq!(obs.metrics.counter("sweep.failed").get(), 2);
     }
 
     #[test]

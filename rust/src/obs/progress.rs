@@ -14,6 +14,9 @@ use std::time::Instant;
 pub struct Progress {
     total: AtomicU64,
     done: AtomicU64,
+    /// points that failed (quarantined) rather than evaluated — shown
+    /// on the line only when nonzero, so healthy sweeps look the same
+    failed: AtomicU64,
     /// minimum seconds between lines
     every: f64,
     state: Mutex<ProgressState>,
@@ -31,6 +34,7 @@ impl Progress {
         Progress {
             total: AtomicU64::new(0),
             done: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
             every: every_secs.max(0.0),
             state: Mutex::new(ProgressState {
                 started: Instant::now(),
@@ -47,6 +51,17 @@ impl Progress {
 
     pub fn done(&self) -> u64 {
         self.done.load(Ordering::Relaxed)
+    }
+
+    /// Count `n` candidates as failed (quarantined).  Failures also
+    /// [`Progress::advance`] — this only feeds the `N failed` tail of
+    /// the line.
+    pub fn add_failed(&self, n: u64) {
+        self.failed.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn failed(&self) -> u64 {
+        self.failed.load(Ordering::Relaxed)
     }
 
     /// Count `n` candidates as handled (evaluated, cache-answered, or
@@ -90,9 +105,14 @@ impl Progress {
             Some(s) => format!("{s:.1}s"),
             None => "--".to_string(),
         };
+        let failed = match self.failed.load(Ordering::Relaxed) {
+            0 => String::new(),
+            n => format!(", {n} failed"),
+        };
         let _ = writeln!(
             std::io::stderr(),
-            "sweep: {done}/{total} ({pct:.0}%), {rate:.0} evals/sec{cache}, ETA {eta}"
+            "sweep: {done}/{total} ({pct:.0}%), {rate:.0} evals/sec{cache}, \
+             ETA {eta}{failed}"
         );
     }
 }
@@ -115,6 +135,9 @@ mod tests {
         p.advance(1, || Some(0.5)); // first line prints immediately
         p.advance(4, || None); // throttled: hit_rate never invoked
         assert_eq!(p.done(), 5);
+        assert_eq!(p.failed(), 0);
+        p.add_failed(2);
+        assert_eq!(p.failed(), 2);
     }
 
     #[test]

@@ -227,12 +227,13 @@ fn distinct_devices<E: Borrow<Evaluation>>(evals: &[E]) -> Vec<&'static str> {
 pub fn strategy_comparison(results: &[&SweepResult]) -> String {
     let mut s = String::new();
     s.push_str(&format!(
-        "{:<14} {:>10} {:>10} {:>9} {:>11} {:>20} {:>9} {:<16}\n",
+        "{:<14} {:>10} {:>10} {:>9} {:>11} {:>7} {:>20} {:>9} {:<16}\n",
         "strategy",
         "candidates",
         "evaluated",
         "skipped",
         "cache hits",
+        "failed",
         "best (n,m)@device",
         "GF/sW",
         "bottleneck"
@@ -252,9 +253,9 @@ pub fn strategy_comparison(results: &[&SweepResult]) -> String {
             None => ("-".to_string(), "-".to_string(), "-"),
         };
         s.push_str(&format!(
-            "{:<14} {:>10} {:>10} {:>9} {:>11} {:>20} {:>9} {:<16}\n",
-            r.strategy, r.candidates, r.evaluated, r.skipped, r.cache_hits, best_label,
-            best_ppw, best_attrib,
+            "{:<14} {:>10} {:>10} {:>9} {:>11} {:>7} {:>20} {:>9} {:<16}\n",
+            r.strategy, r.candidates, r.evaluated, r.skipped, r.cache_hits,
+            r.failures.len(), best_label, best_ppw, best_attrib,
         ));
     }
     // stall-mix summary from the strategy that touched the most rows
@@ -516,9 +517,29 @@ pub fn explain_json(e: &Evaluation) -> Json {
 pub fn sweep_summary(r: &SweepResult) -> String {
     let mut s = String::new();
     s.push_str(&format!(
-        "strategy {}: {} candidates, {} evaluated, {} skipped, {} cache hits\n",
-        r.strategy, r.candidates, r.evaluated, r.skipped, r.cache_hits
+        "strategy {}: {} candidates, {} evaluated, {} skipped, {} cache hits{}\n",
+        r.strategy,
+        r.candidates,
+        r.evaluated,
+        r.skipped,
+        r.cache_hits,
+        match r.failures.len() {
+            0 => String::new(),
+            n => format!(", {n} quarantined"),
+        }
     ));
+    for f in &r.failures {
+        s.push_str(&format!(
+            "  quarantined ({}, {}) on {}: {} after {} attempt{} ({})\n",
+            f.design.n,
+            f.design.m,
+            f.device,
+            f.kind.label(),
+            f.attempts,
+            if f.attempts == 1 { "" } else { "s" },
+            f.error,
+        ));
+    }
     for dev in distinct_devices(&r.evals) {
         match r.evals.iter().find(|e| e.device == dev && e.infeasible.is_none()) {
             Some(b) => s.push_str(&format!(
@@ -612,6 +633,8 @@ pub fn status_json(
         ("cache_hits", json::uint(obs.metrics.counter("sweep.cache_hits").get())),
         ("skipped", json::uint(skipped)),
         ("errors", json::uint(obs.metrics.counter("sweep.errors").get())),
+        ("failed", json::uint(obs.metrics.counter("sweep.failed").get())),
+        ("retries", json::uint(obs.metrics.counter("sweep.retries").get())),
         ("rate_per_sec", json::num(rate)),
         ("eta_sec", eta),
     ]);
@@ -982,8 +1005,49 @@ mod tests {
         assert!(cmp.contains("bottleneck"), "{cmp}");
         assert!(cmp.contains("stall mix per device"), "{cmp}");
         assert!(cmp.contains("read-starved"), "{cmp}");
+        // the failed column renders (zero on a healthy sweep)
+        assert!(cmp.contains("failed"), "{cmp}");
         let sum = sweep_summary(&r);
         assert!(sum.contains("best on Stratix V 5SGXEA7"));
         assert!(sum.contains("pareto frontier"));
+        assert!(!sum.contains("quarantined"), "clean sweeps say nothing: {sum}");
+    }
+
+    #[test]
+    fn quarantined_points_render_in_comparison_and_summary() {
+        use crate::dse::fail::{FailKind, FailRow};
+        use crate::dse::{DesignSpace, EvalCache, Exhaustive, SearchStrategy, SweepContext};
+        use crate::explore::ExploreConfig;
+        use crate::workload::DesignPoint;
+        let cfg = ExploreConfig {
+            grid_w: 64,
+            grid_h: 32,
+            max_n: 1,
+            max_m: 2,
+            passes: 2,
+            ..Default::default()
+        };
+        let space = DesignSpace::from_explore(&cfg);
+        let cache = EvalCache::new();
+        let ctx = SweepContext::new(&cache, 1);
+        let mut r = Exhaustive.run(&space, &ctx).unwrap();
+        r.failures.push(FailRow {
+            workload: "lbm",
+            device: cfg.device.name,
+            design: DesignPoint::new(1, 2, 64, 32),
+            ddr: cfg.ddr,
+            passes: cfg.passes,
+            kind: FailKind::Panic,
+            error: "injected panic (fault plan)".to_string(),
+            attempts: 3,
+        });
+        let cmp = strategy_comparison(&[&r]);
+        let row = cmp.lines().nth(1).unwrap();
+        assert!(row.contains(" 1 "), "failed count in the row: {row}");
+        let sum = sweep_summary(&r);
+        assert!(sum.contains("1 quarantined"), "{sum}");
+        assert!(sum.contains("quarantined (1, 2)"), "{sum}");
+        assert!(sum.contains("panic after 3 attempts"), "{sum}");
+        assert!(sum.contains("injected panic (fault plan)"), "{sum}");
     }
 }

@@ -522,6 +522,12 @@ fn simulate(
     let mut stats = FastForwardStats::default();
     // period hypothesis carried across passes (verify-then-jump)
     let mut period_hint: Option<u64> = None;
+    // cooperative-cancellation cadence: loop iterations, not cycles
+    // (fast-forward jumps skip cycles but each jump is one iteration),
+    // so a deadline trips within ~4096 iterations either way.  Touches
+    // no simulation counters: the simulated machine is bit-identical
+    // with or without a deadline.
+    let mut iters: u64 = 0;
 
     for _pass in 0..passes {
         mem.arm_pass(pass_bytes);
@@ -545,6 +551,10 @@ fn simulate(
         let depth = design.depth as u64;
         let mut detector = Detector::new(fast, period_hint);
         while c.produced < groups_per_pass {
+            iters += 1;
+            if iters & 0xFFF == 0 {
+                crate::util::cancel::checkpoint();
+            }
             // steady phase: pipeline full, input still due
             if !detector.done && c.enabled >= depth && c.enabled < groups_per_pass {
                 if let Some(jump) = detector.observe(&mem, &c, groups_per_pass) {

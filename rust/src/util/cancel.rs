@@ -1,0 +1,189 @@
+//! Cooperative cancellation for long-running evaluations.
+//!
+//! A [`CancelToken`] carries a cancel flag and an optional deadline.
+//! The sweep supervisor installs one for the calling thread before an
+//! evaluation starts ([`install`]); the timing simulator's pass loop
+//! calls [`checkpoint`] periodically, which unwinds the thread with a
+//! [`Cancelled`] payload once the token trips.  The supervisor's
+//! `catch_unwind` recognizes the payload and converts it into
+//! [`Error::EvalTimeout`](crate::error::Error::EvalTimeout) — so
+//! `simulate` itself stays infallible and the uninstrumented path pays
+//! only a thread-local read per checkpoint interval.
+//!
+//! The unwind is raised with `resume_unwind`, which skips the panic
+//! hook: a cancelled evaluation does not spray a backtrace on stderr
+//! the way a real bug does.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Unwind payload distinguishing a cooperative cancellation from a
+/// genuine panic.  The supervisor downcasts to this type.
+#[derive(Debug)]
+pub struct Cancelled;
+
+/// A shared cancel flag with an optional wall-clock deadline.
+#[derive(Debug)]
+pub struct CancelToken {
+    cancelled: AtomicBool,
+    deadline: Option<Instant>,
+}
+
+impl CancelToken {
+    /// A token that only trips when [`CancelToken::cancel`] is called.
+    pub fn new() -> CancelToken {
+        CancelToken { cancelled: AtomicBool::new(false), deadline: None }
+    }
+
+    /// A token that additionally trips once `deadline` passes.
+    pub fn with_deadline(deadline: Instant) -> CancelToken {
+        CancelToken { cancelled: AtomicBool::new(false), deadline: Some(deadline) }
+    }
+
+    /// Trip the token (idempotent; safe from any thread — this is how
+    /// the stall watchdog cancels a hung evaluation).
+    pub fn cancel(&self) {
+        self.cancelled.store(true, Ordering::Relaxed);
+    }
+
+    /// `true` when the token has a deadline and it has passed — lets
+    /// the supervisor tell a deadline miss apart from an external
+    /// cancellation (the stall watchdog) after the unwind.
+    pub fn past_deadline(&self) -> bool {
+        self.deadline.is_some_and(|d| Instant::now() >= d)
+    }
+
+    /// `true` once cancelled explicitly or past the deadline.
+    pub fn is_cancelled(&self) -> bool {
+        if self.cancelled.load(Ordering::Relaxed) {
+            return true;
+        }
+        match self.deadline {
+            Some(d) if Instant::now() >= d => {
+                // latch, so later checks skip the clock read
+                self.cancelled.store(true, Ordering::Relaxed);
+                true
+            }
+            _ => false,
+        }
+    }
+}
+
+impl Default for CancelToken {
+    fn default() -> CancelToken {
+        CancelToken::new()
+    }
+}
+
+thread_local! {
+    static CURRENT: RefCell<Option<Arc<CancelToken>>> = const { RefCell::new(None) };
+}
+
+/// Uninstalls the thread's token when dropped, restoring the previous
+/// one — evaluations never nest tokens in practice, but the guard
+/// keeps `install` panic-safe (the unwind itself runs the drop).
+pub struct Guard {
+    prev: Option<Arc<CancelToken>>,
+}
+
+impl Drop for Guard {
+    fn drop(&mut self) {
+        CURRENT.with(|c| *c.borrow_mut() = self.prev.take());
+    }
+}
+
+/// Install `token` as the calling thread's cancellation token for the
+/// lifetime of the returned [`Guard`].
+pub fn install(token: Arc<CancelToken>) -> Guard {
+    CURRENT.with(|c| Guard { prev: c.borrow_mut().replace(token) })
+}
+
+/// The calling thread's current token, if one is installed.
+pub fn current() -> Option<Arc<CancelToken>> {
+    CURRENT.with(|c| c.borrow().clone())
+}
+
+/// Cancellation checkpoint: unwinds with a [`Cancelled`] payload when
+/// the installed token has tripped; free (one thread-local read) when
+/// no token is installed.  Placed inside the timing simulator's cycle
+/// loop — the only place an evaluation can spend unbounded time.
+#[inline]
+pub fn checkpoint() {
+    let tripped =
+        CURRENT.with(|c| c.borrow().as_ref().map_or(false, |t| t.is_cancelled()));
+    if tripped {
+        std::panic::resume_unwind(Box::new(Cancelled));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn token_trips_on_cancel_and_on_deadline() {
+        let t = CancelToken::new();
+        assert!(!t.is_cancelled());
+        t.cancel();
+        assert!(t.is_cancelled());
+
+        let past = CancelToken::with_deadline(Instant::now() - Duration::from_secs(1));
+        assert!(past.is_cancelled());
+        let future = CancelToken::with_deadline(Instant::now() + Duration::from_secs(3600));
+        assert!(!future.is_cancelled());
+    }
+
+    #[test]
+    fn checkpoint_is_a_noop_without_a_token() {
+        checkpoint(); // must not unwind
+        assert!(current().is_none());
+    }
+
+    #[test]
+    fn checkpoint_unwinds_with_the_cancelled_payload() {
+        let token = Arc::new(CancelToken::new());
+        token.cancel();
+        let caught = std::panic::catch_unwind(|| {
+            let _guard = install(token);
+            checkpoint();
+        })
+        .expect_err("tripped token must unwind");
+        assert!(caught.downcast_ref::<Cancelled>().is_some());
+        // the guard uninstalled the token during the unwind
+        assert!(current().is_none());
+        checkpoint();
+    }
+
+    #[test]
+    fn guard_restores_the_previous_token() {
+        let outer = Arc::new(CancelToken::new());
+        let inner = Arc::new(CancelToken::new());
+        let g1 = install(outer.clone());
+        {
+            let _g2 = install(inner.clone());
+            assert!(Arc::ptr_eq(&current().unwrap(), &inner));
+        }
+        assert!(Arc::ptr_eq(&current().unwrap(), &outer));
+        drop(g1);
+        assert!(current().is_none());
+    }
+
+    #[test]
+    fn cancel_is_visible_across_threads() {
+        let token = Arc::new(CancelToken::new());
+        let seen = {
+            let token = token.clone();
+            std::thread::spawn(move || {
+                token.cancel();
+                token.is_cancelled()
+            })
+            .join()
+            .unwrap()
+        };
+        assert!(seen);
+        assert!(token.is_cancelled());
+    }
+}

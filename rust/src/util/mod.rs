@@ -4,6 +4,7 @@
 //! primitives the project needs are implemented here (DESIGN.md §4,
 //! "offline-crate substitutions").
 
+pub mod cancel;
 pub mod lstsq;
 pub mod rng;
 pub mod stats;

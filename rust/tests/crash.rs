@@ -275,6 +275,82 @@ fn interrupted_then_resumed_matches_uninterrupted() {
     }
 }
 
+/// The fault-tolerance acceptance criterion: a sweep that quarantines
+/// a panicking point (journaling the fail record) and is then resumed
+/// with the fault removed converges to a `SweepResult` bit-identical
+/// to a sweep that never faulted, for every strategy — and the journal
+/// resolves the fail record in the fresh success row's favor.
+#[test]
+fn faulted_sweep_resumed_fault_free_converges_to_unfaulted() {
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    use spdx::coordinator::{Fault, FaultKind, FaultPlan, Supervisor};
+
+    let space = small_space("lbm");
+    for strategy in strategies() {
+        let tag = strategy.name().to_string();
+        // the reference: same strategy, no faults, fresh cache
+        let cache = EvalCache::new();
+        let ctx = SweepContext::new(&cache, 2);
+        let clean = strategy.run(&space, &ctx).unwrap();
+
+        // faulted run: (2, 2) panics on every attempt → quarantined
+        // after the retry budget, journaled as a fail record
+        let path = tmp(&format!("faulted_{tag}"));
+        let plan =
+            Arc::new(FaultPlan::new().with_fault(Fault::new(FaultKind::Panic).at_n(2).at_m(2)));
+        let sup = Supervisor::new()
+            .with_retries(1)
+            .with_backoff(Duration::ZERO)
+            .with_faults(plan);
+        let cache = EvalCache::new();
+        let writer =
+            JournalWriter::create(&path, strategy.name(), &space).unwrap().with_sync_every(1);
+        let ctx = SweepContext::new(&cache, 2).with_sink(&writer).with_supervisor(&sup);
+        let faulted = strategy.run(&space, &ctx).unwrap();
+        writer.finalize(&faulted).unwrap();
+        // hill climb may simply not visit the poisoned point; when it
+        // does, every strategy must survive and quarantine it
+        assert!(faulted.failures.len() <= 1, "{tag}");
+        assert_eq!(
+            faulted.evals.len() + faulted.failures.len() + faulted.skipped,
+            clean.evals.len() + clean.skipped,
+            "{tag}: the quarantined point costs a row, not the run"
+        );
+        for f in &faulted.failures {
+            assert_eq!((f.design.n, f.design.m), (2, 2), "{tag}");
+            assert_eq!(f.attempts, 2, "{tag}: initial attempt + one retry");
+        }
+
+        // the journal carries the quarantine across the restart
+        let partial = Journal::recover(&path).unwrap();
+        assert!(partial.complete(), "{tag}: quarantine does not block finalize");
+        assert_eq!(partial.failures.len(), faulted.failures.len(), "{tag}");
+        assert_eq!(partial.rows.len(), faulted.evals.len(), "{tag}");
+
+        // resume with the fault gone and nothing quarantined (what
+        // `dse resume --retry-failed` builds): bit-identical to clean
+        let cache = EvalCache::new();
+        let seeded = Session::from_journal(&partial).preload(&cache);
+        assert_eq!(seeded, partial.rows.len(), "{tag}");
+        let writer = JournalWriter::resume(&path, &partial).unwrap().with_sync_every(1);
+        let sup = Supervisor::new();
+        let ctx = SweepContext::new(&cache, 2).with_sink(&writer).with_supervisor(&sup);
+        let resumed = strategy.run(&space, &ctx).unwrap();
+        writer.finalize(&resumed).unwrap();
+        assert!(resumed.failures.is_empty(), "{tag}");
+        assert_results_identical(&clean, &resumed, &tag);
+
+        // the fresh success row resolved the journaled fail record
+        let final_journal = Journal::recover(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert!(final_journal.complete(), "{tag}");
+        assert!(final_journal.failures.is_empty(), "{tag}: fail resolved");
+        assert_eq!(final_journal.rows.len(), clean.evals.len(), "{tag}");
+    }
+}
+
 /// Satellite: `Session::merge` edge cases around journals.
 #[test]
 fn merge_of_finalized_and_in_progress_journals_dedupes() {
@@ -325,6 +401,7 @@ fn merge_refuses_mismatched_space_fingerprints() {
         params: Json::Obj(Vec::new()),
         space: base.clone(),
         rows: vec![],
+        failures: vec![],
     };
     for other in [
         DesignSpace { grids: vec![(64, 32)], ..base.clone() },
@@ -337,6 +414,7 @@ fn merge_refuses_mismatched_space_fingerprints() {
             params: Json::Obj(Vec::new()),
             space: other,
             rows: vec![],
+            failures: vec![],
         };
         let err = a.merge(&b).unwrap_err().to_string();
         assert!(err.contains("fingerprints differ"), "{err}");
@@ -347,6 +425,7 @@ fn merge_refuses_mismatched_space_fingerprints() {
         params: Json::Obj(Vec::new()),
         space: base,
         rows: vec![],
+        failures: vec![],
     };
     a.merge(&b).unwrap();
 }

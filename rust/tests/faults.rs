@@ -1,0 +1,308 @@
+//! The chaos suite: deterministic fault injection against the sweep
+//! supervisor.
+//!
+//! Every test drives a real sweep (real strategies, real worker pool,
+//! real journal) through a [`FaultPlan`] and checks the supervision
+//! contract from the outside:
+//!
+//! * a transient fault (panic, I/O error, delay) costs *retries*, not
+//!   rows — the sweep converges to the unfaulted result;
+//! * a persistent fault costs exactly one row (quarantine), never the
+//!   run;
+//! * a deadline cancels a hung evaluation cooperatively and the point
+//!   is requeued once before quarantine;
+//! * a sink fault degrades the journal to memory-only instead of
+//!   aborting;
+//! * replaying a faulted sweep with the same seed reproduces the same
+//!   failures and bit-identical surviving rows.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use spdx::coordinator::supervise::backoff_delay;
+use spdx::coordinator::{DegradingSink, Fault, FaultKind, FaultPlan, Supervisor};
+use spdx::dse::{
+    DesignSpace, EvalCache, Exhaustive, FailKind, FailRow, Journal,
+    JournalWriter, SearchStrategy, SweepContext, SweepResult,
+};
+use spdx::obs::Obs;
+use spdx::resource::STRATIX_V_5SGXEA7;
+
+fn small_space(workload: &'static str) -> DesignSpace {
+    DesignSpace {
+        workload,
+        grids: vec![(32, 16)],
+        max_n: 2,
+        max_m: 2,
+        devices: vec![&STRATIX_V_5SGXEA7],
+        ddr_variants: vec![Default::default()],
+        passes: 2,
+        latency: Default::default(),
+    }
+}
+
+fn tmp(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("spdx_faults_{tag}_{}.jnl", std::process::id()))
+}
+
+/// Keyed, comparable view of a result's rows (completion order is
+/// scheduling-dependent under a worker pool).
+fn row_bits(r: &SweepResult) -> Vec<(u32, u32, u64)> {
+    let mut v: Vec<(u32, u32, u64)> = r
+        .evals
+        .iter()
+        .map(|e| (e.design.n, e.design.m, e.perf_per_watt.to_bits()))
+        .collect();
+    v.sort();
+    v
+}
+
+fn fail_keys(failures: &[FailRow]) -> Vec<(u32, u32, &'static str, u32)> {
+    let mut v: Vec<(u32, u32, &'static str, u32)> = failures
+        .iter()
+        .map(|f| (f.design.n, f.design.m, f.kind.label(), f.attempts))
+        .collect();
+    v.sort();
+    v
+}
+
+/// Transient faults — a panic, a double I/O error, a short delay — are
+/// absorbed by the retry budget: zero quarantines, and the rows are
+/// bit-identical to a sweep that never faulted.
+#[test]
+fn transient_faults_are_retried_to_convergence() {
+    let space = small_space("jacobi");
+    let cache = EvalCache::new();
+    let clean = Exhaustive.run(&space, &SweepContext::new(&cache, 2)).unwrap();
+    assert_eq!(clean.evals.len(), 4);
+
+    let plan = Arc::new(
+        FaultPlan::new()
+            .with_fault(Fault::new(FaultKind::Panic).at_n(1).at_m(1).times(1))
+            .with_fault(Fault::new(FaultKind::IoError).at_n(2).at_m(1).times(2))
+            .with_fault(Fault::new(FaultKind::Delay(20)).at_n(1).at_m(2).times(1)),
+    );
+    let sup = Supervisor::new()
+        .with_retries(2)
+        .with_backoff(Duration::ZERO)
+        .with_seed(42)
+        .with_faults(plan);
+    let obs = Obs::new();
+    let cache = EvalCache::new();
+    let ctx = SweepContext::new(&cache, 2).with_obs(&obs).with_supervisor(&sup);
+    let faulted = Exhaustive.run(&space, &ctx).unwrap();
+
+    assert!(faulted.failures.is_empty(), "retries must absorb the faults");
+    assert_eq!(row_bits(&faulted), row_bits(&clean), "rows are bit-identical");
+    // one panic retry + two io-error retries (the delay only sleeps)
+    assert_eq!(obs.metrics.counter("sweep.retries").get(), 3);
+    assert_eq!(obs.metrics.counter("sweep.failed").get(), 0);
+}
+
+/// A point that panics on every attempt is quarantined after the
+/// budget — one lost row, the rest of the sweep untouched — and the
+/// journal records the fail row alongside the surviving rows.
+#[test]
+fn persistent_panic_costs_one_row_not_the_run() {
+    let space = small_space("lbm");
+    let path = tmp("poison");
+    let plan =
+        Arc::new(FaultPlan::new().with_fault(Fault::new(FaultKind::Panic).at_n(2).at_m(2)));
+    let sup = Supervisor::new()
+        .with_retries(2)
+        .with_backoff(Duration::ZERO)
+        .with_faults(plan);
+    let cache = EvalCache::new();
+    let writer =
+        JournalWriter::create(&path, "exhaustive", &space).unwrap().with_sync_every(1);
+    let ctx = SweepContext::new(&cache, 2).with_sink(&writer).with_supervisor(&sup);
+    let result = Exhaustive.run(&space, &ctx).unwrap();
+    writer.finalize(&result).unwrap();
+
+    assert_eq!(result.evals.len(), 3);
+    assert_eq!(result.failures.len(), 1);
+    let f = &result.failures[0];
+    assert_eq!((f.design.n, f.design.m), (2, 2));
+    assert_eq!(f.kind, FailKind::Panic);
+    assert_eq!(f.attempts, 3, "initial attempt + two retries");
+    assert!(f.error.contains("injected panic"), "{}", f.error);
+
+    let j = Journal::recover(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert!(j.complete());
+    assert_eq!(j.rows.len(), 3);
+    assert_eq!(j.failures.len(), 1);
+    assert_eq!((j.failures[0].design.n, j.failures[0].design.m), (2, 2));
+}
+
+/// A hung evaluation (10s injected delay) is cancelled at the deadline
+/// inside the cooperative checkpoint, requeued exactly once, then
+/// quarantined as a timeout.
+#[test]
+fn deadline_cancels_a_hung_evaluation_and_requeues_once() {
+    let space = small_space("wave");
+    let plan = Arc::new(
+        FaultPlan::new().with_fault(Fault::new(FaultKind::Delay(10_000)).at_n(2).at_m(2)),
+    );
+    let sup = Supervisor::new()
+        .with_retries(2)
+        .with_backoff(Duration::ZERO)
+        // generous deadline: honest evaluations of this space finish in
+        // milliseconds even in debug builds, only the injected 10s
+        // delay can trip it
+        .with_eval_timeout(Duration::from_secs(1))
+        .with_faults(plan);
+    let cache = EvalCache::new();
+    let ctx = SweepContext::new(&cache, 2).with_supervisor(&sup);
+    let t0 = std::time::Instant::now();
+    let result = Exhaustive.run(&space, &ctx).unwrap();
+    let dt = t0.elapsed();
+
+    assert_eq!(result.evals.len(), 3);
+    assert_eq!(result.failures.len(), 1);
+    let f = &result.failures[0];
+    assert_eq!(f.kind, FailKind::Timeout);
+    assert_eq!(f.attempts, 2, "a deadline miss is requeued exactly once");
+    assert!(f.error.contains("deadline"), "{}", f.error);
+    // two ~100ms deadlines, not two 10s sleeps
+    assert!(dt < Duration::from_secs(8), "deadline must cut the delay short: {dt:?}");
+}
+
+/// Without `keep_going` the supervisor is fail-fast: the exhausted
+/// point aborts the sweep with its job context, like the unsupervised
+/// path.
+#[test]
+fn fail_fast_aborts_with_the_faulted_point_in_the_error() {
+    let space = small_space("lbm");
+    let plan =
+        Arc::new(FaultPlan::new().with_fault(Fault::new(FaultKind::Panic).at_n(1).at_m(1)));
+    let sup = Supervisor::new()
+        .with_retries(0)
+        .with_backoff(Duration::ZERO)
+        .with_keep_going(false)
+        .with_faults(plan);
+    let cache = EvalCache::new();
+    let ctx = SweepContext::new(&cache, 2).with_supervisor(&sup);
+    let err = Exhaustive.run(&space, &ctx).unwrap_err().to_string();
+    assert!(err.contains("injected panic"), "{err}");
+    assert!(err.contains("n=1"), "job context names the point: {err}");
+}
+
+/// A sink fault mid-sweep degrades the journal to memory-only: the
+/// sweep still produces every row, the journal keeps only the prefix
+/// written before the fault, and the degradation is observable.
+#[test]
+fn sink_fault_degrades_the_journal_not_the_sweep() {
+    let space = small_space("blur");
+    let path = tmp("degrade");
+    let plan =
+        Arc::new(FaultPlan::new().with_fault(Fault::new(FaultKind::SinkError).times(1)));
+    let sup = Supervisor::new().with_backoff(Duration::ZERO).with_faults(plan);
+    let obs = Obs::new();
+    let cache = EvalCache::new();
+    let writer =
+        JournalWriter::create(&path, "exhaustive", &space).unwrap().with_sync_every(1);
+    let sink = DegradingSink::new(&writer)
+        .with_obs(&obs)
+        .with_faults(sup.faults().unwrap());
+    let ctx = SweepContext::new(&cache, 2)
+        .with_sink(&sink)
+        .with_obs(&obs)
+        .with_supervisor(&sup);
+    let result = Exhaustive.run(&space, &ctx).unwrap();
+
+    assert_eq!(result.evals.len(), 4, "the sweep kept all its rows");
+    assert!(result.failures.is_empty());
+    assert!(sink.is_degraded());
+    assert_eq!(obs.metrics.gauge("sweep.sink_degraded").get(), 1);
+    // the degraded journal is left unfinalized (the CLI skips the
+    // finalize record for exactly this case) so a resume can fill it
+    let j = Journal::recover(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert!(!j.complete());
+    assert!(j.rows.len() < result.evals.len(), "rows after the fault are missing");
+}
+
+/// Pre-quarantined content addresses fail instantly — no evaluation,
+/// no retries — with an error that points at `--retry-failed`.
+#[test]
+fn seeded_quarantine_skips_the_point_without_evaluating() {
+    let space = small_space("jacobi");
+    // learn the poisoned point's content address from a faulted run
+    let plan =
+        Arc::new(FaultPlan::new().with_fault(Fault::new(FaultKind::Panic).at_n(2).at_m(1)));
+    let sup = Supervisor::new()
+        .with_retries(0)
+        .with_backoff(Duration::ZERO)
+        .with_faults(plan);
+    let cache = EvalCache::new();
+    let first = Exhaustive
+        .run(&space, &SweepContext::new(&cache, 2).with_supervisor(&sup))
+        .unwrap();
+    assert_eq!(first.failures.len(), 1);
+    let key = first.failures[0].key(space.latency);
+
+    let sup = Supervisor::new().with_quarantine([key]);
+    assert_eq!(sup.quarantined(), 1);
+    let cache = EvalCache::new();
+    let result = Exhaustive
+        .run(&space, &SweepContext::new(&cache, 2).with_supervisor(&sup))
+        .unwrap();
+    assert_eq!(result.evals.len(), 3);
+    assert_eq!(result.failures.len(), 1);
+    let f = &result.failures[0];
+    assert_eq!((f.design.n, f.design.m), (2, 1));
+    assert_eq!(f.attempts, 0, "a quarantined point is never attempted");
+    assert!(f.error.contains("--retry-failed"), "{}", f.error);
+    assert_eq!(cache.stats().misses, 3, "only the live points evaluated");
+}
+
+/// The replay guarantee: the same fault plan under the same seed
+/// produces the same failures (points, kinds, attempt counts) and
+/// bit-identical surviving rows, run after run.
+#[test]
+fn faulted_sweeps_replay_bit_identically() {
+    let run_once = || {
+        let space = small_space("lbm");
+        let plan = Arc::new(
+            FaultPlan::new()
+                .with_fault(Fault::new(FaultKind::Panic).at_n(2).at_m(2))
+                .with_fault(Fault::new(FaultKind::IoError).at_n(1).at_m(1).times(1)),
+        );
+        let sup = Supervisor::new()
+            .with_retries(1)
+            .with_backoff(Duration::from_millis(1))
+            .with_seed(7)
+            .with_faults(plan);
+        let cache = EvalCache::new();
+        let r = Exhaustive
+            .run(&space, &SweepContext::new(&cache, 2).with_supervisor(&sup))
+            .unwrap();
+        (row_bits(&r), fail_keys(&r.failures).into_iter().map(
+            |(n, m, k, a)| (n, m, k.to_string(), a)).collect::<Vec<_>>())
+    };
+    let a = run_once();
+    let b = run_once();
+    assert_eq!(a, b, "replays must agree exactly");
+    assert_eq!(a.1, vec![(2, 2, "panic".to_string(), 2)]);
+}
+
+/// The backoff schedule is a pure function of (base, seed, job hash,
+/// retry ordinal): exponential growth with jitter in [0.5, 1.0), and
+/// deterministic across calls.
+#[test]
+fn backoff_schedule_is_deterministic_and_bounded() {
+    let base = Duration::from_millis(32);
+    for retry in 1..=4u32 {
+        let d = backoff_delay(base, 11, 0xfeed, retry);
+        assert_eq!(d, backoff_delay(base, 11, 0xfeed, retry), "replay");
+        let exp = base * (1u32 << (retry - 1));
+        assert!(d >= exp / 2 && d < exp, "retry {retry}: {d:?} vs {exp:?}");
+    }
+    assert_eq!(backoff_delay(Duration::ZERO, 11, 0xfeed, 1), Duration::ZERO);
+    // different seeds and jobs draw different jitter (overwhelmingly)
+    assert_ne!(
+        backoff_delay(base, 11, 0xfeed, 1),
+        backoff_delay(base, 12, 0xbeef, 1)
+    );
+}
