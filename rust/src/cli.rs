@@ -21,7 +21,7 @@ use crate::dse::json as dse_json;
 use crate::dse::{
     ddr_by_name, space_fingerprint, strategy_by_name, BoundedPrune, DesignSpace,
     EvalCache, Exhaustive, HillClimb, Journal, JournalWriter, SearchStrategy,
-    Session, SweepContext, DDR_VARIANT_NAMES,
+    Session, Store, StorePaths, StoreScope, SweepContext, DDR_VARIANT_NAMES,
 };
 use crate::error::{Error, Result};
 use crate::explore::{evaluate, ExploreConfig};
@@ -126,7 +126,7 @@ COMMANDS:
               [--ddr NAME[,NAME...]] [--max-n N] [--max-m M] [--passes P]
               [--min-util X] [--seed S] [--restarts R] [--workers K]
               [--session FILE] [--journal FILE] [--sync-every N]
-              [--sync-interval SECS]
+              [--sync-interval SECS] [--cache local|global|off]
               [--bench [FILE]] [--trace FILE] [--metrics FILE]
               [--metrics-every SECS] [--events FILE]
               [--listen ADDR] [--stall-after SECS]
@@ -175,7 +175,14 @@ COMMANDS:
                                            evaluation exceeding SECS and
                                            requeues it once; --fault-plan
                                            injects the deterministic faults
-                                           described in FILE (chaos testing)
+                                           described in FILE (chaos testing);
+                                           --cache shares evaluations across
+                                           processes through an on-disk
+                                           content-addressed store (local =
+                                           ./.dse-cache, global =
+                                           $DSE_CACHE_DIR or ~/.dse-cache;
+                                           default off) — a second sweep over
+                                           the same space recomputes nothing
   dse explain <workload> <n> <m> [--grid WxH] [--device KEY] [--ddr NAME]
               [--passes P] [--json]        evaluate one design point and print
                                            its full diagnosis: exact cycle
@@ -184,7 +191,7 @@ COMMANDS:
                                            position and bottleneck verdict
                                            (--json for the machine form)
   dse resume  --session FILE | --journal FILE  [--retry-failed]
-              [space/strategy/telemetry flags]
+              [--cache local|global|off] [space/strategy/telemetry flags]
                                            reload a session — or recover a
                                            (possibly torn) journal — and finish
                                            the sweep without recomputing its
@@ -748,6 +755,95 @@ fn sweep_obs(args: &Args) -> Result<SweepObs> {
     })
 }
 
+/// Parse `--cache [local|global|off]` and open the persistent store
+/// for `space`.  An I/O failure (unwritable directory, missing HOME)
+/// warns and degrades to the in-memory path so the sweep still runs;
+/// corruption or a schema-version mismatch is a named refusal, exactly
+/// like the journal's — the data survives for a human to look at.
+fn sweep_store(
+    args: &Args,
+    space: &DesignSpace,
+    so: &SweepObs,
+) -> Result<Option<Arc<Store>>> {
+    let scope = match args.flag("cache") {
+        None | Some("off") => return Ok(None),
+        Some("local") => StoreScope::Local,
+        Some("global") => StoreScope::Global,
+        Some("true") => {
+            return Err(Error::Explore(
+                "--cache needs a scope argument: local, global or off".into(),
+            ))
+        }
+        Some(other) => {
+            return Err(Error::Explore(format!(
+                "bad value for --cache: `{other}` (want local, global or off)"
+            )))
+        }
+    };
+    match Store::open(scope, space) {
+        Ok(store) => {
+            let store = Arc::new(store);
+            println!(
+                "  persistent store: {} rows preloaded from {}",
+                store.stats().preloaded,
+                store.paths().data.display()
+            );
+            if let Some(obs) = &so.obs {
+                obs.absorb_store(&store);
+                obs.event(
+                    "cache-preload",
+                    vec![
+                        ("source", dse_json::str("store")),
+                        ("rows", dse_json::uint(store.stats().preloaded)),
+                    ],
+                );
+            }
+            Ok(Some(store))
+        }
+        Err(Error::Io(err)) => {
+            eprintln!(
+                "warning: persistent store unavailable ({err}); continuing \
+                 in-memory only"
+            );
+            if let Some(obs) = &so.obs {
+                obs.metrics.gauge("store.degraded").set(1);
+            }
+            Ok(None)
+        }
+        Err(err) => Err(err),
+    }
+}
+
+/// Build the sweep's cache, with the persistent store attached as its
+/// backing tier when `--cache` selected one.
+fn sweep_cache(store: &Option<Arc<Store>>) -> Arc<EvalCache> {
+    Arc::new(match store {
+        Some(s) => EvalCache::new().with_store(Arc::clone(s)),
+        None => EvalCache::new(),
+    })
+}
+
+/// End-of-sweep store bookkeeping: persist rows the store has not seen
+/// (session/journal-preloaded ones never went through the evaluation
+/// path) and print the reuse summary.
+fn finish_store(
+    store: &Option<Arc<Store>>,
+    rows: &[Arc<crate::explore::Evaluation>],
+    so: &SweepObs,
+) {
+    let Some(store) = store else { return };
+    store.absorb(rows, so.obs.as_deref());
+    let st = store.stats();
+    println!(
+        "  store: {} hits, {} rows appended ({} rows for this space in {}){}",
+        st.hits,
+        st.appended,
+        st.rows,
+        store.paths().data.display(),
+        if st.degraded { " [degraded]" } else { "" }
+    );
+}
+
 /// The live plane behind `--listen` / `--metrics-every` /
 /// `--stall-after`: scrape server, periodic snapshot writer, stall
 /// watchdog.  All three are background reader threads over the shared
@@ -766,14 +862,22 @@ impl LivePlane {
         id: report::SweepIdentity,
         cache: &Arc<EvalCache>,
         journal: Option<&Arc<JournalWriter>>,
+        store: Option<&Arc<Store>>,
     ) -> Result<LivePlane> {
         let server = match &so.listen {
             None => None,
             Some(addr) => {
                 let (obs2, cache2) = (Arc::clone(obs), Arc::clone(cache));
                 let journal2 = journal.cloned();
+                let store2 = store.cloned();
                 let status: crate::obs::serve::StatusFn = Arc::new(move || {
-                    report::status_json(&id, &obs2, &cache2, journal2.as_deref())
+                    report::status_json(
+                        &id,
+                        &obs2,
+                        &cache2,
+                        journal2.as_deref(),
+                        store2.as_deref(),
+                    )
                 });
                 let server = ObsServer::start(addr, Arc::clone(obs), status)?;
                 eprintln!(
@@ -840,13 +944,14 @@ fn flush_partial(so: &SweepObs, err: Error) -> Error {
     err
 }
 
-/// Flush the telemetry sinks once the sweep is done: mirror the cache
-/// and journal counters into the registry, close the trace, write the
-/// metrics snapshot, print the phase profile.
+/// Flush the telemetry sinks once the sweep is done: mirror the cache,
+/// journal and store counters into the registry, close the trace,
+/// write the metrics snapshot, print the phase profile.
 fn finish_obs(
     so: &SweepObs,
     cache: &EvalCache,
     journal: Option<&JournalWriter>,
+    store: Option<&Store>,
     workers: usize,
     candidates: usize,
 ) -> Result<()> {
@@ -856,6 +961,9 @@ fn finish_obs(
     obs.absorb_cache(cache);
     if let Some(w) = journal {
         obs.absorb_journal(w);
+    }
+    if let Some(s) = store {
+        obs.absorb_store(s);
     }
     obs.metrics.gauge("sweep.workers").set(workers as i64);
     obs.metrics.gauge("sweep.candidates").set(candidates as i64);
@@ -912,7 +1020,8 @@ fn dse_sweep_body(args: &Args, so: &SweepObs) -> Result<i32> {
     )?;
     let sync_every: usize = args.get("sync-every", 0)?;
     let sync_interval = secs_flag(args, "sync-interval")?;
-    let cache = Arc::new(EvalCache::new());
+    let store = sweep_store(args, &space, so)?;
+    let cache = sweep_cache(&store);
     let journal = match file_flag(args, "journal")? {
         Some(path) => {
             // refuse to truncate an interrupted journal: the natural
@@ -994,6 +1103,7 @@ fn dse_sweep_body(args: &Args, so: &SweepObs) -> Result<i32> {
             },
             &cache,
             journal.as_ref(),
+            store.as_ref(),
         )?),
         None => None,
     };
@@ -1016,6 +1126,7 @@ fn dse_sweep_body(args: &Args, so: &SweepObs) -> Result<i32> {
         "  wall time {dt:.2}s on {} workers ({cold_rate:.0} evals/sec)",
         ctx.workers
     );
+    finish_store(&store, &result.evals, so);
     if let Some(path) = args.flag("bench") {
         let path = if path == "true" { "BENCH_dse.json" } else { path };
         // warm re-sweep through the same cache: pure-reuse throughput,
@@ -1027,6 +1138,32 @@ fn dse_sweep_body(args: &Args, so: &SweepObs) -> Result<i32> {
         println!(
             "  warm re-sweep {dt_warm:.3}s ({warm_rate:.0} evals/sec, {} cache hits)",
             warm.cache_hits
+        );
+        // store-warm re-sweep: what a *new process* sharing a
+        // persistent store sees — a fresh in-memory cache, every row
+        // served from the on-disk index.  Runs against a private
+        // throwaway store dir so the numbers never depend on (or
+        // pollute) a real `--cache` scope.
+        let bench_dir = std::env::temp_dir()
+            .join(format!("spdx_bench_store_{}", std::process::id()));
+        std::fs::remove_dir_all(&bench_dir).ok();
+        let bench_paths = StorePaths::in_dir(&bench_dir);
+        let seeder = Store::open_at(bench_paths.clone(), &space)?;
+        seeder.append_all(&result.evals)?;
+        drop(seeder);
+        let disk = Arc::new(Store::open_at(bench_paths, &space)?);
+        let cache2 = Arc::new(EvalCache::new().with_store(Arc::clone(&disk)));
+        let ctx2 = SweepContext::new(&cache2, ctx.workers);
+        let t2 = std::time::Instant::now();
+        let store_warm = strategy.run(&space, &ctx2)?;
+        let dt_store = t2.elapsed().as_secs_f64();
+        let store_rate = throughput(store_warm.evals.len(), dt_store);
+        let store_hits = disk.stats().hits;
+        std::fs::remove_dir_all(&bench_dir).ok();
+        println!(
+            "  store-warm re-sweep {dt_store:.3}s ({store_rate:.0} evals/sec, \
+             {store_hits} store hits, {} fresh evaluations)",
+            store_warm.evaluated
         );
         let bench = dse_json::obj(vec![
             ("version", dse_json::uint(2)),
@@ -1048,6 +1185,14 @@ fn dse_sweep_body(args: &Args, so: &SweepObs) -> Result<i32> {
                     ("seconds", dse_json::num(dt_warm)),
                     ("cache_hits", dse_json::uint(warm.cache_hits)),
                     ("evals_per_sec", dse_json::num(warm_rate)),
+                ]),
+            ),
+            (
+                "store_warm",
+                dse_json::obj(vec![
+                    ("seconds", dse_json::num(dt_store)),
+                    ("store_hits", dse_json::uint(store_hits)),
+                    ("evals_per_sec", dse_json::num(store_rate)),
                 ]),
             ),
             ("speedup", dse_json::num(dt / dt_warm.max(1e-9))),
@@ -1096,7 +1241,14 @@ fn dse_sweep_body(args: &Args, so: &SweepObs) -> Result<i32> {
     if let Some(plane) = &mut plane {
         plane.shutdown();
     }
-    finish_obs(so, &cache, journal.as_deref(), ctx.workers, space.len())?;
+    finish_obs(
+        so,
+        &cache,
+        journal.as_deref(),
+        store.as_deref(),
+        ctx.workers,
+        space.len(),
+    )?;
     Ok(0)
 }
 
@@ -1132,7 +1284,8 @@ fn resume_session(args: &Args, so: &SweepObs, path: &str) -> Result<i32> {
     // resume replays the same hill-climb / prune search
     let (strategy, params) =
         dse_strategy_with_params(args, &strategy_name, &prior.params)?;
-    let cache = Arc::new(EvalCache::new());
+    let store = sweep_store(args, &space, so)?;
+    let cache = sweep_cache(&store);
     let loaded = prior.preload(&cache);
     // quarantined points stay quarantined across resumes — they fail
     // instantly with their recorded reason — unless `--retry-failed`
@@ -1179,6 +1332,7 @@ fn resume_session(args: &Args, so: &SweepObs, path: &str) -> Result<i32> {
             },
             &cache,
             None,
+            store.as_ref(),
         )?),
         None => None,
     };
@@ -1208,6 +1362,7 @@ fn resume_session(args: &Args, so: &SweepObs, path: &str) -> Result<i32> {
         "  reuse: {} answered from the session, {} recomputed",
         result.cache_hits, result.evaluated
     );
+    finish_store(&store, &result.evals, so);
     let mut merged = prior;
     merged.strategy = result.strategy.to_string();
     merged.params = params;
@@ -1231,7 +1386,7 @@ fn resume_session(args: &Args, so: &SweepObs, path: &str) -> Result<i32> {
     if let Some(plane) = &mut plane {
         plane.shutdown();
     }
-    finish_obs(so, &cache, None, ctx.workers, space.len())?;
+    finish_obs(so, &cache, None, store.as_deref(), ctx.workers, space.len())?;
     Ok(0)
 }
 
@@ -1253,7 +1408,8 @@ fn resume_journal(args: &Args, so: &SweepObs, path: &str) -> Result<i32> {
         dse_strategy_with_params(args, &strategy_name, &prior.params)?;
     let sync_every: usize = args.get("sync-every", 0)?;
     let sync_interval = secs_flag(args, "sync-interval")?;
-    let cache = Arc::new(EvalCache::new());
+    let store = sweep_store(args, &space, so)?;
+    let cache = sweep_cache(&store);
     let loaded = Session::from_journal(&prior).preload(&cache);
     let mut supervisor = sweep_supervisor(args)?;
     if args.flag("retry-failed").is_none() {
@@ -1354,6 +1510,7 @@ fn resume_journal(args: &Args, so: &SweepObs, path: &str) -> Result<i32> {
             },
             &cache,
             Some(&writer),
+            store.as_ref(),
         )?),
         None => None,
     };
@@ -1385,6 +1542,7 @@ fn resume_journal(args: &Args, so: &SweepObs, path: &str) -> Result<i32> {
         "  reuse: {} answered from the journal, {} recomputed",
         result.cache_hits, result.evaluated
     );
+    finish_store(&store, &result.evals, so);
     if sink.is_degraded() {
         eprintln!(
             "warning: journal degraded mid-sweep; NOT finalizing {path} \
@@ -1413,7 +1571,14 @@ fn resume_journal(args: &Args, so: &SweepObs, path: &str) -> Result<i32> {
     if let Some(plane) = &mut plane {
         plane.shutdown();
     }
-    finish_obs(so, &cache, Some(&writer), ctx.workers, space.len())?;
+    finish_obs(
+        so,
+        &cache,
+        Some(&writer),
+        store.as_deref(),
+        ctx.workers,
+        space.len(),
+    )?;
     Ok(0)
 }
 
@@ -1768,6 +1933,13 @@ mod tests {
         assert!(cold.field("evals_per_sec").unwrap().as_f64().unwrap() > 0.0);
         assert!(warm.field("evals_per_sec").unwrap().as_f64().unwrap() > 0.0);
         assert_eq!(warm.field("cache_hits").unwrap().as_u64().unwrap(), 4);
+        // the cross-process warm path: a fresh cache served entirely
+        // from a throwaway on-disk store, zero fresh evaluations
+        let store_warm = b.field("store_warm").unwrap();
+        assert_eq!(store_warm.field("store_hits").unwrap().as_u64().unwrap(), 4);
+        assert!(
+            store_warm.field("evals_per_sec").unwrap().as_f64().unwrap() > 0.0
+        );
         assert!(b.field("speedup").unwrap().as_f64().unwrap() > 0.0);
         // v2: the phase breakdown rides along (4 cold evaluations, the
         // warm cache hits don't touch the phase histograms)
@@ -1780,6 +1952,35 @@ mod tests {
             let max = st.field("max_ns").unwrap().as_u64().unwrap();
             assert!(p50 <= p95 && p95 <= max, "{phase}: {p50} {p95} {max}");
         }
+    }
+
+    #[test]
+    fn dse_sweep_cache_flag_is_validated() {
+        let sweep = |cache: &str| {
+            run(vec![
+                "dse".into(),
+                "sweep".into(),
+                "--grids".into(),
+                "64x32".into(),
+                "--max-n".into(),
+                "1".into(),
+                "--max-m".into(),
+                "1".into(),
+                "--passes".into(),
+                "2".into(),
+                "--cache".into(),
+                cache.into(),
+            ])
+        };
+        let err = sweep("bogus").unwrap_err().to_string();
+        assert!(err.contains("--cache"), "{err}");
+        assert!(err.contains("bogus"), "{err}");
+        // a bare `--cache` (parsed as the valueless "true") names the
+        // missing scope instead of silently picking one
+        let err = sweep("true").unwrap_err().to_string();
+        assert!(err.contains("scope"), "{err}");
+        // `off` is the explicit spelling of the default
+        assert_eq!(sweep("off").unwrap(), 0);
     }
 
     #[test]

@@ -14,6 +14,11 @@ pub struct RunMetrics {
     pub failed: usize,
     /// per-job wall seconds, indexed by job id (0.0 = not finished)
     pub job_seconds: Vec<f64>,
+    /// rows answered by the persistent on-disk store during this batch
+    /// (0 when no store is attached to the cache)
+    pub store_hits: u64,
+    /// store probes that fell through to a real evaluation
+    pub store_misses: u64,
     /// per-phase wall-time histograms (ns), fed from the observer's
     /// [`PhaseTimes`]; empty when the batch ran uninstrumented (the
     /// bare path takes no phase timestamps)
@@ -28,6 +33,8 @@ impl RunMetrics {
             feasible: 0,
             failed: 0,
             job_seconds: vec![0.0; jobs],
+            store_hits: 0,
+            store_misses: 0,
             phases: PhaseHistograms::default(),
         }
     }
@@ -119,6 +126,9 @@ mod tests {
         assert_eq!(m.failed, 0);
         assert_eq!(m.total_seconds(), 3.0);
         assert_eq!(m.slowest_job(), Some((2, 2.0)));
+        // store counters are deltas the batch collector fills in; a
+        // storeless run leaves them zero
+        assert_eq!((m.store_hits, m.store_misses), (0, 0));
     }
 
     #[test]

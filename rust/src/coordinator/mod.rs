@@ -126,6 +126,7 @@ pub fn evaluate_batch_supervised(
 ) -> Result<BatchOutcome> {
     let n_jobs = jobs.len();
     let mut metrics = RunMetrics::new(n_jobs);
+    let store_before = cache.and_then(|c| c.store()).map(|s| s.stats());
     let next = AtomicUsize::new(0);
     type Row = (
         usize,
@@ -238,6 +239,13 @@ pub fn evaluate_batch_supervised(
             }
         }
     });
+    if let (Some(before), Some(store)) =
+        (store_before, cache.and_then(|c| c.store()))
+    {
+        let now = store.stats();
+        metrics.store_hits = now.hits.saturating_sub(before.hits);
+        metrics.store_misses = now.misses.saturating_sub(before.misses);
+    }
     if let Some(err) = first_err {
         return Err(err);
     }

@@ -20,6 +20,8 @@ use crate::obs::{Obs, PhaseTimes};
 use crate::sim::DdrConfig;
 use crate::workload::{self, DesignPoint};
 
+use super::store::Store;
+
 /// Full content address of one evaluation.  Float parameters are
 /// compared bit-exactly (`to_bits`), which is the right equality for
 /// "same computation": a DDR model differing in any parameter is a
@@ -134,8 +136,14 @@ impl Shard {
 /// per-shard atomic hit/miss counters.  Rows are stored behind `Arc`,
 /// so a hit hands back a pointer instead of cloning the full
 /// evaluation.
+///
+/// With [`EvalCache::with_store`] a persistent [`Store`] backs the
+/// in-memory tiers: memory misses fall through to the store's on-disk
+/// index before evaluating, and fresh evaluations are written through
+/// so later processes start warm.
 pub struct EvalCache {
     shards: [Shard; SHARDS],
+    store: Option<Arc<Store>>,
 }
 
 impl Default for EvalCache {
@@ -146,7 +154,21 @@ impl Default for EvalCache {
 
 impl EvalCache {
     pub fn new() -> Self {
-        EvalCache { shards: std::array::from_fn(|_| Shard::new()) }
+        EvalCache {
+            shards: std::array::from_fn(|_| Shard::new()),
+            store: None,
+        }
+    }
+
+    /// Attach a persistent store as the tier behind the in-memory map.
+    pub fn with_store(mut self, store: Arc<Store>) -> Self {
+        self.store = Some(store);
+        self
+    }
+
+    /// The attached persistent store, if any.
+    pub fn store(&self) -> Option<&Arc<Store>> {
+        self.store.as_ref()
     }
 
     fn shard(&self, key: &CacheKey) -> &Shard {
@@ -184,8 +206,14 @@ impl EvalCache {
 
     /// [`EvalCache::evaluate`] with per-phase telemetry.  The returned
     /// [`PhaseTimes`] are `Some` exactly when a real evaluation ran —
-    /// `None` means the cache answered — which is how the batch
+    /// `None` means a cache tier answered — which is how the batch
     /// collector discriminates `evaluated` from `cache_hits` rows.
+    ///
+    /// With a store attached the tiers are: in-memory shard map, then
+    /// the store's on-disk index (a disk answer seeds the shard map and
+    /// counts as a cache hit — no fresh evaluation ran — plus a store
+    /// hit on the store's own counters), then a real evaluation whose
+    /// row is written through to the store.
     pub fn evaluate_phased(
         &self,
         design: &DesignPoint,
@@ -193,13 +221,36 @@ impl EvalCache {
         obs: Option<&Obs>,
     ) -> Result<(Arc<Evaluation>, Option<PhaseTimes>)> {
         let key = CacheKey::new(design, cfg);
-        if let Some(hit) = self.lookup(&key) {
+        let shard = self.shard(&key);
+        let found = shard.map.lock().unwrap().get(&key).cloned();
+        if let Some(hit) = found {
+            shard.hits.fetch_add(1, Ordering::Relaxed);
             return Ok((hit, None));
         }
+        if let Some(store) = &self.store {
+            if let Some(row) = store.lookup(&key) {
+                shard.hits.fetch_add(1, Ordering::Relaxed);
+                shard.map.lock().unwrap().insert(key, row.clone());
+                if let Some(o) = obs {
+                    o.metrics.add("store.hits", 1);
+                    if let Some(p) = &o.progress {
+                        p.add_store(1);
+                    }
+                }
+                return Ok((row, None));
+            }
+            if let Some(o) = obs {
+                o.metrics.add("store.misses", 1);
+            }
+        }
+        shard.misses.fetch_add(1, Ordering::Relaxed);
         let wl = workload::get(cfg.workload)?;
         let (e, times) = evaluate_with_phased(wl, design, cfg, obs)?;
         let e = Arc::new(e);
         self.seed(key, e.clone());
+        if let Some(store) = &self.store {
+            store.write_through(&e, obs);
+        }
         Ok((e, Some(times)))
     }
 
@@ -344,6 +395,39 @@ mod tests {
         assert_eq!(shards.iter().map(|s| s.hits).sum::<u64>(), total.hits);
         assert_eq!(shards.iter().map(|s| s.misses).sum::<u64>(), total.misses);
         assert_eq!(shards.iter().map(|s| s.entries).sum::<usize>(), total.entries);
+    }
+
+    #[test]
+    fn store_tier_answers_memory_misses_and_write_through_persists() {
+        use crate::dse::{DesignSpace, Store, StorePaths};
+        let paths = StorePaths::in_dir(std::env::temp_dir().join(format!(
+            "spdx_cache_store_{}",
+            std::process::id()
+        )));
+        std::fs::remove_dir_all(&paths.dir).ok();
+        let c = cfg();
+        let space = DesignSpace::from_explore(&c);
+        let d = DesignPoint::new(1, 1, 64, 32);
+        {
+            let store = Arc::new(Store::open_at(paths.clone(), &space).unwrap());
+            let cache = EvalCache::new().with_store(store.clone());
+            // miss → real evaluation → written through to disk
+            cache.evaluate(&d, &c).unwrap();
+            assert_eq!(store.stats().appended, 1);
+            assert_eq!(cache.stats().misses, 1);
+        }
+        // a fresh process: empty memory, warm disk
+        let store = Arc::new(Store::open_at(paths.clone(), &space).unwrap());
+        let cache = EvalCache::new().with_store(store.clone());
+        let (_, times) = cache.evaluate_phased(&d, &c, None).unwrap();
+        assert!(times.is_none(), "a store hit must not report phase times");
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (1, 0));
+        assert_eq!(store.stats().hits, 1);
+        // the row is now memory-resident: the store is not probed again
+        cache.evaluate(&d, &c).unwrap();
+        assert_eq!(store.stats().hits, 1);
+        std::fs::remove_dir_all(&paths.dir).ok();
     }
 
     #[test]

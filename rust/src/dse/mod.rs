@@ -24,7 +24,10 @@
 //!   handing out `Arc`ed rows, so the worker pool neither serializes
 //!   on one lock nor clones evaluations on hits), and serialized to
 //!   JSON session files across processes (`dse sweep --session`,
-//!   `dse resume`);
+//!   `dse resume`), and — with `--cache local|global` — shared
+//!   implicitly through the on-disk content-addressed [`Store`]
+//!   ([`store`]), so a second process over the same space starts warm
+//!   without naming any file;
 //! * **crash safety** ([`journal`]) — an append-only row log
 //!   ([`JournalWriter`] as the sweep's [`RowSink`]) persists every
 //!   evaluation as it completes, fsync'd in batches; recovery
@@ -61,6 +64,7 @@ pub mod journal;
 pub mod json;
 pub mod session;
 pub mod space;
+pub mod store;
 pub mod strategy;
 
 pub use cache::{CacheKey, CacheStats, EvalCache};
@@ -69,6 +73,10 @@ pub use journal::{
     space_fingerprint, FinalizeRecord, Journal, JournalWriter, RowSink,
 };
 pub use session::Session;
+pub use store::{
+    Store, StorePaths, StoreScope, StoreStats, STORE_DIR_ENV,
+    STORE_SCHEMA_VERSION,
+};
 pub use space::{ddr_by_name, Candidate, DesignSpace, DDR_VARIANT_NAMES};
 pub use strategy::{
     strategy_by_name, BoundedPrune, Exhaustive, HillClimb, SearchStrategy,

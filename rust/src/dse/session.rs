@@ -328,7 +328,7 @@ pub(crate) fn decode_space(v: &Json) -> Result<DesignSpace> {
     })
 }
 
-fn encode_latency(l: OpLatency) -> Json {
+pub(crate) fn encode_latency(l: OpLatency) -> Json {
     json::obj(vec![
         ("add", json::uint(l.add as u64)),
         ("mul", json::uint(l.mul as u64)),
@@ -337,7 +337,7 @@ fn encode_latency(l: OpLatency) -> Json {
     ])
 }
 
-fn decode_latency(v: &Json) -> Result<OpLatency> {
+pub(crate) fn decode_latency(v: &Json) -> Result<OpLatency> {
     Ok(OpLatency {
         add: v.field("add")?.as_u32()?,
         mul: v.field("mul")?.as_u32()?,

@@ -1,0 +1,753 @@
+//! Persistent cross-process evaluation store: an on-disk,
+//! content-addressed cache shared between sweeps.
+//!
+//! The in-memory [`EvalCache`](super::EvalCache) dies with its process;
+//! sessions and journals persist rows but must be named explicitly per
+//! run.  The store is the implicit third tier: a newline-delimited JSON
+//! file of evaluation rows, content-addressed by the *same* identity
+//! the journal uses (FNV space fingerprint + [`CacheKey`] parts), that
+//! every `--cache`-enabled sweep reads on open and appends to as
+//! evaluations complete — so the second process over the same space
+//! starts warm and computes nothing.
+//!
+//! File format (`store.ndjson`, newline-delimited JSON):
+//!
+//! ```text
+//! {"record":"header","version":1}                     // once, first
+//! {"record":"row","fingerprint":"9f2c...",
+//!  "latency":{"add":6,"mul":4,"div":10,"sqrt":16},
+//!  "data":{...session row encoding...}}               // one per evaluation
+//! ```
+//!
+//! One store file holds rows from *many* spaces: each row carries its
+//! space fingerprint and operator latencies, and a handle opened for a
+//! given [`DesignSpace`] indexes only the rows whose fingerprint
+//! matches (foreign rows are syntax-checked and skipped).  The content
+//! address of an indexed row is its [`CacheKey`] — exactly what
+//! [`super::session::row_key`] computes — so the store, the session,
+//! and the journal can never disagree on row identity.
+//!
+//! **Concurrency.**  Multiple processes (and a future `dse serve`)
+//! share one store through a `create_new` lock file next to the data
+//! file: the lock is held while loading on open, and per batch while
+//! appending.  An appender first *catches up* — incrementally parsing
+//! whatever other processes appended since its last scan, deduplicating
+//! by content address — then writes only the rows still missing, and
+//! fsyncs.  A lock older than [`LOCK_STALE`] is presumed leaked by a
+//! dead process and stolen.
+//!
+//! **Recovery** reuses the journal's discipline: a compact JSON object
+//! has no valid strict prefix, so a malformed final line *without* its
+//! newline is exactly a torn tail (a crash mid-append) — it is
+//! truncated away under the lock and the store is the records before
+//! it.  A malformed record anywhere else is real corruption and open
+//! refuses it with a named error, destroying nothing.  A header with an
+//! out-of-range [`STORE_SCHEMA_VERSION`] is likewise refused, the file
+//! left untouched, so a newer build's store is never clobbered.
+//!
+//! **Degradation.**  The store is an accelerator, not a correctness
+//! layer: once opened, any append failure flips the handle into a
+//! degraded in-memory-only mode (warn once, `store.degraded` gauge)
+//! rather than failing the sweep.
+
+use std::collections::HashMap;
+use std::fs::{self, File, OpenOptions};
+use std::io::{ErrorKind, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::dfg::OpLatency;
+use crate::error::{Error, Result};
+use crate::explore::Evaluation;
+use crate::obs::Obs;
+
+use super::cache::CacheKey;
+use super::journal::space_fingerprint;
+use super::json::{self, Json};
+use super::session::{
+    decode_latency, decode_row, encode_latency, encode_row, row_key,
+};
+use super::space::DesignSpace;
+
+/// Version of the on-disk record schema.  Bump when the row encoding
+/// changes incompatibly; open refuses files outside
+/// [`STORE_MIN_VERSION`]`..=`[`STORE_SCHEMA_VERSION`] without touching
+/// them.
+pub const STORE_SCHEMA_VERSION: u64 = 1;
+
+/// Oldest store schema this build still reads.
+pub const STORE_MIN_VERSION: u64 = 1;
+
+/// Environment variable overriding the [`StoreScope::Global`] directory.
+pub const STORE_DIR_ENV: &str = "DSE_CACHE_DIR";
+
+/// How long an acquirer retries the lock file before giving up.
+const LOCK_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Delay between lock acquisition attempts.
+const LOCK_RETRY: Duration = Duration::from_millis(2);
+
+/// A lock file older than this is presumed leaked by a dead process
+/// (locks are held for milliseconds) and stolen.
+const LOCK_STALE: Duration = Duration::from_secs(30);
+
+/// Where a store lives: alongside the repo, or shared machine-wide.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StoreScope {
+    /// `./.dse-cache` relative to the working directory — private to
+    /// one checkout.
+    Local,
+    /// `$DSE_CACHE_DIR`, else `$HOME/.dse-cache` — shared by every
+    /// sweep the user runs.
+    Global,
+}
+
+impl StoreScope {
+    /// Resolve the scope's directory.  Fails (with an I/O `NotFound`,
+    /// which the CLI treats as "degrade, don't abort") only when
+    /// `Global` has neither `$DSE_CACHE_DIR` nor `$HOME` to anchor to.
+    pub fn dir(&self) -> Result<PathBuf> {
+        match self {
+            StoreScope::Local => Ok(PathBuf::from(".dse-cache")),
+            StoreScope::Global => {
+                if let Some(dir) = std::env::var_os(STORE_DIR_ENV) {
+                    if !dir.is_empty() {
+                        return Ok(PathBuf::from(dir));
+                    }
+                }
+                match std::env::var_os("HOME") {
+                    Some(home) if !home.is_empty() => {
+                        Ok(PathBuf::from(home).join(".dse-cache"))
+                    }
+                    _ => Err(Error::Io(std::io::Error::new(
+                        ErrorKind::NotFound,
+                        format!(
+                            "global store: neither {STORE_DIR_ENV} nor \
+                             HOME is set"
+                        ),
+                    ))),
+                }
+            }
+        }
+    }
+}
+
+/// The three paths a store occupies.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StorePaths {
+    /// Directory holding the store (created on open).
+    pub dir: PathBuf,
+    /// The newline-delimited JSON data file.
+    pub data: PathBuf,
+    /// The `create_new` lock file guarding cross-process access.
+    pub lock: PathBuf,
+}
+
+impl StorePaths {
+    /// Lay out a store inside `dir`.
+    pub fn in_dir(dir: impl Into<PathBuf>) -> StorePaths {
+        let dir = dir.into();
+        StorePaths {
+            data: dir.join("store.ndjson"),
+            lock: dir.join("store.lock"),
+            dir,
+        }
+    }
+
+    /// Lay out the store for a scope (see [`StoreScope::dir`]).
+    pub fn for_scope(scope: StoreScope) -> Result<StorePaths> {
+        Ok(StorePaths::in_dir(scope.dir()?))
+    }
+}
+
+/// Counter snapshot for reports and `/status`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StoreStats {
+    /// Lookups answered from the store's index.
+    pub hits: u64,
+    /// Lookups the store could not answer.
+    pub misses: u64,
+    /// Rows loaded from disk (at open, plus rows other processes
+    /// appended that a catch-up scan absorbed).
+    pub preloaded: u64,
+    /// Rows this handle appended to disk.
+    pub appended: u64,
+    /// Rows currently indexed for this handle's space.
+    pub rows: usize,
+    /// Whether an append failure switched the handle to in-memory-only.
+    pub degraded: bool,
+}
+
+struct Inner {
+    /// Content address → row, for this handle's space fingerprint only.
+    index: HashMap<CacheKey, Arc<Evaluation>>,
+    /// Byte offset up to which the data file has been parsed.  The file
+    /// only ever grows by whole records under the lock (torn tails are
+    /// truncated before any record beyond them is counted), so bytes
+    /// past this offset are exactly the records appended since.
+    scan_offset: u64,
+}
+
+/// A handle on the on-disk store, opened for one design space.
+///
+/// The handle is `Sync`: lookups and write-through appends come from
+/// every worker thread of a sweep.  Lookups are index-only (one short
+/// mutex hold); appends take the cross-process lock file.
+pub struct Store {
+    paths: StorePaths,
+    fingerprint: String,
+    latency: OpLatency,
+    inner: Mutex<Inner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    preloaded: AtomicU64,
+    appended: AtomicU64,
+    degraded: AtomicBool,
+}
+
+impl Store {
+    /// Open (creating if absent) the store for `scope`, indexing the
+    /// rows matching `space`'s fingerprint.
+    pub fn open(scope: StoreScope, space: &DesignSpace) -> Result<Store> {
+        Store::open_at(StorePaths::for_scope(scope)?, space)
+    }
+
+    /// Open the store at explicit paths (tests, benches).
+    pub fn open_at(paths: StorePaths, space: &DesignSpace) -> Result<Store> {
+        fs::create_dir_all(&paths.dir)?;
+        let fingerprint = space_fingerprint(space);
+        let latency = space.latency;
+        let lock = LockFile::acquire(&paths.lock)?;
+        let loaded = load_locked(&paths, &fingerprint);
+        drop(lock);
+        let (index, scan_offset) = loaded?;
+        let preloaded = index.len() as u64;
+        Ok(Store {
+            paths,
+            fingerprint,
+            latency,
+            inner: Mutex::new(Inner { index, scan_offset }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            preloaded: AtomicU64::new(preloaded),
+            appended: AtomicU64::new(0),
+            degraded: AtomicBool::new(false),
+        })
+    }
+
+    pub fn paths(&self) -> &StorePaths {
+        &self.paths
+    }
+
+    pub fn fingerprint(&self) -> &str {
+        &self.fingerprint
+    }
+
+    /// Look up a content address in the index.  Counts a store hit or
+    /// miss either way.
+    pub fn lookup(&self, key: &CacheKey) -> Option<Arc<Evaluation>> {
+        let found = self.inner.lock().unwrap().index.get(key).cloned();
+        match &found {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        found
+    }
+
+    /// Append `row` unless its content address is already on disk.
+    /// Takes the cross-process lock, absorbs rows other processes
+    /// appended meanwhile, writes, fsyncs.
+    pub fn append(&self, row: &Arc<Evaluation>) -> Result<usize> {
+        self.append_all(std::slice::from_ref(row))
+    }
+
+    /// Append every row of `rows` not already on disk under one lock
+    /// acquisition.  Returns how many were actually written.
+    pub fn append_all(&self, rows: &[Arc<Evaluation>]) -> Result<usize> {
+        if self.degraded.load(Ordering::Relaxed) {
+            return Ok(0);
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let _lock = LockFile::acquire(&self.paths.lock)?;
+        let mut file =
+            OpenOptions::new().read(true).write(true).open(&self.paths.data)?;
+        self.catch_up_locked(&mut file, &mut inner)?;
+        file.seek(SeekFrom::End(0))?;
+        let mut fresh = 0usize;
+        for row in rows {
+            let key = row_key(row, self.latency);
+            if inner.index.contains_key(&key) {
+                continue;
+            }
+            let record = json::obj(vec![
+                ("record", json::str("row")),
+                ("fingerprint", json::str(&self.fingerprint)),
+                ("latency", encode_latency(self.latency)),
+                ("data", encode_row(row)),
+            ]);
+            write_record(&mut file, &record)?;
+            inner.index.insert(key, Arc::clone(row));
+            fresh += 1;
+        }
+        if fresh > 0 {
+            file.sync_data()?;
+            self.appended.fetch_add(fresh as u64, Ordering::Relaxed);
+        }
+        inner.scan_offset = file.seek(SeekFrom::End(0))?;
+        Ok(fresh)
+    }
+
+    /// [`append`](Store::append) that cannot fail the sweep: an error
+    /// degrades the handle to in-memory-only (warn once, gauge) and
+    /// evaluation continues.
+    pub fn write_through(&self, row: &Arc<Evaluation>, obs: Option<&Obs>) {
+        if let Err(err) = self.append(row) {
+            self.degrade(&err, obs);
+        }
+    }
+
+    /// Batch [`write_through`](Store::write_through): persist every
+    /// missing row of a finished sweep (rows answered by a session or
+    /// journal preload never went through the evaluation path, so this
+    /// is what makes them shared).  Returns how many were written.
+    pub fn absorb(&self, rows: &[Arc<Evaluation>], obs: Option<&Obs>) -> usize {
+        match self.append_all(rows) {
+            Ok(fresh) => fresh,
+            Err(err) => {
+                self.degrade(&err, obs);
+                0
+            }
+        }
+    }
+
+    /// Flip into degraded in-memory-only mode (idempotent; warns on the
+    /// first transition only).
+    pub fn degrade(&self, err: &Error, obs: Option<&Obs>) {
+        if !self.degraded.swap(true, Ordering::Relaxed) {
+            eprintln!(
+                "warning: persistent store {} degraded ({err}); \
+                 continuing in-memory only",
+                self.paths.data.display()
+            );
+        }
+        if let Some(o) = obs {
+            o.metrics.gauge("store.degraded").set(1);
+        }
+    }
+
+    pub fn is_degraded(&self) -> bool {
+        self.degraded.load(Ordering::Relaxed)
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        StoreStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            preloaded: self.preloaded.load(Ordering::Relaxed),
+            appended: self.appended.load(Ordering::Relaxed),
+            rows: self.inner.lock().unwrap().index.len(),
+            degraded: self.degraded.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Parse records appended (by other processes) since the last scan,
+    /// repairing a torn tail if one process died mid-append.  Caller
+    /// holds both the inner mutex and the lock file.
+    fn catch_up_locked(&self, file: &mut File, inner: &mut Inner) -> Result<()> {
+        let len = file.seek(SeekFrom::End(0))?;
+        if len < inner.scan_offset {
+            return Err(Error::Explore(format!(
+                "store {}: file shrank below the scanned prefix \
+                 (externally modified)",
+                self.paths.data.display()
+            )));
+        }
+        if len == inner.scan_offset {
+            return Ok(());
+        }
+        file.seek(SeekFrom::Start(inner.scan_offset))?;
+        let mut bytes = Vec::new();
+        file.read_to_end(&mut bytes)?;
+        let outcome = scan_records(
+            &self.paths.data,
+            &bytes,
+            inner.scan_offset,
+            true,
+            &self.fingerprint,
+            &mut inner.index,
+        )?;
+        if outcome.loaded > 0 {
+            self.preloaded.fetch_add(outcome.loaded, Ordering::Relaxed);
+        }
+        if outcome.intact < len {
+            file.set_len(outcome.intact)?;
+        }
+        inner.scan_offset = ensure_trailing_newline(file, outcome.intact)?;
+        Ok(())
+    }
+}
+
+/// Load the full data file under the lock: create a fresh header if the
+/// file is empty, otherwise parse it, repair a torn tail, and index the
+/// matching rows.  Returns the index and the end-of-intact-data offset.
+fn load_locked(
+    paths: &StorePaths,
+    fingerprint: &str,
+) -> Result<(HashMap<CacheKey, Arc<Evaluation>>, u64)> {
+    let mut file = OpenOptions::new()
+        .read(true)
+        .write(true)
+        .create(true)
+        .open(&paths.data)?;
+    let mut bytes = Vec::new();
+    file.read_to_end(&mut bytes)?;
+    if bytes.is_empty() {
+        let header = json::obj(vec![
+            ("record", json::str("header")),
+            ("version", json::uint(STORE_SCHEMA_VERSION)),
+        ]);
+        write_record(&mut file, &header)?;
+        file.sync_data()?;
+        let end = file.seek(SeekFrom::End(0))?;
+        return Ok((HashMap::new(), end));
+    }
+    let mut index = HashMap::new();
+    let outcome =
+        scan_records(&paths.data, &bytes, 0, false, fingerprint, &mut index)?;
+    if !outcome.seen_header {
+        // only a torn tail survived: like the journal, refuse to guess
+        // what a headerless file was (destroying nothing)
+        return Err(Error::Explore(format!(
+            "store {}: no intact header record (empty or truncated before \
+             the first fsync)",
+            paths.data.display()
+        )));
+    }
+    if outcome.intact < bytes.len() as u64 {
+        file.set_len(outcome.intact)?;
+    }
+    let end = ensure_trailing_newline(&mut file, outcome.intact)?;
+    Ok((index, end))
+}
+
+struct ScanOutcome {
+    /// Absolute offset of the end of the last intact record.
+    intact: u64,
+    /// Whether a header record was parsed (always true mid-file scans).
+    seen_header: bool,
+    /// Matching rows inserted into the index by this scan.
+    loaded: u64,
+}
+
+/// The journal's recovery loop, applied to store records: parse
+/// newline-delimited records from `bytes` (which starts at absolute
+/// file offset `base`), indexing rows whose fingerprint matches
+/// `ours`.  A malformed final line without its newline is the torn
+/// tail and ends the scan; a malformed record anywhere else is
+/// corruption and the scan refuses it.
+fn scan_records(
+    path: &Path,
+    bytes: &[u8],
+    base: u64,
+    mut seen_header: bool,
+    ours: &str,
+    index: &mut HashMap<CacheKey, Arc<Evaluation>>,
+) -> Result<ScanOutcome> {
+    let mut pos = 0usize;
+    let mut intact = 0usize;
+    let mut loaded = 0u64;
+    while pos < bytes.len() {
+        let newline = bytes[pos..].iter().position(|&b| b == b'\n');
+        let (content_end, next) = match newline {
+            Some(i) => (pos + i, pos + i + 1),
+            None => (bytes.len(), bytes.len()),
+        };
+        let is_torn_tail = next >= bytes.len() && newline.is_none();
+        let record = std::str::from_utf8(&bytes[pos..content_end])
+            .map_err(|e| Error::Explore(e.to_string()))
+            .and_then(Json::parse)
+            .and_then(|v| decode_store_record(&v, ours));
+        match record {
+            Ok(StoreRecord::Header) => {
+                if seen_header {
+                    return Err(Error::Explore(format!(
+                        "store {}: duplicate header record at byte {}",
+                        path.display(),
+                        base + pos as u64
+                    )));
+                }
+                seen_header = true;
+            }
+            Ok(StoreRecord::Row(row)) => {
+                if !seen_header {
+                    return Err(Error::Explore(format!(
+                        "store {}: row record before the header",
+                        path.display()
+                    )));
+                }
+                if let Some((key, e)) = row {
+                    // last write wins: identical addresses carry
+                    // identical rows, so this only matters after a
+                    // superseding retry
+                    index.insert(key, Arc::new(e));
+                    loaded += 1;
+                }
+            }
+            Err(e) => {
+                if is_torn_tail {
+                    break;
+                }
+                return Err(Error::Explore(format!(
+                    "store {}: corrupt record at byte {}: {e}",
+                    path.display(),
+                    base + pos as u64
+                )));
+            }
+        }
+        intact = next;
+        pos = next;
+    }
+    Ok(ScanOutcome {
+        intact: base + intact as u64,
+        seen_header,
+        loaded,
+    })
+}
+
+enum StoreRecord {
+    Header,
+    /// A row record; `None` when its fingerprint belongs to a different
+    /// space (syntax-checked but not indexed).
+    Row(Option<(CacheKey, Evaluation)>),
+}
+
+fn decode_store_record(v: &Json, ours: &str) -> Result<StoreRecord> {
+    match v.field("record")?.as_str()? {
+        "header" => {
+            let version = v.field("version")?.as_u64()?;
+            if !(STORE_MIN_VERSION..=STORE_SCHEMA_VERSION).contains(&version) {
+                return Err(Error::Explore(format!(
+                    "store schema version {version} unsupported \
+                     (want {STORE_MIN_VERSION}..={STORE_SCHEMA_VERSION})"
+                )));
+            }
+            Ok(StoreRecord::Header)
+        }
+        "row" => {
+            let fingerprint = v.field("fingerprint")?.as_str()?;
+            if fingerprint != ours {
+                return Ok(StoreRecord::Row(None));
+            }
+            let latency = decode_latency(v.field("latency")?)?;
+            let row = decode_row(v.field("data")?)?;
+            let key = row_key(&row, latency);
+            Ok(StoreRecord::Row(Some((key, row))))
+        }
+        other => {
+            Err(Error::Explore(format!("store: unknown record `{other}`")))
+        }
+    }
+}
+
+/// After truncating to `end`, guarantee the intact data ends with a
+/// newline (a parseable-but-unterminated final record is accepted by
+/// the scan; appending straight after it would corrupt).  Returns the
+/// final end-of-data offset, with the file positioned there.
+fn ensure_trailing_newline(file: &mut File, end: u64) -> Result<u64> {
+    if end == 0 {
+        file.seek(SeekFrom::Start(0))?;
+        return Ok(0);
+    }
+    file.seek(SeekFrom::Start(end - 1))?;
+    let mut last = [0u8; 1];
+    file.read_exact(&mut last)?;
+    if last[0] != b'\n' {
+        file.write_all(b"\n")?;
+        return Ok(end + 1);
+    }
+    Ok(end)
+}
+
+fn write_record(file: &mut File, record: &Json) -> Result<()> {
+    let mut line = record.to_string();
+    line.push('\n');
+    file.write_all(line.as_bytes())?;
+    Ok(())
+}
+
+/// RAII cross-process lock: a `create_new` file that exists while held.
+/// Creation is atomic on every platform std supports, so exactly one
+/// process holds the lock; dropping removes it.
+struct LockFile {
+    path: PathBuf,
+}
+
+impl LockFile {
+    fn acquire(path: &Path) -> Result<LockFile> {
+        let deadline = Instant::now() + LOCK_TIMEOUT;
+        loop {
+            match OpenOptions::new().write(true).create_new(true).open(path) {
+                Ok(mut file) => {
+                    // advisory: who holds it, for humans inspecting a
+                    // stuck store
+                    let _ = writeln!(file, "{}", std::process::id());
+                    return Ok(LockFile { path: path.to_path_buf() });
+                }
+                Err(e) if e.kind() == ErrorKind::AlreadyExists => {
+                    if lock_is_stale(path) {
+                        let _ = fs::remove_file(path);
+                        continue;
+                    }
+                    if Instant::now() >= deadline {
+                        return Err(Error::Explore(format!(
+                            "store: lock file {} held for over {}s — \
+                             another sweep may be stuck; delete the lock \
+                             file to force access",
+                            path.display(),
+                            LOCK_TIMEOUT.as_secs()
+                        )));
+                    }
+                    std::thread::sleep(LOCK_RETRY);
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+}
+
+impl Drop for LockFile {
+    fn drop(&mut self) {
+        let _ = fs::remove_file(&self.path);
+    }
+}
+
+fn lock_is_stale(path: &Path) -> bool {
+    match fs::metadata(path).and_then(|m| m.modified()) {
+        Ok(modified) => match modified.elapsed() {
+            Ok(age) => age > LOCK_STALE,
+            Err(_) => false,
+        },
+        Err(_) => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explore::{evaluate, ExploreConfig};
+    use crate::workload::DesignPoint;
+
+    fn cfg() -> ExploreConfig {
+        ExploreConfig {
+            grid_w: 32,
+            grid_h: 16,
+            max_n: 2,
+            max_m: 2,
+            passes: 2,
+            ..Default::default()
+        }
+    }
+
+    fn tmp(tag: &str) -> StorePaths {
+        StorePaths::in_dir(std::env::temp_dir().join(format!(
+            "spdx_store_unit_{tag}_{}",
+            std::process::id()
+        )))
+    }
+
+    fn cleanup(paths: &StorePaths) {
+        std::fs::remove_dir_all(&paths.dir).ok();
+    }
+
+    #[test]
+    fn paths_lay_out_dir_data_and_lock() {
+        let p = StorePaths::in_dir("/x/y");
+        assert_eq!(p.dir, PathBuf::from("/x/y"));
+        assert_eq!(p.data, PathBuf::from("/x/y/store.ndjson"));
+        assert_eq!(p.lock, PathBuf::from("/x/y/store.lock"));
+        assert_eq!(StoreScope::Local.dir().unwrap(), PathBuf::from(".dse-cache"));
+    }
+
+    #[test]
+    fn roundtrips_rows_across_handles() {
+        let paths = tmp("roundtrip");
+        cleanup(&paths);
+        let c = cfg();
+        let space = DesignSpace::from_explore(&c);
+        let row = Arc::new(
+            evaluate(&DesignPoint { n: 1, m: 1, w: 32, h: 16 }, &c).unwrap(),
+        );
+        let key = row_key(&row, space.latency);
+        {
+            let store = Store::open_at(paths.clone(), &space).unwrap();
+            assert!(store.lookup(&key).is_none());
+            assert_eq!(store.append(&row).unwrap(), 1);
+            // second append of the same content address is a no-op
+            assert_eq!(store.append(&row).unwrap(), 0);
+            assert_eq!(store.stats().appended, 1);
+        }
+        let store = Store::open_at(paths.clone(), &space).unwrap();
+        assert_eq!(store.stats().preloaded, 1);
+        let got = store.lookup(&key).expect("persisted row");
+        assert_eq!(got.perf_per_watt.to_bits(), row.perf_per_watt.to_bits());
+        assert_eq!(store.stats().hits, 1);
+        cleanup(&paths);
+    }
+
+    #[test]
+    fn foreign_fingerprint_rows_are_skipped_not_refused() {
+        let paths = tmp("foreign");
+        cleanup(&paths);
+        let c = cfg();
+        let space = DesignSpace::from_explore(&c);
+        let other = DesignSpace::from_explore(&ExploreConfig {
+            passes: 3,
+            ..cfg()
+        });
+        let row = Arc::new(
+            evaluate(&DesignPoint { n: 1, m: 1, w: 32, h: 16 }, &c).unwrap(),
+        );
+        Store::open_at(paths.clone(), &space).unwrap().append(&row).unwrap();
+        // an open for a different space sees the file, indexes nothing
+        let store = Store::open_at(paths.clone(), &other).unwrap();
+        assert_eq!(store.stats().rows, 0);
+        assert_eq!(store.stats().preloaded, 0);
+        cleanup(&paths);
+    }
+
+    #[test]
+    fn stale_lock_is_stolen_and_fresh_lock_waits() {
+        let paths = tmp("lock");
+        cleanup(&paths);
+        std::fs::create_dir_all(&paths.dir).unwrap();
+        // a leftover lock from a live process blocks acquisition...
+        std::fs::write(&paths.lock, b"12345\n").unwrap();
+        assert!(!lock_is_stale(&paths.lock));
+        // ...but both handles proceed once it is released
+        std::fs::remove_file(&paths.lock).unwrap();
+        let l = LockFile::acquire(&paths.lock).unwrap();
+        assert!(paths.lock.exists());
+        drop(l);
+        assert!(!paths.lock.exists());
+        cleanup(&paths);
+    }
+
+    #[test]
+    fn global_scope_honours_the_env_override() {
+        // the only test anywhere in the lib crate that touches the env
+        // var, so no lock is needed against parallel test threads
+        let dir = std::env::temp_dir()
+            .join(format!("spdx_store_env_{}", std::process::id()));
+        std::env::set_var(STORE_DIR_ENV, &dir);
+        assert_eq!(StoreScope::Global.dir().unwrap(), dir);
+        std::env::remove_var(STORE_DIR_ENV);
+        // without the override, global anchors under HOME (set in any
+        // sane CI); if HOME is absent the error must name the fix
+        match StoreScope::Global.dir() {
+            Ok(p) => assert!(p.ends_with(".dse-cache")),
+            Err(e) => assert!(e.to_string().contains(STORE_DIR_ENV)),
+        }
+    }
+}

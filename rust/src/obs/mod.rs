@@ -441,6 +441,21 @@ impl Obs {
         self.metrics.counter("journal.fsyncs").set(writer.fsyncs());
     }
 
+    /// Mirror the persistent store's counters.  Like
+    /// [`Obs::absorb_cache`], `set` not `add`: the store keeps the
+    /// canonical atomics (which the hot path also increments live via
+    /// `store.hits`/`store.misses`), this reconciles the registry with
+    /// them.
+    pub fn absorb_store(&self, store: &crate::dse::Store) {
+        let s = store.stats();
+        self.metrics.counter("store.hits").set(s.hits);
+        self.metrics.counter("store.misses").set(s.misses);
+        self.metrics.counter("store.preloaded").set(s.preloaded);
+        self.metrics.counter("store.appended").set(s.appended);
+        self.metrics.gauge("store.rows").set(s.rows as i64);
+        self.metrics.gauge("store.degraded").set(s.degraded as i64);
+    }
+
     /// Stats of the whole-evaluation latency histogram (real
     /// evaluations only; cache hits are not latencies of interest).
     pub fn eval_stats(&self) -> HistStats {

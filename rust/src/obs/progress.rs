@@ -17,6 +17,9 @@ pub struct Progress {
     /// points that failed (quarantined) rather than evaluated — shown
     /// on the line only when nonzero, so healthy sweeps look the same
     failed: AtomicU64,
+    /// rows answered by the persistent on-disk store — like `failed`,
+    /// a tail shown only when nonzero
+    store: AtomicU64,
     /// minimum seconds between lines
     every: f64,
     state: Mutex<ProgressState>,
@@ -35,6 +38,7 @@ impl Progress {
             total: AtomicU64::new(0),
             done: AtomicU64::new(0),
             failed: AtomicU64::new(0),
+            store: AtomicU64::new(0),
             every: every_secs.max(0.0),
             state: Mutex::new(ProgressState {
                 started: Instant::now(),
@@ -62,6 +66,17 @@ impl Progress {
 
     pub fn failed(&self) -> u64 {
         self.failed.load(Ordering::Relaxed)
+    }
+
+    /// Count `n` candidates as answered by the persistent store (they
+    /// also [`Progress::advance`] as cache hits — this only feeds the
+    /// `N from store` tail of the line).
+    pub fn add_store(&self, n: u64) {
+        self.store.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn store_hits(&self) -> u64 {
+        self.store.load(Ordering::Relaxed)
     }
 
     /// Count `n` candidates as handled (evaluated, cache-answered, or
@@ -109,10 +124,14 @@ impl Progress {
             0 => String::new(),
             n => format!(", {n} failed"),
         };
+        let store = match self.store.load(Ordering::Relaxed) {
+            0 => String::new(),
+            n => format!(", {n} from store"),
+        };
         let _ = writeln!(
             std::io::stderr(),
             "sweep: {done}/{total} ({pct:.0}%), {rate:.0} evals/sec{cache}, \
-             ETA {eta}{failed}"
+             ETA {eta}{failed}{store}"
         );
     }
 }
@@ -138,6 +157,9 @@ mod tests {
         assert_eq!(p.failed(), 0);
         p.add_failed(2);
         assert_eq!(p.failed(), 2);
+        assert_eq!(p.store_hits(), 0);
+        p.add_store(3);
+        assert_eq!(p.store_hits(), 3);
     }
 
     #[test]

@@ -607,13 +607,15 @@ pub struct SweepIdentity {
 /// Assemble the `/status` document from the live handles: sweep
 /// identity, progress (done / total / rate / ETA, from the registry's
 /// row counters), cache hit rate, the per-worker in-flight board, and
-/// — when a journal is attached — its fsync lag.  Every number is
-/// read fresh, so each scrape sees a consistent "now".
+/// — when attached — the journal's fsync lag and the persistent
+/// store's hit/preload counters.  Every number is read fresh, so each
+/// scrape sees a consistent "now".
 pub fn status_json(
     id: &SweepIdentity,
     obs: &Obs,
     cache: &EvalCache,
     journal: Option<&JournalWriter>,
+    store: Option<&crate::dse::Store>,
 ) -> Json {
     let rows = obs.metrics.counter("sweep.rows").get();
     let skipped = obs.metrics.counter("sweep.skipped").get();
@@ -674,6 +676,20 @@ pub fn status_json(
         ]),
         None => Json::Null,
     };
+    let store_json = match store {
+        Some(s) => {
+            let st = s.stats();
+            json::obj(vec![
+                ("hits", json::uint(st.hits)),
+                ("misses", json::uint(st.misses)),
+                ("preloaded", json::uint(st.preloaded)),
+                ("appended", json::uint(st.appended)),
+                ("rows", json::uint(st.rows as u64)),
+                ("degraded", Json::Bool(st.degraded)),
+            ])
+        }
+        None => Json::Null,
+    };
     // live stall-attribution aggregate: cumulative bucket cycles and
     // bottleneck tallies over the rows evaluated so far (accumulated
     // by the coordinator's drain loop)
@@ -715,6 +731,7 @@ pub fn status_json(
         ("cache", cache_json),
         ("workers", workers),
         ("journal", journal_json),
+        ("store", store_json),
         ("attribution", attribution),
     ])
 }
@@ -819,7 +836,15 @@ mod tests {
             fingerprint: space_fingerprint(&space),
             candidates: space.len(),
         };
-        let status = status_json(&id, &obs, &cache, Some(&writer));
+        let store_paths = crate::dse::StorePaths::in_dir(
+            std::env::temp_dir()
+                .join(format!("spdx_status_store_{}", std::process::id())),
+        );
+        std::fs::remove_dir_all(&store_paths.dir).ok();
+        let store =
+            crate::dse::Store::open_at(store_paths.clone(), &space).unwrap();
+        let status = status_json(&id, &obs, &cache, Some(&writer), Some(&store));
+        std::fs::remove_dir_all(&store_paths.dir).ok();
         drop(writer);
         std::fs::remove_file(&path).ok();
         // round-trips through text (what /status actually serves)
@@ -841,6 +866,10 @@ mod tests {
         assert!(cache_json.field("hit_rate").unwrap().as_f64().is_ok());
         let journal = parsed.field("journal").unwrap();
         assert_eq!(journal.field("rows").unwrap().as_u64().unwrap(), 2);
+        let store_json = parsed.field("store").unwrap();
+        assert_eq!(store_json.field("hits").unwrap().as_u64().unwrap(), 0);
+        assert_eq!(store_json.field("rows").unwrap().as_u64().unwrap(), 0);
+        assert_eq!(store_json.field("degraded").unwrap(), &Json::Bool(false));
         let attribution = parsed.field("attribution").unwrap();
         assert!(attribution.field("rows").unwrap().as_u64().is_ok());
         assert!(attribution
@@ -863,11 +892,12 @@ mod tests {
             w.field("busy").unwrap() == &Json::Bool(false)
                 && w.field("inflight_age_ns").unwrap().as_u64().unwrap() == 0
         }));
-        // without a journal the field is null, and an idle obs yields
-        // a null ETA instead of dividing by zero
+        // without a journal or store the fields are null, and an idle
+        // obs yields a null ETA instead of dividing by zero
         let idle = Obs::new();
-        let empty = status_json(&id, &idle, &EvalCache::new(), None);
+        let empty = status_json(&id, &idle, &EvalCache::new(), None, None);
         assert_eq!(empty.field("journal").unwrap(), &Json::Null);
+        assert_eq!(empty.field("store").unwrap(), &Json::Null);
         assert_eq!(
             empty.field("progress").unwrap().field("eta_sec").unwrap(),
             &Json::Null

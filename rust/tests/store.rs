@@ -1,0 +1,595 @@
+//! Concurrency, corruption and equivalence battery for the persistent
+//! cross-process evaluation store (`dse::store`).
+//!
+//! The store's contract is the journal's, plus sharing:
+//!
+//! 1. **no lost or duplicated rows** — independent handles racing
+//!    appends over one directory serialize through the lock file and
+//!    converge to exactly one record per content address
+//!    (`concurrent_handles_race_appends_without_losing_or_duplicating_rows`);
+//! 2. **recovery is exact** — for *every* truncation point of the data
+//!    file, open keeps precisely the records fully inside the prefix,
+//!    bit-identically, repairing only the torn tail
+//!    (`recovery_at_every_byte_boundary_keeps_the_intact_prefix`);
+//! 3. **corruption is refused, not repaired** — newline-terminated
+//!    garbage, unknown record kinds, rows before the header, duplicate
+//!    headers, and out-of-range schema versions all fail open with a
+//!    named error and the file untouched;
+//! 4. **the store is an accelerator** — a vanished directory degrades
+//!    the handle to in-memory-only mid-sweep (gauge raised, sweep
+//!    intact), and a sweep through the store is bit-identical to one
+//!    without, with a second cold process recomputing nothing;
+//! 5. **quarantine is honored** — a `FailRow` identity is never
+//!    persisted as a success; a later fault-free retry supersedes it
+//!    and the third process reads it from disk.
+
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+use spdx::coordinator::{Fault, FaultKind, FaultPlan, Supervisor};
+use spdx::dse::json::Json;
+use spdx::dse::{
+    BoundedPrune, CacheKey, DesignSpace, EvalCache, Exhaustive, HillClimb,
+    SearchStrategy, Store, StorePaths, StoreScope, SweepContext, SweepResult,
+    STORE_DIR_ENV, STORE_SCHEMA_VERSION,
+};
+use spdx::explore::Evaluation;
+use spdx::obs::Obs;
+use spdx::resource::STRATIX_V_5SGXEA7;
+use spdx::workload::{self, DesignPoint};
+
+/// Serializes the tests that set `DSE_CACHE_DIR` (env vars are
+/// process-global; the test harness runs threads in parallel).
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+fn env_lock() -> MutexGuard<'static, ()> {
+    ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn small_space(workload: &'static str) -> DesignSpace {
+    DesignSpace {
+        workload,
+        grids: vec![(32, 16)],
+        max_n: 2,
+        max_m: 4,
+        devices: vec![&STRATIX_V_5SGXEA7],
+        ddr_variants: vec![Default::default()],
+        passes: 2,
+        latency: Default::default(),
+    }
+}
+
+fn tmp(tag: &str) -> StorePaths {
+    StorePaths::in_dir(
+        std::env::temp_dir()
+            .join(format!("spdx_store_{tag}_{}", std::process::id())),
+    )
+}
+
+fn cleanup(paths: &StorePaths) {
+    std::fs::remove_dir_all(&paths.dir).ok();
+}
+
+/// The content address of one candidate of `space` — what the store
+/// indexes rows under.
+fn key_for(space: &DesignSpace, n: u32, m: u32) -> CacheKey {
+    let (w, h) = space.grids[0];
+    CacheKey::from_parts(
+        space.workload,
+        &DesignPoint::new(n, m, w, h),
+        space.devices[0].name,
+        space.passes,
+        space.latency,
+        space.ddr_variants[0],
+    )
+}
+
+/// Run a strategy through a store-backed cache, like `dse sweep
+/// --cache` does (fresh memory tier, shared disk tier).
+fn sweep_with_store(
+    strategy: &dyn SearchStrategy,
+    space: &DesignSpace,
+    store: &Arc<Store>,
+) -> SweepResult {
+    let cache = EvalCache::new().with_store(Arc::clone(store));
+    let ctx = SweepContext::new(&cache, 2);
+    strategy.run(space, &ctx).unwrap()
+}
+
+/// One record of the data file: (start, content_end, kind).  The
+/// record's bytes are `start..content_end`; the newline terminator
+/// sits at `content_end`.
+fn record_spans(bytes: &[u8]) -> Vec<(usize, usize, String)> {
+    let mut spans = Vec::new();
+    let mut start = 0;
+    for (i, b) in bytes.iter().enumerate() {
+        if *b == b'\n' {
+            let line = std::str::from_utf8(&bytes[start..i]).unwrap();
+            let v = Json::parse(line).unwrap();
+            let kind = v.field("record").unwrap().as_str().unwrap().to_string();
+            spans.push((start, i, kind));
+            start = i + 1;
+        }
+    }
+    assert_eq!(start, bytes.len(), "store data must end with a newline");
+    spans
+}
+
+fn assert_rows_bit_identical(a: &Evaluation, b: &Evaluation, tag: &str) {
+    assert_eq!(a.workload, b.workload, "{tag}");
+    assert_eq!(a.device, b.device, "{tag}");
+    assert_eq!(a.design, b.design, "{tag}");
+    assert_eq!(a.pe_depth, b.pe_depth, "{tag}");
+    assert_eq!(a.resources.core, b.resources.core, "{tag}");
+    assert_eq!(a.resources.total, b.resources.total, "{tag}");
+    assert_eq!(a.timing.n_c, b.timing.n_c, "{tag}");
+    assert_eq!(a.timing.total_cycles, b.timing.total_cycles, "{tag}");
+    assert_eq!(
+        a.timing.utilization.to_bits(),
+        b.timing.utilization.to_bits(),
+        "{tag}"
+    );
+    assert_eq!(a.power_w.to_bits(), b.power_w.to_bits(), "{tag}");
+    assert_eq!(a.perf_per_watt.to_bits(), b.perf_per_watt.to_bits(), "{tag}");
+    assert_eq!(a.infeasible, b.infeasible, "{tag}");
+}
+
+fn strategies() -> Vec<Box<dyn SearchStrategy>> {
+    vec![
+        Box::new(Exhaustive),
+        Box::new(BoundedPrune::default()),
+        Box::new(HillClimb { seed: 7, restarts: 2, max_steps: 16 }),
+    ]
+}
+
+fn assert_results_identical(a: &SweepResult, b: &SweepResult, tag: &str) {
+    assert_eq!(a.candidates, b.candidates, "{tag}: candidates");
+    assert_eq!(a.skipped, b.skipped, "{tag}: skipped");
+    assert_eq!(
+        a.evaluated + a.cache_hits as usize,
+        b.evaluated + b.cache_hits as usize,
+        "{tag}: total evaluation touches"
+    );
+    assert_eq!(a.evals.len(), b.evals.len(), "{tag}: row count");
+    for (i, (x, y)) in a.evals.iter().zip(&b.evals).enumerate() {
+        assert_rows_bit_identical(x, y, &format!("{tag}, row {i}"));
+    }
+    let best =
+        |r: &SweepResult| r.best().map(|e| (e.design, e.perf_per_watt.to_bits()));
+    assert_eq!(best(a), best(b), "{tag}: best");
+    let frontier = |r: &SweepResult| {
+        let mut v: Vec<(u32, u32, &str)> = r
+            .pareto()
+            .iter()
+            .map(|e| (e.design.n, e.design.m, e.device))
+            .collect();
+        v.sort();
+        v
+    };
+    assert_eq!(frontier(a), frontier(b), "{tag}: pareto frontier");
+}
+
+/// Satellite 1: two threads with *independent* `Store` handles (no
+/// shared in-process state — exactly two processes, minus the fork)
+/// race overlapping appends over one `Global`-scoped directory.  The
+/// lock file serializes them: afterwards the file holds exactly one
+/// record per content address, every row bit-identical, none lost.
+#[test]
+fn concurrent_handles_race_appends_without_losing_or_duplicating_rows() {
+    let space = small_space("lbm");
+    let paths = {
+        // resolve the Global scope through the env override, as two
+        // `--cache global` processes sharing DSE_CACHE_DIR would
+        let _env = env_lock();
+        let dir = std::env::temp_dir()
+            .join(format!("spdx_store_race_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::env::set_var(STORE_DIR_ENV, &dir);
+        let paths = StorePaths::for_scope(StoreScope::Global).unwrap();
+        std::env::remove_var(STORE_DIR_ENV);
+        assert_eq!(paths.dir, dir);
+        paths
+    };
+
+    // the rows both "processes" will produce: one uninterrupted sweep
+    let cache = EvalCache::new();
+    let ctx = SweepContext::new(&cache, 2);
+    let reference = Exhaustive.run(&space, &ctx).unwrap();
+    assert_eq!(reference.evals.len(), 8);
+
+    // overlapping slices: rows 2..6 are contested
+    let slices =
+        [reference.evals[..6].to_vec(), reference.evals[2..].to_vec()];
+    let handles: Vec<_> = slices
+        .into_iter()
+        .map(|rows| {
+            let paths = paths.clone();
+            let space = space.clone();
+            std::thread::spawn(move || {
+                let store = Store::open_at(paths, &space).unwrap();
+                // row-at-a-time: one lock acquisition per append, the
+                // worst case for interleaving
+                for row in &rows {
+                    store.append(row).unwrap();
+                    // reads race the other handle's appends too
+                    let key = key_for(&space, row.design.n, row.design.m);
+                    let read = store.lookup(&key).expect("own append visible");
+                    assert_rows_bit_identical(&read, row, "read-back");
+                }
+                store.stats()
+            })
+        })
+        .collect();
+    let stats: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    // every address written exactly once across both handles: the
+    // catch-up scan under the lock deduplicates the contested slice
+    let appended: u64 = stats.iter().map(|s| s.appended).sum();
+    assert_eq!(appended, 8, "each content address hits disk exactly once");
+    assert!(!paths.lock.exists(), "lock file released");
+
+    // the file itself: one header, eight row records, nothing else
+    let bytes = std::fs::read(&paths.data).unwrap();
+    let spans = record_spans(&bytes);
+    assert_eq!(spans.iter().filter(|s| s.2 == "header").count(), 1);
+    assert_eq!(spans.iter().filter(|s| s.2 == "row").count(), 8);
+    assert_eq!(spans.len(), 9);
+
+    // a third handle preloads all eight, bit-identical to the source
+    let store = Store::open_at(paths.clone(), &space).unwrap();
+    assert_eq!(store.stats().preloaded, 8);
+    for row in &reference.evals {
+        let key = key_for(&space, row.design.n, row.design.m);
+        let got = store.lookup(&key).expect("no row lost");
+        assert_rows_bit_identical(&got, row, "merged store");
+    }
+    cleanup(&paths);
+}
+
+/// Satellite 2a: the crash-injection property test, ported from the
+/// journal.  Truncate the data file at **every** byte boundary: open
+/// must keep exactly the records whose content is fully inside the
+/// prefix (a record's own newline may be the casualty — its content
+/// still parses), refuse prefixes that end before the header is
+/// intact, and start fresh from an empty file.
+#[test]
+fn recovery_at_every_byte_boundary_keeps_the_intact_prefix() {
+    let space = small_space("lbm");
+    let seed_paths = tmp("boundary_seed");
+    cleanup(&seed_paths);
+    let store = Arc::new(Store::open_at(seed_paths.clone(), &space).unwrap());
+    let reference = sweep_with_store(&Exhaustive, &space, &store);
+    assert_eq!(reference.evals.len(), 8);
+    let bytes = std::fs::read(&seed_paths.data).unwrap();
+    cleanup(&seed_paths);
+
+    let spans = record_spans(&bytes);
+    assert_eq!(spans.first().unwrap().2, "header");
+    assert_eq!(spans.iter().filter(|s| s.2 == "row").count(), 8);
+    let header_content_end = spans[0].1;
+
+    let by_design: std::collections::HashMap<(u32, u32), &Arc<Evaluation>> =
+        reference.evals.iter().map(|e| ((e.design.n, e.design.m), e)).collect();
+    let keys: Vec<((u32, u32), CacheKey)> = reference
+        .evals
+        .iter()
+        .map(|e| {
+            ((e.design.n, e.design.m), key_for(&space, e.design.n, e.design.m))
+        })
+        .collect();
+
+    let cut_paths = tmp("boundary_cut");
+    cleanup(&cut_paths);
+    std::fs::create_dir_all(&cut_paths.dir).unwrap();
+    for t in 0..=bytes.len() {
+        std::fs::write(&cut_paths.data, &bytes[..t]).unwrap();
+        let opened = Store::open_at(cut_paths.clone(), &space);
+        if t > 0 && t < header_content_end {
+            // only a torn fragment of the header: refuse, don't guess
+            let err = opened.err().map(|e| e.to_string()).unwrap_or_else(|| {
+                panic!("cut at {t}: a headerless store must be refused")
+            });
+            assert!(err.contains("no intact header"), "cut at {t}: {err}");
+            continue;
+        }
+        let store = opened.unwrap_or_else(|e| panic!("cut at {t}: {e}"));
+        let want = spans
+            .iter()
+            .filter(|(_, content_end, kind)| kind == "row" && *content_end <= t)
+            .count();
+        assert_eq!(store.stats().rows, want, "cut at {t}");
+        let mut found = 0;
+        for ((n, m), key) in &keys {
+            if let Some(row) = store.lookup(key) {
+                assert_rows_bit_identical(
+                    &row,
+                    by_design[&(*n, *m)],
+                    &format!("cut at {t}, point ({n}, {m})"),
+                );
+                found += 1;
+            }
+        }
+        assert_eq!(found, want, "cut at {t}: index and lookups agree");
+    }
+    cleanup(&cut_paths);
+}
+
+/// Satellite 2b: a torn tail (no trailing newline) is the *only*
+/// malformation open repairs — it is truncated away and appends
+/// continue cleanly after it.  Everything else mid-file is corruption
+/// and refused by name, with the file left byte-identical.
+#[test]
+fn torn_tails_are_repaired_and_mid_file_corruption_is_refused() {
+    let space = small_space("lbm");
+    let paths = tmp("corrupt");
+    cleanup(&paths);
+    let store = Arc::new(Store::open_at(paths.clone(), &space).unwrap());
+    let reference = sweep_with_store(&Exhaustive, &space, &store);
+    drop(store);
+    let good = std::fs::read(&paths.data).unwrap();
+    let spans = record_spans(&good);
+    let row_line = |i: usize| {
+        let (s, e, _) = spans.iter().filter(|s| s.2 == "row").nth(i).unwrap();
+        good[*s..*e + 1].to_vec()
+    };
+
+    // torn tail: unterminated garbage after the last record — repaired
+    let mut torn = good.clone();
+    torn.extend_from_slice(b"{\"record\":\"row\",\"finge");
+    std::fs::write(&paths.data, &torn).unwrap();
+    let store = Store::open_at(paths.clone(), &space).unwrap();
+    assert_eq!(store.stats().rows, 8, "torn tail costs nothing");
+    // ...and the repair truncated it, so appends go after good data
+    assert_eq!(std::fs::read(&paths.data).unwrap(), good);
+    assert_eq!(store.append_all(&reference.evals).unwrap(), 0);
+    drop(store);
+
+    // the same garbage *with* its newline is a real record that fails
+    // to parse: corruption, named by byte offset
+    let mut garbage = good.clone();
+    garbage.extend_from_slice(b"{\"record\":\"row\",\"finge\n");
+    std::fs::write(&paths.data, &garbage).unwrap();
+    let err = Store::open_at(paths.clone(), &space).unwrap_err().to_string();
+    assert!(err.contains("corrupt record at byte"), "{err}");
+    assert_eq!(std::fs::read(&paths.data).unwrap(), garbage, "refusal destroys nothing");
+
+    // garbage spliced *between* intact records: also corruption (the
+    // torn-tail carve-out applies only to the final unterminated line)
+    let mut spliced = Vec::new();
+    spliced.extend_from_slice(&good[..spans[3].1 + 1]);
+    spliced.extend_from_slice(b"!!not json!!\n");
+    spliced.extend_from_slice(&good[spans[3].1 + 1..]);
+    std::fs::write(&paths.data, &spliced).unwrap();
+    let err = Store::open_at(paths.clone(), &space).unwrap_err().to_string();
+    assert!(err.contains("corrupt record at byte"), "{err}");
+
+    // an unknown record kind is a named refusal, not a skip: this
+    // build cannot know whether it is safe to append after it
+    let mut unknown = good.clone();
+    unknown.extend_from_slice(b"{\"record\":\"frobnicate\"}\n");
+    std::fs::write(&paths.data, &unknown).unwrap();
+    let err = Store::open_at(paths.clone(), &space).unwrap_err().to_string();
+    assert!(err.contains("unknown record"), "{err}");
+
+    // a row before any header
+    std::fs::write(&paths.data, row_line(0)).unwrap();
+    let err = Store::open_at(paths.clone(), &space).unwrap_err().to_string();
+    assert!(err.contains("before the header"), "{err}");
+
+    // two headers
+    let mut doubled = good.clone();
+    doubled.extend_from_slice(&good[..spans[0].1 + 1]);
+    std::fs::write(&paths.data, &doubled).unwrap();
+    let err = Store::open_at(paths.clone(), &space).unwrap_err().to_string();
+    assert!(err.contains("duplicate header"), "{err}");
+    cleanup(&paths);
+}
+
+/// Satellite 2c: schema versions outside
+/// `STORE_MIN_VERSION..=STORE_SCHEMA_VERSION` are refused with a named
+/// error and the file is left byte-identical — a newer build's store
+/// is never clobbered by an older one.
+#[test]
+fn mismatched_schema_versions_are_refused_without_destroying_data() {
+    assert_eq!(STORE_SCHEMA_VERSION, 1, "bumping the schema is a conscious act: update this test and the README policy");
+    let space = small_space("lbm");
+    let paths = tmp("version");
+    cleanup(&paths);
+    std::fs::create_dir_all(&paths.dir).unwrap();
+    for version in [0u64, 2, 99] {
+        let file =
+            format!("{{\"record\":\"header\",\"version\":{version}}}\n");
+        std::fs::write(&paths.data, &file).unwrap();
+        let err =
+            Store::open_at(paths.clone(), &space).unwrap_err().to_string();
+        assert!(
+            err.contains(&format!("schema version {version}")),
+            "version {version}: {err}"
+        );
+        assert_eq!(
+            std::fs::read_to_string(&paths.data).unwrap(),
+            file,
+            "version {version}: refusal must not touch the file"
+        );
+        assert!(!paths.lock.exists(), "version {version}: lock released");
+    }
+    cleanup(&paths);
+}
+
+/// Satellite 2d: the store is an accelerator, not a correctness layer.
+/// When the directory vanishes mid-run, the first failed write-through
+/// degrades the handle to in-memory-only — gauge raised, sweep rows
+/// intact, later appends free no-ops.
+#[test]
+fn vanished_store_degrades_to_in_memory_without_failing_the_sweep() {
+    let space = small_space("lbm");
+    let paths = tmp("degraded");
+    cleanup(&paths);
+    let store = Arc::new(Store::open_at(paths.clone(), &space).unwrap());
+    assert!(!store.is_degraded());
+    cleanup(&paths); // the rug pull: every append from here fails
+
+    let obs = Obs::new();
+    let cache = EvalCache::new().with_store(Arc::clone(&store));
+    let ctx = SweepContext::new(&cache, 2).with_obs(&obs);
+    let result = Exhaustive.run(&space, &ctx).unwrap();
+    assert_eq!(result.evals.len(), 8, "the sweep survives the store");
+    assert_eq!(result.evaluated, 8);
+    assert!(store.is_degraded());
+    assert!(store.stats().degraded);
+    assert_eq!(obs.metrics.gauge("store.degraded").get(), 1);
+
+    // degraded appends are silent no-ops, not repeated failures
+    assert_eq!(store.append_all(&result.evals).unwrap(), 0);
+    assert!(!paths.dir.exists(), "degraded handle recreates nothing");
+}
+
+/// Satellite 3: the equivalence property.  For every strategy × every
+/// registered workload, a store-backed sweep is bit-identical to one
+/// without a store, and a second cold process over the warm store
+/// performs **zero** fresh evaluations — every unique point answered
+/// from disk.
+#[test]
+fn store_backed_sweeps_are_bit_identical_and_the_second_process_is_all_hits() {
+    for name in workload::names() {
+        let space = small_space(name);
+        for strategy in strategies() {
+            let tag = format!("{name}/{}", strategy.name());
+            let paths = tmp(&format!("equiv_{name}_{}", strategy.name()));
+            cleanup(&paths);
+
+            // the reference: no store anywhere
+            let cache = EvalCache::new();
+            let ctx = SweepContext::new(&cache, 2);
+            let plain = strategy.run(&space, &ctx).unwrap();
+
+            // first process: cold store, every fresh row written through
+            let store = Arc::new(Store::open_at(paths.clone(), &space).unwrap());
+            let first = sweep_with_store(&*strategy, &space, &store);
+            assert_results_identical(&plain, &first, &tag);
+            let s1 = store.stats();
+            assert_eq!(s1.hits, 0, "{tag}: nothing to hit in a cold store");
+            assert_eq!(
+                s1.appended as usize, first.evaluated,
+                "{tag}: every fresh evaluation persisted"
+            );
+
+            // second process: fresh memory, warm disk — recomputes nothing
+            let store2 =
+                Arc::new(Store::open_at(paths.clone(), &space).unwrap());
+            assert_eq!(
+                store2.stats().preloaded as usize,
+                first.evals.len(),
+                "{tag}: the whole sweep preloads"
+            );
+            let second = sweep_with_store(&*strategy, &space, &store2);
+            assert_eq!(
+                second.evaluated, 0,
+                "{tag}: a warm store means zero fresh evaluations"
+            );
+            let s2 = store2.stats();
+            assert_eq!(
+                s2.hits as usize,
+                second.evals.len(),
+                "{tag}: every unique point answered from disk"
+            );
+            assert_eq!(s2.misses, 0, "{tag}");
+            assert_eq!(s2.appended, 0, "{tag}: nothing new to write");
+            assert_results_identical(&plain, &second, &tag);
+            cleanup(&paths);
+        }
+    }
+}
+
+/// Satellite 4: quarantine × persistence.  A `FaultPlan`-panicked
+/// point is quarantined as a `FailRow` and its identity never reaches
+/// the store as a success; a fault-free retry (what `dse resume
+/// --retry-failed` runs) supersedes the quarantine with a real row,
+/// and a third process reads the whole space from disk.
+#[test]
+fn quarantined_points_are_never_persisted_until_a_retry_succeeds() {
+    let space = small_space("lbm");
+    let paths = tmp("fault");
+    cleanup(&paths);
+    let poisoned = key_for(&space, 2, 2);
+
+    // the reference: same strategy, no faults, no store
+    let cache = EvalCache::new();
+    let clean =
+        Exhaustive.run(&space, &SweepContext::new(&cache, 2)).unwrap();
+    assert_eq!(clean.evals.len(), 8);
+
+    // run 1: (2, 2) panics on every attempt → quarantined, not stored
+    let plan = Arc::new(
+        FaultPlan::new().with_fault(Fault::new(FaultKind::Panic).at_n(2).at_m(2)),
+    );
+    let sup = Supervisor::new()
+        .with_retries(1)
+        .with_backoff(Duration::ZERO)
+        .with_faults(plan);
+    let store = Arc::new(Store::open_at(paths.clone(), &space).unwrap());
+    let cache = EvalCache::new().with_store(Arc::clone(&store));
+    let ctx = SweepContext::new(&cache, 2).with_supervisor(&sup);
+    let faulted = Exhaustive.run(&space, &ctx).unwrap();
+    assert_eq!(faulted.failures.len(), 1);
+    assert_eq!(
+        (faulted.failures[0].design.n, faulted.failures[0].design.m),
+        (2, 2)
+    );
+    assert_eq!(faulted.evals.len(), 7);
+    assert_eq!(store.stats().appended, 7);
+    drop(store);
+
+    // the file holds successes only — and not the poisoned identity
+    let bytes = std::fs::read(&paths.data).unwrap();
+    let spans = record_spans(&bytes);
+    assert_eq!(spans.iter().filter(|s| s.2 == "row").count(), 7);
+    assert!(spans.iter().all(|s| s.2 == "row" || s.2 == "header"));
+    let probe = Store::open_at(paths.clone(), &space).unwrap();
+    assert_eq!(probe.stats().rows, 7);
+    assert!(
+        probe.lookup(&poisoned).is_none(),
+        "a quarantined point must never appear as a success"
+    );
+    drop(probe);
+
+    // run 2: the fault is gone — only the quarantined point is fresh,
+    // and its success row supersedes the quarantine on disk
+    let store2 = Arc::new(Store::open_at(paths.clone(), &space).unwrap());
+    let retried = sweep_with_store(&Exhaustive, &space, &store2);
+    assert!(retried.failures.is_empty());
+    assert_eq!(retried.evaluated, 1, "only the poisoned point recomputes");
+    assert_eq!(store2.stats().hits, 7);
+    assert_eq!(store2.stats().appended, 1);
+    assert_results_identical(&clean, &retried, "retry");
+    drop(store2);
+
+    // run 3: the whole space now comes from the store
+    let store3 = Arc::new(Store::open_at(paths.clone(), &space).unwrap());
+    assert_eq!(store3.stats().preloaded, 8);
+    assert!(store3.lookup(&poisoned).is_some(), "the success superseded");
+    let third = sweep_with_store(&Exhaustive, &space, &store3);
+    assert_eq!(third.evaluated, 0);
+    assert_results_identical(&clean, &third, "third run");
+    cleanup(&paths);
+}
+
+/// The on-disk layout and scope resolution the README documents:
+/// `store.ndjson` + `store.lock` inside the scope directory, `Local`
+/// under `./.dse-cache`, `Global` overridable via `DSE_CACHE_DIR`.
+#[test]
+fn scope_layout_and_env_override_are_stable() {
+    let p = StorePaths::in_dir("/scope/dir");
+    assert_eq!(p.dir, Path::new("/scope/dir"));
+    assert_eq!(p.data, Path::new("/scope/dir/store.ndjson"));
+    assert_eq!(p.lock, Path::new("/scope/dir/store.lock"));
+    assert_eq!(StoreScope::Local.dir().unwrap(), PathBuf::from(".dse-cache"));
+
+    let _env = env_lock();
+    let dir = std::env::temp_dir()
+        .join(format!("spdx_store_scope_{}", std::process::id()));
+    std::env::set_var(STORE_DIR_ENV, &dir);
+    assert_eq!(StorePaths::for_scope(StoreScope::Global).unwrap().dir, dir);
+    std::env::remove_var(STORE_DIR_ENV);
+}
